@@ -1,0 +1,566 @@
+//! Figure/table regeneration harness — one subcommand per table & figure
+//! in the paper's evaluation (DESIGN.md §5 maps each to its modules).
+//!
+//!     cargo bench --bench figures -- <cmd> [--scale 0.5] [--seconds 3]
+//!
+//! Commands: fig3 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13
+//!           table_build all
+//!
+//! Sizes are scaled-down substitutes for the paper's 500M-point testbed
+//! (DESIGN.md §3); absolute numbers differ but the *shape* of every curve
+//! (who wins, monotonicity, crossovers) is the reproduction target. Every
+//! row is printed in the same layout EXPERIMENTS.md records.
+
+use pyramid::baselines::{DistributedKdForest, KdForestParams, NaiveIndex};
+use pyramid::bench_harness::{drive_cluster, TablePrinter, Workload};
+use pyramid::cluster::SimCluster;
+use pyramid::config::{ClusterTopology, IndexConfig, QueryParams};
+use pyramid::dataset::SyntheticSpec;
+use pyramid::hnsw::HnswParams;
+use pyramid::meta::PyramidIndex;
+use pyramid::metric::Metric;
+use pyramid::types::Neighbor;
+use pyramid::util::cli::Args;
+use std::time::Duration;
+
+/// Shared harness configuration.
+struct Ctx {
+    scale: f64,
+    seconds: f64,
+    clients: usize,
+    workers: usize,
+}
+
+impl Ctx {
+    fn n(&self, base: usize) -> usize {
+        ((base as f64) * self.scale) as usize
+    }
+}
+
+fn main() {
+    // `cargo bench -- <args>` passes everything after `--` to us; cargo
+    // itself appends `--bench`, which we ignore.
+    let raw: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(raw);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("all");
+    let ctx = Ctx {
+        scale: args.get_f64("scale", 0.35),
+        seconds: args.get_f64("seconds", 2.5),
+        clients: args.get_usize("clients", 16),
+        workers: args.get_usize("workers", 10),
+    };
+    let t0 = std::time::Instant::now();
+    match cmd {
+        "fig3" => fig3(&ctx),
+        "fig5" | "fig6" => fig5_fig6(&ctx),
+        "fig7" | "fig8" => fig7_fig8(&ctx),
+        "fig9" => fig9(&ctx),
+        "fig10" => fig10(&ctx),
+        "fig11" => fig11(&ctx),
+        "fig12" => fig12(&ctx),
+        "fig13" => fig13(&ctx),
+        "table_build" => table_build(&ctx),
+        "all" => {
+            fig3(&ctx);
+            fig5_fig6(&ctx);
+            fig7_fig8(&ctx);
+            fig9(&ctx);
+            fig10(&ctx);
+            fig11(&ctx);
+            fig12(&ctx);
+            fig13(&ctx);
+            table_build(&ctx);
+        }
+        other => {
+            eprintln!("unknown figure: {other}");
+            std::process::exit(2);
+        }
+    }
+    eprintln!("[figures] {cmd} done in {:?}", t0.elapsed());
+}
+
+fn deep(ctx: &Ctx) -> SyntheticSpec {
+    let mut s = SyntheticSpec::deep_like(ctx.n(60_000), 96, 7);
+    s.clusters = 128;
+    s
+}
+
+fn sift(ctx: &Ctx) -> SyntheticSpec {
+    let mut s = SyntheticSpec::sift_like(ctx.n(60_000), 128, 11);
+    s.clusters = 128;
+    s
+}
+
+fn tiny(ctx: &Ctx) -> SyntheticSpec {
+    SyntheticSpec::tiny_like(ctx.n(20_000), 96, 13)
+}
+
+fn index_cfg(m: usize, w: usize, n: usize) -> IndexConfig {
+    IndexConfig {
+        sample: (n / 6).max(m).min(n),
+        meta_size: m,
+        partitions: w,
+        hnsw: HnswParams::default(),
+        ..IndexConfig::default()
+    }
+}
+
+fn topo(ctx: &Ctx, workers: usize, replicas: usize) -> ClusterTopology {
+    let _ = ctx;
+    ClusterTopology { workers, replicas, coordinators: 2, net_latency_us: 20, rebalance_ms: 200 }
+}
+
+/// Fig 3: MIPS result distribution over item-norm percentiles.
+fn fig3(ctx: &Ctx) {
+    println!("\n=== Fig 3: MIPS result distribution vs item norm (tiny-like) ===");
+    let spec = tiny(ctx);
+    let data = spec.generate();
+    let queries = spec.queries(500);
+    let workload = Workload::new(data.clone(), queries, Metric::Ip, 10);
+    let mut norms: Vec<(u32, f32)> =
+        data.norms().into_iter().enumerate().map(|(i, v)| (i as u32, v)).collect();
+    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let total: usize = workload.ground_truth.iter().map(Vec::len).sum();
+    let mut t = TablePrinter::new(&["norm percentile (top)", "share of exact top-10 results", "paper"]);
+    for (pct, paper) in [(5.0, "93.1%"), (10.0, "~96%"), (20.0, "~99%"), (50.0, "~100%")] {
+        let cut = ((data.len() as f64) * pct / 100.0) as usize;
+        let set: std::collections::HashSet<u32> = norms[..cut].iter().map(|(i, _)| *i).collect();
+        let hits: usize = workload
+            .ground_truth
+            .iter()
+            .flat_map(|r| r.iter())
+            .filter(|nb| set.contains(&nb.id))
+            .count();
+        t.row(vec![
+            format!("{pct}%"),
+            format!("{:.1}%", 100.0 * hits as f64 / total as f64),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+/// Figs 5 & 6: access rate and precision vs branching factor K, for three
+/// meta-HNSW sizes (paper: 1k/10k/100k at 500M items; scaled here).
+fn fig5_fig6(ctx: &Ctx) {
+    println!("\n=== Figs 5 & 6: access rate / precision vs branching factor ===");
+    let ks = [1usize, 5, 10, 20, 50, 100];
+    let metas = [100usize, 400, 1600];
+    for (name, spec) in [("Deep", deep(ctx)), ("SIFT", sift(ctx))] {
+        let data = spec.generate();
+        let queries = spec.queries(300);
+        let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+        let mut acc = TablePrinter::new(&["m \\ K", "1", "5", "10", "20", "50", "100"]);
+        let mut prec = TablePrinter::new(&["m \\ K", "1", "5", "10", "20", "50", "100"]);
+        for &m in &metas {
+            let idx =
+                PyramidIndex::build(&data, Metric::L2, &index_cfg(m, ctx.workers, data.len())).unwrap();
+            let mut acc_row = vec![format!("m={m}")];
+            let mut prec_row = vec![format!("m={m}")];
+            for &k in &ks {
+                let params = QueryParams { k: 10, branch: k, ef: 100, meta_ef: 100.max(k) };
+                let mut touched = 0usize;
+                let mut results = Vec::new();
+                for qi in 0..workload.queries.len() {
+                    let (res, parts) = idx.search_with_route(workload.queries.get(qi), &params);
+                    touched += parts.len();
+                    results.push(res);
+                }
+                let rate = touched as f64 / (workload.queries.len() * ctx.workers) as f64;
+                acc_row.push(format!("{rate:.2}"));
+                prec_row.push(format!("{:.3}", workload.precision(&results)));
+            }
+            acc.row(acc_row);
+            prec.row(prec_row);
+        }
+        println!("\n[Fig 5] {name}: access rate vs K (expect: up with K, down with m)");
+        acc.print();
+        println!("\n[Fig 6] {name}: precision vs K (expect: up then plateau; higher for small m)");
+        prec.print();
+    }
+}
+
+/// Figs 7 & 8: cluster throughput and P90 latency vs branching factor.
+fn fig7_fig8(ctx: &Ctx) {
+    println!("\n=== Figs 7 & 8: throughput / P90 latency vs branching factor ===");
+    let ks = [1usize, 5, 10, 20, 50];
+    let metas = [100usize, 400, 1600];
+    for (name, spec) in [("Deep", deep(ctx)), ("SIFT", sift(ctx))] {
+        let data = spec.generate();
+        let queries = spec.queries(500);
+        let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+        let mut thr = TablePrinter::new(&["m \\ K", "1", "5", "10", "20", "50"]);
+        let mut lat = TablePrinter::new(&["m \\ K", "1", "5", "10", "20", "50"]);
+        for &m in &metas {
+            let idx =
+                PyramidIndex::build(&data, Metric::L2, &index_cfg(m, ctx.workers, data.len())).unwrap();
+            let cluster = SimCluster::start(&idx, topo(ctx, ctx.workers, 1)).unwrap();
+            let mut thr_row = vec![format!("m={m}")];
+            let mut lat_row = vec![format!("m={m}")];
+            for &k in &ks {
+                let params = QueryParams { k: 10, branch: k, ef: 100, meta_ef: 100.max(k) };
+                let rep = drive_cluster(
+                    &cluster,
+                    &workload,
+                    &params,
+                    ctx.clients,
+                    Duration::from_secs_f64(ctx.seconds),
+                );
+                thr_row.push(format!("{:.0}", rep.qps));
+                lat_row.push(format!("{:.2}", rep.latency.p90_ms()));
+            }
+            cluster.shutdown();
+            thr.row(thr_row);
+            lat.row(lat_row);
+        }
+        println!("\n[Fig 7] {name}: throughput (qps) vs K (expect: down with K)");
+        thr.print();
+        println!("\n[Fig 8] {name}: P90 latency (ms) vs K (expect: up with K)");
+        lat.print();
+    }
+}
+
+/// Calibrate Pyramid's branch factor to reach a target precision locally.
+fn calibrate_branch(
+    idx: &PyramidIndex,
+    workload: &Workload,
+    target: f64,
+    ef: usize,
+) -> (usize, f64) {
+    for branch in [1usize, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 32] {
+        let params = QueryParams { k: workload.k, branch, ef, meta_ef: 100.max(branch) };
+        let nq = workload.queries.len().min(150);
+        let results: Vec<Vec<Neighbor>> =
+            (0..nq).map(|qi| idx.search(workload.queries.get(qi), &params)).collect();
+        let mut hit = 0;
+        for (qi, res) in results.iter().enumerate() {
+            let gt: std::collections::HashSet<u32> =
+                workload.ground_truth[qi].iter().map(|n| n.id).collect();
+            hit += res.iter().take(workload.k).filter(|n| gt.contains(&n.id)).count();
+        }
+        let p = hit as f64 / (nq * workload.k) as f64;
+        if p >= target {
+            return (branch, p);
+        }
+    }
+    (32, 0.0)
+}
+
+/// Fig 9: Pyramid vs HNSW-naive vs FLANN(KD-forest) at matched precision.
+fn fig9(ctx: &Ctx) {
+    println!("\n=== Fig 9: system comparison at ~90% precision ===");
+    for (name, spec) in [("Deep", deep(ctx)), ("SIFT", sift(ctx))] {
+        let data = spec.generate();
+        let queries = spec.queries(500);
+        let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+        let mut t = TablePrinter::new(&["system", "config", "qps", "precision", "p90 ms"]);
+
+        // Pyramid: calibrate branch to ~0.9 precision.
+        let idx =
+            PyramidIndex::build(&data, Metric::L2, &index_cfg(400, ctx.workers, data.len())).unwrap();
+        let (branch, _) = calibrate_branch(&idx, &workload, 0.90, 100);
+        let cluster = SimCluster::start(&idx, topo(ctx, ctx.workers, 1)).unwrap();
+        let params = QueryParams { k: 10, branch, ef: 100, meta_ef: 100 };
+        let rep =
+            drive_cluster(&cluster, &workload, &params, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+        cluster.shutdown();
+        let pyramid_qps = rep.qps;
+        t.row(vec![
+            "Pyramid".into(),
+            format!("K={branch}, l=100"),
+            format!("{:.0}", rep.qps),
+            format!("{:.3}", rep.precision),
+            format!("{:.2}", rep.latency.p90_ms()),
+        ]);
+
+        // HNSW-naive: all partitions, same graph params.
+        let naive = NaiveIndex::build(&data, Metric::L2, ctx.workers, HnswParams::default(), 3).unwrap();
+        let ncluster = naive.serve(topo(ctx, ctx.workers, 1), None).unwrap();
+        let nparams = QueryParams { k: 10, branch: 1, ef: 100, meta_ef: 1 };
+        let nrep =
+            drive_cluster(&ncluster, &workload, &nparams, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+        ncluster.shutdown();
+        t.row(vec![
+            "HNSW-naive".into(),
+            "all workers, l=100".into(),
+            format!("{:.0}", nrep.qps),
+            format!("{:.3}", nrep.precision),
+            format!("{:.2}", nrep.latency.p90_ms()),
+        ]);
+
+        // FLANN substitute: KD-forest, recommended settings (4 trees,
+        // checks budget = 2048).
+        let kd = DistributedKdForest::build(&data, ctx.workers, KdForestParams::default()).unwrap();
+        let kcluster = kd.serve(topo(ctx, ctx.workers, 1)).unwrap();
+        let kparams = QueryParams { k: 10, branch: 1, ef: 2048, meta_ef: 1 };
+        let krep =
+            drive_cluster(&kcluster, &workload, &kparams, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+        kcluster.shutdown();
+        t.row(vec![
+            "FLANN (KD-forest)".into(),
+            "4 trees, checks=2048".into(),
+            format!("{:.0}", krep.qps),
+            format!("{:.3}", krep.precision),
+            format!("{:.2}", krep.latency.p90_ms()),
+        ]);
+
+        println!("\n[Fig 9] {name} (expect: Pyramid > 2x naive qps at matched precision; both >> KD)");
+        t.print();
+        println!(
+            "Pyramid/naive throughput ratio: {:.2}x (paper: >2x)",
+            pyramid_qps / nrep.qps.max(1e-9)
+        );
+    }
+}
+
+/// Fig 10: MIPS — Pyramid (Alg 5) vs HNSW-naive on tiny-like.
+fn fig10(ctx: &Ctx) {
+    println!("\n=== Fig 10: MIPS on tiny-like (Algorithm 5 vs naive) ===");
+    let spec = tiny(ctx);
+    let data = spec.generate();
+    let queries = spec.queries(400);
+    let workload = Workload::new(data.clone(), queries, Metric::Ip, 10);
+    let n = data.len();
+    let mut t = TablePrinter::new(&["system", "branch K", "qps", "precision", "stored items"]);
+
+    let r = (n / 100).clamp(20, 300); // keep m*r a few % of n
+    let cfg = IndexConfig { mips_replication: r, ..index_cfg(100, ctx.workers, n) };
+    let idx = PyramidIndex::build(&data, Metric::Ip, &cfg).unwrap();
+    for branch in [1usize, 2, 4] {
+        let cluster = SimCluster::start(&idx, topo(ctx, ctx.workers, 1)).unwrap();
+        let params = QueryParams { k: 10, branch, ef: 100, meta_ef: 100 };
+        let rep =
+            drive_cluster(&cluster, &workload, &params, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+        cluster.shutdown();
+        t.row(vec![
+            format!("Pyramid (r={r})"),
+            branch.to_string(),
+            format!("{:.0}", rep.qps),
+            format!("{:.3}", rep.precision),
+            format!(
+                "{} (+{:.1}%)",
+                idx.stored_items(),
+                100.0 * (idx.stored_items() - n) as f64 / n as f64
+            ),
+        ]);
+    }
+
+    let naive = NaiveIndex::build(&data, Metric::Ip, ctx.workers, HnswParams::default(), 3).unwrap();
+    let ncluster = naive.serve(topo(ctx, ctx.workers, 1), None).unwrap();
+    let nparams = QueryParams { k: 10, branch: 1, ef: 100, meta_ef: 1 };
+    let nrep =
+        drive_cluster(&ncluster, &workload, &nparams, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+    ncluster.shutdown();
+    t.row(vec![
+        "HNSW-naive".into(),
+        "all".into(),
+        format!("{:.0}", nrep.qps),
+        format!("{:.3}", nrep.precision),
+        format!("{n} (+0%)"),
+    ]);
+    println!("(expect: Pyramid qps >> naive at similar precision; small storage overhead)");
+    t.print();
+}
+
+/// Fig 11: scalability — 5 vs 10 workers at matched precision targets.
+fn fig11(ctx: &Ctx) {
+    println!("\n=== Fig 11: scalability (5 vs 10 workers, matched precision) ===");
+    let spec = sift(ctx);
+    let data = spec.generate();
+    let queries = spec.queries(400);
+    let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+    let mut t = TablePrinter::new(&["precision target", "workers", "branch K", "qps", "precision"]);
+    let mut qps_at: std::collections::HashMap<(usize, usize), f64> = std::collections::HashMap::new();
+    for &target_pct in &[80usize, 90] {
+        let target = target_pct as f64 / 100.0;
+        for &workers in &[5usize, 10] {
+            let idx =
+                PyramidIndex::build(&data, Metric::L2, &index_cfg(400, workers, data.len())).unwrap();
+            let (branch, _) = calibrate_branch(&idx, &workload, target, 100);
+            let cluster = SimCluster::start(&idx, topo(ctx, workers, 1)).unwrap();
+            let params = QueryParams { k: 10, branch, ef: 100, meta_ef: 100 };
+            let rep = drive_cluster(
+                &cluster,
+                &workload,
+                &params,
+                ctx.clients,
+                Duration::from_secs_f64(ctx.seconds),
+            );
+            cluster.shutdown();
+            qps_at.insert((target_pct, workers), rep.qps);
+            t.row(vec![
+                format!("{target_pct}%"),
+                workers.to_string(),
+                branch.to_string(),
+                format!("{:.0}", rep.qps),
+                format!("{:.3}", rep.precision),
+            ]);
+        }
+    }
+    t.print();
+    for &p in &[80usize, 90] {
+        let r = qps_at[&(p, 10)] / qps_at[&(p, 5)].max(1e-9);
+        println!("10-worker/5-worker throughput ratio at {p}%: {r:.2}x (paper: 1.78x / 1.59x)");
+    }
+}
+
+/// Fig 12: straggler — throughput vs CPU share of one host, 2x
+/// replication, ~70% load.
+fn fig12(ctx: &Ctx) {
+    println!("\n=== Fig 12: straggler mitigation (2 replicas, ~70% load) ===");
+    let spec = sift(ctx);
+    let data = spec.generate();
+    let queries = spec.queries(400);
+    let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+    let workers = 5usize.min(ctx.workers);
+    let idx = PyramidIndex::build(&data, Metric::L2, &index_cfg(200, workers, data.len())).unwrap();
+    let cluster = SimCluster::start(&idx, topo(ctx, workers, 2)).unwrap();
+    let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+    // Measure peak with full clients, then run at ~70% load.
+    let peak =
+        drive_cluster(&cluster, &workload, &params, ctx.clients, Duration::from_secs_f64(ctx.seconds));
+    let load_clients = ((ctx.clients as f64) * 0.7).ceil() as usize;
+    let mut t = TablePrinter::new(&["CPU share of host 0", "qps", "vs unthrottled"]);
+    let mut base = 0.0f64;
+    for &share in &[100u32, 70, 50, 30, 10] {
+        cluster.set_cpu_share(0, share);
+        // Let the queue rebalance settle.
+        std::thread::sleep(Duration::from_millis(300));
+        let rep = drive_cluster(
+            &cluster,
+            &workload,
+            &params,
+            load_clients,
+            Duration::from_secs_f64(ctx.seconds),
+        );
+        if share == 100 {
+            base = rep.qps;
+        }
+        t.row(vec![
+            format!("{share}%"),
+            format!("{:.0}", rep.qps),
+            format!("{:.2}", rep.qps / base.max(1e-9)),
+        ]);
+    }
+    cluster.set_cpu_share(0, 100);
+    cluster.shutdown();
+    println!("peak (100% load clients): {:.0} qps; running at ~70% load", peak.qps);
+    println!("(expect: flat until ~30% share, significant drop only at 10% — paper Fig 12)");
+    t.print();
+}
+
+/// Fig 13: throughput timeline under kill + rejoin.
+fn fig13(ctx: &Ctx) {
+    println!("\n=== Fig 13: failure timeline (kill at T/3, rejoin at 2T/3) ===");
+    let spec = sift(ctx);
+    let data = spec.generate();
+    let queries = spec.queries(400);
+    let workload = Workload::new(data.clone(), queries, Metric::L2, 10);
+    let workers = 5usize.min(ctx.workers);
+    let idx = PyramidIndex::build(&data, Metric::L2, &index_cfg(200, workers, data.len())).unwrap();
+    let cluster = SimCluster::start(&idx, topo(ctx, workers, 2)).unwrap();
+    let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+
+    let total = Duration::from_secs_f64(ctx.seconds * 4.0);
+    let window = Duration::from_millis(250);
+    let nbuckets = (total.as_secs_f64() / window.as_secs_f64()) as usize + 2;
+    let buckets: Vec<std::sync::atomic::AtomicUsize> =
+        (0..nbuckets).map(|_| std::sync::atomic::AtomicUsize::new(0)).collect();
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..ctx.clients {
+            let cluster = &cluster;
+            let workload = &workload;
+            let stop = &stop;
+            let buckets = &buckets;
+            let params = &params;
+            s.spawn(move || {
+                let mut qi = c;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if cluster
+                        .execute(workload.queries.get(qi % workload.queries.len()), params)
+                        .is_ok()
+                    {
+                        let idx = (t0.elapsed().as_secs_f64() / window.as_secs_f64()) as usize;
+                        if let Some(b) = buckets.get(idx) {
+                            b.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    qi += ctx.clients;
+                }
+            });
+        }
+        s.spawn(|| {
+            std::thread::sleep(total.mul_f64(1.0 / 3.0));
+            eprintln!("[fig13] t={:.1}s KILL host 0", t0.elapsed().as_secs_f64());
+            cluster.kill_host(0);
+            std::thread::sleep(total.mul_f64(1.0 / 3.0));
+            eprintln!("[fig13] t={:.1}s host 0 rejoins", t0.elapsed().as_secs_f64());
+            cluster.restart_host(0);
+            std::thread::sleep(total.mul_f64(1.0 / 3.0));
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+    });
+    let max = buckets
+        .iter()
+        .map(|b| b.load(std::sync::atomic::Ordering::Relaxed))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    println!(
+        "time(s)  qps      |histogram (kill at {:.1}s, rejoin at {:.1}s)",
+        total.as_secs_f64() / 3.0,
+        2.0 * total.as_secs_f64() / 3.0
+    );
+    for (i, b) in buckets.iter().enumerate() {
+        let at = i as f64 * window.as_secs_f64();
+        if at > total.as_secs_f64() {
+            break;
+        }
+        let v = b.load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "{:>6.2} {:>8.0}  |{}",
+            at,
+            v as f64 / window.as_secs_f64(),
+            "#".repeat(v * 50 / max)
+        );
+    }
+    println!("(expect: dip at kill, dip at rejoin rebalance, recovery after — paper Fig 13)");
+    cluster.shutdown();
+}
+
+/// §V-C text: index build time breakdown, Pyramid vs naive vs KD-forest.
+fn table_build(ctx: &Ctx) {
+    println!("\n=== Table: index build time breakdown (paper §V-C text) ===");
+    let spec = deep(ctx);
+    let data = spec.generate();
+    let mut t = TablePrinter::new(&["system", "total", "kmeans+meta", "partition+assign", "sub-index build"]);
+    let idx = PyramidIndex::build(&data, Metric::L2, &index_cfg(400, ctx.workers, data.len())).unwrap();
+    let r = &idx.report;
+    t.row(vec![
+        "Pyramid".into(),
+        format!("{:.1?}", r.total()),
+        format!("{:.1?}", r.sample_kmeans + r.meta_build),
+        format!("{:.1?}", r.partition + r.assign),
+        format!("{:.1?}", r.sub_build),
+    ]);
+    let naive = NaiveIndex::build(&data, Metric::L2, ctx.workers, HnswParams::default(), 3).unwrap();
+    t.row(vec![
+        "HNSW-naive".into(),
+        format!("{:.1?}", naive.build_time),
+        "-".into(),
+        "(random shuffle)".into(),
+        format!("{:.1?}", naive.build_time),
+    ]);
+    let kd = DistributedKdForest::build(&data, ctx.workers, KdForestParams::default()).unwrap();
+    t.row(vec![
+        "FLANN (KD-forest)".into(),
+        format!("{:.1?}", kd.build_time),
+        "-".into(),
+        "(random shuffle)".into(),
+        format!("{:.1?}", kd.build_time),
+    ]);
+    t.print();
+    println!("(expect: Pyramid slowest [meta+assign overhead], KD-forest fastest — paper: 162min/53min/38s)");
+}

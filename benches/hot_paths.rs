@@ -1,0 +1,147 @@
+//! Hot-path micro-benchmarks (hand-rolled harness; criterion is not
+//! available offline). Used by the §Perf optimization pass: run before and
+//! after each change and record deltas in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench hot_paths [-- <filter>]
+
+use pyramid::broker::{Broker, BrokerConfig};
+use pyramid::dataset::SyntheticSpec;
+use pyramid::hnsw::{Hnsw, HnswParams};
+use pyramid::metric::{dot_unrolled, l2_sq_unrolled, Metric};
+use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
+use pyramid::types::{merge_topk, Neighbor};
+use std::time::{Duration, Instant};
+
+/// Time `f` for ~`target` wall time after warmup; print ns/op + ops/s.
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // Warmup.
+    let mut units = 0u64;
+    for _ in 0..3 {
+        units = units.max(f());
+    }
+    let target = Duration::from_millis(400);
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    let mut total_units = 0u64;
+    while t0.elapsed() < target {
+        total_units += f();
+        iters += 1;
+    }
+    let elapsed = t0.elapsed();
+    let ns_per_unit = elapsed.as_nanos() as f64 / total_units.max(1) as f64;
+    println!(
+        "{name:<44} {:>10.1} ns/op {:>14.0} ops/s   ({iters} iters)",
+        ns_per_unit,
+        1e9 / ns_per_unit
+    );
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args().skip(1).find(|a| a != "--bench" && !a.starts_with("--"));
+    let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+    println!("== pyramid hot-path micro-benchmarks ==");
+
+    // --- metric kernels ----------------------------------------------------
+    for d in [96usize, 128, 384] {
+        let a: Vec<f32> = (0..d).map(|i| (i as f32) * 0.01).collect();
+        let b: Vec<f32> = (0..d).map(|i| (i as f32) * -0.02).collect();
+        if run("metric/dot") {
+            bench(&format!("metric/dot d={d}"), || {
+                let mut acc = 0.0;
+                for _ in 0..1024 {
+                    acc += dot_unrolled(std::hint::black_box(&a), std::hint::black_box(&b));
+                }
+                std::hint::black_box(acc);
+                1024
+            });
+        }
+        if run("metric/l2") {
+            bench(&format!("metric/l2 d={d}"), || {
+                let mut acc = 0.0;
+                for _ in 0..1024 {
+                    acc += l2_sq_unrolled(std::hint::black_box(&a), std::hint::black_box(&b));
+                }
+                std::hint::black_box(acc);
+                1024
+            });
+        }
+    }
+
+    // --- HNSW search (the per-executor hot loop) ----------------------------
+    if run("hnsw") {
+        let data = SyntheticSpec::deep_like(50_000, 96, 3).generate();
+        let queries = SyntheticSpec::deep_like(50_000, 96, 3).queries(256);
+        let h = Hnsw::build(data, Metric::L2, HnswParams::default()).unwrap();
+        for ef in [50usize, 100, 200] {
+            let mut qi = 0usize;
+            bench(&format!("hnsw/search n=50k d=96 ef={ef}"), || {
+                let q = queries.get(qi % queries.len());
+                std::hint::black_box(h.search(q, 10, ef));
+                qi += 1;
+                1
+            });
+        }
+        let (_, stats) = h.search_with_stats(queries.get(0), 10, 100);
+        println!("  (ef=100 walk: {} dist evals, {} hops)", stats.dist_evals, stats.hops);
+    }
+
+    // --- merge / coordinator path -------------------------------------------
+    if run("merge") {
+        let partials: Vec<Neighbor> =
+            (0..100u32).map(|i| Neighbor::new(i % 60, 1.0 - (i as f32) * 0.01)).collect();
+        bench("coordinator/merge_topk 100 -> 10", || {
+            std::hint::black_box(merge_topk(std::hint::black_box(partials.clone()), 10));
+            1
+        });
+    }
+
+    // --- broker round trip ---------------------------------------------------
+    if run("broker") {
+        let b: Broker<u64> = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(0),
+            ..BrokerConfig::default()
+        });
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        let mut k = 0u64;
+        bench("broker/publish+poll+ack roundtrip", || {
+            b.publish("t", k, k).unwrap();
+            let d = c.poll(Duration::from_millis(100)).unwrap();
+            c.ack(&d);
+            k += 1;
+            1
+        });
+    }
+
+    // --- rerank: native vs PJRT ----------------------------------------------
+    if run("rerank") {
+        let cands = SyntheticSpec::deep_like(512, 96, 5).generate();
+        let q = SyntheticSpec::deep_like(512, 96, 5).queries(1);
+        let ids: Vec<u32> = (0..cands.len() as u32).collect();
+        bench("rerank/native 512 cands d=96", || {
+            std::hint::black_box(
+                NativeScorer.rerank(Metric::L2, q.get(0), cands.raw(), &ids, 10).unwrap(),
+            );
+            1
+        });
+        if let Some(dir) = default_artifacts_dir() {
+            let pjrt = PjrtScorer::spawn(dir).unwrap();
+            bench("rerank/pjrt 512 cands d=96 (AOT Pallas)", || {
+                std::hint::black_box(pjrt.rerank(Metric::L2, q.get(0), cands.raw(), &ids, 10).unwrap());
+                1
+            });
+            bench("scores/pjrt block 128x4096 d=96", || {
+                let qb = SyntheticSpec::deep_like(128, 96, 9).generate();
+                let xb = SyntheticSpec::deep_like(4096, 96, 10).generate();
+                std::hint::black_box(
+                    pjrt.scores(Metric::L2, qb.raw(), 128, xb.raw(), 4096, 96).unwrap(),
+                );
+                128 * 4096
+            });
+        } else {
+            println!("rerank/pjrt: SKIP (run `make artifacts`)");
+        }
+    }
+
+    println!("done.");
+}

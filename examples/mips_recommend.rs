@@ -1,0 +1,76 @@
+//! MIPS recommendation scenario (paper §III-C, Fig 10).
+//!
+//! Models a recommender: item embeddings with a wide norm spread
+//! (tiny-like), user queries answered by maximum inner product search.
+//! Shows why Algorithm 5 exists: without the top-`r` replication the
+//! large-norm items scatter and branch-1 precision collapses; with it,
+//! one partition per query already answers accurately — at a storage
+//! overhead of well under a few percent.
+//!
+//!     cargo run --release --example mips_recommend
+
+use pyramid::prelude::*;
+use pyramid::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 20_000);
+    let d = args.get_usize("d", 64);
+    let r = args.get_usize("replication", 100);
+
+    println!("== MIPS recommendation (Algorithm 5) ==");
+    let spec = SyntheticSpec::tiny_like(n, d, 13);
+    let items = spec.generate();
+    let users = spec.queries(200);
+
+    // Norm bias (paper Fig 3): how much of the exact top-10 mass sits in
+    // the top-norm items.
+    let workload = Workload::new(items.clone(), users, Metric::Ip, 10);
+    let mut norms: Vec<(u32, f32)> =
+        items.norms().into_iter().enumerate().map(|(i, v)| (i as u32, v)).collect();
+    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let top5pct: std::collections::HashSet<u32> =
+        norms[..n / 20].iter().map(|(i, _)| *i).collect();
+    let in_top: usize = workload
+        .ground_truth
+        .iter()
+        .flat_map(|r| r.iter())
+        .filter(|nb| top5pct.contains(&nb.id))
+        .count();
+    let total: usize = workload.ground_truth.iter().map(Vec::len).sum();
+    println!(
+        "norm bias: top-5%-norm items hold {:.1}% of exact top-10 results (paper Fig 3: 93.1%)",
+        100.0 * in_top as f64 / total as f64
+    );
+
+    let base = IndexConfig {
+        sample: (n / 4).max(512),
+        meta_size: 64,
+        partitions: 8,
+        ..IndexConfig::default()
+    };
+    let params = QueryParams { k: 10, branch: 1, ef: 100, meta_ef: 100 };
+
+    let mut table = TablePrinter::new(&[
+        "variant", "replication r", "stored items", "overhead", "branch-1 precision",
+    ]);
+    for (label, repl) in [("Alg 3 (no replication)", 0usize), ("Alg 5 (top-r replication)", r)] {
+        let cfg = IndexConfig { mips_replication: repl, ..base };
+        let idx = PyramidIndex::build(&items, Metric::Ip, &cfg)?;
+        let results: Vec<Vec<Neighbor>> = (0..workload.queries.len())
+            .map(|qi| idx.search(workload.queries.get(qi), &params))
+            .collect();
+        let precision = workload.precision(&results);
+        let stored = idx.stored_items();
+        table.row(vec![
+            label.to_string(),
+            repl.to_string(),
+            stored.to_string(),
+            format!("{:+.2}%", 100.0 * (stored as f64 - n as f64) / n as f64),
+            format!("{precision:.3}"),
+        ]);
+    }
+    table.print();
+    println!("(paper Fig 10: Pyramid reaches 96.98% precision at branch 1 with r=300, +0.6% storage)");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: build a Pyramid index over a synthetic dataset, search it
+//! locally, and verify result quality against exact ground truth.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Flags: --n 50000 --d 96 --partitions 10 --meta 128 --branch 4
+
+use pyramid::prelude::*;
+use pyramid::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 50_000);
+    let d = args.get_usize("d", 96);
+    let w = args.get_usize("partitions", 10);
+    let m = args.get_usize("meta", 128);
+    let branch = args.get_usize("branch", 4);
+
+    println!("== Pyramid quickstart ==");
+    println!("dataset: deep-like synthetic, {n} x {d}");
+    let spec = SyntheticSpec::deep_like(n, d, 7);
+    let data = spec.generate();
+    let queries = spec.queries(100);
+
+    // Build the two-level index (Algorithm 3).
+    let cfg = IndexConfig {
+        sample: (n / 10).max(m),
+        meta_size: m,
+        partitions: w,
+        ..IndexConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let index = PyramidIndex::build(&data, Metric::L2, &cfg)?;
+    println!(
+        "built index in {:?}: meta-HNSW {} vertices, {} partitions, sizes {:?}",
+        t0.elapsed(),
+        index.meta.len(),
+        index.partitions(),
+        index.report.sub_sizes
+    );
+
+    // Search (Algorithm 4) and score precision against brute force.
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let params = QueryParams { k: 10, branch, ef: 100, meta_ef: 100 };
+    let mut results = Vec::new();
+    let mut touched = 0usize;
+    let t0 = std::time::Instant::now();
+    for qi in 0..workload.queries.len() {
+        let (res, parts) = index.search_with_route(workload.queries.get(qi), &params);
+        touched += parts.len();
+        results.push(res);
+    }
+    let elapsed = t0.elapsed();
+    let precision = workload.precision(&results);
+    let access_rate = touched as f64 / (workload.queries.len() * w) as f64;
+    println!(
+        "searched {} queries in {:?} ({:.0} qps single-threaded)",
+        workload.queries.len(),
+        elapsed,
+        workload.queries.len() as f64 / elapsed.as_secs_f64()
+    );
+    println!("precision@10 = {precision:.3}   access rate = {access_rate:.2} (branch K={branch})");
+    println!("\nTop-5 for query 0:");
+    for nb in results[0].iter().take(5) {
+        println!("  id {:>7}  score {:+.4}", nb.id, nb.score);
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end serving driver (DESIGN.md: the required E2E validation).
+//!
+//! Builds a Pyramid index over a real-sized synthetic workload, starts the
+//! full simulated 10-worker cluster (broker + registry + master +
+//! executors + coordinators), loads it with closed-loop clients, and
+//! reports throughput / P50/P90/P99 latency / precision — the paper's
+//! §V-B serving metrics. With `--pjrt` the coordinators re-rank merged
+//! partials through the AOT-compiled Pallas scorer (PJRT on the request
+//! path); run `make artifacts` first.
+//!
+//!     cargo run --release --example serve_cluster -- --n 100000 --seconds 15
+//!     cargo run --release --example serve_cluster -- --pjrt
+
+use pyramid::prelude::*;
+use pyramid::runtime::{default_artifacts_dir, BatchScorer, PjrtScorer};
+use pyramid::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 100_000);
+    let d = args.get_usize("d", 96);
+    let workers = args.get_usize("workers", 10);
+    let seconds = args.get_f64("seconds", 10.0);
+    let clients = args.get_usize("clients", 32);
+    let branch = args.get_usize("branch", 4);
+    let use_pjrt = args.get_bool("pjrt");
+
+    println!("== Pyramid end-to-end serving ==");
+    println!("dataset: deep-like {n} x {d}; cluster: {workers} workers");
+    let spec = SyntheticSpec::deep_like(n, d, 7);
+    let data = spec.generate();
+    let queries = spec.queries(1_000);
+
+    let cfg = IndexConfig {
+        sample: (n / 10).clamp(1_000, 100_000),
+        meta_size: args.get_usize("meta", 1_000).min(n / 4),
+        partitions: workers,
+        ..IndexConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let index = PyramidIndex::build(&data, Metric::L2, &cfg)?;
+    println!(
+        "index built in {:?} (kmeans {:?}, meta {:?}, partition {:?}, assign {:?}, subs {:?})",
+        index.report.total(),
+        index.report.sample_kmeans,
+        index.report.meta_build,
+        index.report.partition,
+        index.report.assign,
+        index.report.sub_build,
+    );
+    let _ = t0;
+
+    println!("computing exact ground truth…");
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+
+    let topo = ClusterTopology {
+        workers,
+        replicas: args.get_usize("replicas", 1),
+        coordinators: args.get_usize("coordinators", 2),
+        net_latency_us: args.get_u64("net-latency-us", 50),
+        rebalance_ms: 200,
+    };
+    let scorer: Option<Arc<dyn BatchScorer>> = if use_pjrt {
+        let dir = default_artifacts_dir()
+            .ok_or_else(|| PyramidError::Artifact("artifacts not found; run `make artifacts`".into()))?;
+        println!("PJRT re-rank enabled (artifacts: {})", dir.display());
+        Some(Arc::new(PjrtScorer::spawn(dir)?))
+    } else {
+        None
+    };
+    let cluster = SimCluster::start_with_scorer(&index, topo, scorer)?;
+    println!("cluster up: {} executors live", cluster.live_executors());
+
+    let params = QueryParams { k: 10, branch, ef: 100, meta_ef: 100 };
+    println!("driving {clients} closed-loop clients for {seconds}s…");
+    let report = drive_cluster(&cluster, &workload, &params, clients, Duration::from_secs_f64(seconds));
+
+    let mut t = TablePrinter::new(&[
+        "branch K", "queries", "qps", "precision", "p50 ms", "p90 ms", "p99 ms", "errors",
+    ]);
+    t.row(vec![
+        branch.to_string(),
+        report.queries.to_string(),
+        format!("{:.0}", report.qps),
+        format!("{:.4}", report.precision),
+        format!("{:.3}", report.latency.p50_ms()),
+        format!("{:.3}", report.latency.p90_ms()),
+        format!("{:.3}", report.latency.p99_ms()),
+        report.errors.to_string(),
+    ]);
+    t.print();
+    println!(
+        "executor requests served: {} (access rate ≈ {:.2})",
+        cluster.total_served(),
+        cluster.total_served() as f64 / report.queries.max(1) as f64 / workers as f64
+    );
+    cluster.shutdown();
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path for Pyramid (never imported at runtime).
+
+Layer 2 (`model`) defines the jax compute graphs, calling the Layer-1 Pallas
+kernels in `kernels`; `aot` lowers them to HLO text artifacts that the rust
+runtime loads through PJRT.
+"""

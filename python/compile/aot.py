@@ -1,0 +1,153 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+every artifact's function family, metric and static shapes — the rust
+runtime keys its executable cache off this manifest.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static-shape variants compiled for the rust runtime. d=128 covers every
+# dataset dim in the paper's range <=128 by zero-padding; d=384 covers the
+# Tiny-like GIST dims. Block sizes divide the shapes (scorer asserts this).
+VARIANTS = []
+
+
+def _add(name, fn, specs, **meta):
+    VARIANTS.append({"name": name, "fn": fn, "specs": specs, "meta": meta})
+
+
+def build_variants():
+    """Every (family, metric, d) is emitted in BOTH implementations:
+
+    * impl="pallas" — the L1 tiled kernel (interpret=True). The TPU-target
+      artifact and the on-PJRT numerics cross-check.
+    * impl="jnp"    — identical math as plain XLA ops; compiles to fused
+      dots on CPU-PJRT and is the serving path there (§Perf).
+    """
+    del VARIANTS[:]
+    for impl in ("pallas", "jnp"):
+        sfx = "" if impl == "pallas" else "_jnp"
+        for metric in ("l2", "ip", "cos"):
+            for d in (128, 384):
+                # Re-rank blocks: B=1 (the coordinator's per-query merge —
+                # no padded-batch waste) and B=128 (batched re-rank).
+                for b in (1, 128):
+                    n, k, bn = 512, 128, 512
+                    bq = b
+                    fn, specs = model.make_rerank_topk(metric, b, n, d, k, bq, bn, impl=impl)
+                    _add(
+                        f"rerank_{metric}_b{b}_n{n}_d{d}_k{k}{sfx}",
+                        fn,
+                        specs,
+                        family="rerank",
+                        impl=impl,
+                        metric=metric,
+                        b=b,
+                        n=n,
+                        d=d,
+                        k=k,
+                    )
+                # Bulk score block for ground-truth / replication scans.
+                b, n, bq, bn = 128, 4096, 128, 512
+                fn, specs = model.make_scores(metric, b, n, d, bq, bn, impl=impl)
+                _add(
+                    f"scores_{metric}_b{b}_n{n}_d{d}{sfx}",
+                    fn,
+                    specs,
+                    family="scores",
+                    impl=impl,
+                    metric=metric,
+                    b=b,
+                    n=n,
+                    d=d,
+                )
+        for d in (128, 384):
+            n, m, bq, bn = 4096, 512, 128, 512
+            fn, specs = model.make_kmeans_step(n, m, d, bq, bn, impl=impl)
+            _add(
+                f"kmeans_step_n{n}_m{m}_d{d}{sfx}",
+                fn,
+                specs,
+                family="kmeans_step",
+                impl=impl,
+                n=n,
+                m=m,
+                d=d,
+            )
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for artifact staleness checks."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fp = input_fingerprint()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp and all(
+            os.path.exists(os.path.join(args.out_dir, a["file"]))
+            for a in old.get("artifacts", [])
+        ):
+            print(f"artifacts up to date (fingerprint {fp}); nothing to do")
+            return
+
+    build_variants()
+    entries = []
+    for v in VARIANTS:
+        lowered = jax.jit(v["fn"]).lower(*v["specs"])
+        text = to_hlo_text(lowered)
+        fname = v["name"] + ".hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": v["name"], "file": fname, **v["meta"]})
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"fingerprint": fp, "artifacts": entries}, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} artifacts, fingerprint {fp})")
+
+
+if __name__ == "__main__":
+    main()

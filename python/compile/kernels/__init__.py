@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for Pyramid's dense scoring hot-spot.
+
+`scorer` holds the tiled kernels; `ref` holds the pure-jnp oracles used by
+pytest. Everything here is build-time only — rust consumes the lowered HLO.
+"""
+
+from . import ref, scorer  # noqa: F401
+from .scorer import scores, scores_masked  # noqa: F401

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas scoring kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its reference here to float tolerance, across the shape/dtype
+sweep in python/tests/. Kept deliberately simple — no tiling, no tricks.
+
+Similarity convention follows the paper (Section II): larger score = more
+similar. Euclidean therefore returns *negative squared* distance (the square
+is monotone, so top-k is unchanged and we avoid a sqrt on the hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def scores_ip(q, x):
+    """Inner-product scores. q: [B, d], x: [N, d] -> [B, N]."""
+    return q @ x.T
+
+
+def scores_l2(q, x):
+    """Negative squared Euclidean distance scores. [B, d], [N, d] -> [B, N].
+
+    Computed directly (no norm expansion) so it is an independent oracle for
+    the kernel's norm-expansion trick.
+    """
+    diff = q[:, None, :] - x[None, :, :]
+    return -jnp.sum(diff * diff, axis=-1)
+
+
+def scores_cos(q, x):
+    """Cosine (angular) similarity scores. [B, d], [N, d] -> [B, N]."""
+    qn = q / jnp.linalg.norm(q, axis=-1, keepdims=True).clip(1e-12)
+    xn = x / jnp.linalg.norm(x, axis=-1, keepdims=True).clip(1e-12)
+    return qn @ xn.T
+
+
+def topk_scores(q, x, k, metric="l2"):
+    """Reference fused score+top-k: returns (values, indices), each [B, k]."""
+    s = {"l2": scores_l2, "ip": scores_ip, "cos": scores_cos}[metric](q, x)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx
+
+
+def kmeans_step(points, centers):
+    """One Lloyd step. points: [N, d], centers: [m, d].
+
+    Returns (new_centers [m, d], counts [m]). Empty clusters keep their old
+    center (counts==0 -> unchanged), matching the rust implementation.
+    """
+    d2 = -scores_l2(points, centers)  # [N, m] squared distances
+    assign = jnp.argmin(d2, axis=-1)  # [N]
+    m = centers.shape[0]
+    one_hot = (assign[:, None] == jnp.arange(m)[None, :]).astype(points.dtype)
+    counts = one_hot.sum(axis=0)  # [m]
+    sums = one_hot.T @ points  # [m, d]
+    new_centers = jnp.where(
+        counts[:, None] > 0, sums / counts[:, None].clip(1.0), centers
+    )
+    return new_centers, counts

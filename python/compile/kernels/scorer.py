@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: tiled batched similarity scorer.
+
+This is the paper's dense-compute hot-spot (coordinator re-rank, k-means
+assignment, ground-truth scans) expressed as an MXU-friendly tiled matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): Pyramid targets CPU
+clusters, so there is no threadblock scheme to port; instead we tile the
+score matrix S = f(Q · Xᵀ) into (BQ, BN) VMEM blocks with a grid over both
+axes. The d (depth) axis is kept whole per tile — Pyramid's dimensions are
+96–384, so a full row of Q and column-block of X fit comfortably in VMEM
+(see DESIGN.md §7 for the footprint arithmetic). All three metrics share one
+matmul; the metric is an epilogue:
+
+  ip :  S = Q Xᵀ
+  l2 :  S = -(‖q‖² + ‖x‖² - 2 Q Xᵀ)         (norm expansion; MXU does 2QXᵀ)
+  cos:  S = Q̂ X̂ᵀ with rows pre-normalized inside the tile
+
+Kernels are lowered with interpret=True only — the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches both the MXU systolic array edge and the
+# lane count; BN=512 amortizes the Q-tile reload across four MXU passes.
+BQ = 128
+BN = 512
+
+
+def _scorer_kernel(metric, q_ref, x_ref, o_ref):
+    """One (BQ, BN) tile of the score matrix.
+
+    q_ref: [BQ, d] query tile, x_ref: [BN, d] item tile, o_ref: [BQ, BN].
+    """
+    q = q_ref[...]
+    x = x_ref[...]
+    if metric == "cos":
+        # Normalize rows in-tile so the matmul below yields cosine directly.
+        q = q * jax.lax.rsqrt(jnp.sum(q * q, axis=-1, keepdims=True) + 1e-24)
+        x = x * jax.lax.rsqrt(jnp.sum(x * x, axis=-1, keepdims=True) + 1e-24)
+    # The single MXU-bound contraction shared by every metric.
+    dots = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [BQ, BN]
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [BQ, 1]
+        xn = jnp.sum(x * x, axis=-1, keepdims=True).T  # [1, BN]
+        o_ref[...] = 2.0 * dots - qn - xn
+    else:
+        o_ref[...] = dots
+
+
+def scores(q, x, metric="l2", bq=BQ, bn=BN):
+    """Tiled scorer: q [B, d], x [N, d] -> scores [B, N].
+
+    B must be a multiple of bq and N a multiple of bn (the AOT pipeline pads
+    to block shape; rust slices the valid region). Larger score = more
+    similar for every metric (l2 returns negative squared distance).
+    """
+    B, d = q.shape
+    N, _ = x.shape
+    assert B % bq == 0 and N % bn == 0, (B, N, bq, bn)
+    grid = (B // bq, N // bn)
+    return pl.pallas_call(
+        functools.partial(_scorer_kernel, metric),
+        grid=grid,
+        in_specs=[
+            # Q tile varies with grid axis 0 only: reused across item blocks.
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            # X tile varies with grid axis 1 only: streamed HBM->VMEM.
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=True,
+    )(q, x)
+
+
+def scores_masked(q, x, n_valid, metric="l2", bq=BQ, bn=BN):
+    """Like scores() but masks padded item rows to -inf.
+
+    n_valid is a scalar (static or traced) count of real rows in x; rows at
+    index >= n_valid receive -inf so they can never enter a top-k. Used by
+    the AOT re-rank artifact, whose item block is padded to the block shape.
+    """
+    s = scores(q, x, metric=metric, bq=bq, bn=bn)
+    idx = jnp.arange(x.shape[0])[None, :]
+    return jnp.where(idx < n_valid, s, -jnp.inf)

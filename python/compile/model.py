@@ -1,0 +1,131 @@
+"""L2: Pyramid's jax compute graphs, built on the L1 Pallas scorer.
+
+Three graph families, each lowered to HLO text by `aot.py` and executed from
+the rust hot path through PJRT:
+
+  scores      — dense score block S = f(Q Xᵀ)   (ground truth, bulk scans)
+  rerank_topk — masked score block + fused lax.top_k
+                (the coordinator's merge/re-rank step: Algorithm 4 line 9)
+  kmeans_step — one weighted Lloyd assignment+update step
+                (index build: Algorithm 3 line 4 / Algorithm 5 line 5)
+
+All shapes are static; rust pads inputs up to the compiled block shape:
+  * depth d     — zero-padding is exactly score-neutral for ip/l2/cos;
+  * queries B   — padded query rows produce garbage rows rust never reads;
+  * items N     — masked to -inf via the `n_valid` scalar (rerank) or
+                  zero `weights` (kmeans), so padding cannot leak into
+                  results.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, scorer
+
+
+def _scores_impl(impl, metric, bq, bn):
+    """Select the scoring implementation.
+
+    "pallas": the L1 tiled kernel under interpret=True. On a real TPU this
+    lowers to Mosaic and is the fast path; on CPU-PJRT the interpreter
+    loop executes tile-by-tile (correct but slow), so it serves as the
+    numerics cross-check.
+    "jnp": the same math lowered as plain XLA ops — on CPU-PJRT this
+    compiles to a fused dot and is the serving path (§Perf log in
+    EXPERIMENTS.md: ~100x over interpreted Pallas on this host).
+    """
+    if impl == "pallas":
+        return lambda q, x: scorer.scores(q, x, metric=metric, bq=bq, bn=bn)
+
+    # jnp lowering: same math, matmul-shaped. NOTE: not ref.scores_l2 — the
+    # oracle's broadcast form materializes a [B, N, d] tensor, which is
+    # memory-catastrophic at serving block sizes (§Perf log). The norm
+    # expansion keeps everything inside one dot.
+    def l2(q, x):
+        dots = q @ x.T
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        xn = jnp.sum(x * x, axis=1, keepdims=True).T
+        return 2.0 * dots - qn - xn
+
+    def cos(q, x):
+        qn = q * jax.lax.rsqrt(jnp.sum(q * q, axis=1, keepdims=True) + 1e-24)
+        xn = x * jax.lax.rsqrt(jnp.sum(x * x, axis=1, keepdims=True) + 1e-24)
+        return qn @ xn.T
+
+    return {"l2": l2, "ip": ref.scores_ip, "cos": cos}[metric]
+
+
+def make_scores(metric, b, n, d, bq, bn, impl="pallas"):
+    """Dense score block [b, n] for a fixed (b, n, d)."""
+
+    score = _scores_impl(impl, metric, bq, bn)
+
+    def fn(q, x):
+        return (score(q, x),)
+
+    specs = (
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+    )
+    return fn, specs
+
+
+def make_rerank_topk(metric, b, n, d, k, bq, bn, impl="pallas"):
+    """Masked scores + fused top-k: (vals [b, k], idx [b, k] int32).
+
+    `n_valid` masks padded item rows; padded rows can therefore never enter
+    the top-k even when the caller's candidate set is smaller than n.
+    """
+
+    score = _scores_impl(impl, metric, bq, bn)
+
+    def fn(q, x, n_valid):
+        s = score(q, x)
+        s = jnp.where(jnp.arange(x.shape[0])[None, :] < n_valid, s, -jnp.inf)
+        # Top-k via a full descending sort + slice rather than jax.lax.top_k:
+        # top_k lowers to the `topk` HLO instruction, which the rust side's
+        # XLA 0.5.1 text parser predates. sort_key_val lowers to plain
+        # `sort`, which round-trips.
+        iota = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keys, idx = jax.lax.sort_key_val(-s, iota, dimension=1)
+        return -keys[:, :k], idx[:, :k]
+
+    specs = (
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, specs
+
+
+def make_kmeans_step(n, m, d, bq, bn, impl="pallas"):
+    """One weighted Lloyd step over a block of points.
+
+    points [n, d], centers [m, d], weights [n] -> (sums [m, d], counts [m]).
+
+    Returns the *partial sufficient statistics* (weighted per-center sums and
+    weight totals) rather than new centers, so rust can stream blocks of a
+    large dataset through the same executable and reduce the partials —
+    exactly the distributed-kmeans workflow of Algorithm 3's "Distributed
+    workflow" paragraph. Points with weight 0 (padding) contribute nothing.
+    The assignment distance matrix reuses the L1 Pallas scorer.
+    """
+
+    score = _scores_impl(impl, "l2", bq, bn)
+
+    def fn(points, centers, weights):
+        s = score(points, centers)  # [n, m]
+        assign = jnp.argmax(s, axis=-1)  # max score = min distance
+        one_hot = (assign[:, None] == jnp.arange(m)[None, :]).astype(
+            jnp.float32
+        ) * weights[:, None]
+        counts = one_hot.sum(axis=0)  # [m]
+        sums = one_hot.T @ points  # [m, d]
+        return sums, counts
+
+    specs = (
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((m, d), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return fn, specs

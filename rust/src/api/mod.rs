@@ -1,0 +1,205 @@
+//! Public high-level API — the paper's Listings 1–3.
+//!
+//! These wrap the internal nodes with the file-based contract a real
+//! deployment uses: [`GraphConstructor`] builds and writes the index to a
+//! path; [`Coordinator`] loads the meta-HNSW from that path and serves
+//! `execute`/`execute_async`; [`Executor`] loads one sub-HNSW and serves
+//! its topic until stopped. "Brokers" is the in-process [`Broker`] handle
+//! (the Kafka substitute), shared by all parties.
+
+use crate::broker::Broker;
+use crate::cluster::SimCluster;
+use crate::config::{ClusterTopology, IndexConfig, QueryParams};
+use crate::coordinator::{topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
+use crate::error::Result;
+use crate::executor::{ExecutorHandle, ExecutorSpec, HostControl};
+use crate::meta::PyramidIndex;
+use crate::metric::Metric;
+use crate::registry::Registry;
+use crate::types::{Neighbor, PartitionId};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Listing 3: index construction.
+///
+/// ```ignore
+/// let gc = GraphConstructor::new(data_path, metric, para);
+/// gc.construct(out_dir)?;
+/// gc.refresh()?;   // re-read dataset, rebuild, re-notify
+/// ```
+pub struct GraphConstructor {
+    dataset: crate::config::DatasetConfig,
+    metric: Metric,
+    para: IndexConfig,
+    out_dir: std::sync::Mutex<Option<PathBuf>>,
+}
+
+impl GraphConstructor {
+    pub fn new(dataset: crate::config::DatasetConfig, metric: Metric, para: IndexConfig) -> Self {
+        GraphConstructor { dataset, metric, para, out_dir: std::sync::Mutex::new(None) }
+    }
+
+    /// Build the meta-HNSW and sub-HNSWs and write them under `out_dir`.
+    /// Returns the in-memory index as well (useful for tests/harnesses).
+    pub fn construct(&self, out_dir: &Path) -> Result<PyramidIndex> {
+        let data = self.dataset.load()?;
+        let idx = PyramidIndex::build(&data, self.metric, &self.para)?;
+        idx.save(out_dir)?;
+        *self.out_dir.lock().unwrap() = Some(out_dir.to_path_buf());
+        Ok(idx)
+    }
+
+    /// Re-read the dataset and rebuild in place (paper: "reads the dataset
+    /// again, reconstructs the graphs and notifies the coordinators and
+    /// executors"). Notification is by file mtime — loaders re-open the
+    /// path.
+    pub fn refresh(&self) -> Result<PyramidIndex> {
+        let dir = self
+            .out_dir
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| crate::error::PyramidError::Index("construct() before refresh()".into()))?;
+        self.construct(&dir)
+    }
+}
+
+/// Listing 1: the coordinator class.
+pub struct Coordinator {
+    node: Arc<CoordinatorNode>,
+}
+
+impl Coordinator {
+    /// `Coordinator(brokers, graph_path, name, metric)` — loads the
+    /// meta-HNSW replica from `graph_path` and binds to the brokers.
+    pub fn new(brokers: Broker<QueryRequest>, graph_path: &Path, id: u64) -> Result<Coordinator> {
+        let router = PyramidIndex::load_router(graph_path)?;
+        Ok(Coordinator { node: CoordinatorNode::new(id, router, brokers, CoordinatorConfig::default()) })
+    }
+
+    /// Synchronous query (Listing 1 `execute`).
+    pub fn execute(&self, query: &[f32], para: &QueryParams) -> Result<Vec<Neighbor>> {
+        self.node.execute(query, para)
+    }
+
+    /// Asynchronous query with callback (Listing 1 `execute_async`).
+    pub fn execute_async<F>(&self, query: Vec<f32>, para: QueryParams, callback: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<Neighbor>>) + Send + 'static,
+    {
+        self.node.execute_async(query, para, callback)
+    }
+
+    pub fn node(&self) -> &Arc<CoordinatorNode> {
+        &self.node
+    }
+}
+
+/// Listing 2: the executor class. `start` runs until the handle is
+/// stopped; a standalone binary (`pyramid serve-executor`) wraps this with
+/// zero custom logic, as the paper prescribes.
+pub struct Executor {
+    brokers: Broker<QueryRequest>,
+    registry: Registry,
+    graph_path: PathBuf,
+    partition: PartitionId,
+    id: u64,
+}
+
+impl Executor {
+    pub fn new(
+        brokers: Broker<QueryRequest>,
+        registry: Registry,
+        graph_path: &Path,
+        partition: PartitionId,
+        id: u64,
+    ) -> Executor {
+        Executor { brokers, registry, graph_path: graph_path.to_path_buf(), partition, id }
+    }
+
+    /// Load the sub-HNSW and start serving. Returns the running handle.
+    pub fn start(&self) -> Result<ExecutorHandle> {
+        let (sub, ids) = PyramidIndex::load_partition(&self.graph_path, self.partition as usize)?;
+        self.brokers.create_topic(&topic_for(self.partition));
+        Ok(crate::executor::spawn(
+            ExecutorSpec {
+                id: self.id,
+                partition: self.partition,
+                sub,
+                ids,
+                host: HostControl::new(usize::MAX),
+                net_latency: std::time::Duration::ZERO,
+            },
+            self.brokers.clone(),
+            self.registry.clone(),
+        ))
+    }
+}
+
+/// One-call convenience: build (or load) an index and start a simulated
+/// cluster over it — what the examples and figure harnesses use.
+pub fn serve(index: &PyramidIndex, topo: ClusterTopology) -> Result<SimCluster> {
+    SimCluster::start(index, topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::config::DatasetConfig;
+    use crate::dataset::SyntheticKind;
+    use crate::registry::RegistryConfig;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn listings_1_2_3_end_to_end() {
+        // Listing 3: construct.
+        let gc = GraphConstructor::new(
+            DatasetConfig::synthetic(SyntheticKind::DeepLike, 2_000, 16, 5),
+            Metric::L2,
+            IndexConfig { sample: 600, meta_size: 16, partitions: 2, ..Default::default() },
+        );
+        let dir = TempDir::new("api").unwrap();
+        let idx = gc.construct(dir.path()).unwrap();
+        assert_eq!(idx.partitions(), 2);
+
+        // Shared "brokers" + registry.
+        let brokers: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_pause: std::time::Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        for p in 0..2u16 {
+            brokers.create_topic(&topic_for(p));
+        }
+        let registry = Registry::new(RegistryConfig::default());
+
+        // Listing 2: two executors, one per sub-HNSW.
+        let e0 = Executor::new(brokers.clone(), registry.clone(), dir.path(), 0, 100).start().unwrap();
+        let e1 = Executor::new(brokers.clone(), registry.clone(), dir.path(), 1, 101).start().unwrap();
+
+        // Listing 1: a coordinator serving queries.
+        let coord = Coordinator::new(brokers, dir.path(), 0).unwrap();
+        let data = DatasetConfig::synthetic(SyntheticKind::DeepLike, 2_000, 16, 5).load().unwrap();
+        let para = QueryParams { k: 5, branch: 2, ef: 80, meta_ef: 80 };
+        let res = coord.execute(data.get(17), &para).unwrap();
+        assert_eq!(res.len(), 5);
+        assert_eq!(res[0].id, 17, "item should be its own nearest neighbor");
+
+        // execute_async delivers through the callback.
+        let (tx, rx) = std::sync::mpsc::channel();
+        coord
+            .execute_async(data.get(3).to_vec(), para, move |r| {
+                let _ = tx.send(r.map(|v| v[0].id));
+            })
+            .unwrap();
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap(), 3);
+
+        // Listing 3: refresh rebuilds in place.
+        let idx2 = gc.refresh().unwrap();
+        assert_eq!(idx2.partitions(), 2);
+
+        e0.stop();
+        e1.stop();
+        coord.node().shutdown();
+    }
+}

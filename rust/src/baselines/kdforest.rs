@@ -1,0 +1,364 @@
+//! Randomized KD-tree forest — the FLANN substitute (paper §V-C,
+//! DESIGN.md §3).
+//!
+//! FLANN's distributed mode randomly partitions the data and builds a
+//! forest of randomized KD-trees per worker; search descends every tree,
+//! then backtracks through a shared priority queue until a budget of leaf
+//! `checks` is spent. The split dimension is drawn randomly from the
+//! top-5 highest-variance dimensions at each node — the classic
+//! Silpa-Anan & Hartley construction FLANN implements.
+
+use crate::cluster::SimCluster;
+use crate::config::{ClusterTopology, QueryParams};
+use crate::dataset::{Dataset, SubDataset};
+use crate::error::{PyramidError, Result};
+use crate::executor::SubIndex;
+use crate::meta::Router;
+use crate::metric::Metric;
+use crate::types::{merge_topk, Neighbor, VectorId};
+use crate::util::rng::Rng;
+use crate::util::threads;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// KD-forest parameters (defaults follow FLANN's recommended settings).
+#[derive(Debug, Clone, Copy)]
+pub struct KdForestParams {
+    pub trees: usize,
+    /// Max points per leaf.
+    pub leaf_size: usize,
+    pub seed: u64,
+}
+
+impl Default for KdForestParams {
+    fn default() -> Self {
+        KdForestParams { trees: 4, leaf_size: 16, seed: 0 }
+    }
+}
+
+enum Node {
+    Split { dim: u16, value: f32, left: u32, right: u32 },
+    Leaf { start: u32, end: u32 },
+}
+
+struct Tree {
+    nodes: Vec<Node>,
+    /// Row ids, leaf ranges index into this.
+    order: Vec<u32>,
+}
+
+/// A randomized KD-tree forest over one dataset.
+pub struct KdForest {
+    data: Dataset,
+    trees: Vec<Tree>,
+    #[allow(dead_code)]
+    params: KdForestParams,
+}
+
+impl KdForest {
+    pub fn build(data: Dataset, params: KdForestParams) -> Result<KdForest> {
+        if data.is_empty() {
+            return Err(PyramidError::Index("kdforest: empty dataset".into()));
+        }
+        let mut trees = Vec::with_capacity(params.trees);
+        for t in 0..params.trees {
+            let mut rng = Rng::seed_from_u64(params.seed ^ (0xF0 + t as u64));
+            let mut order: Vec<u32> = (0..data.len() as u32).collect();
+            let mut nodes = Vec::new();
+            build_node(&data, &mut order, 0, data.len(), params.leaf_size, &mut nodes, &mut rng);
+            trees.push(Tree { nodes, order });
+        }
+        Ok(KdForest { data, trees, params })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Top-k search with a budget of `checks` leaf-point evaluations.
+    /// Multi-tree best-bin-first: all trees share one priority queue.
+    pub fn search(&self, query: &[f32], k: usize, checks: usize) -> Vec<Neighbor> {
+        // Max-heap of (-mindist, tree, node) — closest boundary first.
+        #[derive(PartialEq)]
+        struct Cand(f32, u32, u32);
+        impl Eq for Cand {}
+        impl PartialOrd for Cand {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Cand {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
+            }
+        }
+        let mut pq: BinaryHeap<Cand> = BinaryHeap::new();
+        for t in 0..self.trees.len() {
+            pq.push(Cand(0.0, t as u32, 0));
+        }
+        let mut visited = vec![false; self.data.len()];
+        let mut results: BinaryHeap<std::cmp::Reverse<Neighbor>> = BinaryHeap::new();
+        let mut spent = 0usize;
+        while let Some(Cand(neg_mind, t, n)) = pq.pop() {
+            if spent >= checks {
+                break;
+            }
+            // Prune: boundary further than current worst of a full top-k.
+            if results.len() >= k {
+                let worst = results.peek().unwrap().0.score;
+                if -neg_mind > -worst {
+                    // mindist^2 greater than worst distance^2 (L2 scores
+                    // are negative squared distances).
+                    continue;
+                }
+            }
+            let tree = &self.trees[t as usize];
+            let mut node = n;
+            // Descend to a leaf, queueing the far sides.
+            loop {
+                match &tree.nodes[node as usize] {
+                    Node::Split { dim, value, left, right } => {
+                        let diff = query[*dim as usize] - value;
+                        let (near, far) = if diff <= 0.0 { (*left, *right) } else { (*right, *left) };
+                        let bound = neg_mind.min(-(diff * diff));
+                        pq.push(Cand(bound, t, far));
+                        node = near;
+                    }
+                    Node::Leaf { start, end } => {
+                        for &id in &tree.order[*start as usize..*end as usize] {
+                            if visited[id as usize] {
+                                continue;
+                            }
+                            visited[id as usize] = true;
+                            let s = Metric::L2.score(query, self.data.get(id as usize));
+                            spent += 1;
+                            if results.len() < k {
+                                results.push(std::cmp::Reverse(Neighbor::new(id, s)));
+                            } else if s > results.peek().unwrap().0.score {
+                                results.pop();
+                                results.push(std::cmp::Reverse(Neighbor::new(id, s)));
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        let mut out: Vec<Neighbor> = results.into_iter().map(|r| r.0).collect();
+        out.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+}
+
+impl SubIndex for KdForest {
+    fn search_local(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        // `ef` plays the role of FLANN's `checks` budget.
+        self.search(query, k, ef.max(k))
+    }
+
+    fn vector(&self, local_id: u32) -> &[f32] {
+        self.data.get(local_id as usize)
+    }
+
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+}
+
+/// Recursive tree construction over `order[start..end]`.
+fn build_node(
+    data: &Dataset,
+    order: &mut [u32],
+    start: usize,
+    end: usize,
+    leaf_size: usize,
+    nodes: &mut Vec<Node>,
+    rng: &mut Rng,
+) -> u32 {
+    let my = nodes.len() as u32;
+    if end - start <= leaf_size {
+        nodes.push(Node::Leaf { start: start as u32, end: end as u32 });
+        return my;
+    }
+    // Variance of each dim over (a sample of) the range.
+    let d = data.dim();
+    let sample_stride = ((end - start) / 128).max(1);
+    let mut mean = vec![0f64; d];
+    let mut m2 = vec![0f64; d];
+    let mut cnt = 0f64;
+    let mut i = start;
+    while i < end {
+        cnt += 1.0;
+        let row = data.get(order[i] as usize);
+        for (j, v) in row.iter().enumerate() {
+            let delta = *v as f64 - mean[j];
+            mean[j] += delta / cnt;
+            m2[j] += delta * (*v as f64 - mean[j]);
+        }
+        i += sample_stride;
+    }
+    // Random pick among the top-5 variance dims (randomized KD-trees).
+    let mut dims: Vec<usize> = (0..d).collect();
+    dims.sort_unstable_by(|&a, &b| m2[b].partial_cmp(&m2[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let split_dim = dims[rng.below(5.min(d))];
+    let split_val = mean[split_dim] as f32;
+    // Partition the range in place.
+    let slice = &mut order[start..end];
+    slice.sort_unstable_by(|&a, &b| {
+        data.get(a as usize)[split_dim]
+            .partial_cmp(&data.get(b as usize)[split_dim])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mid = start + slice_partition_point(data, &order[start..end], split_dim, split_val);
+    // Degenerate split (all values equal): force a median split.
+    if mid == start || mid == end {
+        mid = start + (end - start) / 2;
+    }
+    nodes.push(Node::Split { dim: split_dim as u16, value: split_val, left: 0, right: 0 });
+    let left = build_node(data, order, start, mid, leaf_size, nodes, rng);
+    let right = build_node(data, order, mid, end, leaf_size, nodes, rng);
+    if let Node::Split { left: l, right: r, .. } = &mut nodes[my as usize] {
+        *l = left;
+        *r = right;
+    }
+    my
+}
+
+fn slice_partition_point(data: &Dataset, order: &[u32], dim: usize, value: f32) -> usize {
+    order.partition_point(|&id| data.get(id as usize)[dim] <= value)
+}
+
+/// Distributed FLANN-style deployment: random partition + forest per
+/// worker + broadcast routing.
+pub struct DistributedKdForest {
+    pub forests: Vec<Arc<KdForest>>,
+    pub sub_ids: Vec<Arc<Vec<VectorId>>>,
+    pub build_time: Duration,
+}
+
+impl DistributedKdForest {
+    pub fn build(data: &Dataset, w: usize, params: KdForestParams) -> Result<DistributedKdForest> {
+        if w == 0 || data.is_empty() {
+            return Err(PyramidError::Index("kdforest: empty dataset or w=0".into()));
+        }
+        let t0 = std::time::Instant::now();
+        let mut ids: Vec<u32> = (0..data.len() as u32).collect();
+        let mut rng = Rng::seed_from_u64(params.seed ^ 0x6D);
+        rng.shuffle(&mut ids);
+        let members: Vec<Vec<u32>> = ids.chunks(data.len().div_ceil(w)).map(|c| c.to_vec()).collect();
+        let built: Vec<Result<(Arc<KdForest>, Arc<Vec<VectorId>>)>> =
+            threads::parallel_map(members.len(), threads::default_parallelism(), |p| {
+                let sub = SubDataset::new(data, members[p].clone());
+                let mut prm = params;
+                prm.seed = params.seed ^ (0xD0 + p as u64);
+                Ok((Arc::new(KdForest::build(sub.local, prm)?), Arc::new(sub.global_ids)))
+            });
+        let mut forests = Vec::new();
+        let mut sub_ids = Vec::new();
+        for b in built {
+            let (f, i) = b?;
+            forests.push(f);
+            sub_ids.push(i);
+        }
+        Ok(DistributedKdForest { forests, sub_ids, build_time: t0.elapsed() })
+    }
+
+    /// Single-process query over all partitions.
+    pub fn search(&self, query: &[f32], params: &QueryParams) -> Vec<Neighbor> {
+        let mut partials = Vec::new();
+        for (f, ids) in self.forests.iter().zip(&self.sub_ids) {
+            partials.extend(
+                f.search(query, params.k, params.ef.max(params.k))
+                    .into_iter()
+                    .map(|n| Neighbor::new(ids[n.id as usize], n.score)),
+            );
+        }
+        merge_topk(partials, params.k)
+    }
+
+    /// Deploy on the simulated cluster with broadcast routing.
+    pub fn serve(&self, topo: ClusterTopology) -> Result<SimCluster> {
+        let subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)> = self
+            .forests
+            .iter()
+            .map(|f| f.clone() as Arc<dyn SubIndex>)
+            .zip(self.sub_ids.iter().cloned())
+            .collect();
+        SimCluster::start_custom(subs, Router::broadcast(self.forests.len(), Metric::L2), topo, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bruteforce;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn full_checks_budget_is_exact() {
+        let ds = SyntheticSpec::uniform(500, 8, 3).generate();
+        let f = KdForest::build(ds.clone(), KdForestParams::default()).unwrap();
+        for i in [0usize, 17, 499] {
+            // checks = n: must visit everything reachable and find the item.
+            let r = f.search(ds.get(i), 1, 2_000);
+            assert_eq!(r[0].id, i as u32);
+        }
+    }
+
+    #[test]
+    fn recall_improves_with_checks() {
+        let spec = SyntheticSpec::deep_like(4_000, 24, 9);
+        let ds = spec.generate();
+        let queries = spec.queries(25);
+        let f = KdForest::build(ds.clone(), KdForestParams::default()).unwrap();
+        let gt = bruteforce::search_batch(&ds, &queries, Metric::L2, 10);
+        let recall = |checks: usize| {
+            let mut hit = 0;
+            for qi in 0..queries.len() {
+                let res = f.search(queries.get(qi), 10, checks);
+                let gtset: std::collections::HashSet<u32> = gt[qi].iter().map(|n| n.id).collect();
+                hit += res.iter().filter(|n| gtset.contains(&n.id)).count();
+            }
+            hit as f64 / (queries.len() * 10) as f64
+        };
+        let lo = recall(64);
+        let hi = recall(1_024);
+        assert!(hi > lo, "recall not improving: {lo} -> {hi}");
+        assert!(hi > 0.5, "recall at 1024 checks too low: {hi}");
+    }
+
+    #[test]
+    fn trees_are_randomized() {
+        let ds = SyntheticSpec::uniform(300, 8, 1).generate();
+        let f = KdForest::build(ds, KdForestParams { trees: 2, ..Default::default() }).unwrap();
+        // Two trees should order leaves differently almost surely.
+        assert_ne!(f.trees[0].order, f.trees[1].order);
+    }
+
+    #[test]
+    fn distributed_build_and_search() {
+        let spec = SyntheticSpec::deep_like(2_000, 12, 11);
+        let ds = spec.generate();
+        let queries = spec.queries(10);
+        let dkd = DistributedKdForest::build(&ds, 4, KdForestParams::default()).unwrap();
+        let total: usize = dkd.sub_ids.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 2_000);
+        let gt = bruteforce::search_batch(&ds, &queries, Metric::L2, 10);
+        let mut hit = 0;
+        for qi in 0..queries.len() {
+            let res = dkd.search(queries.get(qi), &QueryParams { k: 10, ef: 512, ..Default::default() });
+            let gtset: std::collections::HashSet<u32> = gt[qi].iter().map(|n| n.id).collect();
+            hit += res.iter().filter(|n| gtset.contains(&n.id)).count();
+        }
+        assert!(hit as f64 / 100.0 > 0.5, "distributed kd recall {}", hit as f64 / 100.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Baseline systems (paper §V-C): HNSW-naive and a FLANN-style KD forest.
+pub mod kdforest;
+pub mod naive;
+
+pub use kdforest::{DistributedKdForest, KdForest, KdForestParams};
+pub use naive::NaiveIndex;

@@ -1,0 +1,164 @@
+//! HNSW-naive baseline (paper §III intro, §V-C).
+//!
+//! Random partitioning + one HNSW per worker; every query fans out to
+//! every worker and the coordinator merges all partials. Same sub-HNSW
+//! parameters as Pyramid for a fair comparison — the only difference is
+//! routing, which is exactly what Fig 9 isolates.
+
+use crate::cluster::SimCluster;
+use crate::config::{ClusterTopology, QueryParams};
+use crate::dataset::{Dataset, SubDataset};
+use crate::error::{PyramidError, Result};
+use crate::executor::SubIndex;
+use crate::hnsw::{Hnsw, HnswParams};
+use crate::meta::Router;
+use crate::metric::Metric;
+use crate::runtime::BatchScorer;
+use crate::types::{merge_topk, Neighbor, VectorId};
+use crate::util::rng::Rng;
+use crate::util::threads;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The random-partition all-workers baseline index.
+pub struct NaiveIndex {
+    pub metric: Metric,
+    pub subs: Vec<Arc<Hnsw>>,
+    pub sub_ids: Vec<Arc<Vec<VectorId>>>,
+    /// Index-build wall time (for the §V-C build-time comparison).
+    pub build_time: Duration,
+}
+
+impl NaiveIndex {
+    /// Randomly partition `data` into `w` equal parts and build an HNSW on
+    /// each (parallel across parts, like the distributed build).
+    pub fn build(data: &Dataset, metric: Metric, w: usize, params: HnswParams, seed: u64) -> Result<NaiveIndex> {
+        if w == 0 || data.is_empty() {
+            return Err(PyramidError::Index("naive: empty dataset or w=0".into()));
+        }
+        let t0 = std::time::Instant::now();
+        let data = if metric.normalizes_items() { data.normalized() } else { data.clone() };
+        let mut ids: Vec<u32> = (0..data.len() as u32).collect();
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA1B2);
+        rng.shuffle(&mut ids);
+        let members: Vec<Vec<u32>> = ids.chunks(data.len().div_ceil(w)).map(|c| c.to_vec()).collect();
+        let data_ref = &data;
+        let built: Vec<Result<(Arc<Hnsw>, Arc<Vec<VectorId>>)>> =
+            threads::parallel_map(members.len(), threads::default_parallelism(), |p| {
+                let sub = SubDataset::new(data_ref, members[p].clone());
+                let mut prm = params;
+                prm.seed = seed ^ (0xB0 + p as u64);
+                Ok((Arc::new(Hnsw::build(sub.local, metric, prm)?), Arc::new(sub.global_ids)))
+            });
+        let mut subs = Vec::new();
+        let mut sub_ids = Vec::new();
+        for b in built {
+            let (h, i) = b?;
+            subs.push(h);
+            sub_ids.push(i);
+        }
+        Ok(NaiveIndex { metric, subs, sub_ids, build_time: t0.elapsed() })
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Single-process query: search every partition, merge (the naive
+    /// data flow).
+    pub fn search(&self, query: &[f32], params: &QueryParams) -> Vec<Neighbor> {
+        let owned;
+        let query = if self.metric.normalizes_items() {
+            let mut q = query.to_vec();
+            crate::metric::normalize_in_place(&mut q);
+            owned = q;
+            &owned[..]
+        } else {
+            query
+        };
+        let mut partials = Vec::new();
+        for (sub, ids) in self.subs.iter().zip(&self.sub_ids) {
+            partials.extend(
+                sub.search(query, params.k, params.ef)
+                    .into_iter()
+                    .map(|n| Neighbor::new(ids[n.id as usize], n.score)),
+            );
+        }
+        merge_topk(partials, params.k)
+    }
+
+    /// Deploy on the simulated cluster with broadcast routing.
+    pub fn serve(&self, topo: ClusterTopology, scorer: Option<Arc<dyn BatchScorer>>) -> Result<SimCluster> {
+        let subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)> = self
+            .subs
+            .iter()
+            .map(|s| s.clone() as Arc<dyn SubIndex>)
+            .zip(self.sub_ids.iter().cloned())
+            .collect();
+        SimCluster::start_custom(subs, Router::broadcast(self.partitions(), self.metric), topo, scorer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bruteforce;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn covers_all_items_once() {
+        let ds = SyntheticSpec::deep_like(2_000, 16, 3).generate();
+        let idx = NaiveIndex::build(&ds, Metric::L2, 4, HnswParams::default(), 0).unwrap();
+        let total: usize = idx.sub_ids.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 2_000);
+        let mut all: Vec<u32> = idx.sub_ids.iter().flat_map(|v| v.iter().copied()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 2_000);
+        // Roughly equal split.
+        for ids in &idx.sub_ids {
+            assert!((450..=550).contains(&ids.len()), "{}", ids.len());
+        }
+    }
+
+    #[test]
+    fn high_precision_searching_everything() {
+        let spec = SyntheticSpec::deep_like(3_000, 16, 5);
+        let ds = spec.generate();
+        let queries = spec.queries(20);
+        let idx = NaiveIndex::build(&ds, Metric::L2, 4, HnswParams::default(), 0).unwrap();
+        let gt = bruteforce::search_batch(&ds, &queries, Metric::L2, 10);
+        let mut hit = 0;
+        for qi in 0..queries.len() {
+            let res = idx.search(queries.get(qi), &QueryParams::default());
+            let gtset: std::collections::HashSet<u32> = gt[qi].iter().map(|n| n.id).collect();
+            hit += res.iter().filter(|n| gtset.contains(&n.id)).count();
+        }
+        let p = hit as f64 / 200.0;
+        assert!(p > 0.9, "naive precision {p}");
+    }
+
+    #[test]
+    fn cluster_serving_matches_local() {
+        let spec = SyntheticSpec::deep_like(2_000, 16, 7);
+        let ds = spec.generate();
+        let queries = spec.queries(8);
+        let idx = NaiveIndex::build(&ds, Metric::L2, 3, HnswParams::default(), 0).unwrap();
+        let cluster = idx
+            .serve(
+                ClusterTopology { workers: 3, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100 },
+                None,
+            )
+            .unwrap();
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let local = idx.search(q, &QueryParams::default());
+            let dist = cluster.execute(q, &QueryParams::default()).unwrap();
+            assert_eq!(
+                local.iter().map(|n| n.id).collect::<Vec<_>>(),
+                dist.iter().map(|n| n.id).collect::<Vec<_>>()
+            );
+        }
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,269 @@
+//! Benchmark harness shared by the figure drivers (paper §V-A):
+//! workload generation, ground truth, precision, closed-loop throughput
+//! and latency measurement.
+
+use crate::bruteforce;
+use crate::cluster::SimCluster;
+use crate::config::QueryParams;
+use crate::dataset::Dataset;
+use crate::metric::Metric;
+use crate::stats;
+use crate::types::Neighbor;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A measurement workload: dataset, held-out queries and exact top-k
+/// ground truth (computed once, reused across sweep points).
+pub struct Workload {
+    pub data: Dataset,
+    pub queries: Dataset,
+    pub metric: Metric,
+    pub k: usize,
+    pub ground_truth: Vec<Vec<Neighbor>>,
+}
+
+impl Workload {
+    /// Build a workload with exact ground truth via the blocked scan.
+    pub fn new(data: Dataset, queries: Dataset, metric: Metric, k: usize) -> Workload {
+        let ground_truth = bruteforce::search_batch(&data, &queries, metric, k);
+        Workload { data, queries, metric, k, ground_truth }
+    }
+
+    /// Precision of `results[qi]` against the stored ground truth
+    /// (paper §V-A definition: |top-k ∩ GT-k| / k).
+    pub fn precision(&self, results: &[Vec<Neighbor>]) -> f64 {
+        let mut hit = 0usize;
+        for (qi, res) in results.iter().enumerate() {
+            let gt: std::collections::HashSet<u32> =
+                self.ground_truth[qi].iter().map(|n| n.id).collect();
+            hit += res.iter().take(self.k).filter(|n| gt.contains(&n.id)).count();
+        }
+        hit as f64 / (results.len() * self.k).max(1) as f64
+    }
+}
+
+/// Precision of one result list against one ground-truth list.
+pub fn precision_at_k(result: &[Neighbor], gt: &[Neighbor], k: usize) -> f64 {
+    let gtset: std::collections::HashSet<u32> = gt.iter().take(k).map(|n| n.id).collect();
+    result.iter().take(k).filter(|n| gtset.contains(&n.id)).count() as f64 / k as f64
+}
+
+/// Latency sample collector with percentile reporting.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        stats::percentile(&self.samples_us, 50.0) / 1e3
+    }
+
+    /// The paper reports P90 ("models the worst-case performance").
+    pub fn p90_ms(&self) -> f64 {
+        stats::percentile(&self.samples_us, 90.0) / 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        stats::percentile(&self.samples_us, 99.0) / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.samples_us) / 1e3
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+}
+
+/// Result of a closed-loop cluster measurement.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub queries: usize,
+    pub wall: Duration,
+    pub qps: f64,
+    pub latency: LatencyRecorder,
+    pub precision: f64,
+    pub errors: usize,
+}
+
+/// Drive a cluster closed-loop with `clients` threads for `duration` (or
+/// until each client exhausts the query set `rounds` times), measuring
+/// throughput, latency and precision.
+pub fn drive_cluster(
+    cluster: &SimCluster,
+    workload: &Workload,
+    params: &QueryParams,
+    clients: usize,
+    duration: Duration,
+) -> RunReport {
+    let stop = AtomicBool::new(false);
+    let issued = AtomicUsize::new(0);
+    let errors = AtomicU64::new(0);
+    let recorders: Vec<Mutex<LatencyRecorder>> =
+        (0..clients).map(|_| Mutex::new(LatencyRecorder::default())).collect();
+    let results: Vec<Mutex<Vec<(usize, Vec<Neighbor>)>>> =
+        (0..clients).map(|_| Mutex::new(Vec::new())).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let stop = &stop;
+            let issued = &issued;
+            let errors = &errors;
+            let recorders = &recorders;
+            let results = &results;
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let qi = issued.fetch_add(1, Ordering::Relaxed) % workload.queries.len();
+                    let q = workload.queries.get(qi);
+                    let t = Instant::now();
+                    match cluster.execute(q, params) {
+                        Ok(res) => {
+                            recorders[c].lock().unwrap().record(t.elapsed());
+                            results[c].lock().unwrap().push((qi, res));
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    if t0.elapsed() >= duration {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let mut latency = LatencyRecorder::default();
+    for r in &recorders {
+        latency.merge(&r.lock().unwrap());
+    }
+    // Precision over the collected results (ground truth is indexed by qi).
+    let mut per_query: Vec<Vec<Neighbor>> = Vec::new();
+    let mut gts: Vec<usize> = Vec::new();
+    for r in &results {
+        for (qi, res) in r.lock().unwrap().iter() {
+            per_query.push(res.clone());
+            gts.push(*qi);
+        }
+    }
+    let mut hit = 0usize;
+    for (res, &qi) in per_query.iter().zip(&gts) {
+        let gt: std::collections::HashSet<u32> =
+            workload.ground_truth[qi].iter().map(|n| n.id).collect();
+        hit += res.iter().take(workload.k).filter(|n| gt.contains(&n.id)).count();
+    }
+    let completed = per_query.len();
+    RunReport {
+        queries: completed,
+        wall,
+        qps: completed as f64 / wall.as_secs_f64(),
+        latency,
+        precision: hit as f64 / (completed * workload.k).max(1) as f64,
+        errors: errors.load(Ordering::Relaxed) as usize,
+    }
+}
+
+/// Fixed-width table printer for the figure harnesses (so every figure's
+/// rows render the same way in EXPERIMENTS.md).
+pub struct TablePrinter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> TablePrinter {
+        TablePrinter { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn workload_precision_self_is_one() {
+        let spec = SyntheticSpec::deep_like(500, 8, 3);
+        let data = spec.generate();
+        let queries = spec.queries(10);
+        let w = Workload::new(data, queries, Metric::L2, 5);
+        let results: Vec<Vec<Neighbor>> = w.ground_truth.clone();
+        assert_eq!(w.precision(&results), 1.0);
+        // Garbage results score 0.
+        let junk: Vec<Vec<Neighbor>> = (0..10)
+            .map(|_| (0..5).map(|i| Neighbor::new(10_000 + i, 0.0)).collect())
+            .collect();
+        assert_eq!(w.precision(&junk), 0.0);
+    }
+
+    #[test]
+    fn precision_at_k_partial() {
+        let gt = vec![Neighbor::new(1, 0.9), Neighbor::new(2, 0.8), Neighbor::new(3, 0.7)];
+        let res = vec![Neighbor::new(1, 0.9), Neighbor::new(9, 0.5), Neighbor::new(3, 0.4)];
+        assert!((precision_at_k(&res, &gt, 3) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_recorder_percentiles() {
+        let mut r = LatencyRecorder::default();
+        for ms in 1..=100 {
+            r.record(Duration::from_millis(ms));
+        }
+        assert!((r.p50_ms() - 50.0).abs() < 2.0);
+        assert!((r.p90_ms() - 90.0).abs() < 2.0);
+        assert_eq!(r.len(), 100);
+    }
+
+    #[test]
+    fn table_printer_renders() {
+        let mut t = TablePrinter::new(&["a", "metric"]);
+        t.row(vec!["1".into(), "2.5".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,515 @@
+//! In-process message broker — the Kafka substitute (DESIGN.md §3).
+//!
+//! Semantics reproduced from Kafka, because the paper's robustness
+//! experiments exercise exactly these:
+//!
+//! * **topics with partitioned queues** — one topic per sub-HNSW, messages
+//!   spread over `partitions_per_topic` internal queues by key;
+//! * **consumer groups** — executors serving the same sub-HNSW join one
+//!   group; every queue partition is owned by exactly one live member;
+//! * **rebalancing** — membership changes (join/leave/session expiry) and
+//!   the periodic lag-rebalance reassign queue partitions; a rebalance
+//!   briefly pauses the group (the Fig-13 dip) and moves backlog away from
+//!   slow consumers (the Fig-12 straggler offload);
+//! * **at-least-once delivery** — `poll` leases a message; if the consumer
+//!   dies or times out before `ack`, the lease expires and the message is
+//!   redelivered to another member.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{PyramidError, Result};
+
+/// Broker tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BrokerConfig {
+    pub partitions_per_topic: usize,
+    /// Consumers missing heartbeats longer than this are evicted.
+    pub session_timeout: Duration,
+    /// Group pause applied on every full rebalance (stop-the-world window).
+    pub rebalance_pause: Duration,
+    /// Period of the automatic lag rebalance. Zero disables it.
+    pub rebalance_interval: Duration,
+    /// Lease time for in-flight (polled but unacked) messages.
+    pub lease: Duration,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            partitions_per_topic: 8,
+            session_timeout: Duration::from_millis(500),
+            rebalance_pause: Duration::from_millis(30),
+            rebalance_interval: Duration::from_millis(200),
+            lease: Duration::from_millis(500),
+        }
+    }
+}
+
+struct InFlight {
+    msg_id: u64,
+    partition: usize,
+    deadline: Instant,
+}
+
+struct GroupState {
+    /// member id -> last heartbeat.
+    members: HashMap<u64, Instant>,
+    /// partition index -> member id.
+    assignment: Vec<Option<u64>>,
+    /// Group paused (rebalance in progress) until this instant.
+    paused_until: Instant,
+    /// Bumped on every (re)assignment.
+    epoch: u64,
+    last_lag_rebalance: Instant,
+    /// Leased messages awaiting ack, keyed by lease id.
+    inflight: HashMap<u64, InFlight>,
+    next_lease: u64,
+}
+
+struct TopicState<M> {
+    queues: Vec<VecDeque<u64>>, // per-partition queue of message ids
+    store: HashMap<u64, M>,
+    next_msg: u64,
+    groups: HashMap<String, GroupState>,
+    /// Total messages ever published (stats).
+    published: u64,
+}
+
+struct Shared<M> {
+    topics: HashMap<String, TopicState<M>>,
+}
+
+/// The broker handle (cheap to clone; all clones share state).
+pub struct Broker<M> {
+    cfg: BrokerConfig,
+    inner: Arc<(Mutex<Shared<M>>, Condvar)>,
+}
+
+impl<M> Clone for Broker<M> {
+    fn clone(&self) -> Self {
+        Broker { cfg: self.cfg, inner: self.inner.clone() }
+    }
+}
+
+impl<M: Send + Clone + 'static> Broker<M> {
+    pub fn new(cfg: BrokerConfig) -> Self {
+        Broker {
+            cfg,
+            inner: Arc::new((Mutex::new(Shared { topics: HashMap::new() }), Condvar::new())),
+        }
+    }
+
+    pub fn config(&self) -> &BrokerConfig {
+        &self.cfg
+    }
+
+    /// Create a topic (idempotent).
+    pub fn create_topic(&self, name: &str) {
+        let mut g = self.inner.0.lock().unwrap();
+        let p = self.cfg.partitions_per_topic;
+        g.topics.entry(name.to_string()).or_insert_with(|| TopicState {
+            queues: (0..p).map(|_| VecDeque::new()).collect(),
+            store: HashMap::new(),
+            next_msg: 0,
+            groups: HashMap::new(),
+            published: 0,
+        });
+    }
+
+    /// Publish a message; `key` picks the queue partition.
+    pub fn publish(&self, topic: &str, key: u64, msg: M) -> Result<()> {
+        let mut g = self.inner.0.lock().unwrap();
+        let p = self.cfg.partitions_per_topic;
+        let t = g
+            .topics
+            .get_mut(topic)
+            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let id = t.next_msg;
+        t.next_msg += 1;
+        t.published += 1;
+        t.store.insert(id, msg);
+        t.queues[(key % p as u64) as usize].push_back(id);
+        drop(g);
+        self.inner.1.notify_all();
+        Ok(())
+    }
+
+    /// Join a consumer group; returns a pollable consumer handle.
+    pub fn subscribe(&self, topic: &str, group: &str, member: u64) -> Result<Consumer<M>> {
+        let mut g = self.inner.0.lock().unwrap();
+        let p = self.cfg.partitions_per_topic;
+        let t = g
+            .topics
+            .get_mut(topic)
+            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let gs = t.groups.entry(group.to_string()).or_insert_with(|| GroupState {
+            members: HashMap::new(),
+            assignment: vec![None; p],
+            paused_until: Instant::now(),
+            epoch: 0,
+            last_lag_rebalance: Instant::now(),
+            inflight: HashMap::new(),
+            next_lease: 0,
+        });
+        gs.members.insert(member, Instant::now());
+        Self::rebalance(gs, self.cfg.rebalance_pause);
+        drop(g);
+        self.inner.1.notify_all();
+        Ok(Consumer {
+            broker: self.clone(),
+            topic: topic.to_string(),
+            group: group.to_string(),
+            member,
+        })
+    }
+
+    /// Recompute the partition assignment round-robin over live members
+    /// and pause the group briefly (the visible cost of a full rebalance).
+    fn rebalance(gs: &mut GroupState, pause: Duration) {
+        let mut members: Vec<u64> = gs.members.keys().copied().collect();
+        members.sort_unstable();
+        for (i, slot) in gs.assignment.iter_mut().enumerate() {
+            *slot = if members.is_empty() { None } else { Some(members[i % members.len()]) };
+        }
+        gs.epoch += 1;
+        gs.paused_until = Instant::now() + pause;
+    }
+
+    /// Evict members whose sessions expired; requeue their expired leases.
+    fn reap(cfg: &BrokerConfig, t: &mut TopicState<M>, group: &str, now: Instant) {
+        let Some(gs) = t.groups.get_mut(group) else { return };
+        let expired: Vec<u64> = gs
+            .members
+            .iter()
+            .filter(|(_, &hb)| now.duration_since(hb) > cfg.session_timeout)
+            .map(|(&m, _)| m)
+            .collect();
+        if !expired.is_empty() {
+            for m in expired {
+                gs.members.remove(&m);
+            }
+            Self::rebalance(gs, cfg.rebalance_pause);
+        }
+        // Expire stale leases back onto their queues (at-least-once).
+        let mut back: Vec<(usize, u64)> = Vec::new();
+        gs.inflight.retain(|_, inf| {
+            if inf.deadline <= now {
+                back.push((inf.partition, inf.msg_id));
+                false
+            } else {
+                true
+            }
+        });
+        for (p, mid) in back {
+            t.queues[p].push_front(mid);
+        }
+    }
+
+    /// Periodic lag rebalance: move one backlogged partition from the most
+    /// loaded member to the least loaded (the paper's "Kafka periodically
+    /// re-balances the message queues"). Targeted move — no group pause.
+    fn lag_rebalance(cfg: &BrokerConfig, t: &mut TopicState<M>, group: &str, now: Instant) {
+        if cfg.rebalance_interval.is_zero() {
+            return;
+        }
+        let queue_lens: Vec<usize> = t.queues.iter().map(VecDeque::len).collect();
+        let Some(gs) = t.groups.get_mut(group) else { return };
+        if now.duration_since(gs.last_lag_rebalance) < cfg.rebalance_interval {
+            return;
+        }
+        gs.last_lag_rebalance = now;
+        if gs.members.len() < 2 {
+            return;
+        }
+        // Backlog per member.
+        let mut backlog: HashMap<u64, usize> = gs.members.keys().map(|&m| (m, 0)).collect();
+        for (p, owner) in gs.assignment.iter().enumerate() {
+            if let Some(o) = owner {
+                *backlog.entry(*o).or_insert(0) += queue_lens[p];
+            }
+        }
+        let (&max_m, &max_b) = backlog.iter().max_by_key(|(_, &b)| b).unwrap();
+        let (&min_m, &min_b) = backlog.iter().min_by_key(|(_, &b)| b).unwrap();
+        if max_m == min_m || max_b < 2 * min_b + 4 {
+            return; // not imbalanced enough to pay a move
+        }
+        if let Some((p, _)) = gs
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| **o == Some(max_m))
+            .map(|(p, _)| (p, queue_lens[p]))
+            .max_by_key(|&(_, l)| l)
+        {
+            gs.assignment[p] = Some(min_m);
+            gs.epoch += 1;
+        }
+    }
+
+    /// Queue depth across partitions (monitoring).
+    pub fn backlog(&self, topic: &str) -> usize {
+        let g = self.inner.0.lock().unwrap();
+        g.topics.get(topic).map(|t| t.queues.iter().map(VecDeque::len).sum()).unwrap_or(0)
+    }
+
+    /// Messages ever published to a topic.
+    pub fn published(&self, topic: &str) -> u64 {
+        let g = self.inner.0.lock().unwrap();
+        g.topics.get(topic).map(|t| t.published).unwrap_or(0)
+    }
+}
+
+/// A group member's pollable handle.
+pub struct Consumer<M> {
+    broker: Broker<M>,
+    topic: String,
+    group: String,
+    member: u64,
+}
+
+/// A leased message: call [`Consumer::ack`] after processing, or let the
+/// lease expire for redelivery.
+pub struct Delivery<M> {
+    pub msg: M,
+    pub lease: u64,
+}
+
+impl<M: Send + Clone + 'static> Consumer<M> {
+    pub fn member_id(&self) -> u64 {
+        self.member
+    }
+
+    /// Pull one message from this member's assigned partitions, waiting up
+    /// to `timeout`. Returns None on timeout. Also serves as the heartbeat.
+    pub fn poll(&self, timeout: Duration) -> Option<Delivery<M>> {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = (&self.broker.inner.0, &self.broker.inner.1);
+        let mut g = lock.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let cfg = self.broker.cfg;
+            if let Some(t) = g.topics.get_mut(&self.topic) {
+                // Heartbeat + housekeeping.
+                if let Some(gs) = t.groups.get_mut(&self.group) {
+                    if let Some(hb) = gs.members.get_mut(&self.member) {
+                        *hb = now;
+                    } else {
+                        // We were evicted (e.g. after a long stall): rejoin.
+                        gs.members.insert(self.member, now);
+                        Broker::<M>::rebalance(gs, cfg.rebalance_pause);
+                    }
+                }
+                Broker::<M>::reap(&cfg, t, &self.group, now);
+                Broker::<M>::lag_rebalance(&cfg, t, &self.group, now);
+                let gs = t.groups.get_mut(&self.group).expect("group exists");
+                if now >= gs.paused_until {
+                    // Scan this member's partitions for a message.
+                    let mine: Vec<usize> = gs
+                        .assignment
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, o)| **o == Some(self.member))
+                        .map(|(p, _)| p)
+                        .collect();
+                    for p in mine {
+                        if let Some(mid) = t.queues[p].pop_front() {
+                            let gs = t.groups.get_mut(&self.group).unwrap();
+                            let lease = gs.next_lease;
+                            gs.next_lease += 1;
+                            gs.inflight
+                                .insert(lease, InFlight { msg_id: mid, partition: p, deadline: now + cfg.lease });
+                            let msg = t.store.get(&mid).expect("stored message").clone();
+                            return Some(Delivery { msg, lease });
+                        }
+                    }
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = cv
+                .wait_timeout(g, (deadline - now).min(Duration::from_millis(20)))
+                .unwrap();
+            g = ng;
+        }
+    }
+
+    /// Acknowledge a delivery: the message is done and dropped.
+    pub fn ack(&self, delivery: &Delivery<M>) {
+        let mut g = self.broker.inner.0.lock().unwrap();
+        if let Some(t) = g.topics.get_mut(&self.topic) {
+            let mut mid = None;
+            if let Some(gs) = t.groups.get_mut(&self.group) {
+                if let Some(inf) = gs.inflight.remove(&delivery.lease) {
+                    mid = Some(inf.msg_id);
+                }
+            }
+            if let Some(mid) = mid {
+                t.store.remove(&mid);
+            }
+        }
+    }
+
+    /// Leave the group gracefully (triggers a rebalance).
+    pub fn leave(self) {
+        let mut g = self.broker.inner.0.lock().unwrap();
+        if let Some(t) = g.topics.get_mut(&self.topic) {
+            if let Some(gs) = t.groups.get_mut(&self.group) {
+                gs.members.remove(&self.member);
+                Broker::<M>::rebalance(gs, self.broker.cfg.rebalance_pause);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BrokerConfig {
+        BrokerConfig {
+            partitions_per_topic: 4,
+            session_timeout: Duration::from_millis(100),
+            rebalance_pause: Duration::from_millis(1),
+            rebalance_interval: Duration::from_millis(20),
+            lease: Duration::from_millis(80),
+        }
+    }
+
+    #[test]
+    fn publish_poll_ack_roundtrip() {
+        let b: Broker<String> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        b.publish("t", 0, "hello".into()).unwrap();
+        let d = c.poll(Duration::from_millis(300)).expect("message");
+        assert_eq!(d.msg, "hello");
+        c.ack(&d);
+        assert!(c.poll(Duration::from_millis(10)).is_none());
+        assert_eq!(b.backlog("t"), 0);
+        assert_eq!(b.published("t"), 1);
+    }
+
+    #[test]
+    fn publish_to_missing_topic_errors() {
+        let b: Broker<u32> = Broker::new(fast_cfg());
+        assert!(b.publish("nope", 0, 1).is_err());
+        assert!(b.subscribe("nope", "g", 1).is_err());
+    }
+
+    #[test]
+    fn group_splits_partitions() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let c2 = b.subscribe("t", "g", 2).unwrap();
+        for k in 0..40u64 {
+            b.publish("t", k, k).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        let mut got1 = 0;
+        let mut got2 = 0;
+        for _ in 0..40 {
+            if let Some(d) = c1.poll(Duration::from_millis(20)) {
+                c1.ack(&d);
+                got1 += 1;
+            }
+            if let Some(d) = c2.poll(Duration::from_millis(20)) {
+                c2.ack(&d);
+                got2 += 1;
+            }
+        }
+        assert_eq!(got1 + got2, 40, "all messages consumed");
+        assert!(got1 > 0 && got2 > 0, "both members served ({got1}/{got2})");
+    }
+
+    #[test]
+    fn unacked_message_redelivered_after_lease() {
+        let b: Broker<String> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        b.publish("t", 0, "once".into()).unwrap();
+        let d = c.poll(Duration::from_millis(100)).expect("first delivery");
+        drop(d); // never acked
+        std::thread::sleep(Duration::from_millis(100)); // > lease
+        let d2 = c.poll(Duration::from_millis(300)).expect("redelivery");
+        assert_eq!(d2.msg, "once");
+        c.ack(&d2);
+    }
+
+    #[test]
+    fn dead_member_evicted_messages_flow_to_survivor() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let c2 = b.subscribe("t", "g", 2).unwrap();
+        // c2 stops polling entirely (crash). After session_timeout its
+        // partitions move to c1.
+        drop(c2);
+        std::thread::sleep(Duration::from_millis(120));
+        for k in 0..16u64 {
+            b.publish("t", k, k).unwrap();
+        }
+        let mut got = 0;
+        let deadline = Instant::now() + Duration::from_millis(800);
+        while got < 16 && Instant::now() < deadline {
+            if let Some(d) = c1.poll(Duration::from_millis(50)) {
+                c1.ack(&d);
+                got += 1;
+            }
+        }
+        assert_eq!(got, 16, "survivor consumed everything");
+    }
+
+    #[test]
+    fn graceful_leave_triggers_reassignment() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let c2 = b.subscribe("t", "g", 2).unwrap();
+        c2.leave();
+        for k in 0..8u64 {
+            b.publish("t", k, k).unwrap();
+        }
+        let mut got = 0;
+        for _ in 0..16 {
+            if let Some(d) = c1.poll(Duration::from_millis(50)) {
+                c1.ack(&d);
+                got += 1;
+                if got == 8 {
+                    break;
+                }
+            }
+        }
+        assert_eq!(got, 8);
+    }
+
+    #[test]
+    fn lag_rebalance_moves_backlog_off_slow_member() {
+        let mut cfg = fast_cfg();
+        cfg.rebalance_interval = Duration::from_millis(5);
+        cfg.session_timeout = Duration::from_secs(30); // slow member stays a member
+        let b: Broker<u64> = Broker::new(cfg);
+        b.create_topic("t");
+        let fast = b.subscribe("t", "g", 1).unwrap();
+        let _slow = b.subscribe("t", "g", 2).unwrap(); // joins, then never polls
+        for k in 0..60u64 {
+            b.publish("t", k, k).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        // The fast member alone should eventually drain everything via lag
+        // rebalance — the slow member never gets evicted here.
+        let mut got = 0;
+        let deadline = Instant::now() + Duration::from_millis(1500);
+        while got < 60 && Instant::now() < deadline {
+            if let Some(d) = fast.poll(Duration::from_millis(20)) {
+                fast.ack(&d);
+                got += 1;
+            }
+        }
+        assert_eq!(got, 60, "lag rebalance failed to offload");
+    }
+}

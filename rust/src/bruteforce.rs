@@ -1,0 +1,85 @@
+//! Exact (linear-scan) similarity search — ground truth for precision
+//! measurement (paper §V-A) and the top-r MIPS replication scan
+//! (Algorithm 5 line 14). Parallelized with rayon; the batched variant in
+//! [`crate::runtime`] routes the same computation through the
+//! PJRT-compiled Pallas scorer.
+
+use crate::dataset::Dataset;
+use crate::metric::Metric;
+use crate::types::Neighbor;
+use crate::util::threads;
+use std::collections::BinaryHeap;
+
+/// Exact top-k for one query, best first.
+pub fn search(data: &Dataset, query: &[f32], metric: Metric, k: usize) -> Vec<Neighbor> {
+    // Bounded min-heap scan: O(n log k).
+    let mut heap: BinaryHeap<std::cmp::Reverse<Neighbor>> = BinaryHeap::with_capacity(k + 1);
+    for (i, row) in data.iter().enumerate() {
+        let s = metric.score(query, row);
+        if heap.len() < k {
+            heap.push(std::cmp::Reverse(Neighbor::new(i as u32, s)));
+        } else if let Some(w) = heap.peek() {
+            if s > w.0.score {
+                heap.pop();
+                heap.push(std::cmp::Reverse(Neighbor::new(i as u32, s)));
+            }
+        }
+    }
+    let mut out: Vec<Neighbor> = heap.into_iter().map(|r| r.0).collect();
+    out.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    out
+}
+
+/// Exact top-k for a batch of queries (rayon-parallel over queries).
+pub fn search_batch(data: &Dataset, queries: &Dataset, metric: Metric, k: usize) -> Vec<Vec<Neighbor>> {
+    threads::parallel_map(queries.len(), threads::default_parallelism(), |qi| {
+        search(data, queries.get(qi), metric, k)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn exact_top1_is_self() {
+        let ds = SyntheticSpec::deep_like(200, 8, 3).generate();
+        for i in [0usize, 50, 199] {
+            let r = search(&ds, ds.get(i), Metric::L2, 1);
+            assert_eq!(r[0].id, i as u32);
+        }
+    }
+
+    #[test]
+    fn matches_naive_sort() {
+        let ds = SyntheticSpec::uniform(100, 6, 5).generate();
+        let q = ds.get(17);
+        let mut all: Vec<Neighbor> = (0..ds.len())
+            .map(|i| Neighbor::new(i as u32, Metric::Ip.score(q, ds.get(i))))
+            .collect();
+        all.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let got = search(&ds, q, Metric::Ip, 7);
+        assert_eq!(
+            got.iter().map(|n| n.id).collect::<Vec<_>>(),
+            all[..7].iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let ds = SyntheticSpec::uniform(5, 4, 1).generate();
+        let r = search(&ds, ds.get(0), Metric::L2, 10);
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let ds = SyntheticSpec::deep_like(300, 8, 7).generate();
+        let qs = SyntheticSpec::deep_like(300, 8, 7).queries(4);
+        let batch = search_batch(&ds, &qs, Metric::L2, 5);
+        for (qi, row) in batch.iter().enumerate() {
+            assert_eq!(*row, search(&ds, qs.get(qi), Metric::L2, 5));
+        }
+    }
+}

@@ -1,0 +1,538 @@
+//! Simulated cluster (DESIGN.md §3): the 10-machine deployment of the
+//! paper as an in-process topology — each "machine" is a [`HostControl`]
+//! plus the executor threads placed on it; coordinators, the broker and
+//! the registry are shared process-wide exactly as Kafka/Zookeeper are
+//! shared cluster-wide.
+//!
+//! Placement follows the paper's straggler experiment setup: replica `r`
+//! of sub-HNSW `p` lands on host `(p + r * stride) % workers`, so two
+//! replicas of the same sub-HNSW never share a host (when `workers >
+//! replicas`) and every host serves multiple different sub-HNSWs.
+//!
+//! Failure drill knobs: [`SimCluster::kill_host`] flips the host's crash
+//! switch (executors exit uncleanly; sessions/leases expire; the Master
+//! restarts instances on surviving hosts), [`SimCluster::restart_host`]
+//! brings the machine back (replacements that find their role re-locked
+//! exit immediately), [`SimCluster::set_cpu_share`] throttles a host.
+
+use crate::broker::{Broker, BrokerConfig};
+use crate::config::{ClusterTopology, QueryParams};
+use crate::coordinator::{topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
+use crate::error::{PyramidError, Result};
+use crate::executor::{self, ExecutorHandle, ExecutorSpec, HostControl, SubIndex};
+use crate::meta::{PyramidIndex, Router};
+use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
+use crate::runtime::BatchScorer;
+use crate::types::{Neighbor, PartitionId, VectorId};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+pub use crate::config::ClusterTopology as ClusterConfig;
+
+/// Immutable description of one executor role (partition replica).
+#[derive(Debug, Clone)]
+struct Role {
+    exec_id: u64,
+    partition: PartitionId,
+    home_host: usize,
+}
+
+struct ClusterState {
+    executors: Vec<ExecutorHandle>,
+}
+
+/// The running simulated cluster.
+pub struct SimCluster {
+    pub broker: Broker<QueryRequest>,
+    pub registry: Registry,
+    topo: ClusterTopology,
+    hosts: Vec<Arc<HostControl>>,
+    roles: Vec<Role>,
+    subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)>,
+    coordinators: Vec<Arc<CoordinatorNode>>,
+    state: Arc<Mutex<ClusterState>>,
+    master: Option<Master>,
+    respawn_rx_handle: Option<std::thread::JoinHandle<()>>,
+    respawn_stop: Arc<std::sync::atomic::AtomicBool>,
+    rr: AtomicUsize,
+    next_exec_id: Arc<AtomicU64>,
+}
+
+impl SimCluster {
+    /// Start a cluster serving `index` with the given topology. The index's
+    /// sub-HNSWs are shared (Arc) with the executor threads — the
+    /// in-process analogue of each worker loading its graph from the DFS.
+    pub fn start(index: &PyramidIndex, topo: ClusterTopology) -> Result<SimCluster> {
+        Self::start_with_scorer(index, topo, None)
+    }
+
+    /// [`Self::start`] with an exact re-rank backend on the coordinators
+    /// (PJRT path).
+    pub fn start_with_scorer(
+        index: &PyramidIndex,
+        topo: ClusterTopology,
+        scorer: Option<Arc<dyn BatchScorer>>,
+    ) -> Result<SimCluster> {
+        let subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)> = index
+            .subs
+            .iter()
+            .map(|s| s.clone() as Arc<dyn SubIndex>)
+            .zip(index.sub_ids.iter().cloned())
+            .collect();
+        let router = Router::from_index(index);
+        Self::start_custom(subs, router, topo, scorer)
+    }
+
+    /// Start a cluster over arbitrary per-partition backends and router —
+    /// the baselines (HNSW-naive, KD-forest) deploy through this with a
+    /// broadcast router.
+    pub fn start_custom(
+        subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)>,
+        router: Router,
+        topo: ClusterTopology,
+        scorer: Option<Arc<dyn BatchScorer>>,
+    ) -> Result<SimCluster> {
+        if topo.workers == 0 || topo.replicas == 0 || topo.coordinators == 0 {
+            return Err(PyramidError::Cluster("workers/replicas/coordinators must be >= 1".into()));
+        }
+        if topo.replicas > topo.workers {
+            return Err(PyramidError::Cluster(format!(
+                "replicas {} > workers {}",
+                topo.replicas, topo.workers
+            )));
+        }
+        let w = subs.len();
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_interval: Duration::from_millis(topo.rebalance_ms.max(1)),
+            ..BrokerConfig::default()
+        });
+        for p in 0..w {
+            broker.create_topic(&topic_for(p as PartitionId));
+        }
+        let registry = Registry::new(RegistryConfig::default());
+        let hosts: Vec<Arc<HostControl>> = (0..topo.workers).map(HostControl::new).collect();
+
+        // Replica placement: replica r of partition p on host
+        // (p + r*stride) % workers with stride chosen coprime-ish so
+        // replicas spread.
+        let stride = (topo.workers / topo.replicas).max(1);
+        let mut roles = Vec::new();
+        let mut exec_id = 0u64;
+        for p in 0..w {
+            for r in 0..topo.replicas {
+                roles.push(Role {
+                    exec_id,
+                    partition: p as PartitionId,
+                    home_host: (p + r * stride) % topo.workers,
+                });
+                exec_id += 1;
+            }
+        }
+        let next_exec_id = Arc::new(AtomicU64::new(exec_id));
+
+        // Spawn executors at their home hosts.
+        let mut executors = Vec::with_capacity(roles.len());
+        for role in &roles {
+            executors.push(executor::spawn(
+                ExecutorSpec {
+                    id: role.exec_id,
+                    partition: role.partition,
+                    sub: subs[role.partition as usize].0.clone(),
+                    ids: subs[role.partition as usize].1.clone(),
+                    host: hosts[role.home_host].clone(),
+                    net_latency: Duration::from_micros(topo.net_latency_us),
+                },
+                broker.clone(),
+                registry.clone(),
+            ));
+        }
+        let state = Arc::new(Mutex::new(ClusterState { executors }));
+
+        // Coordinators share the router (the broadcast meta-HNSW replica).
+        let mut coordinators = Vec::with_capacity(topo.coordinators);
+        for c in 0..topo.coordinators {
+            let node = match &scorer {
+                Some(s) => CoordinatorNode::with_scorer(
+                    c as u64,
+                    router.clone(),
+                    broker.clone(),
+                    CoordinatorConfig::default(),
+                    s.clone(),
+                ),
+                None => CoordinatorNode::new(c as u64, router.clone(), broker.clone(), CoordinatorConfig::default()),
+            };
+            coordinators.push(node);
+        }
+
+        // Master + respawn plumbing: the master watches instance locks and
+        // requests respawns through a channel the cluster services (it
+        // cannot touch cluster state directly from the watch thread).
+        let (respawn_tx, respawn_rx) = mpsc::channel::<String>();
+        let instance_paths: Vec<String> =
+            roles.iter().map(|r| format!("/instance/exec-{}", r.exec_id)).collect();
+        let master = Master::spawn(
+            registry.clone(),
+            MasterConfig::default(),
+            instance_paths,
+            move |path| {
+                let _ = respawn_tx.send(path.to_string());
+            },
+        );
+
+        let respawn_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let respawner = {
+            let roles = roles.clone();
+            let subs = subs.clone();
+            let hosts = hosts.clone();
+            let broker = broker.clone();
+            let registry = registry.clone();
+            let state = state.clone();
+            let stop = respawn_stop.clone();
+            let net = Duration::from_micros(topo.net_latency_us);
+            std::thread::Builder::new()
+                .name("cluster-respawner".into())
+                .spawn(move || loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match respawn_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(path) => {
+                            // Parse the executor id back out of the path.
+                            let Some(ids) = path.strip_prefix("/instance/exec-") else { continue };
+                            let Ok(eid) = ids.parse::<u64>() else { continue };
+                            let Some(role) = roles.iter().find(|r| r.exec_id == eid) else { continue };
+                            // Restart on an available (alive) machine —
+                            // prefer a different host than the crashed one.
+                            let target = hosts
+                                .iter()
+                                .filter(|h| h.alive.load(Ordering::Relaxed))
+                                .min_by_key(|h| (h.host == role.home_host) as usize)
+                                .cloned();
+                            let Some(host) = target else { continue };
+                            let h = executor::spawn(
+                                ExecutorSpec {
+                                    id: eid,
+                                    partition: role.partition,
+                                    sub: subs[role.partition as usize].0.clone(),
+                                    ids: subs[role.partition as usize].1.clone(),
+                                    host,
+                                    net_latency: net,
+                                },
+                                broker.clone(),
+                                registry.clone(),
+                            );
+                            // If the original recovered first the new one
+                            // exits on its own (LockHeld).
+                            let mut g = state.lock().unwrap();
+                            g.executors.retain(|e| !(e.id == eid && e.is_finished()));
+                            g.executors.push(h);
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    }
+                })
+                .expect("spawn respawner")
+        };
+
+        Ok(SimCluster {
+            broker,
+            registry,
+            topo,
+            hosts,
+            roles,
+            subs,
+            coordinators,
+            state,
+            master: Some(master),
+            respawn_rx_handle: Some(respawner),
+            respawn_stop,
+            rr: AtomicUsize::new(0),
+            next_exec_id,
+        })
+    }
+
+    pub fn topology(&self) -> &ClusterTopology {
+        &self.topo
+    }
+
+    pub fn coordinators(&self) -> &[Arc<CoordinatorNode>] {
+        &self.coordinators
+    }
+
+    pub fn coordinator(&self, i: usize) -> Arc<CoordinatorNode> {
+        self.coordinators[i % self.coordinators.len()].clone()
+    }
+
+    /// Execute a query on a round-robin coordinator (the paper's upstream
+    /// hashing). Retries once on another coordinator upon timeout —
+    /// the paper's coordinator-failure story.
+    pub fn execute(&self, query: &[f32], params: &QueryParams) -> Result<Vec<Neighbor>> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        match self.coordinator(c).execute(query, params) {
+            Ok(r) => Ok(r),
+            Err(PyramidError::Timeout(_)) => self.coordinator(c + 1).execute(query, params),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Kill a machine: all executors on it crash (no cleanup).
+    pub fn kill_host(&self, host: usize) {
+        self.hosts[host].alive.store(false, Ordering::Relaxed);
+    }
+
+    /// Bring a machine back. Respawns this host's *home* roles on it; each
+    /// replacement exits immediately if the role's lock is already held by
+    /// the master-restarted instance elsewhere (paper §IV-B).
+    pub fn restart_host(&self, host: usize) {
+        self.hosts[host].alive.store(true, Ordering::Relaxed);
+        let net = Duration::from_micros(self.topo.net_latency_us);
+        let mut g = self.state.lock().unwrap();
+        for role in self.roles.iter().filter(|r| r.home_host == host) {
+            let h = executor::spawn(
+                ExecutorSpec {
+                    id: role.exec_id,
+                    partition: role.partition,
+                    sub: self.subs[role.partition as usize].0.clone(),
+                    ids: self.subs[role.partition as usize].1.clone(),
+                    host: self.hosts[host].clone(),
+                    net_latency: net,
+                },
+                self.broker.clone(),
+                self.registry.clone(),
+            );
+            g.executors.retain(|e| !(e.id == role.exec_id && e.is_finished()));
+            g.executors.push(h);
+        }
+    }
+
+    /// Throttle a machine to `share`% CPU (the straggler injector).
+    pub fn set_cpu_share(&self, host: usize, share: u32) {
+        self.hosts[host].cpu_share.store(share.clamp(1, 100), Ordering::Relaxed);
+    }
+
+    /// Partitions hosted (as home) on a machine.
+    pub fn partitions_on_host(&self, host: usize) -> Vec<PartitionId> {
+        let mut ps: Vec<PartitionId> = self
+            .roles
+            .iter()
+            .filter(|r| r.home_host == host)
+            .map(|r| r.partition)
+            .collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+
+    /// Live executor count (threads still running).
+    pub fn live_executors(&self) -> usize {
+        self.state.lock().unwrap().executors.iter().filter(|e| !e.is_finished()).count()
+    }
+
+    /// Total requests served across executors (includes finished ones).
+    pub fn total_served(&self) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .executors
+            .iter()
+            .map(|e| e.served.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Allocate a fresh executor id (elastic scale-out).
+    pub fn add_executor(&self, partition: PartitionId, host: usize) -> u64 {
+        let eid = self.next_exec_id.fetch_add(1, Ordering::Relaxed);
+        let h = executor::spawn(
+            ExecutorSpec {
+                id: eid,
+                partition,
+                sub: self.subs[partition as usize].0.clone(),
+                ids: self.subs[partition as usize].1.clone(),
+                host: self.hosts[host].clone(),
+                net_latency: Duration::from_micros(self.topo.net_latency_us),
+            },
+            self.broker.clone(),
+            self.registry.clone(),
+        );
+        self.state.lock().unwrap().executors.push(h);
+        eid
+    }
+
+    /// Graceful shutdown: stop coordinators, master, respawner, executors.
+    pub fn shutdown(mut self) {
+        for c in &self.coordinators {
+            c.shutdown();
+        }
+        if let Some(m) = self.master.take() {
+            m.stop();
+        }
+        self.respawn_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.respawn_rx_handle.take() {
+            let _ = h.join();
+        }
+        let mut g = self.state.lock().unwrap();
+        for e in g.executors.drain(..) {
+            e.stop();
+        }
+    }
+}
+
+impl std::fmt::Debug for SimCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimCluster")
+            .field("workers", &self.topo.workers)
+            .field("replicas", &self.topo.replicas)
+            .field("coordinators", &self.coordinators.len())
+            .field("roles", &self.roles.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexConfig;
+    use crate::dataset::SyntheticSpec;
+    use crate::metric::Metric;
+
+    fn build_index() -> (crate::dataset::Dataset, crate::dataset::Dataset, PyramidIndex) {
+        let mut spec = SyntheticSpec::deep_like(4_000, 16, 21);
+        spec.clusters = 32;
+        let data = spec.generate();
+        let queries = spec.queries(20);
+        let cfg = IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+        (data, queries, idx)
+    }
+
+    fn topo(workers: usize, replicas: usize) -> ClusterTopology {
+        ClusterTopology {
+            workers,
+            replicas,
+            coordinators: 2,
+            net_latency_us: 0,
+            rebalance_ms: 50,
+        }
+    }
+
+    #[test]
+    fn cluster_serves_queries_matching_local_index() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let local = idx.search(q, &params);
+            let dist = cluster.execute(q, &params).expect("distributed query");
+            assert_eq!(
+                local.iter().map(|n| n.id).collect::<Vec<_>>(),
+                dist.iter().map(|n| n.id).collect::<Vec<_>>(),
+                "query {qi} local/distributed diverge"
+            );
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn replica_placement_spreads_hosts() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 2)).unwrap();
+        // Every partition must be served by 2 executors on different hosts.
+        for p in 0..4u16 {
+            let hosts: Vec<usize> = cluster
+                .roles
+                .iter()
+                .filter(|r| r.partition == p)
+                .map(|r| r.home_host)
+                .collect();
+            assert_eq!(hosts.len(), 2);
+            assert_ne!(hosts[0], hosts[1], "partition {p} replicas share a host");
+        }
+        // Each host serves at least one partition.
+        for h in 0..4 {
+            assert!(!cluster.partitions_on_host(h).is_empty());
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_topologies() {
+        let (_, _, idx) = build_index();
+        assert!(SimCluster::start(&idx, topo(0, 1)).is_err());
+        assert!(SimCluster::start(&idx, topo(2, 3)).is_err());
+    }
+
+    #[test]
+    fn queries_survive_host_failure_with_replicas() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 2)).unwrap();
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        // Warm up.
+        for qi in 0..5 {
+            cluster.execute(queries.get(qi), &params).unwrap();
+        }
+        cluster.kill_host(0);
+        // Queries keep completing (replicas + lease redelivery); allow the
+        // broker a moment to evict the dead members.
+        std::thread::sleep(Duration::from_millis(700));
+        let mut ok = 0;
+        for qi in 0..queries.len() {
+            if cluster.execute(queries.get(qi), &params).is_ok() {
+                ok += 1;
+            }
+        }
+        assert!(ok >= queries.len() - 1, "only {ok}/{} queries survived failure", queries.len());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn master_respawns_executors_after_crash() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        let before = cluster.live_executors();
+        assert_eq!(before, 4);
+        cluster.kill_host(1);
+        // Sessions expire -> master notices -> respawner places the roles
+        // on surviving hosts.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut after = 0;
+        while std::time::Instant::now() < deadline {
+            after = cluster.live_executors();
+            if after >= before {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        assert!(after >= before, "executors not respawned: {after}/{before}");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn restart_host_replacement_yields_to_live_instance() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        cluster.kill_host(2);
+        std::thread::sleep(Duration::from_millis(1200)); // master respawns elsewhere
+        cluster.restart_host(2);
+        std::thread::sleep(Duration::from_millis(300));
+        // No duplicate serving instances: live executor count equals roles.
+        let live = cluster.live_executors();
+        assert!(live <= 5, "{live} live executors after restart (duplicates?)");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn elastic_add_executor() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        let before = cluster.live_executors();
+        cluster.add_executor(0, 3);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(cluster.live_executors(), before + 1);
+        // Still serves correctly.
+        let params = QueryParams::default();
+        assert!(cluster.execute(queries.get(0), &params).is_ok());
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,459 @@
+//! Configuration system: one JSON file describes a full deployment —
+//! dataset, metric, index construction, cluster topology and query
+//! defaults. The `pyramid` CLI, the examples and the figure harnesses all
+//! consume this. (JSON rather than TOML because the build is offline and
+//! the JSON substrate in [`crate::util::json`] is shared with the AOT
+//! artifact manifest.)
+
+use crate::dataset::{SyntheticKind, SyntheticSpec};
+use crate::error::{PyramidError, Result};
+use crate::hnsw::HnswParams;
+use crate::metric::Metric;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn err(msg: impl Into<String>) -> PyramidError {
+    PyramidError::Config(msg.into())
+}
+
+/// Where the vectors come from.
+#[derive(Debug, Clone)]
+pub enum DatasetConfig {
+    /// Synthetic generator (DESIGN.md §3 substitutions).
+    Synthetic { kind: SyntheticKind, n: usize, d: usize, seed: u64, clusters: Option<usize> },
+    /// On-disk .fvecs file.
+    Fvecs { path: PathBuf, limit: usize },
+}
+
+impl DatasetConfig {
+    pub fn synthetic(kind: SyntheticKind, n: usize, d: usize, seed: u64) -> Self {
+        DatasetConfig::Synthetic { kind, n, d, seed, clusters: None }
+    }
+
+    fn spec(kind: SyntheticKind, n: usize, d: usize, seed: u64, clusters: Option<usize>) -> SyntheticSpec {
+        let mut spec = match kind {
+            SyntheticKind::DeepLike => SyntheticSpec::deep_like(n, d, seed),
+            SyntheticKind::SiftLike => SyntheticSpec::sift_like(n, d, seed),
+            SyntheticKind::TinyLike => SyntheticSpec::tiny_like(n, d, seed),
+            SyntheticKind::Uniform => SyntheticSpec::uniform(n, d, seed),
+        };
+        if let Some(c) = clusters {
+            spec.clusters = c;
+        }
+        spec
+    }
+
+    pub fn load(&self) -> Result<crate::dataset::Dataset> {
+        match self {
+            DatasetConfig::Synthetic { kind, n, d, seed, clusters } => {
+                Ok(Self::spec(*kind, *n, *d, *seed, *clusters).generate())
+            }
+            DatasetConfig::Fvecs { path, limit } => crate::dataset::read_fvecs(path, *limit),
+        }
+    }
+
+    /// Held-out queries drawn from the same distribution.
+    pub fn load_queries(&self, q: usize) -> Result<crate::dataset::Dataset> {
+        match self {
+            DatasetConfig::Synthetic { kind, n, d, seed, clusters } => {
+                Ok(Self::spec(*kind, *n, *d, *seed, *clusters).queries(q))
+            }
+            DatasetConfig::Fvecs { path, .. } => {
+                // Convention: queries live next to the base file.
+                let qpath = path.with_extension("queries.fvecs");
+                crate::dataset::read_fvecs(&qpath, q)
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            DatasetConfig::Synthetic { kind, n, d, seed, clusters } => {
+                let mut pairs = vec![
+                    ("source", Json::str("synthetic")),
+                    ("kind", Json::str(kind.key())),
+                    ("n", Json::num(*n as f64)),
+                    ("d", Json::num(*d as f64)),
+                    ("seed", Json::num(*seed as f64)),
+                ];
+                if let Some(c) = clusters {
+                    pairs.push(("clusters", Json::num(*c as f64)));
+                }
+                Json::obj(pairs)
+            }
+            DatasetConfig::Fvecs { path, limit } => Json::obj(vec![
+                ("source", Json::str("fvecs")),
+                ("path", Json::str(path.to_string_lossy().to_string())),
+                ("limit", Json::num(*limit as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let source = j
+            .get("source")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("dataset.source missing"))?;
+        match source {
+            "synthetic" => Ok(DatasetConfig::Synthetic {
+                kind: j
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| err("dataset.kind missing"))?
+                    .parse()
+                    .map_err(err)?,
+                n: j.get("n").and_then(Json::as_usize).ok_or_else(|| err("dataset.n missing"))?,
+                d: j.get("d").and_then(Json::as_usize).ok_or_else(|| err("dataset.d missing"))?,
+                seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                clusters: j.get("clusters").and_then(Json::as_usize),
+            }),
+            "fvecs" => Ok(DatasetConfig::Fvecs {
+                path: PathBuf::from(
+                    j.get("path").and_then(Json::as_str).ok_or_else(|| err("dataset.path missing"))?,
+                ),
+                limit: j.get("limit").and_then(Json::as_usize).unwrap_or(0),
+            }),
+            other => Err(err(format!("unknown dataset source: {other}"))),
+        }
+    }
+}
+
+/// Index construction parameters (paper Algorithms 3 & 5).
+#[derive(Debug, Clone, Copy)]
+pub struct IndexConfig {
+    /// Sample size n' for k-means (Alg 3 line 3).
+    pub sample: usize,
+    /// Meta-HNSW size m (k-means centers / bottom-layer vertices).
+    pub meta_size: usize,
+    /// Number of sub-HNSWs / partitions w.
+    pub partitions: usize,
+    /// Partition balance tolerance epsilon.
+    pub epsilon: f64,
+    /// MIPS replication factor r (Alg 5; 0 disables replication).
+    pub mips_replication: usize,
+    /// HNSW parameters shared by meta- and sub-HNSWs.
+    pub hnsw: HnswParams,
+    pub seed: u64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            sample: 10_000,
+            meta_size: 100,
+            partitions: 10,
+            epsilon: 0.05,
+            mips_replication: 0,
+            hnsw: HnswParams::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl IndexConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sample", Json::num(self.sample as f64)),
+            ("meta_size", Json::num(self.meta_size as f64)),
+            ("partitions", Json::num(self.partitions as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("mips_replication", Json::num(self.mips_replication as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "hnsw",
+                Json::obj(vec![
+                    ("m", Json::num(self.hnsw.m as f64)),
+                    ("m0", Json::num(self.hnsw.m0 as f64)),
+                    ("ef_construction", Json::num(self.hnsw.ef_construction as f64)),
+                    ("select_heuristic", Json::Bool(self.hnsw.select_heuristic)),
+                    ("seed", Json::num(self.hnsw.seed as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut c = IndexConfig::default();
+        if let Some(v) = j.get("sample").and_then(Json::as_usize) {
+            c.sample = v;
+        }
+        if let Some(v) = j.get("meta_size").and_then(Json::as_usize) {
+            c.meta_size = v;
+        }
+        if let Some(v) = j.get("partitions").and_then(Json::as_usize) {
+            c.partitions = v;
+        }
+        if let Some(v) = j.get("epsilon").and_then(Json::as_f64) {
+            c.epsilon = v;
+        }
+        if let Some(v) = j.get("mips_replication").and_then(Json::as_usize) {
+            c.mips_replication = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            c.seed = v as u64;
+        }
+        if let Some(h) = j.get("hnsw") {
+            if let Some(v) = h.get("m").and_then(Json::as_usize) {
+                c.hnsw.m = v;
+            }
+            if let Some(v) = h.get("m0").and_then(Json::as_usize) {
+                c.hnsw.m0 = v;
+            }
+            if let Some(v) = h.get("ef_construction").and_then(Json::as_usize) {
+                c.hnsw.ef_construction = v;
+            }
+            if let Some(v) = h.get("select_heuristic").and_then(Json::as_bool) {
+                c.hnsw.select_heuristic = v;
+            }
+            if let Some(v) = h.get("seed").and_then(Json::as_f64) {
+                c.hnsw.seed = v as u64;
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Query-time parameters (paper Algorithm 4 / §IV-A `para`).
+#[derive(Debug, Clone, Copy)]
+pub struct QueryParams {
+    /// Number of neighbors k to return.
+    pub k: usize,
+    /// Branching factor K: meta-HNSW neighbors used to pick sub-HNSWs.
+    pub branch: usize,
+    /// Search factor l (beam width) on sub-HNSW bottom layers.
+    pub ef: usize,
+    /// Search factor for the meta-HNSW walk.
+    pub meta_ef: usize,
+}
+
+impl Default for QueryParams {
+    fn default() -> Self {
+        QueryParams { k: 10, branch: 5, ef: 100, meta_ef: 100 }
+    }
+}
+
+impl QueryParams {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::num(self.k as f64)),
+            ("branch", Json::num(self.branch as f64)),
+            ("ef", Json::num(self.ef as f64)),
+            ("meta_ef", Json::num(self.meta_ef as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        let mut q = QueryParams::default();
+        if let Some(v) = j.get("k").and_then(Json::as_usize) {
+            q.k = v;
+        }
+        if let Some(v) = j.get("branch").and_then(Json::as_usize) {
+            q.branch = v;
+        }
+        if let Some(v) = j.get("ef").and_then(Json::as_usize) {
+            q.ef = v;
+        }
+        if let Some(v) = j.get("meta_ef").and_then(Json::as_usize) {
+            q.meta_ef = v;
+        }
+        q
+    }
+}
+
+/// Cluster topology + robustness knobs for the simulated deployment.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterTopology {
+    /// Worker (executor host) count.
+    pub workers: usize,
+    /// Replicas per sub-HNSW (paper §IV-B).
+    pub replicas: usize,
+    /// Coordinator count.
+    pub coordinators: usize,
+    /// Simulated one-way network latency per message, microseconds.
+    pub net_latency_us: u64,
+    /// Broker rebalance interval, milliseconds.
+    pub rebalance_ms: u64,
+}
+
+impl Default for ClusterTopology {
+    fn default() -> Self {
+        ClusterTopology {
+            workers: 10,
+            replicas: 1,
+            coordinators: 2,
+            net_latency_us: 50,
+            rebalance_ms: 200,
+        }
+    }
+}
+
+impl ClusterTopology {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::num(self.workers as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("coordinators", Json::num(self.coordinators as f64)),
+            ("net_latency_us", Json::num(self.net_latency_us as f64)),
+            ("rebalance_ms", Json::num(self.rebalance_ms as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        let mut c = ClusterTopology::default();
+        if let Some(v) = j.get("workers").and_then(Json::as_usize) {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("replicas").and_then(Json::as_usize) {
+            c.replicas = v;
+        }
+        if let Some(v) = j.get("coordinators").and_then(Json::as_usize) {
+            c.coordinators = v;
+        }
+        if let Some(v) = j.get("net_latency_us").and_then(Json::as_f64) {
+            c.net_latency_us = v as u64;
+        }
+        if let Some(v) = j.get("rebalance_ms").and_then(Json::as_f64) {
+            c.rebalance_ms = v as u64;
+        }
+        c
+    }
+}
+
+/// Top-level config.
+#[derive(Debug, Clone)]
+pub struct PyramidConfig {
+    pub dataset: DatasetConfig,
+    pub metric: Metric,
+    pub index: IndexConfig,
+    pub query: QueryParams,
+    pub cluster: ClusterTopology,
+}
+
+impl PyramidConfig {
+    /// A small default deployment useful for smoke tests and quickstart.
+    pub fn example() -> Self {
+        PyramidConfig {
+            dataset: DatasetConfig::synthetic(SyntheticKind::DeepLike, 100_000, 96, 7),
+            metric: Metric::L2,
+            index: IndexConfig::default(),
+            query: QueryParams::default(),
+            cluster: ClusterTopology::default(),
+        }
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(err)?;
+        let dataset = DatasetConfig::from_json(j.get("dataset").ok_or_else(|| err("dataset missing"))?)?;
+        let metric: Metric = j
+            .get("metric")
+            .and_then(Json::as_str)
+            .unwrap_or("l2")
+            .parse()
+            .map_err(err)?;
+        let index = j.get("index").map(IndexConfig::from_json).transpose()?.unwrap_or_default();
+        let query = j.get("query").map(QueryParams::from_json).unwrap_or_default();
+        let cluster = j.get("cluster").map(ClusterTopology::from_json).unwrap_or_default();
+        Ok(PyramidConfig { dataset, metric, index, query, cluster })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json_text(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn to_json_text(&self) -> String {
+        Json::obj(vec![
+            ("dataset", self.dataset.to_json()),
+            ("metric", Json::str(self.metric.key())),
+            ("index", self.index.to_json()),
+            ("query", self.query.to_json()),
+            ("cluster", self.cluster.to_json()),
+        ])
+        .pretty()
+    }
+
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.index.partitions == 0 {
+            return Err(err("index.partitions must be >= 1"));
+        }
+        if self.index.meta_size < self.index.partitions {
+            return Err(err(format!(
+                "meta_size {} must be >= partitions {}",
+                self.index.meta_size, self.index.partitions
+            )));
+        }
+        if self.index.sample < self.index.meta_size {
+            return Err(err(format!(
+                "sample {} must be >= meta_size {}",
+                self.index.sample, self.index.meta_size
+            )));
+        }
+        if self.query.branch == 0 || self.query.k == 0 {
+            return Err(err("query.branch and query.k must be >= 1"));
+        }
+        if self.cluster.workers == 0 || self.cluster.replicas == 0 {
+            return Err(err("cluster.workers/replicas must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = PyramidConfig::example();
+        let text = c.to_json_text();
+        let back = PyramidConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.index.partitions, c.index.partitions);
+        assert_eq!(back.metric, c.metric);
+        assert_eq!(back.cluster.workers, c.cluster.workers);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_handwritten_config() {
+        let text = r#"{
+            "metric": "ip",
+            "dataset": {"source": "synthetic", "kind": "tiny_like", "n": 1000, "d": 32},
+            "index": {"sample": 500, "meta_size": 50, "partitions": 5, "mips_replication": 10},
+            "query": {"k": 10, "branch": 2},
+            "cluster": {"workers": 5, "replicas": 2}
+        }"#;
+        let c = PyramidConfig::from_json_text(text).unwrap();
+        assert_eq!(c.metric, Metric::Ip);
+        assert_eq!(c.index.mips_replication, 10);
+        assert_eq!(c.query.branch, 2);
+        assert_eq!(c.cluster.replicas, 2);
+        // Defaults fill unspecified fields.
+        assert_eq!(c.query.ef, 100);
+        c.validate().unwrap();
+        let ds = c.dataset.load().unwrap();
+        assert_eq!((ds.len(), ds.dim()), (1000, 32));
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = PyramidConfig::example();
+        c.index.meta_size = 3;
+        c.index.partitions = 10;
+        assert!(c.validate().is_err());
+        let mut c2 = PyramidConfig::example();
+        c2.query.branch = 0;
+        assert!(c2.validate().is_err());
+        let mut c3 = PyramidConfig::example();
+        c3.cluster.replicas = 0;
+        assert!(c3.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("cfg").unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, PyramidConfig::example().to_json_text()).unwrap();
+        let c = PyramidConfig::load(&p).unwrap();
+        c.validate().unwrap();
+    }
+}

@@ -1,0 +1,303 @@
+//! Coordinator (paper §IV-A, Fig 4 left).
+//!
+//! A coordinator receives queries from upstream, searches its meta-HNSW
+//! replica to pick the sub-HNSWs (Algorithm 4 lines 4-6), publishes one
+//! query-processing request per chosen sub-HNSW topic through the broker,
+//! gathers the executors' partial results over a direct reply channel (the
+//! paper's "bare network connection", so coordinator retry needs no broker
+//! state), and merges them into the final top-k.
+//!
+//! `execute` is synchronous per calling thread (many client threads drive
+//! throughput); `execute_async` schedules onto the coordinator's worker
+//! pool and invokes a callback, mirroring the paper's API (Listing 1).
+
+use crate::broker::Broker;
+use crate::config::QueryParams;
+use crate::error::{PyramidError, Result};
+use crate::meta::Router;
+use crate::runtime::BatchScorer;
+use crate::stats::ThroughputSeries;
+use crate::types::{merge_topk, Neighbor, PartitionId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Topic name for a sub-HNSW partition.
+pub fn topic_for(p: PartitionId) -> String {
+    format!("sub-{p}")
+}
+
+/// A query-processing request published to a sub-HNSW topic.
+#[derive(Clone)]
+pub struct QueryRequest {
+    pub qid: u64,
+    pub partition: PartitionId,
+    pub query: Arc<Vec<f32>>,
+    pub k: usize,
+    pub ef: usize,
+    /// If set, executors attach the raw candidate vectors so the
+    /// coordinator can re-rank exactly (PJRT path).
+    pub return_vectors: bool,
+    /// Direct reply channel back to the issuing coordinator.
+    pub reply: mpsc::Sender<PartialResult>,
+}
+
+/// An executor's partial answer for one (query, partition).
+#[derive(Clone)]
+pub struct PartialResult {
+    pub qid: u64,
+    pub partition: PartitionId,
+    pub neighbors: Vec<Neighbor>,
+    /// Row-major candidate vectors aligned with `neighbors` (only when
+    /// `return_vectors` was requested).
+    pub vectors: Option<Arc<Vec<f32>>>,
+    pub executor: u64,
+}
+
+/// Latency + outcome counters, shared with the harnesses.
+#[derive(Debug, Default)]
+pub struct CoordinatorMetrics {
+    pub latencies_us: Mutex<Vec<f64>>,
+    pub completed: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub partials_received: AtomicU64,
+    pub throughput: Mutex<Option<ThroughputSeries>>,
+}
+
+impl CoordinatorMetrics {
+    /// Enable throughput-series recording (Fig 13 timeline).
+    pub fn enable_series(&self, window: Duration) {
+        *self.throughput.lock().unwrap() = Some(ThroughputSeries::new(window));
+    }
+
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        self.throughput.lock().unwrap().as_ref().map(|t| t.series()).unwrap_or_default()
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// Total per-query deadline.
+    pub timeout: Duration,
+    /// Worker threads servicing `execute_async`.
+    pub async_workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { timeout: Duration::from_secs(2), async_workers: 4 }
+    }
+}
+
+type AsyncJob = Box<dyn FnOnce() + Send>;
+
+/// The coordinator node.
+pub struct CoordinatorNode {
+    pub id: u64,
+    router: Router,
+    broker: Broker<QueryRequest>,
+    cfg: CoordinatorConfig,
+    next_qid: AtomicU64,
+    pub metrics: Arc<CoordinatorMetrics>,
+    /// Optional exact re-rank backend (PJRT or native).
+    scorer: Option<Arc<dyn BatchScorer>>,
+    async_tx: Mutex<Option<mpsc::Sender<AsyncJob>>>,
+    async_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl CoordinatorNode {
+    pub fn new(id: u64, router: Router, broker: Broker<QueryRequest>, cfg: CoordinatorConfig) -> Arc<Self> {
+        let node = Arc::new(CoordinatorNode {
+            id,
+            router,
+            broker,
+            cfg,
+            next_qid: AtomicU64::new(1),
+            metrics: Arc::new(CoordinatorMetrics::default()),
+            scorer: None,
+            async_tx: Mutex::new(None),
+            async_handles: Mutex::new(Vec::new()),
+        });
+        node.start_async_pool();
+        node
+    }
+
+    /// Attach an exact re-rank backend; queries will request candidate
+    /// vectors and re-score the merged set through it (Algorithm 4 line 9
+    /// on the PJRT-compiled Pallas scorer).
+    pub fn with_scorer(id: u64, router: Router, broker: Broker<QueryRequest>, cfg: CoordinatorConfig, scorer: Arc<dyn BatchScorer>) -> Arc<Self> {
+        let node = Arc::new(CoordinatorNode {
+            id,
+            router,
+            broker,
+            cfg,
+            next_qid: AtomicU64::new(1),
+            metrics: Arc::new(CoordinatorMetrics::default()),
+            scorer: Some(scorer),
+            async_tx: Mutex::new(None),
+            async_handles: Mutex::new(Vec::new()),
+        });
+        node.start_async_pool();
+        node
+    }
+
+    fn start_async_pool(self: &Arc<Self>) {
+        let (tx, rx) = mpsc::channel::<AsyncJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for i in 0..self.cfg.async_workers {
+            let rx = rx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("coord-{}-async-{i}", self.id))
+                    .spawn(move || loop {
+                        let job = {
+                            let g = rx.lock().unwrap();
+                            g.recv()
+                        };
+                        match job {
+                            Ok(j) => j(),
+                            Err(_) => return,
+                        }
+                    })
+                    .expect("spawn async worker"),
+            );
+        }
+        *self.async_tx.lock().unwrap() = Some(tx);
+        *self.async_handles.lock().unwrap() = handles;
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Process one query synchronously (paper Listing 1 `execute`).
+    pub fn execute(&self, query: &[f32], params: &QueryParams) -> Result<Vec<Neighbor>> {
+        let start = Instant::now();
+        let prepared = self.router.prepare_query(query);
+        let parts = self.router.route(&prepared, params.branch, params.meta_ef);
+        let qid = self.next_qid.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel::<PartialResult>();
+        let query_arc = Arc::new(prepared.into_owned());
+        let want_vectors = self.scorer.is_some();
+        for &p in &parts {
+            self.broker.publish(
+                &topic_for(p),
+                qid,
+                QueryRequest {
+                    qid,
+                    partition: p,
+                    query: query_arc.clone(),
+                    k: params.k,
+                    ef: params.ef,
+                    return_vectors: want_vectors,
+                    reply: reply_tx.clone(),
+                },
+            )?;
+        }
+        drop(reply_tx);
+        // Gather one partial per involved partition, bounded by deadline.
+        let deadline = start + self.cfg.timeout;
+        let mut got: Vec<PartialResult> = Vec::with_capacity(parts.len());
+        let mut seen_parts: std::collections::HashSet<PartitionId> = std::collections::HashSet::new();
+        while seen_parts.len() < parts.len() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match reply_rx.recv_timeout(deadline - now) {
+                Ok(pr) if pr.qid == qid => {
+                    self.metrics.partials_received.fetch_add(1, Ordering::Relaxed);
+                    if seen_parts.insert(pr.partition) {
+                        got.push(pr);
+                    }
+                }
+                Ok(_) => {} // stale reply from a retried query
+                Err(_) => break,
+            }
+        }
+        let timed_out = seen_parts.len() < parts.len();
+        if timed_out {
+            self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            if got.is_empty() {
+                return Err(PyramidError::Timeout(self.cfg.timeout));
+            }
+        }
+        let result = self.merge(&query_arc, got, params.k)?;
+        let done = Instant::now();
+        self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .latencies_us
+            .lock()
+            .unwrap()
+            .push(done.duration_since(start).as_secs_f64() * 1e6);
+        if let Some(ts) = self.metrics.throughput.lock().unwrap().as_mut() {
+            ts.record(done);
+        }
+        Ok(result)
+    }
+
+    /// Merge partial results (Algorithm 4 line 9). With a scorer attached
+    /// and vectors present, re-score the union exactly through it.
+    fn merge(&self, query: &[f32], partials: Vec<PartialResult>, k: usize) -> Result<Vec<Neighbor>> {
+        if let Some(scorer) = &self.scorer {
+            // Gather (id, vector) pairs from partials that carried vectors.
+            let mut ids: Vec<u32> = Vec::new();
+            let mut vecs: Vec<f32> = Vec::new();
+            let mut plain: Vec<Neighbor> = Vec::new();
+            for pr in &partials {
+                match &pr.vectors {
+                    Some(v) => {
+                        ids.extend(pr.neighbors.iter().map(|n| n.id));
+                        vecs.extend_from_slice(v);
+                    }
+                    None => plain.extend_from_slice(&pr.neighbors),
+                }
+            }
+            if !ids.is_empty() {
+                let mut top = scorer.rerank(self.router.metric(), query, &vecs, &ids, k)?;
+                top.extend(plain);
+                return Ok(merge_topk(top, k));
+            }
+        }
+        Ok(merge_topk(partials.into_iter().flat_map(|p| p.neighbors).collect(), k))
+    }
+
+    /// Asynchronous execution with a completion callback (Listing 1
+    /// `execute_async`).
+    pub fn execute_async<F>(self: &Arc<Self>, query: Vec<f32>, params: QueryParams, callback: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<Neighbor>>) + Send + 'static,
+    {
+        let me = self.clone();
+        let job: AsyncJob = Box::new(move || {
+            let res = me.execute(&query, &params);
+            callback(res);
+        });
+        self.async_tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .ok_or_else(|| PyramidError::Cluster("coordinator stopped".into()))?
+            .send(job)
+            .map_err(|_| PyramidError::Cluster("coordinator async pool stopped".into()))
+    }
+
+    /// Shut down the async pool (drains pending jobs).
+    pub fn shutdown(&self) {
+        *self.async_tx.lock().unwrap() = None;
+        for h in self.async_handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for CoordinatorNode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CoordinatorNode")
+            .field("id", &self.id)
+            .field("partitions", &self.router.partitions())
+            .finish()
+    }
+}

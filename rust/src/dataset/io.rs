@@ -1,0 +1,138 @@
+//! fvecs / ivecs IO — the interchange formats of the paper's datasets
+//! (SIFT1B, Deep1B ship as .fvecs/.bvecs; ground truth as .ivecs).
+//!
+//! Format: each vector is `<d: i32 little-endian><d * element>`.
+
+use super::Dataset;
+use crate::error::{PyramidError, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read an .fvecs file. `limit` caps the number of vectors (0 = all).
+pub fn read_fvecs(path: &Path, limit: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut buf = Vec::new();
+    let mut d = 0usize;
+    let mut n = 0usize;
+    let mut head = [0u8; 4];
+    loop {
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let dim = i32::from_le_bytes(head) as usize;
+        if d == 0 {
+            d = dim;
+        } else if dim != d {
+            return Err(PyramidError::Dataset(format!(
+                "inconsistent fvecs dim: {dim} vs {d}"
+            )));
+        }
+        let mut row = vec![0u8; dim * 4];
+        r.read_exact(&mut row)?;
+        buf.extend(row.chunks_exact(4).map(|c| {
+            f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+        }));
+        n += 1;
+        if limit > 0 && n >= limit {
+            break;
+        }
+    }
+    if d == 0 {
+        return Err(PyramidError::Dataset("empty fvecs file".into()));
+    }
+    Dataset::from_vec(buf, d)
+}
+
+/// Write a dataset as .fvecs.
+pub fn write_fvecs(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in ds.iter() {
+        w.write_all(&(ds.dim() as i32).to_le_bytes())?;
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an .ivecs file (e.g. ground-truth neighbor ids).
+pub fn read_ivecs(path: &Path, limit: usize) -> Result<Vec<Vec<i32>>> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut out = Vec::new();
+    let mut head = [0u8; 4];
+    loop {
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let dim = i32::from_le_bytes(head) as usize;
+        let mut row = vec![0u8; dim * 4];
+        r.read_exact(&mut row)?;
+        out.push(
+            row.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+        if limit > 0 && out.len() >= limit {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+/// Write an .ivecs file.
+pub fn write_ivecs(path: &Path, rows: &[Vec<i32>]) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("io").unwrap();
+        let p = dir.join("x.fvecs");
+        let ds = SyntheticSpec::uniform(17, 5, 3).generate();
+        write_fvecs(&p, &ds).unwrap();
+        let back = read_fvecs(&p, 0).unwrap();
+        assert_eq!(back.raw(), ds.raw());
+        assert_eq!(back.dim(), 5);
+        let limited = read_fvecs(&p, 4).unwrap();
+        assert_eq!(limited.len(), 4);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("io").unwrap();
+        let p = dir.join("gt.ivecs");
+        let rows = vec![vec![1, 2, 3], vec![9, 8, 7]];
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p, 0).unwrap(), rows);
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let dir = crate::util::tempdir::TempDir::new("io").unwrap();
+        let p = dir.join("empty.fvecs");
+        std::fs::File::create(&p).unwrap();
+        assert!(read_fvecs(&p, 0).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Dataset substrate: flat row-major vector storage, synthetic generators
+//! (substitutes for Deep500M / SIFT500M / Tiny10M — see DESIGN.md §3),
+//! fvecs/bvecs/ivecs IO and sampling utilities.
+
+mod io;
+mod synthetic;
+
+pub use io::{read_fvecs, read_ivecs, write_fvecs, write_ivecs};
+pub use synthetic::{SyntheticKind, SyntheticSpec};
+
+use crate::error::{PyramidError, Result};
+use crate::metric::normalize_in_place;
+use crate::types::VectorId;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// A dense, row-major f32 vector collection.
+///
+/// Storage is a single contiguous buffer behind an `Arc` so sub-dataset
+/// views and worker threads can share it without copies.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    data: Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+}
+
+impl Dataset {
+    /// Wrap an existing buffer. `data.len()` must equal `n * d`.
+    pub fn from_vec(data: Vec<f32>, d: usize) -> Result<Self> {
+        if d == 0 || data.len() % d != 0 {
+            return Err(PyramidError::Dataset(format!(
+                "buffer length {} is not a multiple of dim {d}",
+                data.len()
+            )));
+        }
+        let n = data.len() / d;
+        Ok(Dataset { data: Arc::new(data), n, d })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Row accessor.
+    #[inline]
+    pub fn get(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The full flat buffer (row-major).
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Iterate rows.
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.d)
+    }
+
+    /// Uniform random sample of `k` distinct rows (paper Alg 3 line 3).
+    /// Returns a materialized dataset plus the chosen source ids.
+    pub fn sample(&self, k: usize, seed: u64) -> (Dataset, Vec<VectorId>) {
+        let k = k.min(self.n);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut ids: Vec<u32> = (0..self.n as u32).collect();
+        rng.partial_shuffle(&mut ids, k);
+        ids.truncate(k);
+        let mut buf = Vec::with_capacity(k * self.d);
+        for &i in &ids {
+            buf.extend_from_slice(self.get(i as usize));
+        }
+        (Dataset::from_vec(buf, self.d).expect("sample buffer"), ids)
+    }
+
+    /// Copy of this dataset with every row normalized to unit norm
+    /// (paper Alg 5 line 4; angular search §III-C).
+    pub fn normalized(&self) -> Dataset {
+        let mut buf = self.data.as_ref().clone();
+        for row in buf.chunks_exact_mut(self.d) {
+            normalize_in_place(row);
+        }
+        Dataset { data: Arc::new(buf), n: self.n, d: self.d }
+    }
+
+    /// Materialize a subset of rows as a new dataset (sub-dataset `X^i`).
+    pub fn subset(&self, ids: &[VectorId]) -> Dataset {
+        let mut buf = Vec::with_capacity(ids.len() * self.d);
+        for &i in ids {
+            buf.extend_from_slice(self.get(i as usize));
+        }
+        Dataset { data: Arc::new(buf), n: ids.len(), d: self.d }
+    }
+
+    /// Euclidean norms of all rows.
+    pub fn norms(&self) -> Vec<f32> {
+        self.iter().map(crate::metric::norm).collect()
+    }
+}
+
+/// A sub-dataset: rows owned by one partition plus their global ids.
+///
+/// `local` row `j` corresponds to global vector `global_ids[j]`. MIPS
+/// replication (Alg 5 lines 12-15) makes `global_ids` non-disjoint across
+/// partitions.
+#[derive(Debug, Clone)]
+pub struct SubDataset {
+    pub local: Dataset,
+    pub global_ids: Vec<VectorId>,
+}
+
+impl SubDataset {
+    pub fn new(parent: &Dataset, global_ids: Vec<VectorId>) -> Self {
+        let local = parent.subset(&global_ids);
+        SubDataset { local, global_ids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global_ids.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::from_vec((0..20).map(|i| i as f32).collect(), 4).unwrap()
+    }
+
+    #[test]
+    fn from_vec_checks_shape() {
+        assert!(Dataset::from_vec(vec![0.0; 7], 4).is_err());
+        assert!(Dataset::from_vec(vec![0.0; 8], 0).is_err());
+        let ds = toy();
+        assert_eq!((ds.len(), ds.dim()), (5, 4));
+        assert_eq!(ds.get(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn sample_is_distinct_and_seeded() {
+        let ds = toy();
+        let (s1, ids1) = ds.sample(3, 42);
+        let (_, ids2) = ds.sample(3, 42);
+        assert_eq!(ids1, ids2);
+        assert_eq!(s1.len(), 3);
+        let set: std::collections::HashSet<_> = ids1.iter().collect();
+        assert_eq!(set.len(), 3);
+        // Sampled rows match their source rows.
+        for (j, &i) in ids1.iter().enumerate() {
+            assert_eq!(s1.get(j), ds.get(i as usize));
+        }
+    }
+
+    #[test]
+    fn sample_larger_than_n_clamps() {
+        let ds = toy();
+        let (s, ids) = ds.sample(100, 1);
+        assert_eq!(s.len(), 5);
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn normalized_rows_unit_norm() {
+        let ds = toy().normalized();
+        for row in ds.iter().skip(1) {
+            assert!((crate::metric::norm(row) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = toy();
+        let sub = SubDataset::new(&ds, vec![4, 0]);
+        assert_eq!(sub.local.get(0), ds.get(4));
+        assert_eq!(sub.local.get(1), ds.get(0));
+        assert_eq!(sub.global_ids, vec![4, 0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Synthetic dataset generators — substitutes for the paper's Deep500M,
+//! SIFT500M and Tiny10M (DESIGN.md §3).
+//!
+//! The properties the experiments actually depend on are (a) *cluster
+//! structure* — Pyramid's partitioning only pays off when similar items can
+//! be grouped, which holds for real descriptor datasets; and (b) the *norm
+//! distribution* — the MIPS experiments (Fig 3, Fig 10) need a wide norm
+//! spread. `DeepLike`/`SiftLike` are Gaussian mixtures with near-constant
+//! row norms (like real deep/SIFT descriptors after whitening); `TinyLike`
+//! scales mixture samples by log-normal norms to reproduce the Fig-3 bias.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Which real dataset the generator imitates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyntheticKind {
+    /// Deep1B-style: CNN descriptors, strongly clustered, ~unit norms.
+    DeepLike,
+    /// SIFT-style: local feature descriptors, moderately clustered,
+    /// near-constant norms.
+    SiftLike,
+    /// Tiny/GIST-style: wide log-normal norm spread (for MIPS).
+    TinyLike,
+    /// Uniform noise — worst case for partitioning (ablation baseline).
+    Uniform,
+}
+
+impl std::str::FromStr for SyntheticKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "deep" | "deep_like" | "deeplike" => Ok(SyntheticKind::DeepLike),
+            "sift" | "sift_like" | "siftlike" => Ok(SyntheticKind::SiftLike),
+            "tiny" | "tiny_like" | "tinylike" => Ok(SyntheticKind::TinyLike),
+            "uniform" => Ok(SyntheticKind::Uniform),
+            other => Err(format!("unknown synthetic kind: {other}")),
+        }
+    }
+}
+
+impl SyntheticKind {
+    pub fn key(&self) -> &'static str {
+        match self {
+            SyntheticKind::DeepLike => "deep_like",
+            SyntheticKind::SiftLike => "sift_like",
+            SyntheticKind::TinyLike => "tiny_like",
+            SyntheticKind::Uniform => "uniform",
+        }
+    }
+}
+
+/// Generator specification.
+#[derive(Debug, Clone, Copy)]
+pub struct SyntheticSpec {
+    pub kind: SyntheticKind,
+    pub n: usize,
+    pub d: usize,
+    /// Number of mixture components (cluster count).
+    pub clusters: usize,
+    /// Cluster center spread vs within-cluster noise; higher = more
+    /// separable clusters.
+    pub separation: f32,
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    pub fn deep_like(n: usize, d: usize, seed: u64) -> Self {
+        SyntheticSpec { kind: SyntheticKind::DeepLike, n, d, clusters: 256, separation: 3.0, seed }
+    }
+
+    pub fn sift_like(n: usize, d: usize, seed: u64) -> Self {
+        SyntheticSpec { kind: SyntheticKind::SiftLike, n, d, clusters: 128, separation: 2.0, seed }
+    }
+
+    pub fn tiny_like(n: usize, d: usize, seed: u64) -> Self {
+        SyntheticSpec { kind: SyntheticKind::TinyLike, n, d, clusters: 64, separation: 2.0, seed }
+    }
+
+    pub fn uniform(n: usize, d: usize, seed: u64) -> Self {
+        SyntheticSpec { kind: SyntheticKind::Uniform, n, d, clusters: 1, separation: 0.0, seed }
+    }
+
+    /// Generate the dataset (deterministic in `seed`).
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut buf = vec![0f32; self.n * self.d];
+        match self.kind {
+            SyntheticKind::Uniform => {
+                for v in buf.iter_mut() {
+                    *v = rng.f32_range(-1.0, 1.0);
+                }
+            }
+            _ => {
+                let k = self.clusters.max(1);
+                // Cluster centers: N(0, separation^2) per coordinate.
+                let mut centers = vec![0f32; k * self.d];
+                for c in centers.iter_mut() {
+                    *c = rng.normal() as f32 * self.separation;
+                }
+                // Zipf-ish skewed cluster popularity for DeepLike (real CNN
+                // descriptor clusters are uneven); uniform for SiftLike.
+                let weights: Vec<f64> = (0..k)
+                    .map(|i| match self.kind {
+                        SyntheticKind::DeepLike => 1.0 / ((i + 1) as f64).sqrt(),
+                        _ => 1.0,
+                    })
+                    .collect();
+                let lognormal = matches!(self.kind, SyntheticKind::TinyLike);
+                for row in buf.chunks_exact_mut(self.d) {
+                    let ci = rng.weighted(&weights);
+                    let center = &centers[ci * self.d..(ci + 1) * self.d];
+                    for (v, c) in row.iter_mut().zip(center) {
+                        *v = c + rng.normal() as f32;
+                    }
+                    if lognormal {
+                        // Rescale the row to a log-normal target norm.
+                        // sigma=0.5 gives a ~5x spread at the tails,
+                        // matching Tiny10M's "wide spread" description.
+                        let cur = crate::metric::norm(row);
+                        if cur > 1e-9 {
+                            let target = rng.lognormal(0.0, 0.5) as f32 * (self.d as f32).sqrt();
+                            let s = target / cur;
+                            for v in row.iter_mut() {
+                                *v *= s;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Dataset::from_vec(buf, self.d).expect("synthetic buffer")
+    }
+
+    /// Generate `q` held-out queries from the same distribution
+    /// (fresh seed offset so queries are not dataset rows).
+    pub fn queries(&self, q: usize) -> Dataset {
+        let mut spec = *self;
+        spec.n = q;
+        spec.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        spec.generate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::norm;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = SyntheticSpec::deep_like(100, 16, 5).generate();
+        let b = SyntheticSpec::deep_like(100, 16, 5).generate();
+        assert_eq!(a.raw(), b.raw());
+        let c = SyntheticSpec::deep_like(100, 16, 6).generate();
+        assert_ne!(a.raw(), c.raw());
+    }
+
+    #[test]
+    fn shapes() {
+        let ds = SyntheticSpec::sift_like(50, 32, 1).generate();
+        assert_eq!((ds.len(), ds.dim()), (50, 32));
+        let q = SyntheticSpec::sift_like(50, 32, 1).queries(7);
+        assert_eq!(q.len(), 7);
+    }
+
+    #[test]
+    fn tiny_like_has_wide_norm_spread() {
+        let ds = SyntheticSpec::tiny_like(2000, 24, 3).generate();
+        let mut norms: Vec<f32> = ds.iter().map(norm).collect();
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p5 = norms[100];
+        let p95 = norms[1900];
+        assert!(p95 / p5 > 2.0, "norm spread too narrow: {p5} .. {p95}");
+    }
+
+    #[test]
+    fn deep_like_norms_are_concentrated() {
+        let ds = SyntheticSpec::deep_like(2000, 64, 3).generate();
+        let mut norms: Vec<f32> = ds.iter().map(norm).collect();
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Spread should be far narrower than TinyLike's.
+        assert!(norms[1900] / norms[100] < 2.0);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            SyntheticKind::DeepLike,
+            SyntheticKind::SiftLike,
+            SyntheticKind::TinyLike,
+            SyntheticKind::Uniform,
+        ] {
+            assert_eq!(k.key().parse::<SyntheticKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<SyntheticKind>().is_err());
+    }
+
+    #[test]
+    fn clustered_data_is_actually_clustered() {
+        // Mean nearest-neighbor distance relative to mean pairwise distance
+        // must be much smaller for the clustered generator than uniform.
+        let ratio = |ds: &Dataset| {
+            let mut nn = 0.0f64;
+            let mut pair = 0.0f64;
+            let mut pairs = 0usize;
+            for i in 0..40 {
+                let mut best = f32::MAX;
+                for j in 0..ds.len() {
+                    if i == j {
+                        continue;
+                    }
+                    let d = crate::metric::l2_sq_unrolled(ds.get(i), ds.get(j));
+                    best = best.min(d);
+                    if j < 40 {
+                        pair += d as f64;
+                        pairs += 1;
+                    }
+                }
+                nn += best as f64;
+            }
+            (nn / 40.0) / (pair / pairs as f64)
+        };
+        let clustered = SyntheticSpec::deep_like(800, 16, 9).generate();
+        let uniform = SyntheticSpec::uniform(800, 16, 9).generate();
+        assert!(
+            ratio(&clustered) < ratio(&uniform),
+            "clustered {} vs uniform {}",
+            ratio(&clustered),
+            ratio(&uniform)
+        );
+    }
+}

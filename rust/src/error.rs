@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for index building, serving and the PJRT runtime.
+#[derive(Error, Debug)]
+pub enum PyramidError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    #[error("index error: {0}")]
+    Index(String),
+
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("broker error: {0}")]
+    Broker(String),
+
+    #[error("registry error: {0}")]
+    Registry(String),
+
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    #[error("query timed out after {0:?}")]
+    Timeout(std::time::Duration),
+
+    #[error("serde error: {0}")]
+    Serde(String),
+}
+
+impl From<xla::Error> for PyramidError {
+    fn from(e: xla::Error) -> Self {
+        PyramidError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, PyramidError>;

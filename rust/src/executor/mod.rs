@@ -1,0 +1,399 @@
+//! Executor (paper §IV-A, Fig 4 right).
+//!
+//! An executor serves one sub-HNSW replica: it joins the sub-HNSW topic's
+//! consumer group, polls query-processing requests, searches its graph and
+//! returns `(item id, similarity score)` tuples straight to the issuing
+//! coordinator over the reply channel. At startup it must win its registry
+//! lock — a replacement instance that finds the lock held exits
+//! immediately (paper §IV-B).
+//!
+//! Host conditions are injected through [`HostControl`]: `alive=false`
+//! makes the executor exit without cleanup (crash), `cpu_share < 100`
+//! stretches per-request service time like the paper's CPU-limit tool.
+
+use crate::broker::Broker;
+use crate::coordinator::{topic_for, PartialResult, QueryRequest};
+use crate::hnsw::Hnsw;
+use crate::registry::Registry;
+use crate::types::{Neighbor, PartitionId, VectorId};
+
+/// What an executor needs from its local index: any per-partition search
+/// backend (HNSW for Pyramid/HNSW-naive, KD-forest for the FLANN
+/// baseline) plugs in here.
+pub trait SubIndex: Send + Sync {
+    /// Top-k search over local row ids; `ef` is the backend's search
+    /// effort knob (beam width for HNSW, leaf checks for KD-forest).
+    fn search_local(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor>;
+    /// Row accessor (for return_vectors).
+    fn vector(&self, local_id: u32) -> &[f32];
+    fn dim(&self) -> usize;
+}
+
+impl SubIndex for Hnsw {
+    fn search_local(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        self.search(query, k, ef)
+    }
+
+    fn vector(&self, local_id: u32) -> &[f32] {
+        self.data().get(local_id as usize)
+    }
+
+    fn dim(&self) -> usize {
+        Hnsw::dim(self)
+    }
+}
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared switchboard for a simulated host (one physical machine).
+#[derive(Debug)]
+pub struct HostControl {
+    pub host: usize,
+    /// Crash switch: executors on this host exit their loops when false.
+    pub alive: AtomicBool,
+    /// CPU share percentage (100 = full speed) — the straggler injector.
+    pub cpu_share: AtomicU32,
+}
+
+impl HostControl {
+    pub fn new(host: usize) -> Arc<Self> {
+        Arc::new(HostControl { host, alive: AtomicBool::new(true), cpu_share: AtomicU32::new(100) })
+    }
+}
+
+/// Executor identity + wiring.
+pub struct ExecutorSpec {
+    /// Globally unique executor id (also the consumer-group member id).
+    pub id: u64,
+    pub partition: PartitionId,
+    pub sub: Arc<dyn SubIndex>,
+    pub ids: Arc<Vec<VectorId>>,
+    pub host: Arc<HostControl>,
+    /// Simulated one-way network latency applied per request.
+    pub net_latency: Duration,
+}
+
+/// Handle to a running executor thread.
+pub struct ExecutorHandle {
+    pub id: u64,
+    pub partition: PartitionId,
+    pub host: Arc<HostControl>,
+    stop: Arc<AtomicBool>,
+    pub served: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<ExitReason>>,
+}
+
+/// Why the executor loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Registry lock already held — a live instance exists (paper §IV-B).
+    LockHeld,
+    /// Host crash switch flipped.
+    HostDied,
+    /// Graceful stop.
+    Stopped,
+    /// Registry session expired under us; a replacement owns the role.
+    SessionLost,
+}
+
+impl ExecutorHandle {
+    /// Politely stop the executor (leaves the group, releases the lock).
+    pub fn stop(mut self) -> ExitReason {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.take().map(|h| h.join().unwrap_or(ExitReason::Stopped)).unwrap_or(ExitReason::Stopped)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+
+    /// Wait for the executor thread to end and return why.
+    pub fn join(mut self) -> ExitReason {
+        self.handle.take().map(|h| h.join().unwrap_or(ExitReason::Stopped)).unwrap_or(ExitReason::Stopped)
+    }
+}
+
+impl Drop for ExecutorHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn an executor service thread.
+pub fn spawn(spec: ExecutorSpec, broker: Broker<QueryRequest>, registry: Registry) -> ExecutorHandle {
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let stop2 = stop.clone();
+    let served2 = served.clone();
+    let host = spec.host.clone();
+    let partition = spec.partition;
+    let id = spec.id;
+    let handle = std::thread::Builder::new()
+        .name(format!("executor-{id}-p{partition}"))
+        .spawn(move || run(spec, broker, registry, stop2, served2))
+        .expect("spawn executor");
+    ExecutorHandle { id, partition, host, stop, served, handle: Some(handle) }
+}
+
+fn run(
+    spec: ExecutorSpec,
+    broker: Broker<QueryRequest>,
+    registry: Registry,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+) -> ExitReason {
+    let lock_path = format!("/instance/exec-{}", spec.id);
+    let session = registry.session();
+    if !session.try_lock(&lock_path) {
+        // A live instance already serves this role (paper: "the new
+        // instance exits immediately when it finds the file is locked").
+        return ExitReason::LockHeld;
+    }
+    let topic = topic_for(spec.partition);
+    let group = format!("grp-{}", spec.partition);
+    let consumer = match broker.subscribe(&topic, &group, spec.id) {
+        Ok(c) => c,
+        Err(_) => return ExitReason::Stopped,
+    };
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            consumer.leave();
+            return ExitReason::Stopped;
+        }
+        if !spec.host.alive.load(Ordering::Relaxed) {
+            // Crash: no graceful leave, no unlock — leak the session so the
+            // lock only releases on expiry, exactly like a killed machine.
+            std::mem::forget(session);
+            return ExitReason::HostDied;
+        }
+        if !session.heartbeat() {
+            return ExitReason::SessionLost;
+        }
+        let Some(delivery) = consumer.poll(Duration::from_millis(20)) else {
+            continue;
+        };
+        // A message may have been polled just as the host died; honor the
+        // crash before doing work (the lease will redeliver it).
+        if !spec.host.alive.load(Ordering::Relaxed) {
+            std::mem::forget(session);
+            return ExitReason::HostDied;
+        }
+        let req = &delivery.msg;
+        let t0 = Instant::now();
+        // Simulated network receive latency.
+        if !spec.net_latency.is_zero() {
+            spin_sleep(spec.net_latency);
+        }
+        // The actual search (Algorithm 4 line 7).
+        let local = spec.sub.search_local(&req.query, req.k, req.ef);
+        let neighbors: Vec<Neighbor> = local
+            .iter()
+            .map(|n| Neighbor::new(spec.ids[n.id as usize], n.score))
+            .collect();
+        let vectors = if req.return_vectors {
+            let d = spec.sub.dim();
+            let mut buf = Vec::with_capacity(local.len() * d);
+            for n in &local {
+                buf.extend_from_slice(spec.sub.vector(n.id));
+            }
+            Some(Arc::new(buf))
+        } else {
+            None
+        };
+        // Straggler injection: a host at cpu_share% takes (100/share)x as
+        // long per request; stretch the elapsed service time accordingly.
+        let share = spec.host.cpu_share.load(Ordering::Relaxed).clamp(1, 100);
+        if share < 100 {
+            let elapsed = t0.elapsed();
+            let extra = elapsed.mul_f64(100.0 / share as f64 - 1.0);
+            spin_sleep(extra);
+        }
+        let _ = req.reply.send(PartialResult {
+            qid: req.qid,
+            partition: req.partition,
+            neighbors,
+            vectors,
+            executor: spec.id,
+        });
+        consumer.ack(&delivery);
+        served.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Sleep that stays accurate for sub-millisecond durations.
+fn spin_sleep(d: Duration) {
+    if d >= Duration::from_millis(2) {
+        std::thread::sleep(d);
+    } else {
+        let end = Instant::now() + d;
+        while Instant::now() < end {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::dataset::SyntheticSpec;
+    use crate::hnsw::HnswParams;
+    use crate::metric::Metric;
+    use crate::registry::RegistryConfig;
+    use std::sync::mpsc;
+
+    fn tiny_sub() -> (Arc<Hnsw>, Arc<Vec<u32>>) {
+        let ds = SyntheticSpec::deep_like(400, 12, 3).generate();
+        let h = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let ids: Vec<u32> = (1000..1400).collect(); // offset global ids
+        (Arc::new(h), Arc::new(ids))
+    }
+
+    fn wiring() -> (Broker<QueryRequest>, Registry) {
+        let b = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        b.create_topic(&topic_for(0));
+        let r = Registry::new(RegistryConfig::default());
+        (b, r)
+    }
+
+    fn request(reply: mpsc::Sender<PartialResult>, q: Vec<f32>) -> QueryRequest {
+        QueryRequest {
+            qid: 1,
+            partition: 0,
+            query: Arc::new(q),
+            k: 5,
+            ef: 50,
+            return_vectors: false,
+            reply,
+        }
+    }
+
+    #[test]
+    fn serves_requests_with_global_ids() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        let h = spawn(
+            ExecutorSpec { id: 1, partition: 0, sub: sub.clone(), ids, host, net_latency: Duration::ZERO },
+            broker.clone(),
+            registry,
+        );
+        let (tx, rx) = mpsc::channel();
+        let q = sub.data().get(7).to_vec();
+        broker.publish(&topic_for(0), 1, request(tx, q)).unwrap();
+        let pr = rx.recv_timeout(Duration::from_secs(2)).expect("partial result");
+        assert_eq!(pr.qid, 1);
+        assert_eq!(pr.neighbors.len(), 5);
+        // Global ids are offset by 1000 and the top hit is the item itself.
+        assert_eq!(pr.neighbors[0].id, 1007);
+        assert!(pr.vectors.is_none());
+        assert_eq!(h.stop(), ExitReason::Stopped);
+    }
+
+    #[test]
+    fn returns_vectors_when_requested() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        let h = spawn(
+            ExecutorSpec { id: 2, partition: 0, sub: sub.clone(), ids, host, net_latency: Duration::ZERO },
+            broker.clone(),
+            registry,
+        );
+        let (tx, rx) = mpsc::channel();
+        let q = sub.data().get(3).to_vec();
+        let mut req = request(tx, q.clone());
+        req.return_vectors = true;
+        broker.publish(&topic_for(0), 1, req).unwrap();
+        let pr = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let vecs = pr.vectors.expect("vectors attached");
+        assert_eq!(vecs.len(), pr.neighbors.len() * sub.dim());
+        // First vector is the query item itself.
+        assert_eq!(&vecs[..sub.dim()], &q[..]);
+        h.stop();
+    }
+
+    #[test]
+    fn second_instance_with_same_id_exits_lock_held() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        let h1 = spawn(
+            ExecutorSpec { id: 7, partition: 0, sub: sub.clone(), ids: ids.clone(), host: host.clone(), net_latency: Duration::ZERO },
+            broker.clone(),
+            registry.clone(),
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        let h2 = spawn(
+            ExecutorSpec { id: 7, partition: 0, sub, ids, host, net_latency: Duration::ZERO },
+            broker,
+            registry,
+        );
+        assert_eq!(h2.join(), ExitReason::LockHeld);
+        h1.stop();
+    }
+
+    #[test]
+    fn host_crash_exits_without_cleanup() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        let h = spawn(
+            ExecutorSpec { id: 9, partition: 0, sub, ids, host: host.clone(), net_latency: Duration::ZERO },
+            broker,
+            registry.clone(),
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        host.alive.store(false, Ordering::Relaxed);
+        assert_eq!(h.join(), ExitReason::HostDied);
+        // Lock still held until the session expires (no graceful unlock).
+        assert!(registry.is_locked("/instance/exec-9"));
+        std::thread::sleep(Duration::from_millis(500));
+        assert!(!registry.is_locked("/instance/exec-9"));
+    }
+
+    #[test]
+    fn straggler_stretches_service_time() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        // A 2ms simulated network/service base makes the 10x stretch
+        // clearly measurable above scheduler noise.
+        let h = spawn(
+            ExecutorSpec { id: 11, partition: 0, sub: sub.clone(), ids, host: host.clone(), net_latency: Duration::from_millis(2) },
+            broker.clone(),
+            registry,
+        );
+        let time_batch = |base: u64, n: u64| {
+            let mut total = Duration::ZERO;
+            for i in 0..n {
+                let (tx, rx) = mpsc::channel();
+                let q = sub.data().get(0).to_vec();
+                let mut req = request(tx, q);
+                req.qid = base + i;
+                let t0 = Instant::now();
+                broker.publish(&topic_for(0), base + i, req).unwrap();
+                rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                total += t0.elapsed();
+            }
+            total
+        };
+        let _ = time_batch(1, 3); // warm-up (subscribe + rebalance pause)
+        let fast = time_batch(10, 5);
+        host.cpu_share.store(10, Ordering::Relaxed);
+        let slow = time_batch(20, 5);
+        assert!(
+            slow > fast.mul_f64(3.0),
+            "straggler not slower: fast={fast:?} slow={slow:?}"
+        );
+        h.stop();
+    }
+}

@@ -1,0 +1,300 @@
+//! Hierarchical Navigable Small World graph (paper §II, Algorithms 1–2).
+//!
+//! Multi-layer proximity graph: layer 0 holds every item; each upper layer
+//! is an exponentially-thinned sample. Search greedily descends the upper
+//! layers (search factor 1) and beam-searches the bottom layer (search
+//! factor `l` > 1). Pyramid builds one *meta*-HNSW over k-means centers and
+//! one *sub*-HNSW per partition with this same implementation.
+//!
+//! Construction is sequential per graph (insert order = id order, seeded
+//! level draws, fully deterministic); Pyramid parallelizes across the `w`
+//! sub-HNSWs with rayon instead (see [`crate::meta`]).
+
+mod build;
+mod search;
+mod serialize;
+
+pub use search::SearchStats;
+
+use crate::dataset::Dataset;
+use crate::error::{PyramidError, Result};
+use crate::metric::Metric;
+use crate::types::Neighbor;
+
+/// HNSW construction parameters. Defaults follow the paper's §V-A setup:
+/// max out-degree 32 on the bottom layer, 16 above, search factor 100.
+#[derive(Debug, Clone, Copy)]
+pub struct HnswParams {
+    /// Max out-degree for layers >= 1.
+    pub m: usize,
+    /// Max out-degree for layer 0.
+    pub m0: usize,
+    /// Search factor (beam width) during construction.
+    pub ef_construction: usize,
+    /// Use the diversity-pruning neighbor selection heuristic from the
+    /// HNSW paper (Alg 4 there). The Pyramid paper's Alg 2 connects to the
+    /// plain top-M; the heuristic strictly improves recall and is what the
+    /// reference implementation (hnswlib) deploys, so it is the default.
+    pub select_heuristic: bool,
+    /// Seed for level draws.
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, m0: 32, ef_construction: 100, select_heuristic: true, seed: 0 }
+    }
+}
+
+impl HnswParams {
+    /// Level multiplier `mL = 1/ln(M)` (HNSW paper's recommendation).
+    pub fn level_lambda(&self) -> f64 {
+        1.0 / (self.m as f64).ln()
+    }
+}
+
+/// One adjacency layer. Node `u`'s out-neighbors live in
+/// `adj[offsets[u]..offsets[u] + len[u]]` after freezing; during build the
+/// lists are plain vectors.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Layer {
+    pub(crate) lists: Vec<Vec<u32>>,
+}
+
+impl Layer {
+    fn with_nodes(n: usize) -> Self {
+        Layer { lists: vec![Vec::new(); n] }
+    }
+
+    #[inline]
+    pub(crate) fn neighbors(&self, u: u32) -> &[u32] {
+        &self.lists[u as usize]
+    }
+}
+
+/// An immutable-after-build HNSW index over a [`Dataset`].
+pub struct Hnsw {
+    pub(crate) data: Dataset,
+    pub(crate) metric: Metric,
+    pub(crate) params: HnswParams,
+    /// `layers[0]` is the bottom layer (all nodes).
+    pub(crate) layers: Vec<Layer>,
+    /// Highest layer each node appears in.
+    pub(crate) levels: Vec<u8>,
+    /// Entry vertex (a node on the top layer).
+    pub(crate) entry: u32,
+    pub(crate) visited_pool: search::VisitedPool,
+}
+
+impl Hnsw {
+    /// Build an index over every row of `data` (paper Algorithm 2).
+    pub fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<Self> {
+        if data.is_empty() {
+            return Err(PyramidError::Index("cannot build HNSW on empty dataset".into()));
+        }
+        build::build(data, metric, params)
+    }
+
+    /// Top-k search with beam width `ef` (paper Algorithm 1). Returns up to
+    /// `k` neighbors, best first.
+    pub fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        self.search_with_stats(query, k, ef).0
+    }
+
+    /// [`Self::search`] plus hop/distance-evaluation counters for the bench
+    /// harness and perf work.
+    pub fn search_with_stats(&self, query: &[f32], k: usize, ef: usize) -> (Vec<Neighbor>, SearchStats) {
+        search::search(self, query, k, ef)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    pub fn max_layer(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Bottom-layer adjacency of node `u` — Pyramid partitions this graph
+    /// (Algorithm 3 line 6).
+    pub fn bottom_neighbors(&self, u: u32) -> &[u32] {
+        self.layers[0].neighbors(u)
+    }
+
+    /// Total directed edge count on the bottom layer.
+    pub fn bottom_edge_count(&self) -> usize {
+        self.layers[0].lists.iter().map(Vec::len).sum()
+    }
+
+    /// Approximate memory footprint (bytes) of vectors + adjacency.
+    pub fn memory_bytes(&self) -> usize {
+        let vecs = self.data.len() * self.data.dim() * 4;
+        let adj: usize = self
+            .layers
+            .iter()
+            .map(|l| l.lists.iter().map(|v| v.len() * 4 + 24).sum::<usize>())
+            .sum();
+        vecs + adj
+    }
+}
+
+impl std::fmt::Debug for Hnsw {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Hnsw")
+            .field("n", &self.len())
+            .field("dim", &self.dim())
+            .field("metric", &self.metric)
+            .field("layers", &self.layers.len())
+            .field("entry", &self.entry)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bruteforce;
+    use crate::dataset::SyntheticSpec;
+
+    fn small() -> Dataset {
+        SyntheticSpec::deep_like(2_000, 24, 11).generate()
+    }
+
+    #[test]
+    fn build_rejects_empty() {
+        let empty = Dataset::from_vec(vec![], 4);
+        // from_vec with empty buffer: n=0 — build must reject.
+        let ds = empty.unwrap();
+        assert!(Hnsw::build(ds, Metric::L2, HnswParams::default()).is_err());
+    }
+
+    #[test]
+    fn single_item_graph() {
+        let ds = Dataset::from_vec(vec![1.0, 2.0], 2).unwrap();
+        let h = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let res = h.search(&[1.0, 2.0], 5, 10);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].id, 0);
+    }
+
+    #[test]
+    fn exact_match_is_top1() {
+        let ds = small();
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        for i in [0usize, 7, 512, 1999] {
+            let res = h.search(ds.get(i), 1, 50);
+            assert_eq!(res[0].id, i as u32, "item {i} not its own NN");
+            assert!(res[0].score.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn recall_vs_bruteforce_l2() {
+        let ds = small();
+        let queries = SyntheticSpec::deep_like(2_000, 24, 11).queries(50);
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let gt = bruteforce::search(&ds, q, Metric::L2, 10);
+            let got = h.search(q, 10, 100);
+            let gtset: std::collections::HashSet<_> = gt.iter().map(|n| n.id).collect();
+            hits += got.iter().filter(|n| gtset.contains(&n.id)).count();
+            total += 10;
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.9, "recall {recall} too low");
+    }
+
+    #[test]
+    fn recall_vs_bruteforce_ip() {
+        let ds = SyntheticSpec::tiny_like(2_000, 24, 13).generate();
+        let queries = SyntheticSpec::tiny_like(2_000, 24, 13).queries(30);
+        let h = Hnsw::build(ds.clone(), Metric::Ip, HnswParams::default()).unwrap();
+        let mut hits = 0usize;
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let gt = bruteforce::search(&ds, q, Metric::Ip, 10);
+            let got = h.search(q, 10, 100);
+            let gtset: std::collections::HashSet<_> = gt.iter().map(|n| n.id).collect();
+            hits += got.iter().filter(|n| gtset.contains(&n.id)).count();
+        }
+        let recall = hits as f64 / (30 * 10) as f64;
+        assert!(recall > 0.85, "MIPS recall {recall} too low");
+    }
+
+    #[test]
+    fn results_sorted_best_first() {
+        let ds = small();
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let res = h.search(ds.get(3), 10, 60);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn degree_bounds_hold() {
+        let ds = small();
+        let p = HnswParams::default();
+        let h = Hnsw::build(ds, Metric::L2, p).unwrap();
+        for (t, layer) in h.layers.iter().enumerate() {
+            let cap = if t == 0 { p.m0 } else { p.m };
+            for l in &layer.lists {
+                assert!(l.len() <= cap, "layer {t} degree {} > {cap}", l.len());
+            }
+        }
+    }
+
+    #[test]
+    fn upper_layers_shrink() {
+        let ds = small();
+        let h = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let counts: Vec<usize> = h
+            .layers
+            .iter()
+            .map(|l| l.lists.iter().filter(|v| !v.is_empty()).count())
+            .collect();
+        for w in counts.windows(2) {
+            assert!(w[1] <= w[0].max(1), "layer sizes not decreasing: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let ds = small();
+        let a = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let b = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.levels, b.levels);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.lists, lb.lists);
+        }
+    }
+
+    #[test]
+    fn stats_counted() {
+        let ds = small();
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let (_, stats) = h.search_with_stats(ds.get(0), 10, 50);
+        assert!(stats.dist_evals > 10);
+        assert!(stats.hops > 0);
+    }
+}

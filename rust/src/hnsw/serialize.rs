@@ -1,0 +1,180 @@
+//! Binary serialization for HNSW indexes (save once, serve many — the
+//! paper's GraphConstructor writes graphs to a path that coordinators and
+//! executors load at startup).
+//!
+//! Format (little-endian): magic, version, metric, params, n, d, entry,
+//! levels, layer count, per-layer adjacency, then the raw vector data.
+
+use super::search::VisitedPool;
+use super::{Hnsw, HnswParams, Layer};
+use crate::dataset::Dataset;
+use crate::error::{PyramidError, Result};
+use crate::metric::Metric;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x50_59_52_31; // "PYR1"
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl Hnsw {
+    /// Serialize to a writer.
+    pub fn save_to(&self, w: &mut impl Write) -> Result<()> {
+        w_u32(w, MAGIC)?;
+        w_u32(w, 1)?; // version
+        let metric = match self.metric {
+            Metric::L2 => 0u32,
+            Metric::Angular => 1,
+            Metric::Ip => 2,
+        };
+        w_u32(w, metric)?;
+        w_u32(w, self.params.m as u32)?;
+        w_u32(w, self.params.m0 as u32)?;
+        w_u32(w, self.params.ef_construction as u32)?;
+        w_u32(w, self.params.select_heuristic as u32)?;
+        w_u64(w, self.params.seed)?;
+        w_u64(w, self.data.len() as u64)?;
+        w_u32(w, self.data.dim() as u32)?;
+        w_u32(w, self.entry)?;
+        w.write_all(&self.levels.iter().map(|&l| l).collect::<Vec<u8>>())?;
+        w_u32(w, self.layers.len() as u32)?;
+        for layer in &self.layers {
+            for list in &layer.lists {
+                w_u32(w, list.len() as u32)?;
+                for &v in list {
+                    w_u32(w, v)?;
+                }
+            }
+        }
+        for row in self.data.iter() {
+            for v in row {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a file path.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        self.save_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn load_from(r: &mut impl Read) -> Result<Self> {
+        if r_u32(r)? != MAGIC {
+            return Err(PyramidError::Index("bad HNSW magic".into()));
+        }
+        let version = r_u32(r)?;
+        if version != 1 {
+            return Err(PyramidError::Index(format!("unsupported HNSW version {version}")));
+        }
+        let metric = match r_u32(r)? {
+            0 => Metric::L2,
+            1 => Metric::Angular,
+            2 => Metric::Ip,
+            m => return Err(PyramidError::Index(format!("bad metric tag {m}"))),
+        };
+        let m = r_u32(r)? as usize;
+        let m0 = r_u32(r)? as usize;
+        let ef_construction = r_u32(r)? as usize;
+        let select_heuristic = r_u32(r)? != 0;
+        let seed = r_u64(r)?;
+        let n = r_u64(r)? as usize;
+        let d = r_u32(r)? as usize;
+        let entry = r_u32(r)?;
+        let mut levels = vec![0u8; n];
+        r.read_exact(&mut levels)?;
+        let layer_count = r_u32(r)? as usize;
+        let mut layers = Vec::with_capacity(layer_count);
+        for _ in 0..layer_count {
+            let mut lists = Vec::with_capacity(n);
+            for _ in 0..n {
+                let len = r_u32(r)? as usize;
+                let mut list = Vec::with_capacity(len);
+                for _ in 0..len {
+                    list.push(r_u32(r)?);
+                }
+                lists.push(list);
+            }
+            layers.push(Layer { lists });
+        }
+        let mut buf = vec![0u8; n * d * 4];
+        r.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Hnsw {
+            data: Dataset::from_vec(data, d)?,
+            metric,
+            params: HnswParams { m, m0, ef_construction, select_heuristic, seed },
+            layers,
+            levels,
+            entry,
+            visited_pool: VisitedPool::new(n),
+        })
+    }
+
+    /// Deserialize from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut r = BufReader::new(f);
+        Self::load_from(&mut r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn roundtrip_preserves_graph_and_results() {
+        let ds = SyntheticSpec::deep_like(500, 16, 21).generate();
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let dir = crate::util::tempdir::TempDir::new("hnsw").unwrap();
+        let p = dir.join("g.hnsw");
+        h.save(&p).unwrap();
+        let h2 = Hnsw::load(&p).unwrap();
+        assert_eq!(h.entry, h2.entry);
+        assert_eq!(h.levels, h2.levels);
+        for (a, b) in h.layers.iter().zip(&h2.layers) {
+            assert_eq!(a.lists, b.lists);
+        }
+        for i in 0..10 {
+            let a = h.search(ds.get(i), 5, 50);
+            let b = h2.search(ds.get(i), 5, 50);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let bytes = vec![0u8; 64];
+        assert!(Hnsw::load_from(&mut bytes.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! k-means for meta-HNSW vertex generation (Algorithm 3 line 4) and
+//! spherical k-means for MIPS (Algorithm 5 line 5).
+//!
+//! Lloyd iterations with k-means++ seeding; the assignment step is the
+//! dense-score hot spot and is rayon-parallel here. The AOT `kmeans_step`
+//! artifact (see `python/compile/model.py`) computes the same weighted
+//! partial statistics through the Pallas scorer; [`crate::runtime`] wires
+//! it in for the PJRT-backed build path, mirroring the paper's
+//! distributed-kmeans workflow where workers reduce partial sums.
+
+use crate::dataset::Dataset;
+use crate::error::{PyramidError, Result};
+use crate::metric::{self};
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+/// k-means configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct KmeansParams {
+    pub centers: usize,
+    pub max_iters: usize,
+    /// Relative improvement in mean squared distance below which we stop.
+    pub tol: f64,
+    /// Spherical mode: centers re-normalized to unit norm every update
+    /// (Algorithm 5's spherical k-means [35]).
+    pub spherical: bool,
+    pub seed: u64,
+}
+
+impl Default for KmeansParams {
+    fn default() -> Self {
+        KmeansParams { centers: 256, max_iters: 20, tol: 1e-4, spherical: false, seed: 0 }
+    }
+}
+
+/// Fitted model: centers (row-major dataset) + final assignments.
+#[derive(Debug, Clone)]
+pub struct KmeansModel {
+    pub centers: Dataset,
+    pub assignments: Vec<u32>,
+    pub inertia: f64,
+    pub iters: usize,
+}
+
+/// Nearest center (squared L2) of one point.
+#[inline]
+pub fn nearest_center(centers: &Dataset, p: &[f32]) -> (u32, f32) {
+    let mut best = (0u32, f32::MAX);
+    for (ci, c) in centers.iter().enumerate() {
+        let d = metric::l2_sq_unrolled(p, c);
+        if d < best.1 {
+            best = (ci as u32, d);
+        }
+    }
+    best
+}
+
+/// k-means++ seeding: D^2-weighted center choice for fast convergence.
+fn seed_plus_plus(data: &Dataset, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = data.len();
+    let d = data.dim();
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centers.extend_from_slice(data.get(first));
+    let mut dist2: Vec<f32> = (0..n)
+        .map(|i| metric::l2_sq_unrolled(data.get(i), data.get(first)))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = dist2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut t = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &w) in dist2.iter().enumerate() {
+                if t < w as f64 {
+                    idx = i;
+                    break;
+                }
+                t -= w as f64;
+            }
+            idx
+        };
+        let cstart = centers.len();
+        centers.extend_from_slice(data.get(pick));
+        let new_c = centers[cstart..].to_vec();
+        threads::parallel_for_each_mut(&mut dist2, threads::default_parallelism(), |i, dref| {
+            let nd = metric::l2_sq_unrolled(data.get(i), &new_c);
+            if nd < *dref {
+                *dref = nd;
+            }
+        });
+    }
+    centers
+}
+
+/// Run Lloyd's algorithm. For spherical mode, `data` should already be
+/// normalized to unit norm (Algorithm 5 line 4); centers are re-normalized
+/// after every update so they stay on the sphere.
+pub fn fit(data: &Dataset, params: &KmeansParams) -> Result<KmeansModel> {
+    let n = data.len();
+    let k = params.centers;
+    if k == 0 || k > n {
+        return Err(PyramidError::Index(format!(
+            "kmeans centers {k} invalid for dataset of {n}"
+        )));
+    }
+    let d = data.dim();
+    let mut rng = Rng::seed_from_u64(params.seed ^ 0x5EED);
+    let mut centers_buf = seed_plus_plus(data, k, &mut rng);
+    if params.spherical {
+        for c in centers_buf.chunks_exact_mut(d) {
+            metric::normalize_in_place(c);
+        }
+    }
+    let mut centers = Dataset::from_vec(centers_buf, d)?;
+    let mut assignments = vec![0u32; n];
+    let mut prev_inertia = f64::MAX;
+    let mut inertia = 0.0;
+    let mut iters = 0;
+
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        // Assignment step (parallel over points).
+        let stats: Vec<(u32, f32)> = threads::parallel_map(n, threads::default_parallelism(), |i| {
+            nearest_center(&centers, data.get(i))
+        });
+        inertia = stats.iter().map(|s| s.1 as f64).sum::<f64>() / n as f64;
+        for (i, s) in stats.iter().enumerate() {
+            assignments[i] = s.0;
+        }
+        // Update step.
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0f64; k];
+        for (i, s) in stats.iter().enumerate() {
+            let c = s.0 as usize;
+            counts[c] += 1.0;
+            let row = data.get(i);
+            for (j, v) in row.iter().enumerate() {
+                sums[c * d + j] += *v as f64;
+            }
+        }
+        let mut new_centers = vec![0f32; k * d];
+        for c in 0..k {
+            if counts[c] > 0.0 {
+                for j in 0..d {
+                    new_centers[c * d + j] = (sums[c * d + j] / counts[c]) as f32;
+                }
+            } else {
+                // Empty cluster: re-seed at the point farthest from its
+                // center to avoid dead centroids.
+                let far = stats
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                new_centers[c * d..(c + 1) * d].copy_from_slice(data.get(far));
+            }
+            if params.spherical {
+                metric::normalize_in_place(&mut new_centers[c * d..(c + 1) * d]);
+            }
+        }
+        centers = Dataset::from_vec(new_centers, d)?;
+        if prev_inertia.is_finite() && (prev_inertia - inertia).abs() / prev_inertia.max(1e-12) < params.tol {
+            break;
+        }
+        prev_inertia = inertia;
+    }
+    Ok(KmeansModel { centers, assignments, inertia, iters })
+}
+
+/// Per-center sample counts — the vertex weights Pyramid uses for balanced
+/// partitioning (Algorithm 3: "weight ... set as the number of items it
+/// has from X'").
+pub fn center_weights(model: &KmeansModel) -> Vec<f64> {
+    let mut w = vec![0f64; model.centers.len()];
+    for &a in &model.assignments {
+        w[a as usize] += 1.0;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn rejects_bad_k() {
+        let ds = SyntheticSpec::uniform(10, 4, 1).generate();
+        assert!(fit(&ds, &KmeansParams { centers: 0, ..Default::default() }).is_err());
+        assert!(fit(&ds, &KmeansParams { centers: 11, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        // 3 well-separated blobs; k=3 must reach near-zero inertia.
+        let mut buf = Vec::new();
+        let mut rng = Rng::seed_from_u64(9);
+        for c in 0..3 {
+            for _ in 0..100 {
+                buf.push(c as f32 * 100.0 + rng.f32_range(-0.5, 0.5));
+                buf.push(c as f32 * -50.0 + rng.f32_range(-0.5, 0.5));
+            }
+        }
+        let ds = Dataset::from_vec(buf, 2).unwrap();
+        let m = fit(&ds, &KmeansParams { centers: 3, max_iters: 30, ..Default::default() }).unwrap();
+        assert!(m.inertia < 1.0, "inertia {}", m.inertia);
+        // All points in a blob share an assignment.
+        for blob in 0..3 {
+            let a0 = m.assignments[blob * 100];
+            for i in 0..100 {
+                assert_eq!(m.assignments[blob * 100 + i], a0);
+            }
+        }
+    }
+
+    #[test]
+    fn inertia_decreases() {
+        let ds = SyntheticSpec::deep_like(1000, 16, 17).generate();
+        let m1 = fit(&ds, &KmeansParams { centers: 8, max_iters: 1, ..Default::default() }).unwrap();
+        let m10 = fit(&ds, &KmeansParams { centers: 8, max_iters: 10, ..Default::default() }).unwrap();
+        assert!(m10.inertia <= m1.inertia + 1e-9);
+    }
+
+    #[test]
+    fn spherical_centers_unit_norm() {
+        let ds = SyntheticSpec::tiny_like(500, 12, 23).generate().normalized();
+        let m = fit(&ds, &KmeansParams { centers: 16, spherical: true, ..Default::default() }).unwrap();
+        for c in m.centers.iter() {
+            assert!((metric::norm(c) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_n() {
+        let ds = SyntheticSpec::deep_like(400, 8, 31).generate();
+        let m = fit(&ds, &KmeansParams { centers: 10, ..Default::default() }).unwrap();
+        let w = center_weights(&m);
+        assert_eq!(w.iter().sum::<f64>() as usize, 400);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = SyntheticSpec::deep_like(300, 8, 41).generate();
+        let p = KmeansParams { centers: 6, ..Default::default() };
+        let a = fit(&ds, &p).unwrap();
+        let b = fit(&ds, &p).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+    }
+}

@@ -1,0 +1,69 @@
+//! # Pyramid — distributed similarity search on HNSW
+//!
+//! Reproduction of *Pyramid: A General Framework for Distributed Similarity
+//! Search* (Deng, Yan, Ng, Jiang, Cheng; 2019). Pyramid builds a small
+//! **meta-HNSW** over k-means centers of a dataset sample, partitions its
+//! bottom layer into balanced min-cut graph partitions, assigns every item
+//! to the sub-dataset of its nearest meta vertex, and builds one
+//! **sub-HNSW** per partition. Queries search the meta-HNSW first and are
+//! dispatched only to the sub-HNSWs whose partitions contain one of the
+//! query's top-`K` meta neighbors — keeping the per-query *access rate*
+//! well below 1 and raising cluster throughput >2x over naive random
+//! partitioning.
+//!
+//! ## Crate layout (three-layer architecture, DESIGN.md)
+//!
+//! Layer 3 (this crate) owns all coordination: routing ([`meta`],
+//! [`coordinator`]), the message broker ([`broker`], a Kafka substitute),
+//! the lock registry ([`registry`], a Zookeeper substitute), the simulated
+//! cluster ([`cluster`]) and the public API ([`api`], mirroring the paper's
+//! Listings 1–3). Layers 2/1 (JAX graph + Pallas kernel) are compiled
+//! AOT to `artifacts/*.hlo.txt` and executed from [`runtime`] via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```ignore
+//! use pyramid::prelude::*;
+//! let data = SyntheticSpec::deep_like(100_000, 96, 7).generate();
+//! let cfg = IndexConfig { partitions: 10, ..IndexConfig::default() };
+//! let index = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+//! let hits = index.search(data.get(0), &QueryParams { k: 10, branch: 4, ..Default::default() });
+//! assert_eq!(hits.len(), 10);
+//! ```
+
+pub mod api;
+pub mod baselines;
+pub mod bench_harness;
+pub mod broker;
+pub mod bruteforce;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod error;
+pub mod executor;
+pub mod hnsw;
+pub mod kmeans;
+pub mod meta;
+pub mod metric;
+pub mod partition;
+pub mod registry;
+pub mod runtime;
+pub mod stats;
+pub mod types;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::api::{Coordinator, Executor, GraphConstructor};
+    pub use crate::baselines::{DistributedKdForest, KdForest, NaiveIndex};
+    pub use crate::bench_harness::{drive_cluster, precision_at_k, LatencyRecorder, TablePrinter, Workload};
+    pub use crate::cluster::{ClusterConfig, SimCluster};
+    pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams};
+    pub use crate::dataset::{Dataset, SyntheticKind, SyntheticSpec};
+    pub use crate::error::{PyramidError, Result};
+    pub use crate::hnsw::{Hnsw, HnswParams};
+    pub use crate::meta::{PyramidIndex, Router};
+    pub use crate::metric::Metric;
+    pub use crate::types::{Neighbor, VectorId};
+}

@@ -1,0 +1,154 @@
+//! `pyramid` — the launcher binary.
+//!
+//! ```text
+//! pyramid init-config [--out pyramid.json]         write a starter config
+//! pyramid build-index --config cfg.json --out DIR  Algorithm 3/5 build
+//! pyramid gt --config cfg.json --queries N --out gt.ivecs
+//! pyramid query --config cfg.json --index DIR [--branch K] [--n N]
+//! pyramid serve --config cfg.json --index DIR [--seconds S] [--clients C]
+//! pyramid bench --config cfg.json [--seconds S]    one-shot cluster bench
+//! ```
+//!
+//! Figure regeneration lives in the bench harness: `cargo bench --bench
+//! figures -- <fig5|fig6|...>` (see Makefile targets).
+
+use pyramid::bench_harness::{drive_cluster, TablePrinter, Workload};
+use pyramid::cluster::SimCluster;
+use pyramid::config::PyramidConfig;
+use pyramid::error::Result;
+use pyramid::meta::PyramidIndex;
+use pyramid::util::cli::Args;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<PyramidConfig> {
+    let path = args.get_or("config", "pyramid.json");
+    let cfg = PyramidConfig::load(&PathBuf::from(path))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "init-config" => {
+            let out = args.get_or("out", "pyramid.json");
+            std::fs::write(&out, PyramidConfig::example().to_json_text())?;
+            println!("wrote {out}");
+            Ok(())
+        }
+        "build-index" => {
+            let cfg = load_config(args)?;
+            let out = PathBuf::from(args.get_or("out", "pyramid-index"));
+            println!("loading dataset…");
+            let data = cfg.dataset.load()?;
+            println!("building index over {} x {}…", data.len(), data.dim());
+            let idx = PyramidIndex::build(&data, cfg.metric, &cfg.index)?;
+            idx.save(&out)?;
+            let r = &idx.report;
+            println!("index written to {}", out.display());
+            println!(
+                "build breakdown: kmeans {:?}, meta {:?}, partition {:?}, assign {:?}, replicate {:?}, sub-HNSWs {:?} (total {:?})",
+                r.sample_kmeans, r.meta_build, r.partition, r.assign, r.replicate, r.sub_build, r.total()
+            );
+            println!("partition sizes: {:?} (cut {})", r.sub_sizes, r.cut);
+            Ok(())
+        }
+        "gt" => {
+            let cfg = load_config(args)?;
+            let nq = args.get_usize("queries", 1000);
+            let out = PathBuf::from(args.get_or("out", "gt.ivecs"));
+            let data = cfg.dataset.load()?;
+            let queries = cfg.dataset.load_queries(nq)?;
+            println!("computing exact top-{} for {} queries…", cfg.query.k, queries.len());
+            let gt = pyramid::bruteforce::search_batch(&data, &queries, cfg.metric, cfg.query.k);
+            let rows: Vec<Vec<i32>> =
+                gt.iter().map(|r| r.iter().map(|n| n.id as i32).collect()).collect();
+            pyramid::dataset::write_ivecs(&out, &rows)?;
+            println!("wrote {}", out.display());
+            Ok(())
+        }
+        "query" => {
+            let cfg = load_config(args)?;
+            let dir = PathBuf::from(args.get_or("index", "pyramid-index"));
+            let n = args.get_usize("n", 10);
+            let mut params = cfg.query;
+            params.branch = args.get_usize("branch", params.branch);
+            params.ef = args.get_usize("ef", params.ef);
+            let idx = PyramidIndex::load(&dir)?;
+            let queries = cfg.dataset.load_queries(n)?;
+            for qi in 0..queries.len() {
+                let (res, parts) = idx.search_with_route(queries.get(qi), &params);
+                let ids: Vec<u32> = res.iter().map(|r| r.id).collect();
+                println!("q{qi}: partitions {parts:?} -> top-{} {ids:?}", params.k);
+            }
+            Ok(())
+        }
+        "serve" | "bench" => {
+            let cfg = load_config(args)?;
+            let seconds = args.get_f64("seconds", 10.0);
+            let clients = args.get_usize("clients", 16);
+            let nq = args.get_usize("queries", 1000);
+            let data = cfg.dataset.load()?;
+            let queries = cfg.dataset.load_queries(nq)?;
+            let idx = if let Some(dir) = args.get("index") {
+                PyramidIndex::load(&PathBuf::from(dir))?
+            } else {
+                println!("building index in memory…");
+                PyramidIndex::build(&data, cfg.metric, &cfg.index)?
+            };
+            println!("computing ground truth…");
+            let workload = Workload::new(data, queries, cfg.metric, cfg.query.k);
+            println!("starting cluster: {:?}", cfg.cluster);
+            let cluster = SimCluster::start(&idx, cfg.cluster)?;
+            println!("driving {clients} clients for {seconds}s…");
+            let report = drive_cluster(
+                &cluster,
+                &workload,
+                &cfg.query,
+                clients,
+                Duration::from_secs_f64(seconds),
+            );
+            let mut t = TablePrinter::new(&[
+                "queries", "qps", "precision", "p50 ms", "p90 ms", "p99 ms", "errors",
+            ]);
+            t.row(vec![
+                report.queries.to_string(),
+                format!("{:.0}", report.qps),
+                format!("{:.4}", report.precision),
+                format!("{:.3}", report.latency.p50_ms()),
+                format!("{:.3}", report.latency.p90_ms()),
+                format!("{:.3}", report.latency.p99_ms()),
+                report.errors.to_string(),
+            ]);
+            t.print();
+            cluster.shutdown();
+            Ok(())
+        }
+        _ => {
+            println!(
+                "pyramid — distributed similarity search (paper reproduction)\n\n\
+                 commands:\n\
+                 \u{20}  init-config  [--out pyramid.json]\n\
+                 \u{20}  build-index  --config cfg.json --out DIR\n\
+                 \u{20}  gt           --config cfg.json --queries N --out gt.ivecs\n\
+                 \u{20}  query        --config cfg.json --index DIR [--branch K] [--n N]\n\
+                 \u{20}  serve|bench  --config cfg.json [--index DIR] [--seconds S] [--clients C]\n\n\
+                 figures: cargo bench --bench figures -- <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table_build|all>"
+            );
+            Ok(())
+        }
+    }
+}

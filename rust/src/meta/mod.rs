@@ -1,0 +1,427 @@
+//! The Pyramid two-level index (paper §III).
+//!
+//! [`PyramidIndex::build`] implements Algorithm 3 (and Algorithm 5 when the
+//! metric is inner product and `mips_replication > 0`):
+//!
+//! 1. sample `n'` items, (spherical-)k-means into `m` centers;
+//! 2. build the **meta-HNSW** over the centers;
+//! 3. partition its bottom-layer graph into `w` balanced min-cut parts;
+//! 4. assign every dataset item to the partition of its nearest meta
+//!    vertex; for MIPS additionally replicate each meta vertex's top-`r`
+//!    inner-product neighbors into its partition (Alg 5 lines 12-15);
+//! 5. build one **sub-HNSW** per partition (parallel across partitions).
+//!
+//! [`PyramidIndex::search`] implements Algorithm 4: meta-HNSW top-`K`
+//! routing, sub-HNSW search on the touched partitions, merge.
+
+mod mips;
+mod persist;
+mod router;
+
+pub use router::Router;
+
+use crate::config::{IndexConfig, QueryParams};
+use crate::dataset::{Dataset, SubDataset};
+use crate::error::{PyramidError, Result};
+use crate::hnsw::Hnsw;
+use crate::kmeans::{self, KmeansParams};
+use crate::metric::Metric;
+use crate::partition::{self, CsrGraph, PartitionParams};
+use crate::types::{merge_topk, Neighbor, PartitionId, VectorId};
+use crate::util::threads;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Build-phase timing/shape breakdown (reported in §V-C of the paper; the
+/// `table_build` harness regenerates that comparison).
+#[derive(Debug, Clone, Default)]
+pub struct BuildReport {
+    pub sample_kmeans: Duration,
+    pub meta_build: Duration,
+    pub partition: Duration,
+    pub assign: Duration,
+    pub replicate: Duration,
+    pub sub_build: Duration,
+    /// Items per partition after assignment (incl. replication).
+    pub sub_sizes: Vec<usize>,
+    /// Cut edge weight of the meta partitioning.
+    pub cut: f64,
+    /// Total replicated items (MIPS only).
+    pub replicated: usize,
+}
+
+impl BuildReport {
+    pub fn total(&self) -> Duration {
+        self.sample_kmeans + self.meta_build + self.partition + self.assign + self.replicate + self.sub_build
+    }
+}
+
+/// The built two-level index.
+pub struct PyramidIndex {
+    pub metric: Metric,
+    /// Meta-HNSW over the k-means centers.
+    pub meta: Hnsw,
+    /// Partition id of each meta-HNSW vertex.
+    pub meta_partition: Vec<u32>,
+    /// Per-partition sub-HNSW (local row ids) + local->global id maps.
+    pub subs: Vec<Arc<Hnsw>>,
+    pub sub_ids: Vec<Arc<Vec<VectorId>>>,
+    pub config: IndexConfig,
+    pub report: BuildReport,
+}
+
+impl PyramidIndex {
+    /// Build the index over `data` (Algorithm 3 / Algorithm 5).
+    pub fn build(data: &Dataset, metric: Metric, cfg: &IndexConfig) -> Result<PyramidIndex> {
+        if data.is_empty() {
+            return Err(PyramidError::Index("cannot index an empty dataset".into()));
+        }
+        let w = cfg.partitions;
+        let m = cfg.meta_size.min(data.len());
+        if m < w {
+            return Err(PyramidError::Index(format!("meta_size {m} < partitions {w}")));
+        }
+        let mips = metric == Metric::Ip && cfg.mips_replication > 0;
+        let mut report = BuildReport::default();
+
+        // For angular search, operate on normalized items throughout
+        // (§III-C); the sub-HNSWs then store normalized rows.
+        let data = if metric.normalizes_items() { data.normalized() } else { data.clone() };
+
+        // 1. Sample + k-means (Alg 3 lines 3-4 / Alg 5 lines 3-5).
+        let t0 = Instant::now();
+        let (sample, _) = data.sample(cfg.sample.max(m), cfg.seed ^ 0xA11CE);
+        // MIPS: normalize the sample so k-means clusters by direction.
+        let sample = if mips { sample.normalized() } else { sample };
+        let km = kmeans::fit(
+            &sample,
+            &KmeansParams {
+                centers: m,
+                max_iters: 15,
+                tol: 1e-3,
+                spherical: mips,
+                seed: cfg.seed,
+            },
+        )?;
+        let weights = kmeans::center_weights(&km);
+        report.sample_kmeans = t0.elapsed();
+
+        // 2. Meta-HNSW over the centers (Alg 3 line 5). The meta graph
+        // always uses the search metric so its edges reflect the same
+        // similarity structure queries will follow.
+        let t0 = Instant::now();
+        let mut meta_params = cfg.hnsw;
+        meta_params.seed = cfg.seed ^ 0x3E7A;
+        let meta = Hnsw::build(km.centers.clone(), metric, meta_params)?;
+        report.meta_build = t0.elapsed();
+
+        // 3. Partition the meta bottom layer (Alg 3 line 6), weighted by
+        // sample mass so sub-datasets balance.
+        let t0 = Instant::now();
+        let lists: Vec<Vec<u32>> = (0..m as u32).map(|u| meta.bottom_neighbors(u).to_vec()).collect();
+        let graph = CsrGraph::from_directed(&lists, weights)?;
+        let parts = partition::partition(
+            &graph,
+            &PartitionParams { parts: w, epsilon: cfg.epsilon, seed: cfg.seed, ..Default::default() },
+        )?;
+        report.partition = t0.elapsed();
+        report.cut = parts.cut;
+
+        // 4. Assign every item to its nearest meta vertex's partition
+        // (Alg 3 lines 7-10), parallel over items.
+        let t0 = Instant::now();
+        let assign_ef = 32.max(cfg.hnsw.m);
+        let assignment: Vec<u32> = threads::parallel_map(
+            data.len(),
+            threads::default_parallelism(),
+            |i| {
+                let hit = meta.search(data.get(i), 1, assign_ef);
+                parts.part[hit[0].id as usize]
+            },
+        );
+        let mut members: Vec<Vec<VectorId>> = vec![Vec::new(); w];
+        for (i, &p) in assignment.iter().enumerate() {
+            members[p as usize].push(i as VectorId);
+        }
+        report.assign = t0.elapsed();
+
+        // 5. MIPS replication (Alg 5 lines 12-15): each meta vertex's top-r
+        // inner-product neighbors join its partition's sub-dataset.
+        if mips {
+            let t0 = Instant::now();
+            let added = mips::replicate_top_r(&data, &meta, &parts.part, cfg.mips_replication, &mut members);
+            report.replicate = t0.elapsed();
+            report.replicated = added;
+        }
+
+        // Guard against empty partitions (tiny datasets): backfill each
+        // empty partition with the globally nearest items so every
+        // sub-HNSW is buildable.
+        for p in 0..w {
+            if members[p].is_empty() {
+                members[p].push((p % data.len()) as VectorId);
+            }
+        }
+
+        // 6. Sub-HNSW per partition (Alg 3 lines 11-12), parallel across
+        // partitions — the distributed workflow builds these on separate
+        // workers.
+        let t0 = Instant::now();
+        let members_ref = &members;
+        let data_ref = &data;
+        let built: Vec<Result<(Arc<Hnsw>, Arc<Vec<VectorId>>)>> =
+            threads::parallel_map(w, threads::default_parallelism(), |p| {
+                let sub = SubDataset::new(data_ref, members_ref[p].clone());
+                let mut params = cfg.hnsw;
+                params.seed = cfg.seed ^ (0x5B + p as u64);
+                let h = Hnsw::build(sub.local, metric, params)?;
+                Ok((Arc::new(h), Arc::new(sub.global_ids)))
+            });
+        let mut subs = Vec::with_capacity(w);
+        let mut sub_ids = Vec::with_capacity(w);
+        for b in built {
+            let (h, ids) = b?;
+            sub_ids.push(ids);
+            subs.push(h);
+        }
+        report.sub_build = t0.elapsed();
+        report.sub_sizes = sub_ids.iter().map(|v| v.len()).collect();
+
+        Ok(PyramidIndex {
+            metric,
+            meta,
+            meta_partition: parts.part,
+            subs,
+            sub_ids,
+            config: *cfg,
+            report,
+        })
+    }
+
+    /// Number of partitions (w).
+    pub fn partitions(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Total stored items across sub-HNSWs (>= dataset size with MIPS
+    /// replication; the paper reports +0.6% for Tiny10M at r=300).
+    pub fn stored_items(&self) -> usize {
+        self.sub_ids.iter().map(|v| v.len()).sum()
+    }
+
+    /// Route a query: the partitions whose sub-HNSWs must be searched
+    /// (Algorithm 4 lines 4-6). Normalizes the query for angular search.
+    pub fn route(&self, query: &[f32], branch: usize, meta_ef: usize) -> Vec<PartitionId> {
+        let hits = self.meta.search(query, branch.max(1), meta_ef.max(branch));
+        let mut parts: Vec<PartitionId> = hits
+            .iter()
+            .map(|h| self.meta_partition[h.id as usize] as PartitionId)
+            .collect();
+        parts.sort_unstable();
+        parts.dedup();
+        parts
+    }
+
+    /// Search one sub-HNSW, translating local row ids to global ids
+    /// (the executor-side computation).
+    pub fn search_partition(&self, p: PartitionId, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        let ids = &self.sub_ids[p as usize];
+        self.subs[p as usize]
+            .search(query, k, ef)
+            .into_iter()
+            .map(|n| Neighbor::new(ids[n.id as usize], n.score))
+            .collect()
+    }
+
+    /// Full single-process query (Algorithm 4). The distributed path in
+    /// [`crate::cluster`] runs the same route/search/merge split across
+    /// coordinator and executors.
+    pub fn search(&self, query: &[f32], params: &QueryParams) -> Vec<Neighbor> {
+        let (res, _) = self.search_with_route(query, params);
+        res
+    }
+
+    /// [`Self::search`] plus the partitions touched (for access-rate
+    /// accounting, Fig 5).
+    pub fn search_with_route(&self, query: &[f32], params: &QueryParams) -> (Vec<Neighbor>, Vec<PartitionId>) {
+        let owned_q;
+        let query = if self.metric.normalizes_items() {
+            let mut q = query.to_vec();
+            crate::metric::normalize_in_place(&mut q);
+            owned_q = q;
+            &owned_q[..]
+        } else {
+            query
+        };
+        let parts = self.route(query, params.branch, params.meta_ef);
+        let mut partials = Vec::with_capacity(parts.len() * params.k);
+        for &p in &parts {
+            partials.extend(self.search_partition(p, query, params.k, params.ef));
+        }
+        (merge_topk(partials, params.k), parts)
+    }
+}
+
+impl std::fmt::Debug for PyramidIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PyramidIndex")
+            .field("metric", &self.metric)
+            .field("meta_size", &self.meta.len())
+            .field("partitions", &self.partitions())
+            .field("sub_sizes", &self.report.sub_sizes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bruteforce;
+    use crate::dataset::SyntheticSpec;
+
+    fn small_cfg() -> IndexConfig {
+        IndexConfig {
+            sample: 2_000,
+            meta_size: 64,
+            partitions: 8,
+            ..IndexConfig::default()
+        }
+    }
+
+    fn build_small() -> &'static (Dataset, Dataset, PyramidIndex) {
+        // Shared across tests (build is the expensive part). 64 natural
+        // clusters over 8 partitions keeps the partitioning meaningful at
+        // this miniature scale.
+        static CELL: std::sync::OnceLock<(Dataset, Dataset, PyramidIndex)> =
+            std::sync::OnceLock::new();
+        CELL.get_or_init(|| {
+            let mut spec = SyntheticSpec::deep_like(8_000, 24, 77);
+            spec.clusters = 64;
+            let data = spec.generate();
+            let queries = spec.queries(40);
+            let idx = PyramidIndex::build(&data, Metric::L2, &small_cfg()).unwrap();
+            (data, queries, idx)
+        })
+    }
+
+    #[test]
+    fn build_shapes() {
+        let (data, _, idx) = &build_small();
+        assert_eq!(idx.partitions(), 8);
+        assert_eq!(idx.meta.len(), 64);
+        // Every item assigned exactly once (no MIPS replication for L2).
+        assert_eq!(idx.stored_items(), data.len());
+        // No partition is pathologically oversized (paper: roughly equal).
+        let max = *idx.report.sub_sizes.iter().max().unwrap();
+        assert!(max < data.len() / 2, "max partition {max}");
+    }
+
+    #[test]
+    fn partition_coherence_items_near_their_center() {
+        // An item and its exact nearest meta vertex must be in the same
+        // partition (this is definitionally what assignment does) — verify
+        // via independent brute force over the meta vectors.
+        let (data, _, idx) = &build_small();
+        let mut agree = 0;
+        for i in (0..data.len()).step_by(97) {
+            let gt = bruteforce::search(idx.meta.data(), data.get(i), Metric::L2, 1)[0].id;
+            let assigned_part = idx
+                .sub_ids
+                .iter()
+                .position(|ids| ids.contains(&(i as u32)))
+                .unwrap() as u32;
+            if idx.meta_partition[gt as usize] == assigned_part {
+                agree += 1;
+            }
+        }
+        // HNSW assignment is approximate; expect near-total agreement.
+        let total = (0..data.len()).step_by(97).count();
+        assert!(agree * 10 >= total * 9, "only {agree}/{total} coherent");
+    }
+
+    #[test]
+    fn routing_respects_branch_factor() {
+        let (_, queries, idx) = &build_small();
+        for qi in 0..queries.len() {
+            let parts1 = idx.route(queries.get(qi), 1, 100);
+            assert_eq!(parts1.len(), 1);
+            let parts5 = idx.route(queries.get(qi), 5, 100);
+            assert!(parts5.len() <= 5 && !parts5.is_empty());
+            // branch=K touches at most K partitions and is monotone-ish:
+            // the K=1 partition is among the K=5 partitions.
+            assert!(parts5.contains(&parts1[0]));
+        }
+    }
+
+    #[test]
+    fn precision_reasonable_and_improves_with_branch() {
+        let (data, queries, idx) = &build_small();
+        let gt = bruteforce::search_batch(&data, &queries, Metric::L2, 10);
+        let precision = |branch: usize| {
+            let mut hit = 0usize;
+            for qi in 0..queries.len() {
+                let res = idx.search(
+                    queries.get(qi),
+                    &QueryParams { k: 10, branch, ef: 100, meta_ef: 100 },
+                );
+                let gtset: std::collections::HashSet<u32> = gt[qi].iter().map(|n| n.id).collect();
+                hit += res.iter().filter(|n| gtset.contains(&n.id)).count();
+            }
+            hit as f64 / (queries.len() * 10) as f64
+        };
+        let p1 = precision(1);
+        let p4 = precision(4);
+        let p8 = precision(8);
+        assert!(p1 > 0.3, "branch=1 precision {p1}");
+        assert!(p8 > 0.85, "branch=8 precision {p8}");
+        assert!(p8 >= p4 && p4 >= p1 - 0.05, "not monotone: {p1} {p4} {p8}");
+    }
+
+    #[test]
+    fn search_returns_sorted_k() {
+        let (_, queries, idx) = &build_small();
+        let res = idx.search(queries.get(0), &QueryParams::default());
+        assert_eq!(res.len(), 10);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        // No duplicate ids.
+        let set: std::collections::HashSet<u32> = res.iter().map(|n| n.id).collect();
+        assert_eq!(set.len(), res.len());
+    }
+
+    #[test]
+    fn angular_metric_normalizes() {
+        let spec = SyntheticSpec::tiny_like(3_000, 16, 5);
+        let data = spec.generate();
+        let cfg = IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
+        let idx = PyramidIndex::build(&data, Metric::Angular, &cfg).unwrap();
+        // Query scaled by 1000x must return identical results (angular is
+        // scale-invariant).
+        let q = data.get(0).to_vec();
+        let q_big: Vec<f32> = q.iter().map(|v| v * 1000.0).collect();
+        let a = idx.search(&q, &QueryParams::default());
+        let b = idx.search(&q_big, &QueryParams::default());
+        assert_eq!(
+            a.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let data = SyntheticSpec::uniform(100, 8, 1).generate();
+        let cfg = IndexConfig { meta_size: 4, partitions: 10, ..Default::default() };
+        assert!(PyramidIndex::build(&data, Metric::L2, &cfg).is_err());
+        let empty = Dataset::from_vec(vec![], 8).unwrap();
+        assert!(PyramidIndex::build(&empty, Metric::L2, &small_cfg()).is_err());
+    }
+
+    #[test]
+    fn build_report_populated() {
+        let (_, _, idx) = &build_small();
+        assert!(idx.report.total() > Duration::ZERO);
+        assert_eq!(idx.report.sub_sizes.len(), 8);
+        assert!(idx.report.cut >= 0.0);
+    }
+}

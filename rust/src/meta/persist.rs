@@ -1,0 +1,173 @@
+//! Index persistence: a built [`PyramidIndex`] is written to a directory
+//! that coordinators (meta graph + layout) and executors (one sub-HNSW
+//! each) load at startup — the paper's GraphConstructor -> graph_path
+//! contract (§IV-A).
+//!
+//! Layout:
+//! ```text
+//! <dir>/layout.json      metric, partitions, meta_partition, sub sizes
+//! <dir>/meta.hnsw        the meta-HNSW
+//! <dir>/sub_0007.hnsw    sub-HNSW for partition 7
+//! <dir>/sub_0007.ids     local->global id map (little-endian u32s)
+//! ```
+
+use super::{BuildReport, PyramidIndex, Router};
+use crate::error::{PyramidError, Result};
+use crate::hnsw::Hnsw;
+use crate::metric::Metric;
+use crate::types::VectorId;
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+impl PyramidIndex {
+    /// Write the full index to `dir` (created if missing).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        self.meta.save(&dir.join("meta.hnsw"))?;
+        for (p, (sub, ids)) in self.subs.iter().zip(&self.sub_ids).enumerate() {
+            sub.save(&dir.join(format!("sub_{p:04}.hnsw")))?;
+            let mut f = std::fs::File::create(dir.join(format!("sub_{p:04}.ids")))?;
+            for &id in ids.iter() {
+                f.write_all(&id.to_le_bytes())?;
+            }
+        }
+        let layout = Json::obj(vec![
+            ("metric", Json::str(self.metric.key())),
+            ("partitions", Json::num(self.partitions() as f64)),
+            (
+                "meta_partition",
+                Json::Arr(self.meta_partition.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            (
+                "sub_sizes",
+                Json::Arr(self.report.sub_sizes.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+        ]);
+        std::fs::write(dir.join("layout.json"), layout.pretty())?;
+        Ok(())
+    }
+
+    /// Load a full index from `dir`.
+    pub fn load(dir: &Path) -> Result<PyramidIndex> {
+        let (metric, w, meta_partition) = read_layout(dir)?;
+        let meta = Hnsw::load(&dir.join("meta.hnsw"))?;
+        let mut subs = Vec::with_capacity(w);
+        let mut sub_ids = Vec::with_capacity(w);
+        for p in 0..w {
+            subs.push(Arc::new(Hnsw::load(&dir.join(format!("sub_{p:04}.hnsw")))?));
+            sub_ids.push(Arc::new(read_ids(&dir.join(format!("sub_{p:04}.ids")))?));
+        }
+        let sub_sizes = sub_ids.iter().map(|v| v.len()).collect();
+        Ok(PyramidIndex {
+            metric,
+            meta,
+            meta_partition,
+            subs,
+            sub_ids,
+            config: crate::config::IndexConfig { partitions: w, ..Default::default() },
+            report: BuildReport { sub_sizes, ..Default::default() },
+        })
+    }
+
+    /// Load only the coordinator view (meta graph + partition map) —
+    /// what the paper broadcasts to coordinators.
+    pub fn load_router(dir: &Path) -> Result<Router> {
+        let (_, w, meta_partition) = read_layout(dir)?;
+        let meta = Hnsw::load(&dir.join("meta.hnsw"))?;
+        Ok(Router::new(Arc::new(meta), Arc::new(meta_partition), w))
+    }
+
+    /// Load one executor's sub-HNSW + id map.
+    pub fn load_partition(dir: &Path, p: usize) -> Result<(Arc<Hnsw>, Arc<Vec<VectorId>>)> {
+        let sub = Hnsw::load(&dir.join(format!("sub_{p:04}.hnsw")))?;
+        let ids = read_ids(&dir.join(format!("sub_{p:04}.ids")))?;
+        Ok((Arc::new(sub), Arc::new(ids)))
+    }
+}
+
+fn read_layout(dir: &Path) -> Result<(Metric, usize, Vec<u32>)> {
+    let text = std::fs::read_to_string(dir.join("layout.json"))?;
+    let j = Json::parse(&text).map_err(PyramidError::Serde)?;
+    let metric: Metric = j
+        .get("metric")
+        .and_then(Json::as_str)
+        .ok_or_else(|| PyramidError::Index("layout: metric missing".into()))?
+        .parse()
+        .map_err(PyramidError::Index)?;
+    let w = j
+        .get("partitions")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| PyramidError::Index("layout: partitions missing".into()))?;
+    let meta_partition: Vec<u32> = j
+        .get("meta_partition")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| PyramidError::Index("layout: meta_partition missing".into()))?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as u32)
+        .collect();
+    Ok((metric, w, meta_partition))
+}
+
+fn read_ids(path: &Path) -> Result<Vec<VectorId>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, QueryParams};
+    use crate::dataset::SyntheticSpec;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn save_load_roundtrip_preserves_results() {
+        let spec = SyntheticSpec::deep_like(3_000, 16, 13);
+        let data = spec.generate();
+        let queries = spec.queries(10);
+        let cfg = IndexConfig { sample: 800, meta_size: 32, partitions: 4, ..Default::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+        let dir = TempDir::new("idx").unwrap();
+        idx.save(dir.path()).unwrap();
+        let loaded = PyramidIndex::load(dir.path()).unwrap();
+        assert_eq!(loaded.partitions(), 4);
+        assert_eq!(loaded.meta_partition, idx.meta_partition);
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            assert_eq!(
+                idx.search(q, &QueryParams::default()),
+                loaded.search(q, &QueryParams::default())
+            );
+        }
+    }
+
+    #[test]
+    fn router_and_partition_views_load() {
+        let spec = SyntheticSpec::deep_like(2_000, 16, 17);
+        let data = spec.generate();
+        let cfg = IndexConfig { sample: 500, meta_size: 16, partitions: 4, ..Default::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+        let dir = TempDir::new("idx2").unwrap();
+        idx.save(dir.path()).unwrap();
+
+        let router = PyramidIndex::load_router(dir.path()).unwrap();
+        let q = data.get(5);
+        assert_eq!(router.route(q, 2, 50), idx.route(q, 2, 50));
+
+        let (sub, ids) = PyramidIndex::load_partition(dir.path(), 1).unwrap();
+        assert_eq!(sub.len(), ids.len());
+        assert_eq!(ids.as_slice(), idx.sub_ids[1].as_slice());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(PyramidIndex::load(Path::new("/nonexistent/pyramid")).is_err());
+    }
+}

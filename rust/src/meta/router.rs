@@ -1,0 +1,134 @@
+//! The coordinator-side routing view: meta-HNSW + partition map only.
+//!
+//! Per the paper (§IV-A), every coordinator holds a replica of the *meta*
+//! index but none of the sub-HNSWs; this type is that replica. It is cheap
+//! to clone (Arc-shared) so many coordinator threads can route
+//! concurrently.
+
+use crate::hnsw::Hnsw;
+use crate::metric::Metric;
+use crate::types::{Neighbor, PartitionId};
+use std::sync::Arc;
+
+/// Shareable query router (meta-HNSW search + partition lookup).
+///
+/// The broadcast variant (no meta graph) routes every query to every
+/// partition — the HNSW-naive and FLANN baselines' behaviour.
+#[derive(Clone)]
+pub struct Router {
+    meta: Option<Arc<Hnsw>>,
+    partition: Arc<Vec<u32>>,
+    metric: Metric,
+    partitions: usize,
+}
+
+impl Router {
+    pub fn new(meta: Arc<Hnsw>, partition: Arc<Vec<u32>>, partitions: usize) -> Self {
+        let metric = meta.metric();
+        Router { meta: Some(meta), partition, metric, partitions }
+    }
+
+    /// A router that sends every query to all `partitions` (baselines).
+    pub fn broadcast(partitions: usize, metric: Metric) -> Self {
+        Router { meta: None, partition: Arc::new(Vec::new()), metric, partitions }
+    }
+
+    /// Build a router from a built index (shares the meta graph).
+    pub fn from_index(idx: &super::PyramidIndex) -> Router {
+        // Clone the meta HNSW once into an Arc; routing never mutates it.
+        let meta = Arc::new(clone_hnsw(&idx.meta));
+        Router::new(meta, Arc::new(idx.meta_partition.clone()), idx.partitions())
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Normalize the query if the metric requires it, returning a cow-ish
+    /// owned copy only when needed.
+    pub fn prepare_query<'a>(&self, query: &'a [f32]) -> std::borrow::Cow<'a, [f32]> {
+        if self.metric.normalizes_items() {
+            let mut q = query.to_vec();
+            crate::metric::normalize_in_place(&mut q);
+            std::borrow::Cow::Owned(q)
+        } else {
+            std::borrow::Cow::Borrowed(query)
+        }
+    }
+
+    /// Algorithm 4 lines 4-6: top-`branch` meta neighbors -> partition set.
+    /// Broadcast routers return every partition.
+    pub fn route(&self, query: &[f32], branch: usize, meta_ef: usize) -> Vec<PartitionId> {
+        let Some(meta) = &self.meta else {
+            return (0..self.partitions as PartitionId).collect();
+        };
+        let hits: Vec<Neighbor> = meta.search(query, branch.max(1), meta_ef.max(branch));
+        let mut parts: Vec<PartitionId> =
+            hits.iter().map(|h| self.partition[h.id as usize] as PartitionId).collect();
+        parts.sort_unstable();
+        parts.dedup();
+        parts
+    }
+}
+
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Router")
+            .field("meta_size", &self.meta.as_ref().map(|m| m.len()).unwrap_or(0))
+            .field("partitions", &self.partitions)
+            .finish()
+    }
+}
+
+/// Deep-clone an HNSW via its (de)serializer — used to detach the router's
+/// meta replica from the index that built it, mirroring the paper's
+/// broadcast of the meta-HNSW to all coordinators.
+pub(crate) fn clone_hnsw(h: &Hnsw) -> Hnsw {
+    let mut buf = Vec::new();
+    h.save_to(&mut buf).expect("serialize to memory");
+    Hnsw::load_from(&mut buf.as_slice()).expect("deserialize from memory")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexConfig;
+    use crate::dataset::SyntheticSpec;
+    use crate::meta::PyramidIndex;
+
+    #[test]
+    fn router_matches_index_routing() {
+        let spec = SyntheticSpec::deep_like(4_000, 16, 3);
+        let data = spec.generate();
+        let queries = spec.queries(20);
+        let cfg = IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
+        let idx = PyramidIndex::build(&data, crate::metric::Metric::L2, &cfg).unwrap();
+        let router = Router::from_index(&idx);
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            assert_eq!(router.route(q, 3, 100), idx.route(q, 3, 100));
+        }
+        assert_eq!(router.partitions(), 4);
+    }
+
+    #[test]
+    fn prepare_query_normalizes_only_for_angular() {
+        let spec = SyntheticSpec::deep_like(2_000, 16, 4);
+        let data = spec.generate();
+        let cfg = IndexConfig { sample: 500, meta_size: 16, partitions: 2, ..Default::default() };
+        let idx = PyramidIndex::build(&data, crate::metric::Metric::Angular, &cfg).unwrap();
+        let router = Router::from_index(&idx);
+        let q = vec![3.0f32; 16];
+        let prepared = router.prepare_query(&q);
+        assert!((crate::metric::norm(&prepared) - 1.0).abs() < 1e-5);
+
+        let idx2 = PyramidIndex::build(&data, crate::metric::Metric::L2, &cfg).unwrap();
+        let router2 = Router::from_index(&idx2);
+        let prepared2 = router2.prepare_query(&q);
+        assert_eq!(&*prepared2, &q[..]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Multilevel coarsening via heavy-edge matching (HEM).
+//!
+//! Each level matches every vertex with its heaviest-edge unmatched
+//! neighbor and contracts the pairs; vertex weights add, parallel edges
+//! merge. Coarsening stops at `target` vertices or when a level shrinks by
+//! less than 10% (diminishing returns).
+
+use super::CsrGraph;
+use crate::util::rng::Rng;
+
+/// One coarsening level: the coarse graph plus the fine->coarse map.
+pub(crate) struct Level {
+    /// Coarse graph produced at this level.
+    pub graph: CsrGraph,
+    /// `map[fine_vertex] = coarse_vertex`.
+    pub map: Vec<u32>,
+    /// The finer graph this level was built from (None at the first level —
+    /// that's the caller's original graph).
+    pub finer: Option<CsrGraph>,
+}
+
+/// Project a coarse partition vector back onto the finer graph.
+pub(crate) fn project(map: &[u32], coarse_part: &[u32]) -> Vec<u32> {
+    map.iter().map(|&c| coarse_part[c as usize]).collect()
+}
+
+/// Heavy-edge matching: returns fine->coarse map and coarse vertex count.
+fn hem_match(g: &CsrGraph, rng: &mut Rng) -> (Vec<u32>, usize) {
+    let n = g.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate: Vec<Option<u32>> = vec![None; n];
+    for &u in &order {
+        let u = u as usize;
+        if mate[u].is_some() {
+            continue;
+        }
+        // Heaviest unmatched neighbor.
+        let mut best: Option<(u32, f64)> = None;
+        for (v, w) in g.neighbors(u) {
+            if mate[v as usize].is_none() && v as usize != u {
+                if best.map(|b| w > b.1).unwrap_or(true) {
+                    best = Some((v, w));
+                }
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                mate[u] = Some(v);
+                mate[v as usize] = Some(u as u32);
+            }
+            None => mate[u] = Some(u as u32), // matched with itself
+        }
+    }
+    // Assign coarse ids.
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for u in 0..n {
+        if map[u] != u32::MAX {
+            continue;
+        }
+        let m = mate[u].unwrap_or(u as u32) as usize;
+        map[u] = next;
+        map[m] = next;
+        next += 1;
+    }
+    (map, next as usize)
+}
+
+/// Contract `g` along `map` into a coarse graph with `nc` vertices.
+fn contract(g: &CsrGraph, map: &[u32], nc: usize) -> CsrGraph {
+    let mut vwgt = vec![0f64; nc];
+    for (u, &c) in map.iter().enumerate() {
+        vwgt[c as usize] += g.vwgt[u];
+    }
+    let mut edge_maps: Vec<std::collections::HashMap<u32, f64>> =
+        vec![std::collections::HashMap::new(); nc];
+    for u in 0..g.n() {
+        let cu = map[u];
+        for (v, w) in g.neighbors(u) {
+            let cv = map[v as usize];
+            if cu == cv {
+                continue;
+            }
+            *edge_maps[cu as usize].entry(cv).or_insert(0.0) += w;
+        }
+    }
+    let mut xadj = vec![0usize];
+    let mut adjncy = Vec::new();
+    let mut adjwgt = Vec::new();
+    for m in &edge_maps {
+        let mut es: Vec<(u32, f64)> = m.iter().map(|(&v, &w)| (v, w)).collect();
+        es.sort_unstable_by_key(|e| e.0);
+        for (v, w) in es {
+            adjncy.push(v);
+            // Each undirected edge visited from both endpoints => halve.
+            adjwgt.push(w / 2.0 * 2.0); // weight already double-counted symmetrically
+        }
+        xadj.push(adjncy.len());
+    }
+    // NOTE: weights collected from both directions stay symmetric; the
+    // `cut` accounting only counts u<v so no correction needed.
+    CsrGraph { xadj, adjncy, adjwgt, vwgt }
+}
+
+/// Build the coarsening hierarchy down to ~`target` vertices.
+pub(crate) fn coarsen(g: &CsrGraph, target: usize, seed: u64) -> Vec<Level> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xC0A2);
+    let mut levels: Vec<Level> = Vec::new();
+    let mut cur = g.clone();
+    while cur.n() > target {
+        let (map, nc) = hem_match(&cur, &mut rng);
+        if (nc as f64) > cur.n() as f64 * 0.9 {
+            break; // stalled
+        }
+        let coarse = contract(&cur, &map, nc);
+        let finer = if levels.is_empty() { None } else { Some(cur.clone()) };
+        levels.push(Level { graph: coarse.clone(), map, finer });
+        cur = coarse;
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let mut lists = vec![Vec::new(); n];
+        for u in 0..n - 1 {
+            lists[u].push((u + 1) as u32);
+        }
+        CsrGraph::from_directed(&lists, vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn matching_halves_path() {
+        let g = path_graph(64);
+        let mut rng = Rng::seed_from_u64(1);
+        let (map, nc) = hem_match(&g, &mut rng);
+        assert!(nc <= 48, "matching too weak: {nc}");
+        assert!(map.iter().all(|&c| (c as usize) < nc));
+    }
+
+    #[test]
+    fn contraction_preserves_total_vwgt() {
+        let g = path_graph(50);
+        let mut rng = Rng::seed_from_u64(2);
+        let (map, nc) = hem_match(&g, &mut rng);
+        let c = contract(&g, &map, nc);
+        assert!((c.total_vwgt() - g.total_vwgt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hierarchy_reaches_target() {
+        let g = path_graph(500);
+        let levels = coarsen(&g, 40, 7);
+        assert!(!levels.is_empty());
+        assert!(levels.last().unwrap().graph.n() <= 80);
+    }
+
+    #[test]
+    fn project_roundtrip() {
+        let map = vec![0, 0, 1, 1, 2];
+        let coarse = vec![5, 9, 5];
+        assert_eq!(project(&map, &coarse), vec![5, 5, 9, 9, 5]);
+    }
+}

@@ -1,0 +1,320 @@
+//! Balanced min-cut graph partitioning (Algorithm 3 line 6).
+//!
+//! The paper uses KaFFPa [34]; this is a self-contained multilevel
+//! partitioner in the same family: heavy-edge-matching **coarsening**,
+//! greedy region-growing **initial partition**, and Fiduccia–Mattheyses
+//! style **refinement** during uncoarsening. Objective: minimize cut edge
+//! weight subject to every part's vertex weight staying within
+//! `(1 + epsilon) * total / w` — the paper's "similar total vertex
+//! weights" constraint that load-balances the sub-datasets.
+
+mod coarsen;
+mod refine;
+
+use crate::error::{PyramidError, Result};
+
+/// Undirected weighted graph in CSR form.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    pub xadj: Vec<usize>,
+    pub adjncy: Vec<u32>,
+    pub adjwgt: Vec<f64>,
+    pub vwgt: Vec<f64>,
+}
+
+impl CsrGraph {
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    pub fn total_vwgt(&self) -> f64 {
+        self.vwgt.iter().sum()
+    }
+
+    pub fn neighbors(&self, u: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        (self.xadj[u]..self.xadj[u + 1]).map(move |e| (self.adjncy[e], self.adjwgt[e]))
+    }
+
+    /// Build a symmetric CSR graph from directed adjacency lists, merging
+    /// parallel edges (duplicate u->v and the reverse v->u both contribute
+    /// weight). Self-loops are dropped.
+    pub fn from_directed(lists: &[Vec<u32>], vwgt: Vec<f64>) -> Result<Self> {
+        let n = lists.len();
+        if vwgt.len() != n {
+            return Err(PyramidError::Partition("vwgt length mismatch".into()));
+        }
+        // Collect symmetrized edges with weights merged via a map per node.
+        let mut maps: Vec<std::collections::HashMap<u32, f64>> =
+            vec![std::collections::HashMap::new(); n];
+        for (u, list) in lists.iter().enumerate() {
+            for &v in list {
+                if v as usize == u || v as usize >= n {
+                    continue;
+                }
+                *maps[u].entry(v).or_insert(0.0) += 1.0;
+                *maps[v as usize].entry(u as u32).or_insert(0.0) += 1.0;
+            }
+        }
+        let mut xadj = Vec::with_capacity(n + 1);
+        let mut adjncy = Vec::new();
+        let mut adjwgt = Vec::new();
+        xadj.push(0);
+        for m in &maps {
+            let mut es: Vec<(u32, f64)> = m.iter().map(|(&v, &w)| (v, w)).collect();
+            es.sort_unstable_by_key(|e| e.0);
+            for (v, w) in es {
+                adjncy.push(v);
+                adjwgt.push(w);
+            }
+            xadj.push(adjncy.len());
+        }
+        Ok(CsrGraph { xadj, adjncy, adjwgt, vwgt })
+    }
+
+    /// Total weight of edges crossing partitions (each undirected edge
+    /// counted once).
+    pub fn cut(&self, part: &[u32]) -> f64 {
+        let mut cut = 0.0;
+        for u in 0..self.n() {
+            for (v, w) in self.neighbors(u) {
+                if (v as usize) > u && part[u] != part[v as usize] {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+}
+
+/// Partitioner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionParams {
+    /// Number of parts `w`.
+    pub parts: usize,
+    /// Allowed imbalance: max part weight <= (1 + epsilon) * total / parts.
+    pub epsilon: f64,
+    /// Stop coarsening when the graph is this small (per part).
+    pub coarsen_until_per_part: usize,
+    /// FM refinement passes per uncoarsening level.
+    pub refine_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for PartitionParams {
+    fn default() -> Self {
+        PartitionParams {
+            parts: 10,
+            epsilon: 0.05,
+            coarsen_until_per_part: 30,
+            refine_passes: 6,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a partitioning run.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    /// Part id per vertex.
+    pub part: Vec<u32>,
+    /// Cut edge weight.
+    pub cut: f64,
+    /// Per-part vertex weight totals.
+    pub part_weights: Vec<f64>,
+}
+
+impl Partitioning {
+    /// Max part weight divided by ideal weight (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let total: f64 = self.part_weights.iter().sum();
+        let ideal = total / self.part_weights.len() as f64;
+        self.part_weights.iter().cloned().fold(0.0, f64::max) / ideal.max(1e-12)
+    }
+}
+
+/// Partition `g` into `params.parts` balanced parts minimizing cut.
+pub fn partition(g: &CsrGraph, params: &PartitionParams) -> Result<Partitioning> {
+    let w = params.parts;
+    if w == 0 {
+        return Err(PyramidError::Partition("parts must be >= 1".into()));
+    }
+    if w == 1 {
+        let part = vec![0u32; g.n()];
+        return Ok(Partitioning { part_weights: vec![g.total_vwgt()], cut: 0.0, part });
+    }
+    if g.n() < w {
+        return Err(PyramidError::Partition(format!(
+            "cannot split {} vertices into {w} parts",
+            g.n()
+        )));
+    }
+
+    // 1. Coarsen.
+    let target = (w * params.coarsen_until_per_part).max(2 * w);
+    let hierarchy = coarsen::coarsen(g, target, params.seed);
+    let coarsest = hierarchy.last().map(|l| &l.graph).unwrap_or(g);
+
+    // 2. Initial partition on the coarsest graph.
+    let mut part = refine::greedy_grow(coarsest, params);
+    refine::fm_refine(coarsest, &mut part, params);
+
+    // 3. Uncoarsen with refinement at every level.
+    for level in hierarchy.iter().rev() {
+        part = coarsen::project(&level.map, &part);
+        let finer = level.finer.as_ref().unwrap_or(g);
+        refine::fm_refine(finer, &mut part, params);
+    }
+
+    let mut part_weights = vec![0f64; w];
+    for (u, &p) in part.iter().enumerate() {
+        part_weights[p as usize] += g.vwgt[u];
+    }
+    let cut = g.cut(&part);
+    Ok(Partitioning { part, cut, part_weights })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two dense cliques joined by a single bridge edge.
+    fn two_cliques(sz: usize) -> CsrGraph {
+        let n = 2 * sz;
+        let mut lists = vec![Vec::new(); n];
+        for a in 0..2 {
+            for i in 0..sz {
+                for j in (i + 1)..sz {
+                    lists[a * sz + i].push((a * sz + j) as u32);
+                }
+            }
+        }
+        lists[0].push(sz as u32); // bridge
+        CsrGraph::from_directed(&lists, vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn csr_symmetrizes_and_merges() {
+        let lists = vec![vec![1, 1], vec![0], vec![]];
+        let g = CsrGraph::from_directed(&lists, vec![1.0; 3]).unwrap();
+        // Edge 0-1 has merged weight 3 (two directed 0->1 plus one 1->0).
+        let e: Vec<(u32, f64)> = g.neighbors(0).collect();
+        assert_eq!(e, vec![(1, 3.0)]);
+        let e1: Vec<(u32, f64)> = g.neighbors(1).collect();
+        assert_eq!(e1, vec![(0, 3.0)]);
+        assert!(g.neighbors(2).next().is_none());
+    }
+
+    #[test]
+    fn two_cliques_split_on_bridge() {
+        let g = two_cliques(20);
+        let p = partition(&g, &PartitionParams { parts: 2, ..Default::default() }).unwrap();
+        assert_eq!(p.cut, 1.0, "should cut exactly the bridge, got {}", p.cut);
+        // Each clique wholly in one part.
+        for i in 1..20 {
+            assert_eq!(p.part[i], p.part[0]);
+            assert_eq!(p.part[20 + i], p.part[20]);
+        }
+        assert_ne!(p.part[0], p.part[20]);
+    }
+
+    #[test]
+    fn balance_respected_on_random_graph() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(3);
+        let n = 400;
+        let mut lists = vec![Vec::new(); n];
+        for u in 0..n {
+            for _ in 0..6 {
+                let v = rng.below(n) as u32;
+                lists[u].push(v);
+            }
+        }
+        let g = CsrGraph::from_directed(&lists, vec![1.0; n]).unwrap();
+        let params = PartitionParams { parts: 8, epsilon: 0.05, ..Default::default() };
+        let p = partition(&g, &params).unwrap();
+        assert!(p.imbalance() <= 1.0 + params.epsilon + 1e-6, "imbalance {}", p.imbalance());
+        assert_eq!(p.part.iter().map(|&x| x as usize).max().unwrap(), 7);
+    }
+
+    #[test]
+    fn weighted_vertices_balance_by_weight() {
+        // Vertex 0 is huge; it must sit alone-ish.
+        let n = 10;
+        let mut lists = vec![Vec::new(); n];
+        for u in 0..n - 1 {
+            lists[u].push((u + 1) as u32); // path graph
+        }
+        let mut vwgt = vec![1.0; n];
+        vwgt[0] = 9.0; // total = 18, ideal per part (w=2) = 9
+        let g = CsrGraph::from_directed(&lists, vwgt).unwrap();
+        let p = partition(&g, &PartitionParams { parts: 2, epsilon: 0.05, ..Default::default() }).unwrap();
+        assert!(p.imbalance() <= 1.06, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn single_part_trivial() {
+        let g = two_cliques(5);
+        let p = partition(&g, &PartitionParams { parts: 1, ..Default::default() }).unwrap();
+        assert_eq!(p.cut, 0.0);
+        assert!(p.part.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn more_parts_than_vertices_rejected() {
+        let g = two_cliques(2);
+        assert!(partition(&g, &PartitionParams { parts: 100, ..Default::default() }).is_err());
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    /// Invariants: every vertex assigned to a valid part, cut never exceeds
+    /// total edge weight, part-weight report is consistent, balance holds
+    /// within epsilon plus heavy-vertex slack.
+    #[test]
+    fn partition_invariants() {
+        check(24, |g| {
+            let n = g.usize_in(40, 160);
+            let deg = g.usize_in(2, 6);
+            let parts = g.usize_in(2, 6);
+            let seed = g.rng.next_u64() % 1000;
+            let mut lists = vec![Vec::new(); n];
+            // Ring + random chords: connected, irregular.
+            for u in 0..n {
+                lists[u].push(((u + 1) % n) as u32);
+                for _ in 0..deg {
+                    let v = g.rng.below(n) as u32;
+                    lists[u].push(v);
+                }
+            }
+            let graph = CsrGraph::from_directed(&lists, vec![1.0; n]).unwrap();
+            let params = PartitionParams { parts, seed, ..Default::default() };
+            let p = partition(&graph, &params).map_err(|e| e.to_string())?;
+            if p.part.len() != n {
+                return Err("part length".into());
+            }
+            if !p.part.iter().all(|&x| (x as usize) < parts) {
+                return Err("part id out of range".into());
+            }
+            let total_edge: f64 = graph.adjwgt.iter().sum::<f64>() / 2.0;
+            if p.cut > total_edge + 1e-9 {
+                return Err(format!("cut {} > total {}", p.cut, total_edge));
+            }
+            let mut w = vec![0f64; parts];
+            for (u, &pt) in p.part.iter().enumerate() {
+                w[pt as usize] += graph.vwgt[u];
+            }
+            for (a, b) in w.iter().zip(&p.part_weights) {
+                if (a - b).abs() > 1e-9 {
+                    return Err("part_weights inconsistent".into());
+                }
+            }
+            if p.imbalance() > 1.0 + params.epsilon + 0.35 {
+                return Err(format!("imbalance {}", p.imbalance()));
+            }
+            Ok(())
+        });
+    }
+}

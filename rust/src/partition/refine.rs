@@ -1,0 +1,229 @@
+//! Initial partitioning (greedy region growing) and FM-style refinement.
+
+use super::{CsrGraph, PartitionParams};
+use crate::util::rng::Rng;
+
+/// Greedy graph growing: seed `w` regions at spread-out vertices and grow
+/// each by absorbing the frontier vertex with the highest connectivity to
+/// the region, respecting the balance cap. Unreached vertices (disconnected
+/// graphs) are swept into the lightest part.
+pub(crate) fn greedy_grow(g: &CsrGraph, params: &PartitionParams) -> Vec<u32> {
+    let n = g.n();
+    let w = params.parts;
+    let total = g.total_vwgt();
+    let cap = (1.0 + params.epsilon) * total / w as f64;
+    let mut rng = Rng::seed_from_u64(params.seed ^ 0x6E0);
+
+    let mut part = vec![u32::MAX; n];
+    let mut weights = vec![0f64; w];
+
+    // Seeds: BFS-farthest heuristic — take a random vertex, then repeatedly
+    // the vertex farthest (in hops) from all current seeds.
+    let mut seeds = Vec::with_capacity(w);
+    let first = rng.below(n) as u32;
+    seeds.push(first);
+    let mut dist = vec![usize::MAX; n];
+    let bfs = |from: u32, dist: &mut Vec<usize>| {
+        let mut q = std::collections::VecDeque::new();
+        dist[from as usize] = 0;
+        q.push_back(from);
+        while let Some(u) = q.pop_front() {
+            let du = dist[u as usize];
+            for (v, _) in g.neighbors(u as usize) {
+                if dist[v as usize] > du + 1 {
+                    dist[v as usize] = du + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+    };
+    bfs(first, &mut dist);
+    for _ in 1..w {
+        let far = (0..n)
+            .filter(|&u| !seeds.contains(&(u as u32)))
+            .max_by_key(|&u| if dist[u] == usize::MAX { n + 1 } else { dist[u] })
+            .unwrap_or(0) as u32;
+        seeds.push(far);
+        bfs(far, &mut dist);
+    }
+
+    // Grow regions round-robin from a per-part frontier heap keyed by
+    // connectivity gain.
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq)]
+    struct Cand(f64, u32);
+    impl Eq for Cand {}
+    impl PartialOrd for Cand {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Cand {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
+        }
+    }
+
+    let mut heaps: Vec<BinaryHeap<Cand>> = (0..w).map(|_| BinaryHeap::new()).collect();
+    for (p, &s) in seeds.iter().enumerate() {
+        part[s as usize] = p as u32;
+        weights[p] += g.vwgt[s as usize];
+        for (v, ew) in g.neighbors(s as usize) {
+            heaps[p].push(Cand(ew, v));
+        }
+    }
+    let mut assigned = w;
+    while assigned < n {
+        let mut progressed = false;
+        // Lightest part grows first to keep balance tight.
+        let mut order: Vec<usize> = (0..w).collect();
+        order.sort_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap());
+        for &p in &order {
+            if weights[p] >= cap {
+                continue;
+            }
+            while let Some(Cand(_, v)) = heaps[p].pop() {
+                if part[v as usize] != u32::MAX {
+                    continue;
+                }
+                part[v as usize] = p as u32;
+                weights[p] += g.vwgt[v as usize];
+                assigned += 1;
+                for (nv, ew) in g.neighbors(v as usize) {
+                    if part[nv as usize] == u32::MAX {
+                        heaps[p].push(Cand(ew, nv));
+                    }
+                }
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            // Disconnected leftovers: sweep into lightest parts.
+            for u in 0..n {
+                if part[u] == u32::MAX {
+                    let p = (0..w)
+                        .min_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+                        .unwrap();
+                    part[u] = p as u32;
+                    weights[p] += g.vwgt[u];
+                    assigned += 1;
+                }
+            }
+        }
+    }
+    part
+}
+
+/// FM-style refinement: repeated passes over boundary vertices, moving each
+/// to the neighboring part with the best cut gain if the balance constraint
+/// allows it. Greedy (no tentative-move buckets) but with positive-gain and
+/// balance-improving moves only, which converges fast and never worsens the
+/// cut.
+pub(crate) fn fm_refine(g: &CsrGraph, part: &mut [u32], params: &PartitionParams) {
+    let n = g.n();
+    let w = params.parts;
+    let total = g.total_vwgt();
+    let cap = (1.0 + params.epsilon) * total / w as f64;
+    let mut weights = vec![0f64; w];
+    for (u, &p) in part.iter().enumerate() {
+        weights[p as usize] += g.vwgt[u];
+    }
+
+    let mut conn = vec![0f64; w]; // scratch: connectivity of u to each part
+    for _pass in 0..params.refine_passes {
+        let mut moved = 0usize;
+        for u in 0..n {
+            let pu = part[u] as usize;
+            // Connectivity to each part.
+            let mut touched: Vec<usize> = Vec::with_capacity(8);
+            for (v, ew) in g.neighbors(u) {
+                let pv = part[v as usize] as usize;
+                if conn[pv] == 0.0 {
+                    touched.push(pv);
+                }
+                conn[pv] += ew;
+            }
+            let internal = conn[pu];
+            // Best target: max gain = conn[target] - internal, balance ok.
+            let mut best: Option<(usize, f64)> = None;
+            for &t in &touched {
+                if t == pu {
+                    continue;
+                }
+                let gain = conn[t] - internal;
+                let fits = weights[t] + g.vwgt[u] <= cap;
+                // Accept strict gains, or zero-gain moves that improve
+                // balance (helps escape plateaus).
+                let improves_balance = weights[t] + g.vwgt[u] < weights[pu];
+                if fits && (gain > 1e-12 || (gain >= -1e-12 && improves_balance))
+                    && best.map(|b| gain > b.1).unwrap_or(true)
+                {
+                    best = Some((t, gain));
+                }
+            }
+            if let Some((t, _)) = best {
+                weights[pu] -= g.vwgt[u];
+                weights[t] += g.vwgt[u];
+                part[u] = t as u32;
+                moved += 1;
+            }
+            for &t in &touched {
+                conn[t] = 0.0;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(nx: usize, ny: usize) -> CsrGraph {
+        let n = nx * ny;
+        let mut lists = vec![Vec::new(); n];
+        for y in 0..ny {
+            for x in 0..nx {
+                let u = y * nx + x;
+                if x + 1 < nx {
+                    lists[u].push((u + 1) as u32);
+                }
+                if y + 1 < ny {
+                    lists[u].push((u + nx) as u32);
+                }
+            }
+        }
+        CsrGraph::from_directed(&lists, vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn greedy_grow_covers_all() {
+        let g = grid(10, 10);
+        let params = PartitionParams { parts: 4, ..Default::default() };
+        let part = greedy_grow(&g, &params);
+        assert!(part.iter().all(|&p| p != u32::MAX && (p as usize) < 4));
+    }
+
+    #[test]
+    fn refine_never_worsens_cut() {
+        let g = grid(12, 12);
+        let params = PartitionParams { parts: 4, ..Default::default() };
+        let mut part = greedy_grow(&g, &params);
+        let before = g.cut(&part);
+        fm_refine(&g, &mut part, &params);
+        let after = g.cut(&part);
+        assert!(after <= before + 1e-9, "cut worsened {before} -> {after}");
+    }
+
+    #[test]
+    fn grid_bisection_near_optimal() {
+        // Optimal bisection of a 16x16 grid cuts 16 edges; accept <= 28.
+        let g = grid(16, 16);
+        let params = PartitionParams { parts: 2, ..Default::default() };
+        let p = super::super::partition(&g, &params).unwrap();
+        assert!(p.cut <= 28.0, "grid bisection cut {}", p.cut);
+    }
+}

@@ -1,0 +1,209 @@
+//! The Master + hot-backup protocol (paper §IV-B, Failure Recovery).
+//!
+//! A Master serves only while it holds the `/master` lock. It monitors the
+//! instance paths registered with it; when an instance lock releases (the
+//! instance died), the master invokes the restart callback. The restarted
+//! instance re-locks its path; if the original instance recovered first,
+//! the replacement finds the path locked and exits — both races resolve to
+//! exactly one live instance, mirroring the paper's protocol.
+//!
+//! Hot backups run the same loop: they spin on `/master` until they win it.
+
+use super::{Registry, WatchEvent};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Master tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct MasterConfig {
+    /// How often the master heartbeats its session + scans instances.
+    pub poll: Duration,
+}
+
+impl Default for MasterConfig {
+    fn default() -> Self {
+        MasterConfig { poll: Duration::from_millis(50) }
+    }
+}
+
+/// A master (or hot backup — the role is decided by who wins `/master`).
+pub struct Master {
+    stop: Arc<AtomicBool>,
+    restarts: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    is_leader: Arc<AtomicBool>,
+}
+
+impl Master {
+    /// Spawn a master/backup loop. `instances` are the lock paths to
+    /// monitor; `restart` is invoked with the path whenever a monitored
+    /// lock is observed released while this node is the leader.
+    pub fn spawn<F>(registry: Registry, cfg: MasterConfig, instances: Vec<String>, restart: F) -> Master
+    where
+        F: Fn(&str) + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let restarts = Arc::new(AtomicU64::new(0));
+        let is_leader = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let restarts2 = restarts.clone();
+        let is_leader2 = is_leader.clone();
+        let handle = std::thread::Builder::new()
+            .name("pyramid-master".into())
+            .spawn(move || {
+                let session = registry.session();
+                // Watch instance paths before first scan so no release is
+                // missed between scan and watch registration.
+                let watch_rxs: Vec<_> = instances.iter().map(|p| registry.watch(p)).collect();
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    if !session.heartbeat() {
+                        // Our session expired (e.g. long stall): the lock is
+                        // gone and a backup has taken over; exit.
+                        is_leader2.store(false, Ordering::Relaxed);
+                        return;
+                    }
+                    // A master serves only while holding /master.
+                    let leading = session.try_lock("/master") || {
+                        // try_lock fails if *anyone* holds it — including us.
+                        // Confirm whether the holder is this session by
+                        // attempting an unlock+relock cycle only when we
+                        // believe we lead.
+                        is_leader2.load(Ordering::Relaxed) && registry.is_locked("/master")
+                    };
+                    is_leader2.store(leading, Ordering::Relaxed);
+                    if leading {
+                        registry.tick();
+                        // Drain watch events; restart released instances.
+                        for (path, rx) in instances.iter().zip(&watch_rxs) {
+                            while let Ok(ev) = rx.try_recv() {
+                                if matches!(ev, WatchEvent::Released(_)) && !registry.is_locked(path) {
+                                    restarts2.fetch_add(1, Ordering::Relaxed);
+                                    restart(path);
+                                }
+                            }
+                        }
+                    }
+                    std::thread::sleep(cfg.poll);
+                }
+            })
+            .expect("spawn master");
+        Master { stop, restarts, handle: Some(handle), is_leader }
+    }
+
+    /// Whether this node currently leads.
+    pub fn is_leader(&self) -> bool {
+        self.is_leader.load(Ordering::Relaxed)
+    }
+
+    /// Restarts issued so far.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Stop the loop and release `/master` (by closing the session).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Master {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::RegistryConfig;
+    use std::sync::mpsc;
+
+    fn registry() -> Registry {
+        Registry::new(RegistryConfig { session_timeout: Duration::from_millis(80) })
+    }
+
+    #[test]
+    fn master_restarts_dead_instance() {
+        let r = registry();
+        let (tx, rx) = mpsc::channel::<String>();
+        let master = Master::spawn(
+            r.clone(),
+            MasterConfig { poll: Duration::from_millis(10) },
+            vec!["/instance/e0".into()],
+            move |p| {
+                let _ = tx.send(p.to_string());
+            },
+        );
+        // Instance comes up, locks, then dies (session dropped).
+        {
+            let s = r.session();
+            assert!(s.try_lock("/instance/e0"));
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // Master must observe the release and call restart.
+        let restarted = rx.recv_timeout(Duration::from_millis(500)).expect("restart callback");
+        assert_eq!(restarted, "/instance/e0");
+        assert!(master.restarts() >= 1);
+        assert!(master.is_leader());
+        master.stop();
+    }
+
+    #[test]
+    fn recovered_instance_beats_replacement() {
+        // If the original recovers and re-locks before the replacement
+        // starts, the replacement must find the path locked and exit —
+        // modeled here by the restart callback checking the lock.
+        // Long session timeout: the test session must not expire while we
+        // wait on the callback channel (that would be a legitimate restart).
+        let r = Registry::new(RegistryConfig { session_timeout: Duration::from_secs(30) });
+        let r2 = r.clone();
+        let (tx, rx) = mpsc::channel::<bool>();
+        let master = Master::spawn(
+            r.clone(),
+            MasterConfig { poll: Duration::from_millis(10) },
+            vec!["/instance/e1".into()],
+            move |p| {
+                // Replacement startup: try to lock; report whether it won.
+                let s = r2.session();
+                let won = s.try_lock(p);
+                let _ = tx.send(won);
+                std::mem::forget(s); // keep the replacement alive if it won
+            },
+        );
+        let s = r.session();
+        assert!(s.try_lock("/instance/e1"));
+        s.unlock("/instance/e1"); // brief outage...
+        assert!(s.try_lock("/instance/e1")); // ...but self-recovered first
+        // Master may or may not have fired in the gap; if it did, the
+        // replacement must have lost the race.
+        if let Ok(won) = rx.recv_timeout(Duration::from_millis(300)) {
+            assert!(!won, "replacement should find the path locked");
+        }
+        master.stop();
+    }
+
+    #[test]
+    fn backup_takes_over_when_leader_dies() {
+        let r = registry();
+        let m1 = Master::spawn(r.clone(), MasterConfig { poll: Duration::from_millis(10) }, vec![], |_| {});
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(m1.is_leader());
+        let m2 = Master::spawn(r.clone(), MasterConfig { poll: Duration::from_millis(10) }, vec![], |_| {});
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!m2.is_leader(), "backup must wait while leader lives");
+        m1.stop(); // leader exits; its session closes, /master releases
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(m2.is_leader(), "backup must take over");
+        m2.stop();
+    }
+}

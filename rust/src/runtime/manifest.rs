@@ -1,0 +1,166 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) — the contract between
+//! `python/compile/aot.py` and the rust runtime.
+
+use crate::error::{PyramidError, Result};
+use crate::metric::Metric;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One artifact entry: function family, metric and static shapes.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// "scores", "rerank" or "kmeans_step".
+    pub family: String,
+    /// "pallas" (L1 kernel, interpret-mode — the TPU-target artifact and
+    /// numerics cross-check) or "jnp" (plain-XLA lowering; the fast CPU
+    /// serving path). Legacy manifests without the field parse as "pallas".
+    pub impl_: String,
+    /// Metric key ("l2" / "ip" / "cos"); empty for kmeans_step.
+    pub metric: String,
+    pub b: usize,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            PyramidError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(PyramidError::Artifact)?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| PyramidError::Artifact("manifest: artifacts missing".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let s = |k: &str| a.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+            let u = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let name = s("name");
+            let file = s("file");
+            if name.is_empty() || file.is_empty() {
+                return Err(PyramidError::Artifact("manifest entry missing name/file".into()));
+            }
+            let impl_ = {
+                let v = s("impl");
+                if v.is_empty() {
+                    "pallas".to_string()
+                } else {
+                    v
+                }
+            };
+            artifacts.push(ArtifactInfo {
+                name,
+                file,
+                family: s("family"),
+                impl_,
+                metric: s("metric"),
+                b: u("b"),
+                n: u("n"),
+                d: u("d"),
+                k: u("k"),
+                m: u("m"),
+            });
+        }
+        Ok(Manifest { fingerprint, artifacts })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest-capacity artifact of `family` (and `metric`, if given)
+    /// whose depth capacity covers `d`. Prefers the "jnp" implementation
+    /// (the fast CPU-PJRT lowering) unless `PYRAMID_FORCE_PALLAS=1` pins
+    /// the interpret-mode Pallas artifact (numerics cross-checks, and the
+    /// artifact that would ship to a real TPU).
+    pub fn find(&self, family: &str, metric: Option<Metric>, d: usize) -> Option<&ArtifactInfo> {
+        self.find_b(family, metric, d, 0)
+    }
+
+    /// [`Self::find`] constrained to batch capacity `b >= min_b`, preferring
+    /// the smallest adequate batch (a B=1 artifact serves single-query
+    /// re-ranks without padded-batch waste).
+    pub fn find_b(&self, family: &str, metric: Option<Metric>, d: usize, min_b: usize) -> Option<&ArtifactInfo> {
+        let force_pallas = std::env::var("PYRAMID_FORCE_PALLAS").map(|v| v == "1").unwrap_or(false);
+        let preferred = if force_pallas { "pallas" } else { "jnp" };
+        self.artifacts
+            .iter()
+            .filter(|a| a.family == family)
+            .filter(|a| metric.map(|m| a.metric == m.key()).unwrap_or(true))
+            .filter(|a| a.d >= d && a.b >= min_b)
+            .min_by_key(|a| (a.impl_ != preferred, a.b, a.d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "f00",
+      "artifacts": [
+        {"name": "scores_l2_x", "file": "a.hlo.txt", "family": "scores", "metric": "l2", "b": 128, "n": 4096, "d": 128},
+        {"name": "scores_l2_big", "file": "b.hlo.txt", "family": "scores", "metric": "l2", "b": 128, "n": 4096, "d": 384},
+        {"name": "rerank_ip_x", "file": "c.hlo.txt", "family": "rerank", "metric": "ip", "b": 128, "n": 512, "d": 128, "k": 128},
+        {"name": "kmeans_x", "file": "d.hlo.txt", "family": "kmeans_step", "n": 4096, "m": 512, "d": 128}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.fingerprint, "f00");
+        assert!(m.by_name("rerank_ip_x").is_some());
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn find_prefers_smallest_covering_depth() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.find("scores", Some(Metric::L2), 96).unwrap().d, 128);
+        assert_eq!(m.find("scores", Some(Metric::L2), 200).unwrap().d, 384);
+        assert!(m.find("scores", Some(Metric::L2), 500).is_none());
+        assert!(m.find("scores", Some(Metric::Ip), 96).is_none());
+        assert_eq!(m.find("kmeans_step", None, 100).unwrap().m, 512);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

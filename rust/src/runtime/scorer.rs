@@ -1,0 +1,329 @@
+//! Batch scorer abstraction: the coordinator's re-rank step can run on the
+//! native SIMD path or through the PJRT-compiled Pallas scorer.
+//!
+//! The `xla` crate's PJRT handles are `!Send` (Rc + raw pointers), so the
+//! engine is confined to a dedicated **scoring service thread**; callers
+//! talk to it through a channel. That matches the deployment shape anyway:
+//! one compiled-executable service per process, shared by all coordinator
+//! threads. [`NativeScorer`] is the in-thread oracle/fallback; the
+//! integration tests assert both backends agree.
+
+use super::Engine;
+use crate::error::{PyramidError, Result};
+use crate::metric::Metric;
+use crate::types::{merge_topk, Neighbor};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Dense scoring backend used by the coordinator and index builder.
+pub trait BatchScorer: Send + Sync {
+    /// Top-k re-rank of `ids.len()` candidate vectors (`cand_vecs` is
+    /// row-major `[ids.len(), d]`) for one query. Returns best-first,
+    /// deduplicated by id.
+    fn rerank(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        cand_vecs: &[f32],
+        ids: &[u32],
+        k: usize,
+    ) -> Result<Vec<Neighbor>>;
+
+    /// Row-major `[bq, nx]` score block for a query batch.
+    fn scores(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        bq: usize,
+        x: &[f32],
+        nx: usize,
+        d: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Human-readable backend name (for logs and EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust scorer (8-lane unrolled kernels from [`crate::metric`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeScorer;
+
+impl BatchScorer for NativeScorer {
+    fn rerank(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        cand_vecs: &[f32],
+        ids: &[u32],
+        k: usize,
+    ) -> Result<Vec<Neighbor>> {
+        let d = query.len();
+        let scored: Vec<Neighbor> = ids
+            .iter()
+            .enumerate()
+            .map(|(j, &id)| Neighbor::new(id, metric.score(query, &cand_vecs[j * d..(j + 1) * d])))
+            .collect();
+        Ok(merge_topk(scored, k))
+    }
+
+    fn scores(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        bq: usize,
+        x: &[f32],
+        nx: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(bq * nx);
+        for r in 0..bq {
+            let qr = &q[r * d..(r + 1) * d];
+            for j in 0..nx {
+                out.push(metric.score(qr, &x[j * d..(j + 1) * d]));
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+enum Request {
+    Rerank {
+        metric: Metric,
+        query: Vec<f32>,
+        cand_vecs: Vec<f32>,
+        ids: Vec<u32>,
+        k: usize,
+        reply: mpsc::Sender<Result<Vec<Neighbor>>>,
+    },
+    Scores {
+        metric: Metric,
+        q: Vec<f32>,
+        bq: usize,
+        x: Vec<f32>,
+        nx: usize,
+        d: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    KmeansStep {
+        points: Vec<f32>,
+        npts: usize,
+        centers: Vec<f32>,
+        m: usize,
+        weights: Vec<f32>,
+        d: usize,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// PJRT-backed scorer: a service thread owning the [`Engine`], fronted by
+/// a channel. Cloning shares the same service.
+pub struct PjrtScorer {
+    tx: Mutex<mpsc::Sender<Request>>,
+}
+
+impl PjrtScorer {
+    /// Spawn the service thread over an artifacts directory. Fails fast if
+    /// the manifest cannot be loaded or the PJRT client cannot start.
+    pub fn spawn(dir: PathBuf) -> Result<PjrtScorer> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-scorer".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Rerank { metric, query, cand_vecs, ids, k, reply } => {
+                            let _ = reply.send(rerank_chunked(&engine, metric, &query, &cand_vecs, &ids, k));
+                        }
+                        Request::Scores { metric, q, bq, x, nx, d, reply } => {
+                            let _ = reply.send(engine.scores(metric, &q, bq, &x, nx, d));
+                        }
+                        Request::KmeansStep { points, npts, centers, m, weights, d, reply } => {
+                            let _ = reply.send(engine.kmeans_step(&points, npts, &centers, m, &weights, d));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| PyramidError::Runtime(format!("spawn scorer thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| PyramidError::Runtime("scorer thread died during startup".into()))??;
+        Ok(PjrtScorer { tx: Mutex::new(tx) })
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| PyramidError::Runtime("scorer service stopped".into()))
+    }
+
+    /// Weighted Lloyd partial step through the service (see
+    /// [`Engine::kmeans_step`]).
+    pub fn kmeans_step(
+        &self,
+        points: &[f32],
+        npts: usize,
+        centers: &[f32],
+        m: usize,
+        weights: &[f32],
+        d: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::KmeansStep {
+            points: points.to_vec(),
+            npts,
+            centers: centers.to_vec(),
+            m,
+            weights: weights.to_vec(),
+            d,
+            reply,
+        })?;
+        rx.recv().map_err(|_| PyramidError::Runtime("scorer service dropped reply".into()))?
+    }
+}
+
+impl Drop for PjrtScorer {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+    }
+}
+
+/// Chunk candidate sets larger than the artifact block and merge partials.
+fn rerank_chunked(
+    engine: &Engine,
+    metric: Metric,
+    query: &[f32],
+    cand_vecs: &[f32],
+    ids: &[u32],
+    k: usize,
+) -> Result<Vec<Neighbor>> {
+    let d = query.len();
+    let (_, cap_n) = engine
+        .rerank_capacity(metric, d)
+        .ok_or_else(|| PyramidError::Artifact(format!("no rerank artifact for d={d}")))?;
+    let mut partials: Vec<Neighbor> = Vec::new();
+    let mut start = 0usize;
+    while start < ids.len() {
+        let end = (start + cap_n).min(ids.len());
+        let rows = engine.rerank_topk(
+            metric,
+            query,
+            1,
+            &cand_vecs[start * d..end * d],
+            &ids[start..end],
+            d,
+            k,
+        )?;
+        partials.extend(rows.into_iter().flatten());
+        start = end;
+    }
+    Ok(merge_topk(partials, k))
+}
+
+impl BatchScorer for PjrtScorer {
+    fn rerank(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        cand_vecs: &[f32],
+        ids: &[u32],
+        k: usize,
+    ) -> Result<Vec<Neighbor>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Rerank {
+            metric,
+            query: query.to_vec(),
+            cand_vecs: cand_vecs.to_vec(),
+            ids: ids.to_vec(),
+            k,
+            reply,
+        })?;
+        rx.recv().map_err(|_| PyramidError::Runtime("scorer service dropped reply".into()))?
+    }
+
+    fn scores(
+        &self,
+        metric: Metric,
+        q: &[f32],
+        bq: usize,
+        x: &[f32],
+        nx: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Scores {
+            metric,
+            q: q.to_vec(),
+            bq,
+            x: x.to_vec(),
+            nx,
+            d,
+            reply,
+        })?;
+        rx.recv().map_err(|_| PyramidError::Runtime("scorer service dropped reply".into()))?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl std::fmt::Debug for PjrtScorer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PjrtScorer(service)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_rerank_orders_and_dedups() {
+        let query = [1.0, 0.0, 0.0, 0.0];
+        // Three candidates with descending inner products, one duplicated id.
+        let cands = [
+            3.0, 0.0, 0.0, 0.0, // id 7 -> 3.0
+            1.0, 0.0, 0.0, 0.0, // id 8 -> 1.0
+            2.0, 0.0, 0.0, 0.0, // id 7 dup -> 2.0
+        ];
+        let ids = [7u32, 8, 7];
+        let out = NativeScorer.rerank(Metric::Ip, &query, &cands, &ids, 3).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], Neighbor::new(7, 3.0));
+        assert_eq!(out[1], Neighbor::new(8, 1.0));
+    }
+
+    #[test]
+    fn native_scores_shape() {
+        let q = [1.0f32, 2.0, 3.0, 4.0]; // 2 queries, d=2
+        let x = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3 items
+        let s = NativeScorer.scores(Metric::Ip, &q, 2, &x, 3, 2).unwrap();
+        assert_eq!(s, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn pjrt_spawn_missing_dir_fails_fast() {
+        let r = PjrtScorer::spawn(PathBuf::from("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+}

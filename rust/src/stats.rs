@@ -1,0 +1,124 @@
+//! Small statistics helpers: percentiles, online means, fixed-window
+//! throughput series (used by the bench harness and the figure drivers).
+
+/// Percentile of a sample (nearest-rank on a sorted copy). `p` in [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+/// Arithmetic mean.
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Online mean/min/max accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Completed-ops counter bucketed into fixed windows — produces the
+/// throughput-vs-time series for the failure experiment (Fig 13).
+#[derive(Debug)]
+pub struct ThroughputSeries {
+    window: std::time::Duration,
+    start: std::time::Instant,
+    buckets: Vec<u64>,
+}
+
+impl ThroughputSeries {
+    pub fn new(window: std::time::Duration) -> Self {
+        ThroughputSeries { window, start: std::time::Instant::now(), buckets: Vec::new() }
+    }
+
+    pub fn record(&mut self, at: std::time::Instant) {
+        let idx = (at.duration_since(self.start).as_secs_f64() / self.window.as_secs_f64()) as usize;
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+    }
+
+    /// (window start seconds, queries/sec) series.
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        let w = self.window.as_secs_f64();
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 * w, c as f64 / w))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 100.0);
+        let p90 = percentile(&s, 90.0);
+        assert!((89.0..=91.5).contains(&p90), "p90={p90}");
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn running_accumulates() {
+        let mut r = Running::default();
+        for v in [3.0, 1.0, 2.0] {
+            r.push(v);
+        }
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 3.0);
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_series_buckets() {
+        let mut t = ThroughputSeries::new(std::time::Duration::from_millis(100));
+        let base = t.start;
+        t.record(base + std::time::Duration::from_millis(10));
+        t.record(base + std::time::Duration::from_millis(20));
+        t.record(base + std::time::Duration::from_millis(150));
+        let s = t.series();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 20.0).abs() < 1e-9); // 2 ops / 0.1 s
+        assert!((s[1].1 - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Core value types shared across the crate.
+
+/// Dense vector id within a dataset (global, pre-partitioning).
+pub type VectorId = u32;
+
+/// Partition / sub-dataset index (`i` in the paper's `X^i`).
+pub type PartitionId = u16;
+
+/// A scored search hit. Scores follow the paper's convention: **larger is
+/// more similar** (Euclidean uses negative squared distance).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: VectorId,
+    pub score: f32,
+}
+
+impl Neighbor {
+    pub fn new(id: VectorId, score: f32) -> Self {
+        Neighbor { id, score }
+    }
+}
+
+impl Eq for Neighbor {}
+
+impl Ord for Neighbor {
+    /// Total order by score then id; NaN scores sort last (least similar)
+    /// so a poisoned score can never win a top-k slot.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match self.score.partial_cmp(&other.score) {
+            Some(o) => o.then_with(|| self.id.cmp(&other.id)),
+            // NaN handling: non-NaN beats NaN; two NaNs order by id.
+            None => match (self.score.is_nan(), other.score.is_nan()) {
+                (true, false) => std::cmp::Ordering::Less,
+                (false, true) => std::cmp::Ordering::Greater,
+                _ => self.id.cmp(&other.id),
+            },
+        }
+    }
+}
+
+impl PartialOrd for Neighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Merge several partial top-k lists into a global top-k (Algorithm 4
+/// line 9). Deduplicates ids (MIPS replication can return the same item
+/// from several sub-HNSWs, Algorithm 5 lines 12-15).
+pub fn merge_topk(mut partials: Vec<Neighbor>, k: usize) -> Vec<Neighbor> {
+    partials.sort_unstable_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    let mut seen = std::collections::HashSet::with_capacity(k * 2);
+    let mut out = Vec::with_capacity(k);
+    for n in partials {
+        if seen.insert(n.id) {
+            out.push(n);
+            if out.len() == k {
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbor_ordering_by_score_desc() {
+        let a = Neighbor::new(1, 0.9);
+        let b = Neighbor::new(2, 0.5);
+        assert!(a > b);
+        let mut v = vec![b, a];
+        v.sort();
+        assert_eq!(v[0].id, 2); // ascending sort: worst first
+    }
+
+    #[test]
+    fn neighbor_nan_never_wins() {
+        let good = Neighbor::new(1, -1e30);
+        let nan = Neighbor::new(2, f32::NAN);
+        assert!(good > nan);
+    }
+
+    #[test]
+    fn merge_topk_dedups_and_truncates() {
+        let partials = vec![
+            Neighbor::new(1, 0.9),
+            Neighbor::new(1, 0.9), // replica duplicate
+            Neighbor::new(2, 0.8),
+            Neighbor::new(3, 0.95),
+            Neighbor::new(4, 0.1),
+        ];
+        let top = merge_topk(partials, 3);
+        assert_eq!(
+            top.iter().map(|n| n.id).collect::<Vec<_>>(),
+            vec![3, 1, 2]
+        );
+    }
+
+    #[test]
+    fn merge_topk_shorter_than_k() {
+        let top = merge_topk(vec![Neighbor::new(7, 1.0)], 10);
+        assert_eq!(top.len(), 1);
+    }
+}

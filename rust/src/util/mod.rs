@@ -1,0 +1,20 @@
+//! Self-contained utility substrates.
+//!
+//! This build environment is fully offline, so the usual ecosystem crates
+//! (rand, serde, rayon, clap, proptest, criterion, tempfile) are not
+//! available. Everything the system needs from them is implemented here as
+//! small, tested substrates:
+//!
+//! * [`rng`] — seeded SplitMix64/xoshiro PRNG + distributions
+//! * [`json`] — JSON parse/serialize (artifact manifest, configs, results)
+//! * [`threads`] — scoped parallel map / chunked for-each (rayon substitute)
+//! * [`cli`] — tiny flag parser for the `pyramid` binary
+//! * [`quickcheck`] — seeded property-testing loop (proptest substitute)
+//! * [`tempdir`] — unique temp directories for tests
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod tempdir;
+pub mod threads;

@@ -1,0 +1,107 @@
+//! Scoped data-parallel helpers (offline substitute for `rayon`).
+//!
+//! Built on `std::thread::scope`; work is split into contiguous chunks, one
+//! per worker, which is the right shape for the crate's workloads (dense
+//! scans, per-partition index builds).
+
+/// Number of worker threads to use by default.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map over `0..n` preserving order. `f` must be `Sync` and is
+/// called once per index, from `threads` workers.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let slots: Vec<&mut [Option<T>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|s| {
+        for (t, slot) in slots.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (j, cell) in slot.iter_mut().enumerate() {
+                    *cell = Some(f(base + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Parallel for-each over the items of a slice with mutable access,
+/// chunked across `threads` workers.
+pub fn parallel_for_each_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slot) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (j, item) in slot.iter_mut().enumerate() {
+                    f(base + j, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_runs_every_index_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(1000, 4, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn map_degenerate_sizes() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 7), vec![7]);
+        assert_eq!(parallel_map(5, 100, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn for_each_mut_touches_all() {
+        let mut xs = vec![0usize; 97];
+        parallel_for_each_mut(&mut xs, 8, |i, v| *v = i + 1);
+        for (i, v) in xs.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! End-to-end integration: full pipeline from GraphConstructor through the
+//! simulated cluster, covering persistence, MIPS, replication, and the
+//! PJRT-re-rank serving mode.
+
+use pyramid::prelude::*;
+use pyramid::runtime::{default_artifacts_dir, PjrtScorer};
+use pyramid::util::tempdir::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn deep(n: usize) -> SyntheticSpec {
+    let mut s = SyntheticSpec::deep_like(n, 32, 21);
+    s.clusters = 32;
+    s
+}
+
+#[test]
+fn constructor_to_cluster_via_disk() {
+    // Build + save via the paper's API, then serve coordinators/executors
+    // loading only their views off disk.
+    let dir = TempDir::new("e2e").unwrap();
+    let ds_cfg = pyramid::config::DatasetConfig::synthetic(SyntheticKind::DeepLike, 5_000, 32, 21);
+    let gc = GraphConstructor::new(
+        ds_cfg.clone(),
+        Metric::L2,
+        IndexConfig { sample: 1_200, meta_size: 48, partitions: 6, ..Default::default() },
+    );
+    gc.construct(dir.path()).unwrap();
+    let loaded = PyramidIndex::load(dir.path()).unwrap();
+    let cluster = SimCluster::start(
+        &loaded,
+        ClusterTopology { workers: 6, replicas: 1, coordinators: 2, net_latency_us: 0, rebalance_ms: 100 },
+    )
+    .unwrap();
+    // The workload must come from the same dataset config the index saw.
+    let data = ds_cfg.load().unwrap();
+    let queries = ds_cfg.load_queries(30).unwrap();
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let mut results = Vec::new();
+    for qi in 0..workload.queries.len() {
+        results.push(cluster.execute(workload.queries.get(qi), &params).unwrap());
+    }
+    let p = workload.precision(&results);
+    assert!(p > 0.7, "disk-loaded cluster precision {p}");
+    cluster.shutdown();
+}
+
+#[test]
+fn mips_cluster_with_replication() {
+    let spec = SyntheticSpec::tiny_like(6_000, 24, 33);
+    let data = spec.generate();
+    let queries = spec.queries(40);
+    let cfg = IndexConfig {
+        sample: 1_500,
+        meta_size: 48,
+        partitions: 6,
+        mips_replication: 60,
+        ..Default::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::Ip, &cfg).unwrap();
+    assert!(idx.report.replicated > 0, "replication should add items");
+    let workload = Workload::new(data, queries, Metric::Ip, 10);
+    let cluster = SimCluster::start(
+        &idx,
+        ClusterTopology { workers: 6, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100 },
+    )
+    .unwrap();
+    // branch=1: replication should still deliver decent precision, and
+    // duplicates from replicas must not appear in the merged result.
+    let params = QueryParams { k: 10, branch: 1, ef: 100, meta_ef: 100 };
+    let mut results = Vec::new();
+    for qi in 0..workload.queries.len() {
+        let res = cluster.execute(workload.queries.get(qi), &params).unwrap();
+        let ids: std::collections::HashSet<u32> = res.iter().map(|n| n.id).collect();
+        assert_eq!(ids.len(), res.len(), "duplicate ids in merged result");
+        results.push(res);
+    }
+    let p = workload.precision(&results);
+    assert!(p > 0.5, "MIPS branch-1 precision {p}");
+    cluster.shutdown();
+}
+
+#[test]
+fn pjrt_rerank_serving_matches_plain_serving() {
+    let Some(art) = default_artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let spec = deep(4_000);
+    let data = spec.generate();
+    let queries = spec.queries(20);
+    let cfg = IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    let topo = ClusterTopology { workers: 4, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100 };
+    let plain = SimCluster::start(&idx, topo).unwrap();
+    let scorer = Arc::new(PjrtScorer::spawn(art).unwrap());
+    let pjrt = SimCluster::start_with_scorer(&idx, topo, Some(scorer)).unwrap();
+    let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+    for qi in 0..queries.len() {
+        let q = queries.get(qi);
+        let a = plain.execute(q, &params).unwrap();
+        let b = pjrt.execute(q, &params).unwrap();
+        assert_eq!(
+            a.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {qi}: PJRT re-rank changed the result set"
+        );
+    }
+    plain.shutdown();
+    pjrt.shutdown();
+}
+
+#[test]
+fn cluster_survives_coordinator_timeout_retry() {
+    // Killing every executor makes queries time out; execute() must fail
+    // cleanly (not hang), and service must resume after restart.
+    let spec = deep(3_000);
+    let data = spec.generate();
+    let cfg = IndexConfig { sample: 800, meta_size: 24, partitions: 3, ..Default::default() };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    let cluster = SimCluster::start(
+        &idx,
+        ClusterTopology { workers: 3, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100 },
+    )
+    .unwrap();
+    let params = QueryParams { k: 5, branch: 3, ef: 50, meta_ef: 50 };
+    assert!(cluster.execute(data.get(0), &params).is_ok());
+    for h in 0..3 {
+        cluster.kill_host(h);
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    // All executors dead — this must return a timeout error, not hang.
+    // (Master respawn may revive them mid-call; both outcomes are fine,
+    // but the call must terminate.)
+    let _ = cluster.execute(data.get(1), &params);
+    for h in 0..3 {
+        cluster.restart_host(h);
+    }
+    std::thread::sleep(Duration::from_millis(400));
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut ok = false;
+    while std::time::Instant::now() < deadline {
+        if cluster.execute(data.get(2), &params).is_ok() {
+            ok = true;
+            break;
+        }
+    }
+    assert!(ok, "service did not resume after restart");
+    cluster.shutdown();
+}

@@ -1,0 +1,123 @@
+//! Integration: the PJRT-backed scorer (AOT Pallas artifacts) must agree
+//! with the native rust scorer on every metric, and the kmeans_step
+//! artifact must agree with a scalar Lloyd step.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! artifacts first).
+
+use pyramid::dataset::SyntheticSpec;
+use pyramid::metric::Metric;
+use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
+
+fn scorer() -> Option<PjrtScorer> {
+    let dir = default_artifacts_dir()?;
+    Some(PjrtScorer::spawn(dir).expect("spawn scorer"))
+}
+
+#[test]
+fn pjrt_rerank_matches_native_all_metrics() {
+    let Some(pjrt) = scorer() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let data = SyntheticSpec::deep_like(300, 96, 3).generate();
+    let queries = SyntheticSpec::deep_like(300, 96, 3).queries(8);
+    let ids: Vec<u32> = (0..data.len() as u32).collect();
+    for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let a = pyramid::runtime::NativeScorer
+                .rerank(metric, q, data.raw(), &ids, 10)
+                .unwrap();
+            let b = pjrt.rerank(metric, q, data.raw(), &ids, 10).unwrap();
+            let aids: Vec<u32> = a.iter().map(|n| n.id).collect();
+            let bids: Vec<u32> = b.iter().map(|n| n.id).collect();
+            assert_eq!(aids, bids, "{metric} query {qi} ids diverge");
+            for (x, y) in a.iter().zip(&b) {
+                assert!(
+                    (x.score - y.score).abs() <= 1e-2 * (1.0 + x.score.abs()),
+                    "{metric} score {} vs {}",
+                    x.score,
+                    y.score
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_rerank_chunks_large_candidate_sets() {
+    let Some(pjrt) = scorer() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    // 1300 candidates > the 512-row rerank artifact block: forces chunking.
+    let data = SyntheticSpec::sift_like(1_300, 64, 9).generate();
+    let q = SyntheticSpec::sift_like(1_300, 64, 9).queries(1);
+    let ids: Vec<u32> = (0..data.len() as u32).collect();
+    let a = NativeScorer.rerank(Metric::L2, q.get(0), data.raw(), &ids, 25).unwrap();
+    let b = pjrt.rerank(Metric::L2, q.get(0), data.raw(), &ids, 25).unwrap();
+    assert_eq!(
+        a.iter().map(|n| n.id).collect::<Vec<_>>(),
+        b.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn pjrt_scores_block_matches_native() {
+    let Some(pjrt) = scorer() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let x = SyntheticSpec::uniform(500, 32, 1).generate();
+    let q = SyntheticSpec::uniform(500, 32, 1).queries(16);
+    for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+        let a = NativeScorer.scores(metric, q.raw(), 16, x.raw(), 500, 32).unwrap();
+        let b = pjrt.scores(metric, q.raw(), 16, x.raw(), 500, 32).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x1, y1)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x1 - y1).abs() <= 1e-2 * (1.0 + x1.abs()),
+                "{metric} elem {i}: {x1} vs {y1}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_kmeans_step_matches_scalar() {
+    let Some(pjrt) = scorer() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let pts = SyntheticSpec::deep_like(600, 48, 5).generate();
+    let centers = SyntheticSpec::deep_like(600, 48, 5).queries(20);
+    let weights = vec![1.0f32; 600];
+    let (sums, counts) = pjrt
+        .kmeans_step(pts.raw(), 600, centers.raw(), 20, &weights, 48)
+        .unwrap();
+    // Scalar reference.
+    let mut ref_sums = vec![0f32; 20 * 48];
+    let mut ref_counts = vec![0f32; 20];
+    for i in 0..600 {
+        let (c, _) = pyramid::kmeans::nearest_center(&centers, pts.get(i));
+        ref_counts[c as usize] += 1.0;
+        for (j, v) in pts.get(i).iter().enumerate() {
+            ref_sums[c as usize * 48 + j] += v;
+        }
+    }
+    assert_eq!(counts.len(), 20);
+    let total: f32 = counts.iter().sum();
+    assert!((total - 600.0).abs() < 1e-3, "counts sum {total}");
+    for c in 0..20 {
+        assert!(
+            (counts[c] - ref_counts[c]).abs() < 1e-3,
+            "count[{c}] {} vs {}",
+            counts[c],
+            ref_counts[c]
+        );
+    }
+    for (i, (a, b)) in sums.iter().zip(&ref_sums).enumerate() {
+        assert!((a - b).abs() <= 1e-2 * (1.0 + b.abs()), "sum elem {i}: {a} vs {b}");
+    }
+}
