@@ -61,6 +61,7 @@ fn main() -> Result<()> {
         coordinators: args.get_usize("coordinators", 2),
         net_latency_us: args.get_u64("net-latency-us", 50),
         rebalance_ms: 200,
+        executor_batch: args.get_usize("executor-batch", 8),
     };
     let scorer: Option<Arc<dyn BatchScorer>> = if use_pjrt {
         let dir = default_artifacts_dir()

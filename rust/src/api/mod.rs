@@ -129,6 +129,7 @@ impl Executor {
                 ids,
                 host: HostControl::new(usize::MAX),
                 net_latency: std::time::Duration::ZERO,
+                batch: crate::executor::DEFAULT_BATCH,
             },
             self.brokers.clone(),
             self.registry.clone(),

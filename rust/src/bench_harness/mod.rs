@@ -178,6 +178,47 @@ pub fn drive_cluster(
     }
 }
 
+/// Collects named micro-benchmark measurements (ns/op) and dumps them as
+/// one flat JSON object — `benches/hot_paths.rs` writes
+/// `BENCH_hot_paths.json` through this so CI records the perf trajectory
+/// run over run.
+#[derive(Debug, Default)]
+pub struct BenchRecorder {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchRecorder {
+    pub fn new() -> BenchRecorder {
+        BenchRecorder::default()
+    }
+
+    pub fn record(&mut self, name: &str, ns_per_op: f64) {
+        self.entries.push((name.to_string(), ns_per_op));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a recorded measurement by exact name.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Write `{"<name>": <ns_per_op>, ...}` to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        use crate::util::json::Json;
+        let pairs: Vec<(&str, Json)> =
+            self.entries.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+        std::fs::write(path, Json::obj(pairs).pretty())?;
+        Ok(())
+    }
+}
+
 /// Fixed-width table printer for the figure harnesses (so every figure's
 /// rows render the same way in EXPERIMENTS.md).
 pub struct TablePrinter {
@@ -258,6 +299,20 @@ mod tests {
         assert!((r.p50_ms() - 50.0).abs() < 2.0);
         assert!((r.p90_ms() - 90.0).abs() < 2.0);
         assert_eq!(r.len(), 100);
+    }
+
+    #[test]
+    fn bench_recorder_roundtrips_json() {
+        let mut r = BenchRecorder::new();
+        r.record("hnsw/search ef=100", 1234.5);
+        r.record("metric/dot d=96", 9.0);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("metric/dot d=96"), Some(9.0));
+        let dir = crate::util::tempdir::TempDir::new("bench").unwrap();
+        let p = dir.join("BENCH_hot_paths.json");
+        r.write_json(&p).unwrap();
+        let parsed = crate::util::json::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(parsed.get("metric/dot d=96").and_then(|j| j.as_f64()), Some(9.0));
     }
 
     #[test]

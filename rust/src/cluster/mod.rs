@@ -142,6 +142,7 @@ impl SimCluster {
                     ids: subs[role.partition as usize].1.clone(),
                     host: hosts[role.home_host].clone(),
                     net_latency: Duration::from_micros(topo.net_latency_us),
+                    batch: topo.executor_batch.max(1),
                 },
                 broker.clone(),
                 registry.clone(),
@@ -190,6 +191,7 @@ impl SimCluster {
             let state = state.clone();
             let stop = respawn_stop.clone();
             let net = Duration::from_micros(topo.net_latency_us);
+            let batch = topo.executor_batch.max(1);
             std::thread::Builder::new()
                 .name("cluster-respawner".into())
                 .spawn(move || loop {
@@ -218,6 +220,7 @@ impl SimCluster {
                                     ids: subs[role.partition as usize].1.clone(),
                                     host,
                                     net_latency: net,
+                                    batch,
                                 },
                                 broker.clone(),
                                 registry.clone(),
@@ -297,6 +300,7 @@ impl SimCluster {
                     ids: self.subs[role.partition as usize].1.clone(),
                     host: self.hosts[host].clone(),
                     net_latency: net,
+                    batch: self.topo.executor_batch.max(1),
                 },
                 self.broker.clone(),
                 self.registry.clone(),
@@ -351,6 +355,7 @@ impl SimCluster {
                 ids: self.subs[partition as usize].1.clone(),
                 host: self.hosts[host].clone(),
                 net_latency: Duration::from_micros(self.topo.net_latency_us),
+                batch: self.topo.executor_batch.max(1),
             },
             self.broker.clone(),
             self.registry.clone(),
@@ -413,6 +418,7 @@ mod tests {
             coordinators: 2,
             net_latency_us: 0,
             rebalance_ms: 50,
+            executor_batch: 4,
         }
     }
 

@@ -273,6 +273,8 @@ pub struct ClusterTopology {
     pub net_latency_us: u64,
     /// Broker rebalance interval, milliseconds.
     pub rebalance_ms: u64,
+    /// Max requests an executor drains and answers per poll batch.
+    pub executor_batch: usize,
 }
 
 impl Default for ClusterTopology {
@@ -283,6 +285,7 @@ impl Default for ClusterTopology {
             coordinators: 2,
             net_latency_us: 50,
             rebalance_ms: 200,
+            executor_batch: crate::executor::DEFAULT_BATCH,
         }
     }
 }
@@ -295,6 +298,7 @@ impl ClusterTopology {
             ("coordinators", Json::num(self.coordinators as f64)),
             ("net_latency_us", Json::num(self.net_latency_us as f64)),
             ("rebalance_ms", Json::num(self.rebalance_ms as f64)),
+            ("executor_batch", Json::num(self.executor_batch as f64)),
         ])
     }
 
@@ -314,6 +318,9 @@ impl ClusterTopology {
         }
         if let Some(v) = j.get("rebalance_ms").and_then(Json::as_f64) {
             c.rebalance_ms = v as u64;
+        }
+        if let Some(v) = j.get("executor_batch").and_then(Json::as_usize) {
+            c.executor_batch = v.max(1);
         }
         c
     }

@@ -1,47 +1,59 @@
-//! Crate-wide error type.
-
-use thiserror::Error;
+//! Crate-wide error type. `Display`/`Error` are hand-implemented — the
+//! build is offline, so `thiserror` is not available (see
+//! [`crate::util`] for the substrate policy).
 
 /// Unified error for index building, serving and the PJRT runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum PyramidError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("config error: {0}")]
+    Io(std::io::Error),
     Config(String),
-
-    #[error("dataset error: {0}")]
     Dataset(String),
-
-    #[error("index error: {0}")]
     Index(String),
-
-    #[error("partition error: {0}")]
     Partition(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("broker error: {0}")]
     Broker(String),
-
-    #[error("registry error: {0}")]
     Registry(String),
-
-    #[error("cluster error: {0}")]
     Cluster(String),
-
-    #[error("query timed out after {0:?}")]
     Timeout(std::time::Duration),
-
-    #[error("serde error: {0}")]
     Serde(String),
 }
 
+impl std::fmt::Display for PyramidError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PyramidError::Io(e) => write!(f, "io error: {e}"),
+            PyramidError::Config(m) => write!(f, "config error: {m}"),
+            PyramidError::Dataset(m) => write!(f, "dataset error: {m}"),
+            PyramidError::Index(m) => write!(f, "index error: {m}"),
+            PyramidError::Partition(m) => write!(f, "partition error: {m}"),
+            PyramidError::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            PyramidError::Artifact(m) => write!(f, "artifact error: {m}"),
+            PyramidError::Broker(m) => write!(f, "broker error: {m}"),
+            PyramidError::Registry(m) => write!(f, "registry error: {m}"),
+            PyramidError::Cluster(m) => write!(f, "cluster error: {m}"),
+            PyramidError::Timeout(d) => write!(f, "query timed out after {d:?}"),
+            PyramidError::Serde(m) => write!(f, "serde error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PyramidError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PyramidError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PyramidError {
+    fn from(e: std::io::Error) -> Self {
+        PyramidError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for PyramidError {
     fn from(e: xla::Error) -> Self {
         PyramidError::Runtime(e.to_string())
@@ -50,3 +62,17 @@ impl From<xla::Error> for PyramidError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, PyramidError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_variant() {
+        let e = PyramidError::Broker("no topic t".into());
+        assert_eq!(e.to_string(), "broker error: no topic t");
+        let io: PyramidError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&io).is_some());
+    }
+}

@@ -1,14 +1,15 @@
 //! HNSW graph construction (paper Algorithm 2).
 //!
-//! Items are inserted sequentially in id order. Each item draws its top
-//! layer from the exponential distribution, greedily descends to that
-//! layer, then beam-searches each layer below it with `ef_construction`
-//! and connects to (up to) M selected neighbors with *directed* edges plus
-//! reverse edges pruned back to the degree bound — the standard HNSW
-//! scheme the paper builds on.
+//! Items are inserted sequentially in id order into the mutable nested-vec
+//! form ([`NestedHnsw`]); callers freeze the result into the CSR layout
+//! before serving. Each item draws its top layer from the exponential
+//! distribution, greedily descends to that layer, then beam-searches each
+//! layer below it with `ef_construction` and connects to (up to) M
+//! selected neighbors with *directed* edges plus reverse edges pruned back
+//! to the degree bound — the standard HNSW scheme the paper builds on.
 
 use super::search::{search_for_insert, VisitedPool};
-use super::{Hnsw, HnswParams, Layer};
+use super::{HnswParams, Layer, NestedHnsw};
 use crate::dataset::Dataset;
 use crate::error::Result;
 use crate::metric::Metric;
@@ -25,8 +26,7 @@ fn draw_level(rng: &mut Rng, lambda: f64) -> usize {
 /// closer to the query than to any already-kept neighbor (diversity
 /// pruning, HNSW paper Alg 4) which avoids clique-like local clusters.
 fn select_neighbors(
-    g: &Hnsw,
-    query: &[f32],
+    g: &NestedHnsw,
     mut cands: Vec<Neighbor>,
     m: usize,
     heuristic: bool,
@@ -54,7 +54,6 @@ fn select_neighbors(
         } else {
             kept.push(c.id);
         }
-        let _ = query;
     }
     // Backfill with the best spilled candidates if under-full.
     for id in spilled {
@@ -68,7 +67,7 @@ fn select_neighbors(
 
 /// Prune node `u`'s list on `layer` back to `cap` using the same selection
 /// rule (called after adding a reverse edge overflows the bound).
-fn prune(g: &mut Hnsw, level: usize, u: u32, cap: usize) {
+fn prune(g: &mut NestedHnsw, level: usize, u: u32, cap: usize) {
     let list = std::mem::take(&mut g.layers[level].lists[u as usize]);
     if list.len() <= cap {
         g.layers[level].lists[u as usize] = list;
@@ -79,11 +78,11 @@ fn prune(g: &mut Hnsw, level: usize, u: u32, cap: usize) {
         .iter()
         .map(|&v| Neighbor::new(v, g.metric.score(uv, g.data.get(v as usize))))
         .collect();
-    let kept = select_neighbors(g, uv, cands, cap, g.params.select_heuristic);
+    let kept = select_neighbors(g, cands, cap, g.params.select_heuristic);
     g.layers[level].lists[u as usize] = kept;
 }
 
-pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<Hnsw> {
+pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<NestedHnsw> {
     let n = data.len();
     let mut rng = Rng::seed_from_u64(params.seed ^ 0xC0FF_EE11);
     let lambda = params.level_lambda();
@@ -93,7 +92,7 @@ pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result
     let levels: Vec<u8> = (0..n).map(|_| draw_level(&mut rng, lambda).min(31) as u8).collect();
     let max_level = *levels.iter().max().unwrap() as usize;
 
-    let mut g = Hnsw {
+    let mut g = NestedHnsw {
         visited_pool: VisitedPool::new(n),
         layers: (0..=max_level).map(|_| Layer::with_nodes(n)).collect(),
         entry: 0,
@@ -116,7 +115,7 @@ pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result
                 break;
             }
             let m_cap = if t == 0 { g.params.m0 } else { g.params.m };
-            let selected = select_neighbors(&g, &q, cands, m_cap, g.params.select_heuristic);
+            let selected = select_neighbors(&g, cands, m_cap, g.params.select_heuristic);
             g.layers[t].lists[id as usize] = selected.clone();
             // Reverse edges + prune.
             for v in selected {
@@ -153,19 +152,20 @@ mod tests {
     #[test]
     fn heuristic_selection_bounded_and_sorted_input() {
         let ds = SyntheticSpec::deep_like(300, 8, 2).generate();
-        let g = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let g = NestedHnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
         let q = g.data.get(0).to_vec();
         let cands: Vec<Neighbor> = (1..100u32)
             .map(|i| Neighbor::new(i, g.metric.score(&q, g.data.get(i as usize))))
             .collect();
-        let sel = select_neighbors(&g, &q, cands.clone(), 8, true);
+        let sel = select_neighbors(&g, cands.clone(), 8, true);
         assert!(sel.len() <= 8);
-        let plain = select_neighbors(&g, &q, cands, 8, false);
-        assert_eq!(plain.len(), 8);
         // Plain selection = exact top-8 by score.
-        for w in plain.windows(1) {
-            let _ = w;
-        }
+        let plain = select_neighbors(&g, cands.clone(), 8, false);
+        assert_eq!(plain.len(), 8);
+        let mut sorted = cands;
+        sorted.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let top8: Vec<u32> = sorted.iter().take(8).map(|n| n.id).collect();
+        assert_eq!(plain, top8);
     }
 
     #[test]
@@ -173,7 +173,7 @@ mod tests {
         // Union of forward edges must connect the bottom layer (weakly);
         // search correctness depends on reachability from the entry chain.
         let ds = SyntheticSpec::deep_like(1_000, 16, 4).generate();
-        let g = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let g = NestedHnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
         let n = g.len();
         let mut seen = vec![false; n];
         let mut stack = vec![g.entry];

@@ -6,9 +6,22 @@
 //! factor `l` > 1). Pyramid builds one *meta*-HNSW over k-means centers and
 //! one *sub*-HNSW per partition with this same implementation.
 //!
+//! ## Two representations
+//!
+//! Construction mutates a nested-vec graph ([`NestedHnsw`]: one growable
+//! `Vec<u32>` neighbor list per node per layer). Serving never touches that
+//! form: [`NestedHnsw::freeze`] flattens every layer into an immutable CSR
+//! block ([`FrozenLayer`]) and the resulting [`Hnsw`] is what executors
+//! search. Upper layers are plain CSR (`adj` + `offsets`); the bottom
+//! layer — where the beam search spends nearly all of its time — is padded
+//! to a fixed stride of `m0 + 1` words per node (count prefix + neighbor
+//! ids), so locating a node's block is a multiply instead of two dependent
+//! offset loads and the walk can software-prefetch neighbor vectors as it
+//! streams the block.
+//!
 //! Construction is sequential per graph (insert order = id order, seeded
 //! level draws, fully deterministic); Pyramid parallelizes across the `w`
-//! sub-HNSWs with rayon instead (see [`crate::meta`]).
+//! sub-HNSWs with the threads substrate instead (see [`crate::meta`]).
 
 mod build;
 mod search;
@@ -19,7 +32,9 @@ pub use search::SearchStats;
 use crate::dataset::Dataset;
 use crate::error::{PyramidError, Result};
 use crate::metric::Metric;
-use crate::types::Neighbor;
+use crate::runtime::BatchScorer;
+use crate::types::{BatchQuery, Neighbor};
+use search::VisitedPool;
 
 /// HNSW construction parameters. Defaults follow the paper's §V-A setup:
 /// max out-degree 32 on the bottom layer, 16 above, search factor 100.
@@ -53,9 +68,8 @@ impl HnswParams {
     }
 }
 
-/// One adjacency layer. Node `u`'s out-neighbors live in
-/// `adj[offsets[u]..offsets[u] + len[u]]` after freezing; during build the
-/// lists are plain vectors.
+/// Build-time adjacency layer: one growable neighbor list per node. Exists
+/// only while the graph is mutable; [`NestedHnsw::freeze`] consumes it.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct Layer {
     pub(crate) lists: Vec<Vec<u32>>,
@@ -72,8 +86,96 @@ impl Layer {
     }
 }
 
-/// An immutable-after-build HNSW index over a [`Dataset`].
-pub struct Hnsw {
+/// Immutable flattened adjacency, one per layer of a frozen [`Hnsw`].
+///
+/// Two forms share the struct:
+///
+/// * **CSR** (`stride == 0`, upper layers): node `u`'s out-neighbors live
+///   in `adj[offsets[u] .. offsets[u + 1]]`.
+/// * **Fixed-stride** (`stride == m0 + 1`, bottom layer): node `u` owns the
+///   block `adj[u * stride ..][.. stride]`; word 0 is the neighbor count,
+///   words `1 ..= count` the neighbor ids. The padding trades a little
+///   memory for branch-free block addressing on the path that executes
+///   once per beam-search hop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct FrozenLayer {
+    /// Concatenated neighbor ids (count-prefixed blocks in fixed form).
+    adj: Vec<u32>,
+    /// CSR offsets, `n + 1` entries; empty in fixed-stride form.
+    offsets: Vec<u32>,
+    /// Words per node in fixed-stride form; 0 selects the CSR form.
+    stride: u32,
+}
+
+impl FrozenLayer {
+    /// Flatten nested lists into plain CSR.
+    fn csr(lists: &[Vec<u32>]) -> FrozenLayer {
+        let total: usize = lists.iter().map(Vec::len).sum();
+        let mut adj = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        offsets.push(0u32);
+        for l in lists {
+            adj.extend_from_slice(l);
+            offsets.push(adj.len() as u32);
+        }
+        FrozenLayer { adj, offsets, stride: 0 }
+    }
+
+    /// Flatten nested lists into count-prefixed fixed-stride blocks of
+    /// `cap` neighbors per node.
+    fn fixed(lists: &[Vec<u32>], cap: usize) -> FrozenLayer {
+        let stride = cap + 1;
+        let mut adj = vec![0u32; lists.len() * stride];
+        for (u, l) in lists.iter().enumerate() {
+            let base = u * stride;
+            adj[base] = l.len() as u32;
+            adj[base + 1..base + 1 + l.len()].copy_from_slice(l);
+        }
+        FrozenLayer { adj, offsets: Vec::new(), stride: stride as u32 }
+    }
+
+    #[inline]
+    pub(crate) fn neighbors(&self, u: u32) -> &[u32] {
+        if self.stride != 0 {
+            let base = u as usize * self.stride as usize;
+            let cnt = self.adj[base] as usize;
+            &self.adj[base + 1..base + 1 + cnt]
+        } else {
+            let u = u as usize;
+            &self.adj[self.offsets[u] as usize..self.offsets[u + 1] as usize]
+        }
+    }
+
+    /// Node count.
+    fn nodes(&self) -> usize {
+        if self.stride != 0 {
+            self.adj.len() / self.stride as usize
+        } else {
+            self.offsets.len() - 1
+        }
+    }
+
+    /// Total directed edge count.
+    fn edge_count(&self) -> usize {
+        if self.stride != 0 {
+            self.adj.chunks_exact(self.stride as usize).map(|b| b[0] as usize).sum()
+        } else {
+            self.adj.len()
+        }
+    }
+
+    /// Adjacency memory footprint in bytes.
+    fn bytes(&self) -> usize {
+        (self.adj.len() + self.offsets.len()) * std::mem::size_of::<u32>()
+    }
+}
+
+/// The mutable build-time HNSW: nested-vec adjacency that insertion grows
+/// and prunes in place. Searchable (same walk as the frozen form, one
+/// monomorphization each) so the frozen-vs-nested equivalence tests and
+/// the CSR speedup baseline in `benches/hot_paths.rs` can compare the two
+/// layouts on identical graphs. Production serving always freezes first.
+pub struct NestedHnsw {
     pub(crate) data: Dataset,
     pub(crate) metric: Metric,
     pub(crate) params: HnswParams,
@@ -83,16 +185,87 @@ pub struct Hnsw {
     pub(crate) levels: Vec<u8>,
     /// Entry vertex (a node on the top layer).
     pub(crate) entry: u32,
-    pub(crate) visited_pool: search::VisitedPool,
+    pub(crate) visited_pool: VisitedPool,
 }
 
-impl Hnsw {
-    /// Build an index over every row of `data` (paper Algorithm 2).
+impl NestedHnsw {
+    /// Build the mutable graph over every row of `data` (paper Algorithm
+    /// 2) without freezing it.
     pub fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<Self> {
         if data.is_empty() {
             return Err(PyramidError::Index("cannot build HNSW on empty dataset".into()));
         }
         build::build(data, metric, params)
+    }
+
+    /// Top-k search on the nested-vec layout (baseline for the frozen
+    /// form; same algorithm, same results).
+    pub fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        search::search(self, query, k, ef).0
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flatten every layer into the immutable CSR form the executors
+    /// serve. The bottom layer pads to stride `m0 + 1` (count prefix);
+    /// upper layers become plain CSR.
+    pub fn freeze(self) -> Hnsw {
+        // Degree bounds guarantee bottom lists <= m0; take the max
+        // defensively so a future bound change can never corrupt blocks.
+        let bottom_cap = self
+            .params
+            .m0
+            .max(self.layers[0].lists.iter().map(Vec::len).max().unwrap_or(0));
+        let layers: Vec<FrozenLayer> = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(t, l)| {
+                if t == 0 {
+                    FrozenLayer::fixed(&l.lists, bottom_cap)
+                } else {
+                    FrozenLayer::csr(&l.lists)
+                }
+            })
+            .collect();
+        Hnsw {
+            data: self.data,
+            metric: self.metric,
+            params: self.params,
+            layers,
+            levels: self.levels,
+            entry: self.entry,
+            visited_pool: self.visited_pool,
+        }
+    }
+}
+
+/// An immutable HNSW index over a [`Dataset`], served from the frozen CSR
+/// adjacency (see the module docs for the layout).
+pub struct Hnsw {
+    pub(crate) data: Dataset,
+    pub(crate) metric: Metric,
+    pub(crate) params: HnswParams,
+    /// `layers[0]` is the bottom layer (all nodes, fixed-stride form).
+    pub(crate) layers: Vec<FrozenLayer>,
+    /// Highest layer each node appears in.
+    pub(crate) levels: Vec<u8>,
+    /// Entry vertex (a node on the top layer).
+    pub(crate) entry: u32,
+    pub(crate) visited_pool: VisitedPool,
+}
+
+impl Hnsw {
+    /// Build an index over every row of `data` (paper Algorithm 2) and
+    /// freeze it for serving.
+    pub fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<Self> {
+        NestedHnsw::build(data, metric, params).map(NestedHnsw::freeze)
     }
 
     /// Top-k search with beam width `ef` (paper Algorithm 1). Returns up to
@@ -105,6 +278,15 @@ impl Hnsw {
     /// harness and perf work.
     pub fn search_with_stats(&self, query: &[f32], k: usize, ef: usize) -> (Vec<Neighbor>, SearchStats) {
         search::search(self, query, k, ef)
+    }
+
+    /// Answer a whole drain-batch of queries in one pass: the graph walks
+    /// share a single visited-list checkout and scratch buffer, and each
+    /// query's beam candidates are re-ranked as one dense block through
+    /// `scorer` (the executor hands in its [`BatchScorer`] here — paper
+    /// §IV-A's query-processing hot loop, batched).
+    pub fn search_batch(&self, queries: &[BatchQuery<'_>], scorer: &dyn BatchScorer) -> Vec<Vec<Neighbor>> {
+        search::search_batch(self, queries, scorer)
     }
 
     pub fn len(&self) -> usize {
@@ -131,6 +313,11 @@ impl Hnsw {
         &self.data
     }
 
+    /// Adjacency of node `u` at `level` in the frozen graph.
+    pub fn neighbors_at(&self, level: usize, u: u32) -> &[u32] {
+        self.layers[level].neighbors(u)
+    }
+
     /// Bottom-layer adjacency of node `u` — Pyramid partitions this graph
     /// (Algorithm 3 line 6).
     pub fn bottom_neighbors(&self, u: u32) -> &[u32] {
@@ -139,17 +326,13 @@ impl Hnsw {
 
     /// Total directed edge count on the bottom layer.
     pub fn bottom_edge_count(&self) -> usize {
-        self.layers[0].lists.iter().map(Vec::len).sum()
+        self.layers[0].edge_count()
     }
 
     /// Approximate memory footprint (bytes) of vectors + adjacency.
     pub fn memory_bytes(&self) -> usize {
         let vecs = self.data.len() * self.data.dim() * 4;
-        let adj: usize = self
-            .layers
-            .iter()
-            .map(|l| l.lists.iter().map(|v| v.len() * 4 + 24).sum::<usize>())
-            .sum();
+        let adj: usize = self.layers.iter().map(FrozenLayer::bytes).sum();
         vecs + adj
     }
 }
@@ -171,6 +354,7 @@ mod tests {
     use super::*;
     use crate::bruteforce;
     use crate::dataset::SyntheticSpec;
+    use crate::runtime::NativeScorer;
 
     fn small() -> Dataset {
         SyntheticSpec::deep_like(2_000, 24, 11).generate()
@@ -255,10 +439,12 @@ mod tests {
         let ds = small();
         let p = HnswParams::default();
         let h = Hnsw::build(ds, Metric::L2, p).unwrap();
+        let n = h.len() as u32;
         for (t, layer) in h.layers.iter().enumerate() {
             let cap = if t == 0 { p.m0 } else { p.m };
-            for l in &layer.lists {
-                assert!(l.len() <= cap, "layer {t} degree {} > {cap}", l.len());
+            for u in 0..n {
+                let deg = layer.neighbors(u).len();
+                assert!(deg <= cap, "layer {t} node {u} degree {deg} > {cap}");
             }
         }
     }
@@ -267,10 +453,11 @@ mod tests {
     fn upper_layers_shrink() {
         let ds = small();
         let h = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
+        let n = h.len() as u32;
         let counts: Vec<usize> = h
             .layers
             .iter()
-            .map(|l| l.lists.iter().filter(|v| !v.is_empty()).count())
+            .map(|l| (0..n).filter(|&u| !l.neighbors(u).is_empty()).count())
             .collect();
         for w in counts.windows(2) {
             assert!(w[1] <= w[0].max(1), "layer sizes not decreasing: {counts:?}");
@@ -284,9 +471,7 @@ mod tests {
         let b = Hnsw::build(ds, Metric::L2, HnswParams::default()).unwrap();
         assert_eq!(a.entry, b.entry);
         assert_eq!(a.levels, b.levels);
-        for (la, lb) in a.layers.iter().zip(&b.layers) {
-            assert_eq!(la.lists, lb.lists);
-        }
+        assert_eq!(a.layers, b.layers);
     }
 
     #[test]
@@ -296,5 +481,105 @@ mod tests {
         let (_, stats) = h.search_with_stats(ds.get(0), 10, 50);
         assert!(stats.dist_evals > 10);
         assert!(stats.hops > 0);
+    }
+
+    #[test]
+    fn frozen_layout_well_formed() {
+        let ds = small();
+        let p = HnswParams::default();
+        let nested = NestedHnsw::build(ds, Metric::L2, p).unwrap();
+        let lists: Vec<Vec<Vec<u32>>> =
+            nested.layers.iter().map(|l| l.lists.clone()).collect();
+        let h = nested.freeze();
+        // Bottom layer is fixed-stride, upper layers CSR; every node's
+        // frozen slice equals its nested list verbatim.
+        assert_eq!(h.layers[0].stride as usize, p.m0 + 1);
+        for t in 1..h.layers.len() {
+            assert_eq!(h.layers[t].stride, 0);
+        }
+        for (t, layer) in h.layers.iter().enumerate() {
+            assert_eq!(layer.nodes(), h.len());
+            let nested_edges: usize = lists[t].iter().map(Vec::len).sum();
+            assert_eq!(layer.edge_count(), nested_edges);
+            for u in 0..h.len() as u32 {
+                assert_eq!(layer.neighbors(u), &lists[t][u as usize][..], "layer {t} node {u}");
+            }
+        }
+    }
+
+    /// Acceptance: frozen CSR search returns identical neighbor ids to the
+    /// nested-vec walk on a seeded 10k-vector dataset, all three metrics.
+    #[test]
+    fn frozen_matches_nested_10k_all_metrics() {
+        // Cheaper build params keep the 3x10k builds testable in debug.
+        let params = HnswParams { m: 8, m0: 16, ef_construction: 48, ..HnswParams::default() };
+        for (metric, seed) in [(Metric::L2, 41u64), (Metric::Ip, 43), (Metric::Angular, 47)] {
+            let spec = SyntheticSpec::deep_like(10_000, 16, seed);
+            let data = if metric.normalizes_items() { spec.generate().normalized() } else { spec.generate() };
+            let queries = spec.queries(25);
+            let nested = NestedHnsw::build(data, metric, params).unwrap();
+            let expected: Vec<Vec<u32>> = (0..queries.len())
+                .map(|qi| nested.search(queries.get(qi), 10, 80).iter().map(|n| n.id).collect())
+                .collect();
+            let frozen = nested.freeze();
+            for qi in 0..queries.len() {
+                let got: Vec<u32> =
+                    frozen.search(queries.get(qi), 10, 80).iter().map(|n| n.id).collect();
+                assert_eq!(got, expected[qi], "{metric} query {qi} diverges after freeze");
+            }
+        }
+    }
+
+    /// NativeScorer minus the identity shortcut: forces search_batch down
+    /// the gather + re-rank block path so both branches get covered.
+    struct ForcedRerank;
+
+    impl BatchScorer for ForcedRerank {
+        fn rerank(
+            &self,
+            metric: Metric,
+            query: &[f32],
+            cand_vecs: &[f32],
+            ids: &[u32],
+            k: usize,
+        ) -> Result<Vec<Neighbor>> {
+            NativeScorer.rerank(metric, query, cand_vecs, ids, k)
+        }
+
+        fn scores(
+            &self,
+            metric: Metric,
+            q: &[f32],
+            bq: usize,
+            x: &[f32],
+            nx: usize,
+            d: usize,
+        ) -> Result<Vec<f32>> {
+            NativeScorer.scores(metric, q, bq, x, nx, d)
+        }
+
+        fn name(&self) -> &'static str {
+            "forced-rerank"
+        }
+    }
+
+    #[test]
+    fn search_batch_matches_sequential() {
+        let ds = small();
+        let h = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let queries: Vec<&[f32]> = (0..16).map(|i| ds.get(i * 7)).collect();
+        let batch: Vec<BatchQuery<'_>> =
+            queries.iter().map(|q| BatchQuery { query: q, k: 10, ef: 60 }).collect();
+        // Identity path (what executors run) and the explicit re-rank
+        // block path must both equal the sequential walk.
+        let fast = h.search_batch(&batch, &NativeScorer);
+        let reranked = h.search_batch(&batch, &ForcedRerank);
+        for (i, q) in queries.iter().enumerate() {
+            let seq: Vec<u32> = h.search(q, 10, 60).iter().map(|n| n.id).collect();
+            let bat: Vec<u32> = fast[i].iter().map(|n| n.id).collect();
+            let rr: Vec<u32> = reranked[i].iter().map(|n| n.id).collect();
+            assert_eq!(bat, seq, "batched query {i} diverges");
+            assert_eq!(rr, seq, "re-ranked query {i} diverges");
+        }
     }
 }

@@ -4,11 +4,19 @@
 //! candidate max-heap `C` and a bounded result set `W` of size `factor`.
 //! Upper layers run with factor 1 (greedy descent); the bottom layer runs
 //! with factor `ef` (beam search with backtracking).
+//!
+//! The walk is generic over [`GraphView`], so it monomorphizes once for
+//! the frozen CSR form ([`super::Hnsw`], the serving hot path) and once
+//! for the nested-vec build form ([`super::NestedHnsw`]) with no dynamic
+//! dispatch in either.
 
-use super::Hnsw;
-use crate::types::Neighbor;
-use std::sync::Mutex;
+use super::{Hnsw, NestedHnsw};
+use crate::dataset::Dataset;
+use crate::metric::Metric;
+use crate::runtime::BatchScorer;
+use crate::types::{BatchQuery, Neighbor};
 use std::collections::BinaryHeap;
+use std::sync::Mutex;
 
 /// Per-search counters (used by the bench harness and §Perf work).
 #[derive(Debug, Clone, Copy, Default)]
@@ -17,6 +25,81 @@ pub struct SearchStats {
     pub dist_evals: u64,
     /// Graph-walk vertex expansions across all layers.
     pub hops: u64,
+}
+
+/// Read-only view of a multi-layer proximity graph: everything the walk
+/// needs, implemented by both graph representations.
+pub(crate) trait GraphView {
+    fn neighbors(&self, level: usize, u: u32) -> &[u32];
+    fn dataset(&self) -> &Dataset;
+    fn metric(&self) -> Metric;
+    fn entry_point(&self) -> u32;
+    fn max_layer(&self) -> usize;
+    fn visited_pool(&self) -> &VisitedPool;
+}
+
+impl GraphView for Hnsw {
+    #[inline]
+    fn neighbors(&self, level: usize, u: u32) -> &[u32] {
+        self.layers[level].neighbors(u)
+    }
+
+    #[inline]
+    fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    #[inline]
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    #[inline]
+    fn entry_point(&self) -> u32 {
+        self.entry
+    }
+
+    #[inline]
+    fn max_layer(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    #[inline]
+    fn visited_pool(&self) -> &VisitedPool {
+        &self.visited_pool
+    }
+}
+
+impl GraphView for NestedHnsw {
+    #[inline]
+    fn neighbors(&self, level: usize, u: u32) -> &[u32] {
+        self.layers[level].neighbors(u)
+    }
+
+    #[inline]
+    fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    #[inline]
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    #[inline]
+    fn entry_point(&self) -> u32 {
+        self.entry
+    }
+
+    #[inline]
+    fn max_layer(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    #[inline]
+    fn visited_pool(&self) -> &VisitedPool {
+        &self.visited_pool
+    }
 }
 
 /// Epoch-stamped visited set, pooled to avoid an O(n) allocation per query.
@@ -38,12 +121,6 @@ impl VisitedList {
             self.epoch.iter_mut().for_each(|e| *e = 0);
             self.cur = 1;
         }
-    }
-
-    /// Read-only visited check (no marking) — used by the prefetch pass.
-    #[inline]
-    fn peek(&self, u: u32) -> bool {
-        self.epoch[u as usize] == self.cur
     }
 
     #[inline]
@@ -81,6 +158,22 @@ impl VisitedPool {
     }
 }
 
+/// Issue a software prefetch for a vector row about to be scored. The walk
+/// is memory-latency-bound (each candidate row is a random ~400B fetch);
+/// issuing the loads while earlier neighbors are still being scored
+/// overlaps the misses with compute (§Perf log: ~15% on the ef=100 walk).
+#[inline(always)]
+fn prefetch_row(row: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch has no memory effects; any address is allowed.
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(row.as_ptr() as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = row;
+}
+
 /// Min-heap wrapper: `BinaryHeap<std::cmp::Reverse<Neighbor>>` keeps the
 /// *worst* result on top so `W` can be bounded in O(log |W|).
 type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
@@ -88,18 +181,22 @@ type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
 /// One layer of best-first graph walk (Algorithm 1's Search-Level).
 ///
 /// `entries` seeds both heaps (already scored); returns the best `factor`
-/// vertices found, unsorted.
+/// vertices found, unsorted. `scratch` is a reusable id buffer: each hop
+/// gathers the unvisited neighbors into it (issuing their vector
+/// prefetches) before any of them is scored.
 #[allow(clippy::too_many_arguments)]
-fn search_level(
-    g: &Hnsw,
+fn search_level<G: GraphView>(
+    g: &G,
     level: usize,
     query: &[f32],
     entries: &[Neighbor],
     factor: usize,
     visited: &mut VisitedList,
+    scratch: &mut Vec<u32>,
     stats: &mut SearchStats,
 ) -> Vec<Neighbor> {
-    let layer = &g.layers[level];
+    let data = g.dataset();
+    let metric = g.metric();
     let mut cand: BinaryHeap<Neighbor> = BinaryHeap::new(); // max-heap C
     let mut res: ResultHeap = BinaryHeap::new(); // min-heap W
     visited.next_epoch();
@@ -118,27 +215,19 @@ fn search_level(
             break;
         }
         stats.hops += 1;
-        // Two-pass neighbor expansion: mark + prefetch first, then score.
-        // The walk is memory-latency-bound (each candidate row is a random
-        // ~400B fetch); issuing the loads early overlaps them with scoring
-        // (§Perf log: ~15% on the ef=100 walk).
-        for &v in layer.neighbors(c.id) {
-            if !visited.peek(v) {
-                #[cfg(target_arch = "x86_64")]
-                unsafe {
-                    core::arch::x86_64::_mm_prefetch(
-                        g.data.get(v as usize).as_ptr() as *const i8,
-                        core::arch::x86_64::_MM_HINT_T0,
-                    );
-                }
+        // Gather-then-score: marking + prefetching every unvisited
+        // neighbor before the first distance evaluation gives each row's
+        // cache miss the whole preceding scoring burst to resolve.
+        scratch.clear();
+        for &v in g.neighbors(level, c.id) {
+            if visited.visit(v) {
+                prefetch_row(data.get(v as usize));
+                scratch.push(v);
             }
         }
-        for &v in layer.neighbors(c.id) {
-            if !visited.visit(v) {
-                continue;
-            }
-            let s = g.metric.score(query, g.data.get(v as usize));
-            stats.dist_evals += 1;
+        stats.dist_evals += scratch.len() as u64;
+        for &v in scratch.iter() {
+            let s = metric.score(query, data.get(v as usize));
             let worst = res.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
             if res.len() < factor || s > worst {
                 let n = Neighbor::new(v, s);
@@ -153,46 +242,131 @@ fn search_level(
     res.into_iter().map(|r| r.0).collect()
 }
 
-/// Full multi-layer search (Algorithm 1). Returns (top-k best first, stats).
-pub(crate) fn search(g: &Hnsw, query: &[f32], k: usize, ef: usize) -> (Vec<Neighbor>, SearchStats) {
-    let mut stats = SearchStats::default();
-    let mut visited = g.visited_pool.take();
-    let entry_score = g.metric.score(query, g.data.get(g.entry as usize));
+/// Full multi-layer walk with caller-provided working memory. Returns the
+/// whole bottom-layer beam (up to `max(ef, k)` results, best first) so
+/// batched callers can re-rank it; plain `search` truncates to `k`.
+fn search_beam<G: GraphView>(
+    g: &G,
+    query: &[f32],
+    k: usize,
+    ef: usize,
+    visited: &mut VisitedList,
+    scratch: &mut Vec<u32>,
+    stats: &mut SearchStats,
+) -> Vec<Neighbor> {
+    let entry = g.entry_point();
+    let entry_score = g.metric().score(query, g.dataset().get(entry as usize));
     stats.dist_evals += 1;
-    let mut eps = vec![Neighbor::new(g.entry, entry_score)];
+    let mut eps = vec![Neighbor::new(entry, entry_score)];
     // Greedy descent through the upper layers (factor 1).
     for t in (1..=g.max_layer()).rev() {
-        let found = search_level(g, t, query, &eps, 1, &mut visited, &mut stats);
+        let found = search_level(g, t, query, &eps, 1, visited, scratch, stats);
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
     }
     // Beam search on the bottom layer with factor max(ef, k).
     let factor = ef.max(k).max(1);
-    let mut found = search_level(g, 0, query, &eps, factor, &mut visited, &mut stats);
-    g.visited_pool.put(visited);
-    found.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    let mut found = search_level(g, 0, query, &eps, factor, visited, scratch, stats);
+    // Score-desc with id tiebreak: the same total order `merge_topk` uses,
+    // so sequential and batched paths agree even on exact score ties.
+    found.sort_unstable_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    found
+}
+
+/// Full multi-layer search (Algorithm 1). Returns (top-k best first, stats).
+pub(crate) fn search<G: GraphView>(
+    g: &G,
+    query: &[f32],
+    k: usize,
+    ef: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut visited = g.visited_pool().take();
+    let mut scratch = Vec::with_capacity(64);
+    let mut found = search_beam(g, query, k, ef, &mut visited, &mut scratch, &mut stats);
+    g.visited_pool().put(visited);
     found.truncate(k);
     (found, stats)
+}
+
+/// Batched search (the executor drain path): every query in the batch
+/// shares one visited-list checkout and scratch buffer, and each query's
+/// bottom-layer beam is re-ranked through `scorer` as a dense
+/// `[beam, d]` block (Algorithm 4 line 7, batched per poll).
+///
+/// When the scorer's re-rank is an identity over walk scores (the native
+/// backend — see [`BatchScorer::rerank_is_identity`]), the block gather +
+/// rescore is skipped: the beam is already exact-scored and sorted in the
+/// same total order, so the result is bit-identical and the hot path pays
+/// nothing for the re-rank structure.
+pub(crate) fn search_batch<G: GraphView>(
+    g: &G,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+) -> Vec<Vec<Neighbor>> {
+    let metric = g.metric();
+    let identity = scorer.rerank_is_identity(metric);
+    let mut stats = SearchStats::default();
+    let mut visited = g.visited_pool().take();
+    let mut scratch = Vec::with_capacity(64);
+    let data = g.dataset();
+    let mut block: Vec<f32> = Vec::new();
+    let mut ids: Vec<u32> = Vec::new();
+    let mut out = Vec::with_capacity(queries.len());
+    for bq in queries {
+        let mut beam =
+            search_beam(g, bq.query, bq.k, bq.ef, &mut visited, &mut scratch, &mut stats);
+        if identity {
+            beam.truncate(bq.k);
+            out.push(beam);
+            continue;
+        }
+        // Gather the beam's vectors into one contiguous block and let the
+        // batch scorer produce the final top-k (exact, deduplicated).
+        block.clear();
+        ids.clear();
+        for n in &beam {
+            ids.push(n.id);
+            block.extend_from_slice(data.get(n.id as usize));
+        }
+        match scorer.rerank(metric, bq.query, &block, &ids, bq.k) {
+            Ok(top) => out.push(top),
+            Err(_) => {
+                // Scorer backend failure: the beam itself is already
+                // exact-scored and sorted; fall back to it.
+                beam.truncate(bq.k);
+                out.push(beam);
+            }
+        }
+    }
+    g.visited_pool().put(visited);
+    out
 }
 
 /// Greedy insert-time descent used by construction (Algorithm 2 lines 6-8):
 /// identical walk to [`search`] but exposed per-layer so build can harvest
 /// `ef_construction` candidates at each level <= `target_level`.
 pub(crate) fn search_for_insert(
-    g: &Hnsw,
+    g: &NestedHnsw,
     query: &[f32],
     target_level: usize,
     ef: usize,
 ) -> Vec<Vec<Neighbor>> {
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool.take();
+    let mut scratch = Vec::with_capacity(64);
     let entry_score = g.metric.score(query, g.data.get(g.entry as usize));
     let mut eps = vec![Neighbor::new(g.entry, entry_score)];
     let max_layer = g.max_layer();
     // Greedy descent above the insertion level.
     for t in ((target_level + 1)..=max_layer).rev() {
-        let found = search_level(g, t, query, &eps, 1, &mut visited, &mut stats);
+        let found = search_level(g, t, query, &eps, 1, &mut visited, &mut scratch, &mut stats);
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
@@ -201,7 +375,7 @@ pub(crate) fn search_for_insert(
     // per-layer candidate sets.
     let mut per_layer = Vec::new();
     for t in (0..=target_level.min(max_layer)).rev() {
-        let found = search_level(g, t, query, &eps, ef, &mut visited, &mut stats);
+        let found = search_level(g, t, query, &eps, ef, &mut visited, &mut scratch, &mut stats);
         eps = found.clone();
         per_layer.push(found);
     }

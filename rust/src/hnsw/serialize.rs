@@ -4,9 +4,14 @@
 //!
 //! Format (little-endian): magic, version, metric, params, n, d, entry,
 //! levels, layer count, per-layer adjacency, then the raw vector data.
+//! The on-disk adjacency is the portable nested form (per-node length +
+//! ids) regardless of the in-memory layout: saving walks the frozen CSR
+//! slices, loading reconstructs nested lists and re-freezes — freezing is
+//! deterministic, so a save/load round trip reproduces the CSR blocks
+//! bit-for-bit.
 
 use super::search::VisitedPool;
-use super::{Hnsw, HnswParams, Layer};
+use super::{Hnsw, HnswParams, Layer, NestedHnsw};
 use crate::dataset::Dataset;
 use crate::error::{PyramidError, Result};
 use crate::metric::Metric;
@@ -56,10 +61,12 @@ impl Hnsw {
         w_u64(w, self.data.len() as u64)?;
         w_u32(w, self.data.dim() as u32)?;
         w_u32(w, self.entry)?;
-        w.write_all(&self.levels.iter().map(|&l| l).collect::<Vec<u8>>())?;
+        w.write_all(&self.levels)?;
         w_u32(w, self.layers.len() as u32)?;
+        let n = self.data.len() as u32;
         for layer in &self.layers {
-            for list in &layer.lists {
+            for u in 0..n {
+                let list = layer.neighbors(u);
                 w_u32(w, list.len() as u32)?;
                 for &v in list {
                     w_u32(w, v)?;
@@ -83,7 +90,8 @@ impl Hnsw {
         Ok(())
     }
 
-    /// Deserialize from a reader.
+    /// Deserialize from a reader (reconstructs the nested lists, then
+    /// freezes back into the CSR serving form).
     pub fn load_from(r: &mut impl Read) -> Result<Self> {
         if r_u32(r)? != MAGIC {
             return Err(PyramidError::Index("bad HNSW magic".into()));
@@ -128,7 +136,7 @@ impl Hnsw {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(Hnsw {
+        Ok(NestedHnsw {
             data: Dataset::from_vec(data, d)?,
             metric,
             params: HnswParams { m, m0, ef_construction, select_heuristic, seed },
@@ -136,7 +144,8 @@ impl Hnsw {
             levels,
             entry,
             visited_pool: VisitedPool::new(n),
-        })
+        }
+        .freeze())
     }
 
     /// Deserialize from a file path.
@@ -162,9 +171,8 @@ mod tests {
         let h2 = Hnsw::load(&p).unwrap();
         assert_eq!(h.entry, h2.entry);
         assert_eq!(h.levels, h2.levels);
-        for (a, b) in h.layers.iter().zip(&h2.layers) {
-            assert_eq!(a.lists, b.lists);
-        }
+        // Deterministic freeze: the CSR blocks round-trip bit-for-bit.
+        assert_eq!(h.layers, h2.layers);
         for i in 0..10 {
             let a = h.search(ds.get(i), 5, 50);
             let b = h2.search(ds.get(i), 5, 50);

@@ -57,12 +57,12 @@ pub mod util;
 pub mod prelude {
     pub use crate::api::{Coordinator, Executor, GraphConstructor};
     pub use crate::baselines::{DistributedKdForest, KdForest, NaiveIndex};
-    pub use crate::bench_harness::{drive_cluster, precision_at_k, LatencyRecorder, TablePrinter, Workload};
+    pub use crate::bench_harness::{drive_cluster, precision_at_k, BenchRecorder, LatencyRecorder, TablePrinter, Workload};
     pub use crate::cluster::{ClusterConfig, SimCluster};
     pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams};
     pub use crate::dataset::{Dataset, SyntheticKind, SyntheticSpec};
     pub use crate::error::{PyramidError, Result};
-    pub use crate::hnsw::{Hnsw, HnswParams};
+    pub use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
     pub use crate::types::{Neighbor, VectorId};

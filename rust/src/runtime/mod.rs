@@ -5,10 +5,17 @@
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 //!
+//! The real [`Engine`] requires the `xla` bindings crate and is gated
+//! behind the off-by-default `pjrt` feature; the offline build compiles a
+//! stub whose `load` always fails after validating the artifacts
+//! directory, so every PJRT-optional call site (tests, benches, examples
+//! all check [`default_artifacts_dir`] first) degrades to the native SIMD
+//! scorer cleanly.
+//!
 //! Executables are compiled lazily per artifact and cached. All artifact
-//! shapes are static; [`Engine`] pads inputs up to the compiled block shape
-//! (score-neutral for depth, masked via `n_valid` for items) and slices the
-//! valid region out of the outputs.
+//! shapes are static; [`Engine`] pads inputs up to the compiled block
+//! shape (score-neutral for depth, masked via `n_valid` for items) and
+//! slices the valid region out of the outputs.
 
 mod manifest;
 mod scorer;
@@ -16,222 +23,331 @@ mod scorer;
 pub use manifest::{ArtifactInfo, Manifest};
 pub use scorer::{BatchScorer, NativeScorer, PjrtScorer};
 
-use crate::error::{PyramidError, Result};
-use crate::metric::Metric;
-use crate::types::Neighbor;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::PathBuf;
 
-/// A compiled-artifact cache over one PJRT CPU client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+mod engine {
+    use super::Manifest;
+    use crate::error::{PyramidError, Result};
+    use crate::metric::Metric;
+    use crate::types::Neighbor;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
 
-impl Engine {
-    /// Load the manifest from an artifacts directory and create the PJRT
-    /// CPU client. Executables compile lazily on first use.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, dir: dir.to_path_buf(), exes: Mutex::new(HashMap::new()) })
+    /// A compiled-artifact cache over one PJRT CPU client.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        dir: PathBuf,
+        exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) the executable for an artifact.
-    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl Engine {
+        /// Load the manifest from an artifacts directory and create the PJRT
+        /// CPU client. Executables compile lazily on first use.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Engine { client, manifest, dir: dir.to_path_buf(), exes: Mutex::new(HashMap::new()) })
         }
-        let info = self
-            .manifest
-            .by_name(name)
-            .ok_or_else(|| PyramidError::Artifact(format!("no artifact named {name}")))?;
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.client.compile(&comp)?);
-        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Number of executables compiled so far (for perf accounting).
-    pub fn compiled_count(&self) -> usize {
-        self.exes.lock().unwrap().len()
-    }
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-    /// Pad a row-major [rows, d] buffer into [rows_cap, d_cap] zeros.
-    fn pad(buf: &[f32], rows: usize, d: usize, rows_cap: usize, d_cap: usize) -> Vec<f32> {
-        let mut out = vec![0f32; rows_cap * d_cap];
-        for r in 0..rows {
-            out[r * d_cap..r * d_cap + d].copy_from_slice(&buf[r * d..(r + 1) * d]);
+        /// Compile (or fetch from cache) the executable for an artifact.
+        fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.exes.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let info = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| PyramidError::Artifact(format!("no artifact named {name}")))?;
+            let path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(self.client.compile(&comp)?);
+            self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
         }
-        out
-    }
 
-    /// Dense score block through the AOT `scores` artifact.
-    ///
-    /// `q`: [bq, d] row-major, `x`: [nx, d] row-major. Returns row-major
-    /// [bq, nx] scores. Requires bq <= artifact B, nx <= artifact N,
-    /// d <= artifact d.
-    pub fn scores(&self, metric: Metric, q: &[f32], bq: usize, x: &[f32], nx: usize, d: usize) -> Result<Vec<f32>> {
-        let info = self
-            .manifest
-            .find_b("scores", Some(metric), d, bq)
-            .ok_or_else(|| PyramidError::Artifact(format!("no scores artifact for {metric}/d={d}")))?
-            .clone();
-        if bq > info.b || nx > info.n {
-            return Err(PyramidError::Artifact(format!(
-                "scores block ({bq},{nx}) exceeds artifact capacity ({},{})",
-                info.b, info.n
-            )));
+        /// Number of executables compiled so far (for perf accounting).
+        pub fn compiled_count(&self) -> usize {
+            self.exes.lock().unwrap().len()
         }
-        let (cap_b, cap_n, cap_d) = (info.b, info.n, info.d);
-        let exe = self.executable(&info.name)?;
-        let qp = Self::pad(q, bq, d, cap_b, cap_d);
-        let xp = Self::pad(x, nx, d, cap_n, cap_d);
-        let ql = xla::Literal::vec1(&qp).reshape(&[cap_b as i64, cap_d as i64])?;
-        let xl = xla::Literal::vec1(&xp).reshape(&[cap_n as i64, cap_d as i64])?;
-        let result = exe.execute::<xla::Literal>(&[ql, xl])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let full = out.to_vec::<f32>()?; // [cap_b, cap_n]
-        let mut sliced = Vec::with_capacity(bq * nx);
-        for r in 0..bq {
-            sliced.extend_from_slice(&full[r * cap_n..r * cap_n + nx]);
-        }
-        Ok(sliced)
-    }
 
-    /// Batched re-rank through the AOT fused score+top-k artifact
-    /// (the coordinator's merge step, Algorithm 4 line 9).
-    ///
-    /// `q`: [bq, d] queries; `x`: [nx, d] candidate vectors; `ids[j]` is the
-    /// global id of candidate row j. Returns per-query top-k as Neighbors.
-    #[allow(clippy::too_many_arguments)]
-    pub fn rerank_topk(
-        &self,
-        metric: Metric,
-        q: &[f32],
-        bq: usize,
-        x: &[f32],
-        ids: &[u32],
-        d: usize,
-        k: usize,
-    ) -> Result<Vec<Vec<Neighbor>>> {
-        let nx = ids.len();
-        let info = self
-            .manifest
-            .find_b("rerank", Some(metric), d, bq)
-            .ok_or_else(|| PyramidError::Artifact(format!("no rerank artifact for {metric}/d={d}")))?
-            .clone();
-        if bq > info.b || nx > info.n {
-            return Err(PyramidError::Artifact(format!(
-                "rerank block ({bq},{nx}) exceeds artifact capacity ({},{})",
-                info.b, info.n
-            )));
+        /// Pad a row-major [rows, d] buffer into [rows_cap, d_cap] zeros.
+        fn pad(buf: &[f32], rows: usize, d: usize, rows_cap: usize, d_cap: usize) -> Vec<f32> {
+            let mut out = vec![0f32; rows_cap * d_cap];
+            for r in 0..rows {
+                out[r * d_cap..r * d_cap + d].copy_from_slice(&buf[r * d..(r + 1) * d]);
+            }
+            out
         }
-        let (cap_b, cap_n, cap_d, cap_k) = (info.b, info.n, info.d, info.k);
-        let exe = self.executable(&info.name)?;
-        let qp = Self::pad(q, bq, d, cap_b, cap_d);
-        let xp = Self::pad(x, nx, d, cap_n, cap_d);
-        let ql = xla::Literal::vec1(&qp).reshape(&[cap_b as i64, cap_d as i64])?;
-        let xl = xla::Literal::vec1(&xp).reshape(&[cap_n as i64, cap_d as i64])?;
-        let nv = xla::Literal::scalar(nx as i32);
-        let result = exe.execute::<xla::Literal>(&[ql, xl, nv])?[0][0].to_literal_sync()?;
-        let (vals, idx) = result.to_tuple2()?;
-        let vals = vals.to_vec::<f32>()?; // [cap_b, cap_k]
-        let idx = idx.to_vec::<i32>()?; // [cap_b, cap_k]
-        let k_eff = k.min(cap_k).min(nx);
-        let mut out = Vec::with_capacity(bq);
-        for r in 0..bq {
-            let mut row = Vec::with_capacity(k_eff);
-            for j in 0..k_eff {
-                let v = vals[r * cap_k + j];
-                let local = idx[r * cap_k + j];
-                if !v.is_finite() || local < 0 || local as usize >= nx {
-                    break; // masked padding reached
+
+        /// Dense score block through the AOT `scores` artifact.
+        ///
+        /// `q`: [bq, d] row-major, `x`: [nx, d] row-major. Returns row-major
+        /// [bq, nx] scores. Requires bq <= artifact B, nx <= artifact N,
+        /// d <= artifact d.
+        pub fn scores(
+            &self,
+            metric: Metric,
+            q: &[f32],
+            bq: usize,
+            x: &[f32],
+            nx: usize,
+            d: usize,
+        ) -> Result<Vec<f32>> {
+            let info = self
+                .manifest
+                .find_b("scores", Some(metric), d, bq)
+                .ok_or_else(|| {
+                    PyramidError::Artifact(format!("no scores artifact for {metric}/d={d}"))
+                })?
+                .clone();
+            if bq > info.b || nx > info.n {
+                return Err(PyramidError::Artifact(format!(
+                    "scores block ({bq},{nx}) exceeds artifact capacity ({},{})",
+                    info.b, info.n
+                )));
+            }
+            let (cap_b, cap_n, cap_d) = (info.b, info.n, info.d);
+            let exe = self.executable(&info.name)?;
+            let qp = Self::pad(q, bq, d, cap_b, cap_d);
+            let xp = Self::pad(x, nx, d, cap_n, cap_d);
+            let ql = xla::Literal::vec1(&qp).reshape(&[cap_b as i64, cap_d as i64])?;
+            let xl = xla::Literal::vec1(&xp).reshape(&[cap_n as i64, cap_d as i64])?;
+            let result = exe.execute::<xla::Literal>(&[ql, xl])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let full = out.to_vec::<f32>()?; // [cap_b, cap_n]
+            let mut sliced = Vec::with_capacity(bq * nx);
+            for r in 0..bq {
+                sliced.extend_from_slice(&full[r * cap_n..r * cap_n + nx]);
+            }
+            Ok(sliced)
+        }
+
+        /// Batched re-rank through the AOT fused score+top-k artifact
+        /// (the coordinator's merge step, Algorithm 4 line 9).
+        ///
+        /// `q`: [bq, d] queries; `x`: [nx, d] candidate vectors; `ids[j]` is
+        /// the global id of candidate row j. Returns per-query top-k as
+        /// Neighbors.
+        #[allow(clippy::too_many_arguments)]
+        pub fn rerank_topk(
+            &self,
+            metric: Metric,
+            q: &[f32],
+            bq: usize,
+            x: &[f32],
+            ids: &[u32],
+            d: usize,
+            k: usize,
+        ) -> Result<Vec<Vec<Neighbor>>> {
+            let nx = ids.len();
+            let info = self
+                .manifest
+                .find_b("rerank", Some(metric), d, bq)
+                .ok_or_else(|| {
+                    PyramidError::Artifact(format!("no rerank artifact for {metric}/d={d}"))
+                })?
+                .clone();
+            if bq > info.b || nx > info.n {
+                return Err(PyramidError::Artifact(format!(
+                    "rerank block ({bq},{nx}) exceeds artifact capacity ({},{})",
+                    info.b, info.n
+                )));
+            }
+            let (cap_b, cap_n, cap_d, cap_k) = (info.b, info.n, info.d, info.k);
+            let exe = self.executable(&info.name)?;
+            let qp = Self::pad(q, bq, d, cap_b, cap_d);
+            let xp = Self::pad(x, nx, d, cap_n, cap_d);
+            let ql = xla::Literal::vec1(&qp).reshape(&[cap_b as i64, cap_d as i64])?;
+            let xl = xla::Literal::vec1(&xp).reshape(&[cap_n as i64, cap_d as i64])?;
+            let nv = xla::Literal::scalar(nx as i32);
+            let result = exe.execute::<xla::Literal>(&[ql, xl, nv])?[0][0].to_literal_sync()?;
+            let (vals, idx) = result.to_tuple2()?;
+            let vals = vals.to_vec::<f32>()?; // [cap_b, cap_k]
+            let idx = idx.to_vec::<i32>()?; // [cap_b, cap_k]
+            let k_eff = k.min(cap_k).min(nx);
+            let mut out = Vec::with_capacity(bq);
+            for r in 0..bq {
+                let mut row = Vec::with_capacity(k_eff);
+                for j in 0..k_eff {
+                    let v = vals[r * cap_k + j];
+                    let local = idx[r * cap_k + j];
+                    if !v.is_finite() || local < 0 || local as usize >= nx {
+                        break; // masked padding reached
+                    }
+                    row.push(Neighbor::new(ids[local as usize], v));
                 }
-                row.push(Neighbor::new(ids[local as usize], v));
+                out.push(row);
             }
-            out.push(row);
+            Ok(out)
         }
-        Ok(out)
+
+        /// One weighted Lloyd partial step through the AOT `kmeans_step`
+        /// artifact: returns (sums [m, d], counts [m]) for a block of
+        /// points. Streaming blocks through this and reducing partials is
+        /// exactly the paper's distributed-kmeans workflow (Algorithm 3,
+        /// "Distributed workflow").
+        pub fn kmeans_step(
+            &self,
+            points: &[f32],
+            npts: usize,
+            centers: &[f32],
+            m: usize,
+            weights: &[f32],
+            d: usize,
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            let info = self
+                .manifest
+                .find("kmeans_step", None, d)
+                .ok_or_else(|| {
+                    PyramidError::Artifact(format!("no kmeans_step artifact for d={d}"))
+                })?
+                .clone();
+            if npts > info.n || m > info.m {
+                return Err(PyramidError::Artifact(format!(
+                    "kmeans block ({npts},{m}) exceeds artifact capacity ({},{})",
+                    info.n, info.m
+                )));
+            }
+            let (cap_n, cap_m, cap_d) = (info.n, info.m, info.d);
+            let exe = self.executable(&info.name)?;
+            let pp = Self::pad(points, npts, d, cap_n, cap_d);
+            // Pad centers with far-away sentinels so no real point selects
+            // them; their counts stay 0 and rust slices them off.
+            let mut cp = vec![0f32; cap_m * cap_d];
+            for r in 0..cap_m {
+                if r < m {
+                    cp[r * cap_d..r * cap_d + d].copy_from_slice(&centers[r * d..(r + 1) * d]);
+                } else {
+                    cp[r * cap_d] = 1e30;
+                }
+            }
+            let mut wp = vec![0f32; cap_n];
+            wp[..npts].copy_from_slice(&weights[..npts]);
+            let pl = xla::Literal::vec1(&pp).reshape(&[cap_n as i64, cap_d as i64])?;
+            let cl = xla::Literal::vec1(&cp).reshape(&[cap_m as i64, cap_d as i64])?;
+            let wl = xla::Literal::vec1(&wp);
+            let result = exe.execute::<xla::Literal>(&[pl, cl, wl])?[0][0].to_literal_sync()?;
+            let (sums, counts) = result.to_tuple2()?;
+            let sums_full = sums.to_vec::<f32>()?; // [cap_m, cap_d]
+            let counts_full = counts.to_vec::<f32>()?; // [cap_m]
+            let mut sums_out = Vec::with_capacity(m * d);
+            for r in 0..m {
+                sums_out.extend_from_slice(&sums_full[r * cap_d..r * cap_d + d]);
+            }
+            Ok((sums_out, counts_full[..m].to_vec()))
+        }
+
+        /// Max (query, candidate) block the rerank artifact accepts for `d`.
+        pub fn rerank_capacity(&self, metric: Metric, d: usize) -> Option<(usize, usize)> {
+            self.manifest.find("rerank", Some(metric), d).map(|i| (i.b, i.n))
+        }
     }
 
-    /// One weighted Lloyd partial step through the AOT `kmeans_step`
-    /// artifact: returns (sums [m, d], counts [m]) for a block of points.
-    /// Streaming blocks through this and reducing partials is exactly the
-    /// paper's distributed-kmeans workflow (Algorithm 3, "Distributed
-    /// workflow").
-    pub fn kmeans_step(
-        &self,
-        points: &[f32],
-        npts: usize,
-        centers: &[f32],
-        m: usize,
-        weights: &[f32],
-        d: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let info = self
-            .manifest
-            .find("kmeans_step", None, d)
-            .ok_or_else(|| PyramidError::Artifact(format!("no kmeans_step artifact for d={d}")))?
-            .clone();
-        if npts > info.n || m > info.m {
-            return Err(PyramidError::Artifact(format!(
-                "kmeans block ({npts},{m}) exceeds artifact capacity ({},{})",
-                info.n, info.m
-            )));
+    impl std::fmt::Debug for Engine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Engine")
+                .field("artifacts", &self.manifest.len())
+                .field("compiled", &self.compiled_count())
+                .finish()
         }
-        let (cap_n, cap_m, cap_d) = (info.n, info.m, info.d);
-        let exe = self.executable(&info.name)?;
-        let pp = Self::pad(points, npts, d, cap_n, cap_d);
-        // Pad centers with far-away sentinels so no real point selects
-        // them; their counts stay 0 and rust slices them off.
-        let mut cp = vec![0f32; cap_m * cap_d];
-        for r in 0..cap_m {
-            if r < m {
-                cp[r * cap_d..r * cap_d + d].copy_from_slice(&centers[r * d..(r + 1) * d]);
-            } else {
-                cp[r * cap_d] = 1e30;
-            }
-        }
-        let mut wp = vec![0f32; cap_n];
-        wp[..npts].copy_from_slice(&weights[..npts]);
-        let pl = xla::Literal::vec1(&pp).reshape(&[cap_n as i64, cap_d as i64])?;
-        let cl = xla::Literal::vec1(&cp).reshape(&[cap_m as i64, cap_d as i64])?;
-        let wl = xla::Literal::vec1(&wp);
-        let result = exe.execute::<xla::Literal>(&[pl, cl, wl])?[0][0].to_literal_sync()?;
-        let (sums, counts) = result.to_tuple2()?;
-        let sums_full = sums.to_vec::<f32>()?; // [cap_m, cap_d]
-        let counts_full = counts.to_vec::<f32>()?; // [cap_m]
-        let mut sums_out = Vec::with_capacity(m * d);
-        for r in 0..m {
-            sums_out.extend_from_slice(&sums_full[r * cap_d..r * cap_d + d]);
-        }
-        Ok((sums_out, counts_full[..m].to_vec()))
-    }
-
-    /// Max (query, candidate) block the rerank artifact accepts for `d`.
-    pub fn rerank_capacity(&self, metric: Metric, d: usize) -> Option<(usize, usize)> {
-        self.manifest.find("rerank", Some(metric), d).map(|i| (i.b, i.n))
     }
 }
 
-impl std::fmt::Debug for Engine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Engine")
-            .field("artifacts", &self.manifest.len())
-            .field("compiled", &self.compiled_count())
-            .finish()
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    //! Offline stub: validates the artifacts directory, then reports the
+    //! missing feature. Never constructed, so the per-op methods exist
+    //! only to keep [`super::scorer`] compiling; they are unreachable.
+
+    use super::Manifest;
+    use crate::error::{PyramidError, Result};
+    use crate::metric::Metric;
+    use crate::types::Neighbor;
+    use std::path::Path;
+
+    /// Stub for the PJRT engine (`pjrt` feature disabled).
+    #[derive(Debug)]
+    pub struct Engine {
+        manifest: Manifest,
+    }
+
+    fn unavailable() -> PyramidError {
+        PyramidError::Runtime(
+            "PJRT engine not compiled in: build with `--features pjrt` and the xla bindings vendored"
+                .into(),
+        )
+    }
+
+    impl Engine {
+        /// Always fails: first on an unreadable artifacts directory (same
+        /// failure mode as the real engine on a bad path), then on the
+        /// missing feature.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let _manifest = Manifest::load(&dir.join("manifest.json"))?;
+            Err(unavailable())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+
+        pub fn scores(
+            &self,
+            _metric: Metric,
+            _q: &[f32],
+            _bq: usize,
+            _x: &[f32],
+            _nx: usize,
+            _d: usize,
+        ) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn rerank_topk(
+            &self,
+            _metric: Metric,
+            _q: &[f32],
+            _bq: usize,
+            _x: &[f32],
+            _ids: &[u32],
+            _d: usize,
+            _k: usize,
+        ) -> Result<Vec<Vec<Neighbor>>> {
+            Err(unavailable())
+        }
+
+        pub fn kmeans_step(
+            &self,
+            _points: &[f32],
+            _npts: usize,
+            _centers: &[f32],
+            _m: usize,
+            _weights: &[f32],
+            _d: usize,
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            Err(unavailable())
+        }
+
+        pub fn rerank_capacity(&self, _metric: Metric, _d: usize) -> Option<(usize, usize)> {
+            None
+        }
     }
 }
+
+pub use engine::Engine;
 
 /// Locate the repo's artifacts directory (for tests/examples): walks up
 /// from CWD looking for `artifacts/manifest.json`, or honours

@@ -43,9 +43,19 @@ pub trait BatchScorer: Send + Sync {
 
     /// Human-readable backend name (for logs and EXPERIMENTS.md).
     fn name(&self) -> &'static str;
+
+    /// True when [`Self::rerank`] over vectors already scored with
+    /// [`Metric::score`] provably reproduces those scores (same kernels),
+    /// so callers holding an exact-scored candidate list may skip the
+    /// re-rank block entirely. Remote/approximate backends return false.
+    fn rerank_is_identity(&self, metric: Metric) -> bool {
+        let _ = metric;
+        false
+    }
 }
 
-/// Pure-rust scorer (8-lane unrolled kernels from [`crate::metric`]).
+/// Pure-rust scorer (runtime-dispatched SIMD kernels from
+/// [`crate::metric`], driven through [`Metric::score_many`]).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeScorer;
 
@@ -59,11 +69,10 @@ impl BatchScorer for NativeScorer {
         k: usize,
     ) -> Result<Vec<Neighbor>> {
         let d = query.len();
-        let scored: Vec<Neighbor> = ids
-            .iter()
-            .enumerate()
-            .map(|(j, &id)| Neighbor::new(id, metric.score(query, &cand_vecs[j * d..(j + 1) * d])))
-            .collect();
+        let mut scores = Vec::new();
+        metric.score_many(query, cand_vecs, d, &mut scores);
+        let scored: Vec<Neighbor> =
+            ids.iter().zip(&scores).map(|(&id, &s)| Neighbor::new(id, s)).collect();
         Ok(merge_topk(scored, k))
     }
 
@@ -77,17 +86,22 @@ impl BatchScorer for NativeScorer {
         d: usize,
     ) -> Result<Vec<f32>> {
         let mut out = Vec::with_capacity(bq * nx);
+        let mut row = Vec::with_capacity(nx);
         for r in 0..bq {
-            let qr = &q[r * d..(r + 1) * d];
-            for j in 0..nx {
-                out.push(metric.score(qr, &x[j * d..(j + 1) * d]));
-            }
+            metric.score_many(&q[r * d..(r + 1) * d], &x[..nx * d], d, &mut row);
+            out.extend_from_slice(&row);
         }
         Ok(out)
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn rerank_is_identity(&self, _metric: Metric) -> bool {
+        // Same dispatched kernels as the HNSW walk: rescoring a walk's own
+        // candidates is bit-identical, so it can be skipped.
+        true
     }
 }
 

@@ -44,6 +44,17 @@ impl PartialOrd for Neighbor {
     }
 }
 
+/// One query of an executor drain-batch (borrowed view into the polled
+/// requests; see [`crate::executor`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchQuery<'a> {
+    pub query: &'a [f32],
+    /// Neighbors to return.
+    pub k: usize,
+    /// Beam width for the bottom-layer walk.
+    pub ef: usize,
+}
+
 /// Merge several partial top-k lists into a global top-k (Algorithm 4
 /// line 9). Deduplicates ids (MIPS replication can return the same item
 /// from several sub-HNSWs, Algorithm 5 lines 12-15).
