@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_hot_paths.json against the committed baseline.
+
+Usage: bench_trend.py <fresh.json> <baseline.json>
+
+Both files are the flat {"bench name": number} objects BenchRecorder
+writes. For ns/op entries a higher fresh value is a regression; entries
+whose name contains "speedup" are ratios where *lower* is the regression
+direction. Anything more than THRESHOLD worse than baseline emits a
+GitHub ::warning:: annotation. This script never fails the job — shared
+runners are too noisy to gate on; the annotations are the trend signal.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.25
+
+
+def main(fresh_path, baseline_path):
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(
+            f"::notice::no committed bench baseline at {baseline_path}; "
+            f"commit this run's {fresh_path} there to seed the trend"
+        )
+        return 0
+    if not base:
+        print(
+            f"::notice::bench baseline {baseline_path} is empty (seeded without "
+            f"a toolchain); commit this run's {fresh_path} as {baseline_path} "
+            f"to activate the trend diff"
+        )
+        return 0
+    regressions = 0
+    compared = 0
+    for name in sorted(fresh):
+        ref = base.get(name)
+        val = fresh[name]
+        if not isinstance(ref, (int, float)) or isinstance(ref, bool) or ref <= 0:
+            continue
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            continue
+        compared += 1
+        if "speedup" in name:
+            delta = (ref - val) / ref  # ratio metric: lower = regression
+            arrow = f"{ref:.2f}x -> {val:.2f}x"
+        else:
+            delta = (val - ref) / ref  # ns/op: higher = regression
+            arrow = f"{ref:.1f} -> {val:.1f} ns/op"
+        if delta > THRESHOLD:
+            regressions += 1
+            print(
+                f"::warning file={baseline_path}::bench regression: {name} "
+                f"{arrow} ({delta * 100.0:+.0f}% worse than baseline)"
+            )
+    print(
+        f"bench trend: compared {compared} entries, "
+        f"{regressions} regression(s) beyond {int(THRESHOLD * 100)}%"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    # Warn-only by contract: a broken input must not turn the job red.
+    try:
+        main(sys.argv[1], sys.argv[2])
+    except Exception as e:  # noqa: BLE001 — trend diff is best-effort
+        print(f"::notice::bench trend diff skipped ({type(e).__name__}: {e})")
+    sys.exit(0)

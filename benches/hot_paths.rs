@@ -9,21 +9,29 @@
 //! name) to `BENCH_hot_paths.json` via [`BenchRecorder`] so the perf
 //! trajectory is recorded run over run.
 //!
-//! The headline comparison is `hnsw/search …` (frozen CSR adjacency, the
-//! serving layout) against `hnsw/search-nested …` (the nested `Vec<Vec>`
-//! build form) on the same graph: the CSR freeze is the PR-1 tentpole,
-//! and the speedup is measured and recorded here (as
-//! `hnsw/csr-speedup ef=*` in the JSON) rather than asserted — it is a
-//! property of the memory system, and shared CI runners are too noisy for
-//! a hard threshold to gate on. Watch the recorded trend instead.
+//! The headline comparisons, all measured on identical graphs and
+//! recorded as ratio metrics in the JSON rather than asserted (they are
+//! properties of the memory system; shared CI runners are too noisy for a
+//! hard threshold — the CI trend-diff step watches them instead):
+//!
+//! * `hnsw/csr-speedup ef=*` — frozen CSR serving layout (`hnsw/search`)
+//!   vs the nested `Vec<Vec>` build form (`hnsw/search-nested`), PR 1.
+//! * `hnsw/block-walk-speedup ef=*` — the block-scored bottom-layer walk
+//!   (each neighbor block through one `Metric::score_rows` pass) vs the
+//!   per-edge baseline (`hnsw/search-per-edge`), PR 2.
+//! * `router/batch-speedup b=*` — `Router::route_batch` (shared
+//!   visited-pool meta walk for a whole block) vs sequential `route`
+//!   calls, PR 2.
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
 use pyramid::dataset::SyntheticSpec;
-use pyramid::hnsw::{HnswParams, NestedHnsw};
+use pyramid::hnsw::{Hnsw, HnswParams, NestedHnsw};
+use pyramid::meta::Router;
 use pyramid::metric::{dot, dot_unrolled, l2_sq, l2_sq_unrolled, Metric};
 use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
 use pyramid::types::{merge_topk, BatchQuery, Neighbor};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Time `f` until `target` wall time after warmup; print and return ns/op.
@@ -127,6 +135,7 @@ fn main() {
             nested_ns.insert(ef, ns);
         }
         let h = nested.freeze();
+        let mut frozen_ns = std::collections::HashMap::new();
         for ef in [50usize, 100, 200] {
             let mut qi = 0usize;
             let ns = bench(&mut rec, &format!("hnsw/search n={n} ef={ef}"), &mut || {
@@ -135,9 +144,26 @@ fn main() {
                 qi += 1;
                 1
             });
+            frozen_ns.insert(ef, ns);
             let speedup = nested_ns[&ef] / ns;
             rec.record(&format!("hnsw/csr-speedup ef={ef}"), speedup);
             println!("  -> frozen CSR speedup vs nested @ ef={ef}: {speedup:.2}x");
+        }
+        // Per-edge scoring baseline on the same frozen graph: the default
+        // walk block-scores each gathered neighbor set through one
+        // `score_rows` pass; this measures what that buys over individual
+        // `Metric::score` calls (identical results, pinned by tests).
+        for ef in [50usize, 100, 200] {
+            let mut qi = 0usize;
+            let ns = bench(&mut rec, &format!("hnsw/search-per-edge n={n} ef={ef}"), &mut || {
+                let q = queries.get(qi % queries.len());
+                std::hint::black_box(h.search_per_edge(q, 10, ef));
+                qi += 1;
+                1
+            });
+            let speedup = ns / frozen_ns[&ef];
+            rec.record(&format!("hnsw/block-walk-speedup ef={ef}"), speedup);
+            println!("  -> block-scored walk speedup vs per-edge @ ef={ef}: {speedup:.2}x");
         }
         let (_, stats) = h.search_with_stats(queries.get(0), 10, 100);
         println!("  (ef=100 walk: {} dist evals, {} hops)", stats.dist_evals, stats.hops);
@@ -154,6 +180,39 @@ fn main() {
                 8
             });
         }
+    }
+
+    // --- meta-HNSW routing: batched vs sequential ---------------------------
+    if run("router") {
+        let m = if smoke { 2_000 } else { 10_000 };
+        let parts = 16usize;
+        let centers = SyntheticSpec::deep_like(m, 96, 11).generate();
+        let meta = Hnsw::build(centers, Metric::L2, HnswParams::default()).unwrap();
+        // A synthetic balanced partition map is enough: routing cost is
+        // the meta walk, not the id lookup.
+        let partition: Vec<u32> = (0..m as u32).map(|u| u % parts as u32).collect();
+        let router = Router::new(Arc::new(meta), Arc::new(partition), parts);
+        let queries = SyntheticSpec::deep_like(m, 96, 12).queries(256);
+        const B: usize = 32;
+        let mut qi = 0usize;
+        let seq_ns = bench(&mut rec, &format!("router/route x{B} sequential"), &mut || {
+            for j in 0..B {
+                std::hint::black_box(router.route(queries.get((qi + j) % queries.len()), 4, 100));
+            }
+            qi += B;
+            B as u64
+        });
+        let mut qj = 0usize;
+        let batch_ns = bench(&mut rec, &format!("router/route_batch b={B}"), &mut || {
+            let block: Vec<&[f32]> =
+                (0..B).map(|j| queries.get((qj + j) % queries.len())).collect();
+            std::hint::black_box(router.route_batch(&block, 4, 100));
+            qj += B;
+            B as u64
+        });
+        let speedup = seq_ns / batch_ns;
+        rec.record(&format!("router/batch-speedup b={B}"), speedup);
+        println!("  -> batched routing speedup vs sequential @ b={B}: {speedup:.2}x");
     }
 
     // --- merge / coordinator path -------------------------------------------

@@ -82,6 +82,14 @@ impl Coordinator {
         self.node.execute(query, para)
     }
 
+    /// Batched synchronous query — Listing 1's `execute`, batch-native:
+    /// one meta-HNSW routing pass, one broker fan-out and one gather for
+    /// the whole block. Per-query results are identical to sequential
+    /// [`Self::execute`] calls.
+    pub fn execute_batch(&self, queries: &[&[f32]], para: &QueryParams) -> Result<Vec<Vec<Neighbor>>> {
+        self.node.execute_batch(queries, para)
+    }
+
     /// Asynchronous query with callback (Listing 1 `execute_async`).
     pub fn execute_async<F>(&self, query: Vec<f32>, para: QueryParams, callback: F) -> Result<()>
     where
@@ -185,6 +193,21 @@ mod tests {
         let res = coord.execute(data.get(17), &para).unwrap();
         assert_eq!(res.len(), 5);
         assert_eq!(res[0].id, 17, "item should be its own nearest neighbor");
+
+        // Batch entry point (batch-native Listing 1): identical per-query
+        // top-k to sequential execute.
+        let batch_q: Vec<&[f32]> = (10usize..14).map(|i| data.get(i)).collect();
+        let batched = coord.execute_batch(&batch_q, &para).unwrap();
+        assert_eq!(batched.len(), 4);
+        for (j, q) in batch_q.iter().enumerate() {
+            let seq = coord.execute(q, &para).unwrap();
+            assert_eq!(
+                batched[j].iter().map(|n| n.id).collect::<Vec<_>>(),
+                seq.iter().map(|n| n.id).collect::<Vec<_>>(),
+                "batched query {j} diverges from sequential execute"
+            );
+            assert_eq!(batched[j][0].id, (10 + j) as u32);
+        }
 
         // execute_async delivers through the callback.
         let (tx, rx) = std::sync::mpsc::channel();

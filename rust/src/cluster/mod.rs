@@ -279,6 +279,23 @@ impl SimCluster {
         }
     }
 
+    /// Batched [`Self::execute`]: the whole block goes to one round-robin
+    /// coordinator ([`CoordinatorNode::execute_batch`]); on timeout the
+    /// block retries once on the next coordinator, mirroring the
+    /// single-query retry story.
+    pub fn execute_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &QueryParams,
+    ) -> Result<Vec<Vec<Neighbor>>> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        match self.coordinator(c).execute_batch(queries, params) {
+            Ok(r) => Ok(r),
+            Err(PyramidError::Timeout(_)) => self.coordinator(c + 1).execute_batch(queries, params),
+            Err(e) => Err(e),
+        }
+    }
+
     /// Kill a machine: all executors on it crash (no cleanup).
     pub fn kill_host(&self, host: usize) {
         self.hosts[host].alive.store(false, Ordering::Relaxed);

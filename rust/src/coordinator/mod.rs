@@ -10,6 +10,9 @@
 //! `execute` is synchronous per calling thread (many client threads drive
 //! throughput); `execute_async` schedules onto the coordinator's worker
 //! pool and invokes a callback, mirroring the paper's API (Listing 1).
+//! `execute_batch` is the batch-native form: one routing pass, one
+//! fan-out and one gather for a whole query block, so the coordinator
+//! stops being the serial stage in front of the batched executors.
 
 use crate::broker::Broker;
 use crate::config::QueryParams;
@@ -172,70 +175,130 @@ impl CoordinatorNode {
         &self.router
     }
 
-    /// Process one query synchronously (paper Listing 1 `execute`).
+    /// Process one query synchronously (paper Listing 1 `execute`) — a
+    /// batch of one through [`Self::execute_batch`], so the two paths can
+    /// never diverge.
     pub fn execute(&self, query: &[f32], params: &QueryParams) -> Result<Vec<Neighbor>> {
+        let mut results = self.execute_batch(&[query], params)?;
+        Ok(results.pop().expect("execute_batch returns one result per query"))
+    }
+
+    /// Process a whole query block in one batched pass — the batch-native
+    /// extension of Listing 1's `execute`. The block takes **one**
+    /// meta-HNSW routing pass ([`Router::route_batch`]: shared visited
+    /// pool, block-scored walks), one fan-out of all per-partition
+    /// requests through the broker (executors drain them as poll
+    /// batches), and one gather loop keyed by qid before the per-query
+    /// top-k merges. Results are per-query identical to sequential
+    /// [`Self::execute`] calls.
+    ///
+    /// Queries whose partials only partially arrive by the deadline merge
+    /// what they got (counted in `metrics.timeouts`); if any query
+    /// receives *nothing* the whole call returns the timeout error, like
+    /// `execute` does for its single query. That makes a block
+    /// all-or-nothing under partition blackout — deliberate: a block is
+    /// one logical request and retries as one (see
+    /// [`crate::cluster::SimCluster::execute_batch`]). Callers that need
+    /// per-query failure isolation on an unhealthy cluster should issue
+    /// sequential [`Self::execute`] calls instead; `cfg.timeout` is also
+    /// per *call*, so very large blocks on a loaded cluster may warrant a
+    /// proportionally larger timeout.
+    pub fn execute_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &QueryParams,
+    ) -> Result<Vec<Vec<Neighbor>>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
         let start = Instant::now();
-        let prepared = self.router.prepare_query(query);
-        let parts = self.router.route(&prepared, params.branch, params.meta_ef);
-        let qid = self.next_qid.fetch_add(1, Ordering::Relaxed);
+        let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
+            queries.iter().map(|q| self.router.prepare_query(q)).collect();
+        let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
+        let parts = self.router.route_batch(&views, params.branch, params.meta_ef);
+        let n = queries.len() as u64;
+        let base_qid = self.next_qid.fetch_add(n, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel::<PartialResult>();
-        let query_arc = Arc::new(prepared.into_owned());
         let want_vectors = self.scorer.is_some();
-        for &p in &parts {
-            self.broker.publish(
-                &topic_for(p),
-                qid,
-                QueryRequest {
+        let query_arcs: Vec<Arc<Vec<f32>>> =
+            prepared.into_iter().map(|q| Arc::new(q.into_owned())).collect();
+        // Fan the whole block out before gathering anything: every
+        // executor sees as deep a backlog as possible per drain.
+        let mut expected = 0usize;
+        for (i, parts_i) in parts.iter().enumerate() {
+            let qid = base_qid + i as u64;
+            for &p in parts_i {
+                self.broker.publish(
+                    &topic_for(p),
                     qid,
-                    partition: p,
-                    query: query_arc.clone(),
-                    k: params.k,
-                    ef: params.ef,
-                    return_vectors: want_vectors,
-                    reply: reply_tx.clone(),
-                },
-            )?;
+                    QueryRequest {
+                        qid,
+                        partition: p,
+                        query: query_arcs[i].clone(),
+                        k: params.k,
+                        ef: params.ef,
+                        return_vectors: want_vectors,
+                        reply: reply_tx.clone(),
+                    },
+                )?;
+            }
+            expected += parts_i.len();
         }
         drop(reply_tx);
-        // Gather one partial per involved partition, bounded by deadline.
+        // Gather all partials for the block, keyed by qid, bounded by one
+        // shared deadline.
         let deadline = start + self.cfg.timeout;
-        let mut got: Vec<PartialResult> = Vec::with_capacity(parts.len());
-        let mut seen_parts: std::collections::HashSet<PartitionId> = std::collections::HashSet::new();
-        while seen_parts.len() < parts.len() {
+        let mut got: Vec<Vec<PartialResult>> = (0..queries.len()).map(|_| Vec::new()).collect();
+        let mut seen: std::collections::HashSet<(u64, PartitionId)> =
+            std::collections::HashSet::with_capacity(expected);
+        while seen.len() < expected {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match reply_rx.recv_timeout(deadline - now) {
-                Ok(pr) if pr.qid == qid => {
+                Ok(pr) if pr.qid >= base_qid && pr.qid < base_qid + n => {
                     self.metrics.partials_received.fetch_add(1, Ordering::Relaxed);
-                    if seen_parts.insert(pr.partition) {
-                        got.push(pr);
+                    if seen.insert((pr.qid, pr.partition)) {
+                        got[(pr.qid - base_qid) as usize].push(pr);
                     }
                 }
-                Ok(_) => {} // stale reply from a retried query
+                // Defensive only: the reply channel is created per call
+                // and its senders live solely in this block's requests,
+                // so an out-of-range qid is unreachable today. The guard
+                // keeps a future shared-channel refactor from indexing
+                // out of bounds instead of skipping.
+                Ok(_) => {}
                 Err(_) => break,
             }
         }
-        let timed_out = seen_parts.len() < parts.len();
-        if timed_out {
-            self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
-            if got.is_empty() {
-                return Err(PyramidError::Timeout(self.cfg.timeout));
+        // Per-query merge (Algorithm 4 line 9), same path as `execute`.
+        let mut out = Vec::with_capacity(queries.len());
+        for (i, partials) in got.into_iter().enumerate() {
+            if partials.len() < parts[i].len() {
+                self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                if partials.is_empty() {
+                    return Err(PyramidError::Timeout(self.cfg.timeout));
+                }
+            }
+            out.push(self.merge(&query_arcs[i], partials, params.k)?);
+        }
+        let done = Instant::now();
+        let batch_us = done.duration_since(start).as_secs_f64() * 1e6;
+        self.metrics.completed.fetch_add(n, Ordering::Relaxed);
+        {
+            // Each query in the block experienced the block's wall time.
+            let mut lat = self.metrics.latencies_us.lock().unwrap();
+            for _ in 0..queries.len() {
+                lat.push(batch_us);
             }
         }
-        let result = self.merge(&query_arc, got, params.k)?;
-        let done = Instant::now();
-        self.metrics.completed.fetch_add(1, Ordering::Relaxed);
-        self.metrics
-            .latencies_us
-            .lock()
-            .unwrap()
-            .push(done.duration_since(start).as_secs_f64() * 1e6);
         if let Some(ts) = self.metrics.throughput.lock().unwrap().as_mut() {
-            ts.record(done);
+            for _ in 0..queries.len() {
+                ts.record(done);
+            }
         }
-        Ok(result)
+        Ok(out)
     }
 
     /// Merge partial results (Algorithm 4 line 9). With a scorer attached

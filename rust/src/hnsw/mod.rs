@@ -17,7 +17,9 @@
 //! to a fixed stride of `m0 + 1` words per node (count prefix + neighbor
 //! ids), so locating a node's block is a multiply instead of two dependent
 //! offset loads and the walk can software-prefetch neighbor vectors as it
-//! streams the block.
+//! streams the block. The walk scores each gathered neighbor block in one
+//! SIMD pass ([`crate::metric::Metric::score_rows`]); the per-edge form
+//! survives as [`Hnsw::search_per_edge`], the bench baseline.
 //!
 //! Construction is sequential per graph (insert order = id order, seeded
 //! level draws, fully deterministic); Pyramid parallelizes across the `w`
@@ -280,6 +282,15 @@ impl Hnsw {
         search::search(self, query, k, ef)
     }
 
+    /// [`Self::search`] with the pre-block-walk per-edge scoring (one
+    /// [`crate::metric::Metric::score`] call per neighbor instead of one
+    /// [`crate::metric::Metric::score_rows`] pass per neighbor block).
+    /// Returns bit-identical results; kept as the measured baseline for
+    /// the `hnsw/block-walk-speedup` metric in `benches/hot_paths.rs`.
+    pub fn search_per_edge(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        search::search_per_edge(self, query, k, ef).0
+    }
+
     /// Answer a whole drain-batch of queries in one pass: the graph walks
     /// share a single visited-list checkout and scratch buffer, and each
     /// query's beam candidates are re-ranked as one dense block through
@@ -526,6 +537,32 @@ mod tests {
                 let got: Vec<u32> =
                     frozen.search(queries.get(qi), 10, 80).iter().map(|n| n.id).collect();
                 assert_eq!(got, expected[qi], "{metric} query {qi} diverges after freeze");
+            }
+        }
+    }
+
+    /// The block-scored walk (serving default) must return results
+    /// identical to the per-edge baseline on the same frozen graph, all
+    /// three metrics — `Metric::score_rows` is bit-identical to per-row
+    /// `Metric::score`, so this pins ids *and* scores.
+    #[test]
+    fn block_walk_matches_per_edge_walk() {
+        for (metric, seed) in [(Metric::L2, 3u64), (Metric::Ip, 5), (Metric::Angular, 7)] {
+            let spec = SyntheticSpec::deep_like(3_000, 24, seed);
+            let data = if metric.normalizes_items() {
+                spec.generate().normalized()
+            } else {
+                spec.generate()
+            };
+            let queries = spec.queries(15);
+            let h = Hnsw::build(data, metric, HnswParams::default()).unwrap();
+            for qi in 0..queries.len() {
+                let q = queries.get(qi);
+                assert_eq!(
+                    h.search(q, 10, 80),
+                    h.search_per_edge(q, 10, 80),
+                    "{metric} query {qi}: block walk diverges from per-edge walk"
+                );
             }
         }
     }

@@ -9,6 +9,16 @@
 //! the frozen CSR form ([`super::Hnsw`], the serving hot path) and once
 //! for the nested-vec build form ([`super::NestedHnsw`]) with no dynamic
 //! dispatch in either.
+//!
+//! Scoring is **block-wise**: each hop gathers the unvisited neighbors of
+//! the expanded vertex (one fixed-stride block read on the frozen bottom
+//! layer), prefetches their vector rows, and scores the whole block
+//! through [`Metric::score_rows`] in a single kernel-dispatched pass —
+//! one feature probe and one set of hoisted per-query invariants per
+//! block instead of per edge. Scores are bit-identical to the per-edge
+//! form, which is kept compilable (`BLOCK = false` instantiations,
+//! surfaced as [`super::Hnsw::search_per_edge`]) as the measured baseline
+//! in `benches/hot_paths.rs`.
 
 use super::{Hnsw, NestedHnsw};
 use crate::dataset::Dataset;
@@ -183,9 +193,14 @@ type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
 /// `entries` seeds both heaps (already scored); returns the best `factor`
 /// vertices found, unsorted. `scratch` is a reusable id buffer: each hop
 /// gathers the unvisited neighbors into it (issuing their vector
-/// prefetches) before any of them is scored.
+/// prefetches) before any of them is scored. With `BLOCK = true` (the
+/// serving default) the gathered block is scored through
+/// [`Metric::score_rows`] in one kernel-dispatched pass; `BLOCK = false`
+/// keeps the per-edge [`Metric::score`] calls as the measured baseline.
+/// Scores are bit-identical either way, so both instantiations return
+/// identical results.
 #[allow(clippy::too_many_arguments)]
-fn search_level<G: GraphView>(
+fn search_level<G: GraphView, const BLOCK: bool>(
     g: &G,
     level: usize,
     query: &[f32],
@@ -193,6 +208,7 @@ fn search_level<G: GraphView>(
     factor: usize,
     visited: &mut VisitedList,
     scratch: &mut Vec<u32>,
+    scores: &mut Vec<f32>,
     stats: &mut SearchStats,
 ) -> Vec<Neighbor> {
     let data = g.dataset();
@@ -226,8 +242,14 @@ fn search_level<G: GraphView>(
             }
         }
         stats.dist_evals += scratch.len() as u64;
-        for &v in scratch.iter() {
-            let s = metric.score(query, data.get(v as usize));
+        if BLOCK {
+            // One SIMD pass over the whole neighbor block: the kernel is
+            // dispatched once and per-query invariants are hoisted; the
+            // rows were prefetched during the gather above.
+            metric.score_rows(query, scratch.iter().map(|&v| data.get(v as usize)), scores);
+        }
+        for (j, &v) in scratch.iter().enumerate() {
+            let s = if BLOCK { scores[j] } else { metric.score(query, data.get(v as usize)) };
             let worst = res.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
             if res.len() < factor || s > worst {
                 let n = Neighbor::new(v, s);
@@ -245,13 +267,15 @@ fn search_level<G: GraphView>(
 /// Full multi-layer walk with caller-provided working memory. Returns the
 /// whole bottom-layer beam (up to `max(ef, k)` results, best first) so
 /// batched callers can re-rank it; plain `search` truncates to `k`.
-fn search_beam<G: GraphView>(
+#[allow(clippy::too_many_arguments)]
+fn search_beam<G: GraphView, const BLOCK: bool>(
     g: &G,
     query: &[f32],
     k: usize,
     ef: usize,
     visited: &mut VisitedList,
     scratch: &mut Vec<u32>,
+    scores: &mut Vec<f32>,
     stats: &mut SearchStats,
 ) -> Vec<Neighbor> {
     let entry = g.entry_point();
@@ -260,14 +284,16 @@ fn search_beam<G: GraphView>(
     let mut eps = vec![Neighbor::new(entry, entry_score)];
     // Greedy descent through the upper layers (factor 1).
     for t in (1..=g.max_layer()).rev() {
-        let found = search_level(g, t, query, &eps, 1, visited, scratch, stats);
+        let found =
+            search_level::<G, BLOCK>(g, t, query, &eps, 1, visited, scratch, scores, stats);
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
     }
     // Beam search on the bottom layer with factor max(ef, k).
     let factor = ef.max(k).max(1);
-    let mut found = search_level(g, 0, query, &eps, factor, visited, scratch, stats);
+    let mut found =
+        search_level::<G, BLOCK>(g, 0, query, &eps, factor, visited, scratch, scores, stats);
     // Score-desc with id tiebreak: the same total order `merge_topk` uses,
     // so sequential and batched paths agree even on exact score ties.
     found.sort_unstable_by(|a, b| {
@@ -289,7 +315,34 @@ pub(crate) fn search<G: GraphView>(
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
-    let mut found = search_beam(g, query, k, ef, &mut visited, &mut scratch, &mut stats);
+    let mut scores = Vec::with_capacity(64);
+    let mut found = search_beam::<G, true>(
+        g, query, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    );
+    g.visited_pool().put(visited);
+    found.truncate(k);
+    (found, stats)
+}
+
+/// [`search`] with per-edge scoring (the pre-block-walk baseline): same
+/// algorithm, same results bit-for-bit, but every neighbor is scored
+/// through an individual [`Metric::score`] call — kernel re-dispatch and
+/// per-call invariant recomputation included. Kept callable so
+/// `benches/hot_paths.rs` can measure the block-scored walk's win on the
+/// same frozen graph, and so tests can pin the two paths together.
+pub(crate) fn search_per_edge<G: GraphView>(
+    g: &G,
+    query: &[f32],
+    k: usize,
+    ef: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut visited = g.visited_pool().take();
+    let mut scratch = Vec::with_capacity(64);
+    let mut scores = Vec::new(); // untouched on the per-edge path
+    let mut found = search_beam::<G, false>(
+        g, query, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    );
     g.visited_pool().put(visited);
     found.truncate(k);
     (found, stats)
@@ -315,13 +368,15 @@ pub(crate) fn search_batch<G: GraphView>(
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
+    let mut scores = Vec::with_capacity(64);
     let data = g.dataset();
     let mut block: Vec<f32> = Vec::new();
     let mut ids: Vec<u32> = Vec::new();
     let mut out = Vec::with_capacity(queries.len());
     for bq in queries {
-        let mut beam =
-            search_beam(g, bq.query, bq.k, bq.ef, &mut visited, &mut scratch, &mut stats);
+        let mut beam = search_beam::<G, true>(
+            g, bq.query, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        );
         if identity {
             beam.truncate(bq.k);
             out.push(beam);
@@ -361,12 +416,15 @@ pub(crate) fn search_for_insert(
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool.take();
     let mut scratch = Vec::with_capacity(64);
+    let mut scores = Vec::with_capacity(64);
     let entry_score = g.metric.score(query, g.data.get(g.entry as usize));
     let mut eps = vec![Neighbor::new(g.entry, entry_score)];
     let max_layer = g.max_layer();
     // Greedy descent above the insertion level.
     for t in ((target_level + 1)..=max_layer).rev() {
-        let found = search_level(g, t, query, &eps, 1, &mut visited, &mut scratch, &mut stats);
+        let found = search_level::<NestedHnsw, true>(
+            g, t, query, &eps, 1, &mut visited, &mut scratch, &mut scores, &mut stats,
+        );
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
@@ -375,7 +433,9 @@ pub(crate) fn search_for_insert(
     // per-layer candidate sets.
     let mut per_layer = Vec::new();
     for t in (0..=target_level.min(max_layer)).rev() {
-        let found = search_level(g, t, query, &eps, ef, &mut visited, &mut scratch, &mut stats);
+        let found = search_level::<NestedHnsw, true>(
+            g, t, query, &eps, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        );
         eps = found.clone();
         per_layer.push(found);
     }

@@ -27,7 +27,7 @@ use crate::hnsw::Hnsw;
 use crate::kmeans::{self, KmeansParams};
 use crate::metric::Metric;
 use crate::partition::{self, CsrGraph, PartitionParams};
-use crate::types::{merge_topk, Neighbor, PartitionId, VectorId};
+use crate::types::{merge_topk, BatchQuery, Neighbor, PartitionId, VectorId};
 use crate::util::threads;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -210,16 +210,33 @@ impl PyramidIndex {
     }
 
     /// Route a query: the partitions whose sub-HNSWs must be searched
-    /// (Algorithm 4 lines 4-6). Normalizes the query for angular search.
+    /// (Algorithm 4 lines 4-6). Expects a prepared (normalized) query for
+    /// angular search, as [`Self::search_with_route`] supplies.
     pub fn route(&self, query: &[f32], branch: usize, meta_ef: usize) -> Vec<PartitionId> {
         let hits = self.meta.search(query, branch.max(1), meta_ef.max(branch));
-        let mut parts: Vec<PartitionId> = hits
+        router::parts_from_hits(&self.meta_partition, &hits)
+    }
+
+    /// Batched [`Self::route`]: one shared-state meta-HNSW pass for a
+    /// whole query block (Algorithm 4 lines 4-6, batch-native). Returns
+    /// identical partition sets to `queries.len()` sequential `route`
+    /// calls; the coordinator-side replica of this lives in
+    /// [`Router::route_batch`].
+    pub fn route_batch(
+        &self,
+        queries: &[&[f32]],
+        branch: usize,
+        meta_ef: usize,
+    ) -> Vec<Vec<PartitionId>> {
+        let k = branch.max(1);
+        let ef = meta_ef.max(branch);
+        let batch: Vec<BatchQuery<'_>> =
+            queries.iter().map(|&q| BatchQuery { query: q, k, ef }).collect();
+        self.meta
+            .search_batch(&batch, &crate::runtime::NativeScorer)
             .iter()
-            .map(|h| self.meta_partition[h.id as usize] as PartitionId)
-            .collect();
-        parts.sort_unstable();
-        parts.dedup();
-        parts
+            .map(|hits| router::parts_from_hits(&self.meta_partition, hits))
+            .collect()
     }
 
     /// Search one sub-HNSW, translating local row ids to global ids
@@ -350,6 +367,18 @@ mod tests {
             // branch=K touches at most K partitions and is monotone-ish:
             // the K=1 partition is among the K=5 partitions.
             assert!(parts5.contains(&parts1[0]));
+        }
+    }
+
+    #[test]
+    fn route_batch_matches_route() {
+        let (_, queries, idx) = &build_small();
+        let views: Vec<&[f32]> = (0..queries.len()).map(|qi| queries.get(qi)).collect();
+        for branch in [1usize, 4, 8] {
+            let batched = idx.route_batch(&views, branch, 100);
+            for (qi, view) in views.iter().enumerate() {
+                assert_eq!(batched[qi], idx.route(view, branch, 100), "query {qi} branch={branch}");
+            }
         }
     }
 

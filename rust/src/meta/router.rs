@@ -7,7 +7,8 @@
 
 use crate::hnsw::Hnsw;
 use crate::metric::Metric;
-use crate::types::{Neighbor, PartitionId};
+use crate::runtime::NativeScorer;
+use crate::types::{BatchQuery, Neighbor, PartitionId};
 use std::sync::Arc;
 
 /// Shareable query router (meta-HNSW search + partition lookup).
@@ -67,12 +68,48 @@ impl Router {
             return (0..self.partitions as PartitionId).collect();
         };
         let hits: Vec<Neighbor> = meta.search(query, branch.max(1), meta_ef.max(branch));
-        let mut parts: Vec<PartitionId> =
-            hits.iter().map(|h| self.partition[h.id as usize] as PartitionId).collect();
-        parts.sort_unstable();
-        parts.dedup();
-        parts
+        parts_from_hits(&self.partition, &hits)
     }
+
+    /// Batched [`Self::route`]: one meta-HNSW pass over a whole block of
+    /// *prepared* queries (see [`Self::prepare_query`]) — the walks share
+    /// one visited-pool checkout and scratch buffers, and each hop's
+    /// neighbor block is scored in a single kernel-dispatched pass
+    /// ([`Hnsw::search_batch`]). Returns one deduped, sorted partition set
+    /// per query, identical to `queries.len()` sequential `route` calls.
+    /// Broadcast routers return every partition for every query.
+    pub fn route_batch(
+        &self,
+        queries: &[&[f32]],
+        branch: usize,
+        meta_ef: usize,
+    ) -> Vec<Vec<PartitionId>> {
+        let Some(meta) = &self.meta else {
+            let all: Vec<PartitionId> = (0..self.partitions as PartitionId).collect();
+            return vec![all; queries.len()];
+        };
+        let k = branch.max(1);
+        let ef = meta_ef.max(branch);
+        let batch: Vec<BatchQuery<'_>> =
+            queries.iter().map(|&q| BatchQuery { query: q, k, ef }).collect();
+        // NativeScorer's re-rank is an identity over walk scores, so this
+        // is pure shared-state walking — no extra scoring work.
+        meta.search_batch(&batch, &NativeScorer)
+            .iter()
+            .map(|hits| parts_from_hits(&self.partition, hits))
+            .collect()
+    }
+}
+
+/// Map meta-HNSW hits to their sorted, deduped partition set — the one
+/// place Algorithm 4 line 6 is implemented, shared by the coordinator-side
+/// [`Router`] and the in-process [`super::PyramidIndex`] routing paths.
+pub(crate) fn parts_from_hits(partition: &[u32], hits: &[Neighbor]) -> Vec<PartitionId> {
+    let mut parts: Vec<PartitionId> =
+        hits.iter().map(|h| partition[h.id as usize] as PartitionId).collect();
+    parts.sort_unstable();
+    parts.dedup();
+    parts
 }
 
 impl std::fmt::Debug for Router {
@@ -113,6 +150,48 @@ mod tests {
             assert_eq!(router.route(q, 3, 100), idx.route(q, 3, 100));
         }
         assert_eq!(router.partitions(), 4);
+    }
+
+    /// Satellite acceptance: `route_batch` returns identical partition
+    /// sets to N sequential `route` calls, across all three metrics and
+    /// several branch factors.
+    #[test]
+    fn route_batch_matches_sequential_all_metrics() {
+        for (metric, seed) in
+            [(crate::metric::Metric::L2, 11u64), (crate::metric::Metric::Ip, 13), (crate::metric::Metric::Angular, 17)]
+        {
+            let spec = SyntheticSpec::deep_like(4_000, 16, seed);
+            let data = spec.generate();
+            let queries = spec.queries(24);
+            let cfg =
+                IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
+            let idx = PyramidIndex::build(&data, metric, &cfg).unwrap();
+            let router = Router::from_index(&idx);
+            let prepared: Vec<Vec<f32>> = (0..queries.len())
+                .map(|qi| router.prepare_query(queries.get(qi)).into_owned())
+                .collect();
+            let views: Vec<&[f32]> = prepared.iter().map(|p| p.as_slice()).collect();
+            for (branch, meta_ef) in [(1usize, 50usize), (3, 100), (8, 100)] {
+                let batched = router.route_batch(&views, branch, meta_ef);
+                assert_eq!(batched.len(), views.len());
+                for (qi, view) in views.iter().enumerate() {
+                    assert_eq!(
+                        batched[qi],
+                        router.route(view, branch, meta_ef),
+                        "{metric} query {qi} branch={branch} diverges"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_batch_broadcast_returns_all_partitions() {
+        let router = Router::broadcast(3, crate::metric::Metric::L2);
+        let q = vec![0.0f32; 8];
+        let views: Vec<&[f32]> = vec![&q, &q];
+        assert_eq!(router.route_batch(&views, 2, 50), vec![vec![0u16, 1, 2], vec![0, 1, 2]]);
+        assert!(router.route_batch(&[], 2, 50).is_empty());
     }
 
     #[test]

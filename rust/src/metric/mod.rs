@@ -10,10 +10,15 @@
 //! `is_x86_feature_detected!` ([`dot`], [`l2_sq`]), falling back to the
 //! portable 16-lane unrolled scalar forms ([`dot_unrolled`],
 //! [`l2_sq_unrolled`]) that LLVM auto-vectorizes under
-//! `target-cpu=native`. [`Metric::score_many`] is the batch entry point
-//! for dense `[n, d]` candidate blocks (executor re-rank, brute-force
-//! scans); the PJRT-compiled Pallas scorer in [`crate::runtime`] covers
-//! the largest blocks when its artifacts are present.
+//! `target-cpu=native`. Setting `PYRAMID_FORCE_SCALAR=1` pins dispatch to
+//! the portable tier regardless of CPU features (CI's scalar-fallback
+//! job). [`Metric::score_many`] is the batch entry point for dense
+//! `[n, d]` candidate blocks (executor re-rank, brute-force scans);
+//! [`Metric::score_rows`] is its gather form for scattered rows (the
+//! bottom-layer walk scores each neighbor block through it in one
+//! dispatched pass); the PJRT-compiled Pallas scorer in
+//! [`crate::runtime`] covers the largest blocks when its artifacts are
+//! present.
 
 /// Supported similarity functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -92,6 +97,46 @@ impl Metric {
         }
     }
 
+    /// Score one query against a sequence of *scattered* rows — the gather
+    /// form of [`Self::score_many`], built for the graph walk's neighbor
+    /// blocks where the candidate vectors are arbitrary dataset rows
+    /// rather than one contiguous buffer. The kernel is dispatched once
+    /// for the whole block and per-query invariants (the Angular query
+    /// norm) are hoisted out of the loop; callers are expected to have
+    /// prefetched the rows while gathering them. Produces bit-identical
+    /// scores to calling [`Self::score`] per row (same kernels, same
+    /// order of operations).
+    pub fn score_rows<'a, I>(&self, query: &[f32], rows: I, out: &mut Vec<f32>)
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        out.clear();
+        let dot_k = dot_kernel();
+        let l2_k = l2_kernel();
+        // Query norm for Angular via the same kernel `cosine` uses, so
+        // this block path and the per-row fallback agree exactly.
+        let qn = match self {
+            Metric::Angular => dot_k(query, query).sqrt(),
+            _ => 0.0,
+        };
+        for row in rows {
+            let s = match self {
+                Metric::L2 => -l2_k(query, row),
+                Metric::Ip => dot_k(query, row),
+                Metric::Angular => {
+                    let d0 = dot_k(query, row);
+                    let rn = dot_k(row, row).sqrt();
+                    if qn <= 1e-12 || rn <= 1e-12 {
+                        0.0
+                    } else {
+                        d0 / (qn * rn)
+                    }
+                }
+            };
+            out.push(s);
+        }
+    }
+
     /// Whether index construction should normalize items to unit norm
     /// (paper §III-C: angular search reduces to Euclidean/IP on the unit
     /// sphere).
@@ -133,6 +178,19 @@ fn prefetch_f32(row: &[f32]) {
 /// A binary f32 reduction kernel (dot or squared L2).
 type Kernel = fn(&[f32], &[f32]) -> f32;
 
+/// Runtime kill-switch for the SIMD tier: when `PYRAMID_FORCE_SCALAR` is
+/// set (to anything but `0`), kernel dispatch ignores the CPU feature
+/// probe and selects the portable unrolled forms. CI's `scalar-fallback`
+/// job sets it so the portable tier is compiled *and executed* on every
+/// push instead of only on non-AVX2 hardware. Memoized once per process —
+/// the kernel choice must never flip mid-run.
+#[cfg(target_arch = "x86_64")]
+fn force_scalar() -> bool {
+    static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCE
+        .get_or_init(|| std::env::var_os("PYRAMID_FORCE_SCALAR").map(|v| v != "0").unwrap_or(false))
+}
+
 /// Pick the dot kernel once: AVX2/FMA when the CPU has it, unrolled scalar
 /// otherwise. The feature probe is a cached atomic load (std memoizes
 /// `is_x86_feature_detected!`); block paths call this once and loop the
@@ -141,7 +199,10 @@ type Kernel = fn(&[f32], &[f32]) -> f32;
 fn dot_kernel() -> Kernel {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+        if !force_scalar()
+            && std::is_x86_feature_detected!("avx2")
+            && std::is_x86_feature_detected!("fma")
+        {
             // SAFETY: AVX2 + FMA presence just verified at runtime.
             return |a, b| unsafe { x86::dot_avx2(a, b) };
         }
@@ -154,7 +215,10 @@ fn dot_kernel() -> Kernel {
 fn l2_kernel() -> Kernel {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+        if !force_scalar()
+            && std::is_x86_feature_detected!("avx2")
+            && std::is_x86_feature_detected!("fma")
+        {
             // SAFETY: AVX2 + FMA presence just verified at runtime.
             return |a, b| unsafe { x86::l2_sq_avx2(a, b) };
         }
@@ -415,6 +479,51 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn score_rows_matches_score_per_row_bitwise() {
+        crate::util::quickcheck::check(50, |g| {
+            let d = g.usize_in(1, 48);
+            let n = g.usize_in(0, 17);
+            let q = g.vec_f32(d);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d)).collect();
+            let metric = *g.choose(&[Metric::L2, Metric::Angular, Metric::Ip]);
+            let mut out = Vec::new();
+            metric.score_rows(&q, rows.iter().map(|r| r.as_slice()), &mut out);
+            if out.len() != n {
+                return Err(format!("score_rows returned {} of {n}", out.len()));
+            }
+            for (j, &s) in out.iter().enumerate() {
+                // The walk's block path must be indistinguishable from the
+                // per-edge path, so this pins bit-identity, not a tolerance.
+                let want = metric.score(&q, &rows[j]);
+                if s.to_bits() != want.to_bits() {
+                    return Err(format!("{metric} row {j}: {s} vs {want} (bits differ)"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite acceptance: the scalar-fallback CI job runs the whole
+    /// suite with `PYRAMID_FORCE_SCALAR=1`; under that env this test pins
+    /// the dispatched kernels to the portable forms bit-for-bit. Without
+    /// the env var (or off x86_64, where dispatch is always portable) the
+    /// equality holds trivially or the test exits early.
+    #[test]
+    fn force_scalar_env_pins_dispatch_to_portable() {
+        let forced =
+            std::env::var_os("PYRAMID_FORCE_SCALAR").map(|v| v != "0").unwrap_or(false);
+        if !forced {
+            return;
+        }
+        for n in [7usize, 16, 96, 131] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.13 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32) * -0.07 + 0.4).collect();
+            assert_eq!(dot(&a, &b).to_bits(), dot_unrolled(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(l2_sq(&a, &b).to_bits(), l2_sq_unrolled(&a, &b).to_bits(), "l2 n={n}");
+        }
     }
 
     #[test]

@@ -46,6 +46,43 @@ fn constructor_to_cluster_via_disk() {
     cluster.shutdown();
 }
 
+/// Satellite acceptance: `execute_batch` over a seeded cluster returns the
+/// same per-query top-k as sequential `execute` calls — the whole batched
+/// spine (route_batch -> block fan-out -> executor drain batches -> keyed
+/// gather -> per-query merge) must be answer-preserving.
+#[test]
+fn execute_batch_matches_per_query_execute() {
+    let spec = deep(5_000);
+    let data = spec.generate();
+    let queries = spec.queries(32);
+    let cfg = IndexConfig { sample: 1_200, meta_size: 48, partitions: 6, ..Default::default() };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    let cluster = SimCluster::start(
+        &idx,
+        ClusterTopology { workers: 6, replicas: 1, coordinators: 2, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 },
+    )
+    .unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let views: Vec<&[f32]> = (0..queries.len()).map(|qi| queries.get(qi)).collect();
+    let batched = cluster.execute_batch(&views, &params).unwrap();
+    assert_eq!(batched.len(), views.len());
+    for (qi, view) in views.iter().enumerate() {
+        let seq = cluster.execute(view, &params).unwrap();
+        assert_eq!(
+            batched[qi].iter().map(|n| n.id).collect::<Vec<_>>(),
+            seq.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {qi}: batched and sequential top-k diverge"
+        );
+        // Scores must match too (same kernels end to end).
+        for (a, b) in batched[qi].iter().zip(&seq) {
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "query {qi} score bits diverge");
+        }
+    }
+    // Empty batch is a no-op, not an error.
+    assert!(cluster.execute_batch(&[], &params).unwrap().is_empty());
+    cluster.shutdown();
+}
+
 #[test]
 fn mips_cluster_with_replication() {
     let spec = SyntheticSpec::tiny_like(6_000, 24, 33);
