@@ -25,11 +25,15 @@
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
+use pyramid::cluster::SimCluster;
+use pyramid::config::{ClusterTopology, IndexConfig, QueryParams};
+use pyramid::coordinator::{CoordinatorConfig, HedgeConfig};
 use pyramid::dataset::SyntheticSpec;
 use pyramid::hnsw::{Hnsw, HnswParams, NestedHnsw};
-use pyramid::meta::Router;
+use pyramid::meta::{PyramidIndex, Router};
 use pyramid::metric::{dot, dot_unrolled, l2_sq, l2_sq_unrolled, Metric};
 use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
+use pyramid::stats::percentile;
 use pyramid::types::{merge_topk, BatchQuery, Neighbor};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -213,6 +217,63 @@ fn main() {
         let speedup = seq_ns / batch_ns;
         rec.record(&format!("router/batch-speedup b={B}"), speedup);
         println!("  -> batched routing speedup vs sequential @ b={B}: {speedup:.2}x");
+    }
+
+    // --- coordinator: hedged dispatch vs straggler tail ---------------------
+    // A replicated cluster with one host throttled to 10% CPU (the paper's
+    // Fig 12 straggler). `coord/hedge-speedup` is the unhedged-p99 /
+    // hedged-p99 ratio on the identical workload — the latency the hedge
+    // timer buys back. Wall-clock per-query percentiles, not ns/op.
+    if run("coord") {
+        let n = if smoke { 2_000 } else { 4_000 };
+        let data = SyntheticSpec::deep_like(n, 16, 7).generate();
+        let queries = SyntheticSpec::deep_like(n, 16, 7).queries(64);
+        let cfg =
+            IndexConfig { sample: n / 4, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).expect("build bench index");
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        let rounds = if smoke { 2 } else { 4 };
+        let measure = |hedge: HedgeConfig| -> (f64, f64) {
+            let topo = ClusterTopology {
+                workers: 4,
+                replicas: 2,
+                coordinators: 2,
+                net_latency_us: 500,
+                rebalance_ms: 100,
+                executor_batch: 8,
+            };
+            let coord_cfg = CoordinatorConfig { hedge, ..CoordinatorConfig::default() };
+            let cluster =
+                SimCluster::start_with(&idx, topo, None, coord_cfg).expect("start bench cluster");
+            // Warm-up arms the hedge window on healthy latencies.
+            for qi in 0..queries.len() {
+                let _ = cluster.execute(queries.get(qi), &params);
+            }
+            cluster.set_cpu_share(0, 10);
+            let mut ms = Vec::new();
+            for _ in 0..rounds {
+                for qi in 0..queries.len() {
+                    let t0 = Instant::now();
+                    let _ = cluster.execute(queries.get(qi), &params);
+                    ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            cluster.shutdown();
+            (percentile(&ms, 50.0), percentile(&ms, 99.0))
+        };
+        let (p50_u, p99_u) = measure(HedgeConfig::disabled());
+        let (p50_h, p99_h) = measure(HedgeConfig::default());
+        rec.record("coord/straggler-p50-unhedged ms", p50_u);
+        rec.record("coord/straggler-p99-unhedged ms", p99_u);
+        rec.record("coord/straggler-p50-hedged ms", p50_h);
+        rec.record("coord/straggler-p99-hedged ms", p99_h);
+        let speedup = p99_u / p99_h.max(1e-9);
+        rec.record("coord/hedge-speedup", speedup);
+        println!(
+            "coordinator straggler drill: unhedged p50/p99 {p50_u:.2}/{p99_u:.2} ms, \
+             hedged {p50_h:.2}/{p99_h:.2} ms"
+        );
+        println!("  -> hedged p99 speedup vs unhedged: {speedup:.2}x");
     }
 
     // --- merge / coordinator path -------------------------------------------

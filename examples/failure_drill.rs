@@ -72,7 +72,7 @@ fn main() -> Result<()> {
         }
         // The injection script.
         s.spawn(|| {
-            let q = seconds / 6.0;
+            let q = seconds / 8.0;
             std::thread::sleep(Duration::from_secs_f64(q));
             phase("inject straggler: host 0 throttled to 30% CPU", t0.elapsed().as_secs_f64());
             cluster.set_cpu_share(0, 30);
@@ -80,11 +80,22 @@ fn main() -> Result<()> {
             phase("straggler cleared", t0.elapsed().as_secs_f64());
             cluster.set_cpu_share(0, 100);
             std::thread::sleep(Duration::from_secs_f64(q));
+            if let Some(&victim) = cluster.executors_for_partition(0).first() {
+                phase(
+                    &format!("KILL single executor {victim} (one replica of sub-HNSW 0)"),
+                    t0.elapsed().as_secs_f64(),
+                );
+                cluster.kill_executor(victim);
+            }
+            std::thread::sleep(Duration::from_secs_f64(q));
             phase("KILL host 1", t0.elapsed().as_secs_f64());
             cluster.kill_host(1);
             std::thread::sleep(Duration::from_secs_f64(2.0 * q));
             phase("host 1 rejoins", t0.elapsed().as_secs_f64());
             cluster.restart_host(1);
+            std::thread::sleep(Duration::from_secs_f64(q));
+            phase("restore(): heal all hosts/roles", t0.elapsed().as_secs_f64());
+            cluster.restore();
             std::thread::sleep(Duration::from_secs_f64(q));
             stop.store(true, Ordering::Relaxed);
         });
@@ -101,8 +112,19 @@ fn main() -> Result<()> {
         let bar = "#".repeat(v * 60 / max);
         println!("  {:>5.1}s {:>8.0} qps |{bar}", i as f64 * window.as_secs_f64(), qps);
     }
-    println!("\n(expect: dip at straggler [offload via queue rebalance], deep dip at kill,");
+    println!("\n(expect: dip at straggler [hedging + queue rebalance], deep dip at kill,");
     println!(" brief dip at rejoin [group rebalance], then recovery — paper Figs 12-13)");
+    let (hedges, reissues, dups) = cluster.coordinators().iter().fold((0u64, 0u64, 0u64), |acc, c| {
+        (
+            acc.0 + c.metrics.hedges_fired.load(Ordering::Relaxed),
+            acc.1 + c.metrics.reissues.load(Ordering::Relaxed),
+            acc.2 + c.metrics.duplicates_dropped.load(Ordering::Relaxed),
+        )
+    });
+    println!(
+        "robustness counters: {hedges} hedges fired, {reissues} eviction re-issues, \
+         {dups} duplicate partials dropped"
+    );
     cluster.shutdown();
     Ok(())
 }

@@ -16,7 +16,7 @@ use crate::executor::{ExecutorHandle, ExecutorSpec, HostControl};
 use crate::meta::PyramidIndex;
 use crate::metric::Metric;
 use crate::registry::Registry;
-use crate::types::{Neighbor, PartitionId};
+use crate::types::{Neighbor, PartitionId, QueryResult};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -88,6 +88,22 @@ impl Coordinator {
     /// [`Self::execute`] calls.
     pub fn execute_batch(&self, queries: &[&[f32]], para: &QueryParams) -> Result<Vec<Vec<Neighbor>>> {
         self.node.execute_batch(queries, para)
+    }
+
+    /// [`Self::execute`] with the coverage report (paper §IV-B): a
+    /// partition with zero live replicas degrades the result
+    /// ([`QueryResult::coverage`] < 1) instead of erroring.
+    pub fn execute_detailed(&self, query: &[f32], para: &QueryParams) -> Result<QueryResult> {
+        self.node.execute_detailed(query, para)
+    }
+
+    /// Batched [`Self::execute_detailed`].
+    pub fn execute_batch_detailed(
+        &self,
+        queries: &[&[f32]],
+        para: &QueryParams,
+    ) -> Result<Vec<QueryResult>> {
+        self.node.execute_batch_detailed(queries, para)
     }
 
     /// Asynchronous query with callback (Listing 1 `execute_async`).

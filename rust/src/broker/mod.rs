@@ -13,10 +13,15 @@
 //!   slow consumers (the Fig-12 straggler offload);
 //! * **at-least-once delivery** — `poll` leases a message; if the consumer
 //!   dies or times out before `ack`, the lease expires and the message is
-//!   redelivered to another member.
+//!   redelivered to another member;
+//! * **eviction notifications** — [`Broker::eviction_watcher`] surfaces
+//!   every session-expiry eviction as an [`Eviction`] event, so the
+//!   coordinator's gather loop can re-issue sub-queries that were queued
+//!   behind a dead consumer immediately instead of waiting out the block
+//!   deadline (paper §IV-B failure recovery at the query layer).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{PyramidError, Result};
@@ -81,15 +86,33 @@ struct Shared<M> {
     topics: HashMap<String, TopicState<M>>,
 }
 
+/// A consumer eviction observed by the broker: `member` of `group` on
+/// `topic` missed heartbeats past the session timeout and lost its queue
+/// partitions. Delivered to every [`Broker::eviction_watcher`] receiver.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Eviction {
+    pub topic: String,
+    pub group: String,
+    pub member: u64,
+}
+
 /// The broker handle (cheap to clone; all clones share state).
 pub struct Broker<M> {
     cfg: BrokerConfig,
     inner: Arc<(Mutex<Shared<M>>, Condvar)>,
+    /// Eviction-event subscribers. Kept outside the main state mutex so
+    /// notification never contends with the publish/poll hot path; lock
+    /// order is always main-then-watchers, never the reverse.
+    evict_watchers: Arc<Mutex<Vec<mpsc::Sender<Eviction>>>>,
 }
 
 impl<M> Clone for Broker<M> {
     fn clone(&self) -> Self {
-        Broker { cfg: self.cfg, inner: self.inner.clone() }
+        Broker {
+            cfg: self.cfg,
+            inner: self.inner.clone(),
+            evict_watchers: self.evict_watchers.clone(),
+        }
     }
 }
 
@@ -98,7 +121,16 @@ impl<M: Send + Clone + 'static> Broker<M> {
         Broker {
             cfg,
             inner: Arc::new((Mutex::new(Shared { topics: HashMap::new() }), Condvar::new())),
+            evict_watchers: Arc::new(Mutex::new(Vec::new())),
         }
+    }
+
+    /// Subscribe to consumer-eviction events (any topic, any group).
+    /// Receivers that disconnect are pruned on the next event.
+    pub fn eviction_watcher(&self) -> mpsc::Receiver<Eviction> {
+        let (tx, rx) = mpsc::channel();
+        self.evict_watchers.lock().unwrap().push(tx);
+        rx
     }
 
     pub fn config(&self) -> &BrokerConfig {
@@ -134,6 +166,63 @@ impl<M: Send + Clone + 'static> Broker<M> {
         drop(g);
         self.inner.1.notify_all();
         Ok(())
+    }
+
+    /// Publish a duplicate of an in-flight message onto a queue partition
+    /// owned by a *different* live member of `group` than the one `key`
+    /// routes to — the coordinator's hedged dispatch (paper Fig 12): the
+    /// primary replica keeps the original, the hedge lands on another
+    /// replica, and whichever partial arrives first wins (the gather loop
+    /// dedups the loser). Falls back to the next queue partition over when
+    /// the group has no second live member; the message is then served by
+    /// whoever owns that queue after the next rebalance.
+    pub fn publish_hedge(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
+        let mut g = self.inner.0.lock().unwrap();
+        let p = self.cfg.partitions_per_topic;
+        let t = g
+            .topics
+            .get_mut(topic)
+            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let primary_q = (key % p as u64) as usize;
+        let target_q = match t.groups.get(group) {
+            Some(gs) => {
+                let primary_owner = gs.assignment.get(primary_q).copied().flatten();
+                // Emptiest queue partition owned by a different live member.
+                let mut best: Option<(usize, usize)> = None; // (backlog, queue)
+                for (q, owner) in gs.assignment.iter().enumerate() {
+                    if let Some(o) = owner {
+                        if Some(*o) != primary_owner && gs.members.contains_key(o) {
+                            let len = t.queues[q].len();
+                            if best.map(|(bl, _)| len < bl).unwrap_or(true) {
+                                best = Some((len, q));
+                            }
+                        }
+                    }
+                }
+                best.map(|(_, q)| q).unwrap_or((primary_q + 1) % p)
+            }
+            None => (primary_q + 1) % p,
+        };
+        let id = t.next_msg;
+        t.next_msg += 1;
+        t.published += 1;
+        t.store.insert(id, msg);
+        t.queues[target_q].push_back(id);
+        drop(g);
+        self.inner.1.notify_all();
+        Ok(())
+    }
+
+    /// The group member that currently owns the queue partition `key`
+    /// routes to — i.e. the replica a [`Self::publish`] with this key
+    /// would be served by. None if the topic/group is unknown or the
+    /// queue partition is unassigned.
+    pub fn owner_of(&self, topic: &str, group: &str, key: u64) -> Option<u64> {
+        let g = self.inner.0.lock().unwrap();
+        let t = g.topics.get(topic)?;
+        let gs = t.groups.get(group)?;
+        let q = (key % self.cfg.partitions_per_topic as u64) as usize;
+        gs.assignment.get(q).copied().flatten()
     }
 
     /// Join a consumer group; returns a pollable consumer handle.
@@ -178,8 +267,10 @@ impl<M: Send + Clone + 'static> Broker<M> {
     }
 
     /// Evict members whose sessions expired; requeue their expired leases.
-    fn reap(cfg: &BrokerConfig, t: &mut TopicState<M>, group: &str, now: Instant) {
-        let Some(gs) = t.groups.get_mut(group) else { return };
+    /// Returns the evicted member ids so the caller can notify eviction
+    /// watchers once the topic borrow is released.
+    fn reap(cfg: &BrokerConfig, t: &mut TopicState<M>, group: &str, now: Instant) -> Vec<u64> {
+        let Some(gs) = t.groups.get_mut(group) else { return Vec::new() };
         let expired: Vec<u64> = gs
             .members
             .iter()
@@ -187,8 +278,8 @@ impl<M: Send + Clone + 'static> Broker<M> {
             .map(|(&m, _)| m)
             .collect();
         if !expired.is_empty() {
-            for m in expired {
-                gs.members.remove(&m);
+            for m in &expired {
+                gs.members.remove(m);
             }
             Self::rebalance(gs, cfg.rebalance_pause);
         }
@@ -205,6 +296,7 @@ impl<M: Send + Clone + 'static> Broker<M> {
         for (p, mid) in back {
             t.queues[p].push_front(mid);
         }
+        expired
     }
 
     /// Periodic lag rebalance: move one backlogged partition from the most
@@ -301,8 +393,19 @@ impl<M: Send + Clone + 'static> Consumer<M> {
                         Broker::<M>::rebalance(gs, cfg.rebalance_pause);
                     }
                 }
-                Broker::<M>::reap(&cfg, t, &self.group, now);
+                let evicted = Broker::<M>::reap(&cfg, t, &self.group, now);
                 Broker::<M>::lag_rebalance(&cfg, t, &self.group, now);
+                if !evicted.is_empty() {
+                    let mut ws = self.broker.evict_watchers.lock().unwrap();
+                    for &m in &evicted {
+                        let ev = Eviction {
+                            topic: self.topic.clone(),
+                            group: self.group.clone(),
+                            member: m,
+                        };
+                        ws.retain(|tx| tx.send(ev.clone()).is_ok());
+                    }
+                }
                 let gs = t.groups.get_mut(&self.group).expect("group exists");
                 if now >= gs.paused_until {
                     // Scan this member's partitions for a message.
@@ -485,6 +588,64 @@ mod tests {
             }
         }
         assert_eq!(got, 8);
+    }
+
+    #[test]
+    fn eviction_watcher_reports_dead_member() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let rx = b.eviction_watcher();
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let c2 = b.subscribe("t", "g", 2).unwrap();
+        // c2 crashes (stops polling); c1's polls drive the reap that
+        // evicts it after session_timeout.
+        drop(c2);
+        std::thread::sleep(Duration::from_millis(120));
+        let deadline = Instant::now() + Duration::from_millis(800);
+        let mut seen = None;
+        while seen.is_none() && Instant::now() < deadline {
+            let _ = c1.poll(Duration::from_millis(20));
+            if let Ok(ev) = rx.try_recv() {
+                seen = Some(ev);
+            }
+        }
+        let ev = seen.expect("eviction event for the dead member");
+        assert_eq!(ev, Eviction { topic: "t".into(), group: "g".into(), member: 2 });
+    }
+
+    #[test]
+    fn publish_hedge_lands_on_other_member() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let _c2 = b.subscribe("t", "g", 2).unwrap();
+        std::thread::sleep(Duration::from_millis(3)); // rebalance pause
+        let key = 0u64;
+        let primary = b.owner_of("t", "g", key).expect("assigned");
+        b.publish_hedge("t", "g", key, 7).unwrap();
+        // The hedge must sit on a queue partition owned by the other
+        // member: member 1 polls its own partitions only, so if 1 is the
+        // primary it must NOT see the hedge.
+        if primary == c1.member_id() {
+            assert!(c1.poll(Duration::from_millis(30)).is_none(), "hedge landed on primary");
+        } else {
+            let d = c1.poll(Duration::from_millis(300)).expect("hedge on non-primary");
+            assert_eq!(d.msg, 7);
+            c1.ack(&d);
+        }
+    }
+
+    #[test]
+    fn publish_hedge_single_member_still_delivered() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        b.publish_hedge("t", "g", 3, 9).unwrap();
+        // Only one member: the fallback queue partition is still owned by
+        // it, so the message flows.
+        let d = c.poll(Duration::from_millis(300)).expect("delivered");
+        assert_eq!(d.msg, 9);
+        c.ack(&d);
     }
 
     #[test]

@@ -11,20 +11,25 @@
 //!
 //! Failure drill knobs: [`SimCluster::kill_host`] flips the host's crash
 //! switch (executors exit uncleanly; sessions/leases expire; the Master
-//! restarts instances on surviving hosts), [`SimCluster::restart_host`]
-//! brings the machine back (replacements that find their role re-locked
-//! exit immediately), [`SimCluster::set_cpu_share`] throttles a host.
+//! restarts instances on surviving hosts), [`SimCluster::kill_executor`]
+//! crashes one executor process while its host keeps running,
+//! [`SimCluster::restart_host`] brings a machine back (replacements that
+//! find their role re-locked exit immediately),
+//! [`SimCluster::set_cpu_share`] throttles a host (the straggler
+//! injector), [`SimCluster::set_respawn`] gates the Master's automatic
+//! restarts (off = a killed replica *stays* dead, for blackout drills),
+//! and [`SimCluster::restore`] heals everything back to nominal.
 
 use crate::broker::{Broker, BrokerConfig};
 use crate::config::{ClusterTopology, QueryParams};
-use crate::coordinator::{topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
+use crate::coordinator::{group_for, topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
 use crate::error::{PyramidError, Result};
 use crate::executor::{self, ExecutorHandle, ExecutorSpec, HostControl, SubIndex};
 use crate::meta::{PyramidIndex, Router};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
 use crate::runtime::BatchScorer;
-use crate::types::{Neighbor, PartitionId, VectorId};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::types::{Neighbor, PartitionId, QueryResult, VectorId};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
@@ -42,6 +47,39 @@ struct ClusterState {
     executors: Vec<ExecutorHandle>,
 }
 
+/// Spawn an executor for `role` on `host` and swap it into the cluster
+/// state (dropping any finished handle with the same id). A replacement
+/// that finds the role's lock still held exits on its own (LockHeld), so
+/// racing spawns resolve to exactly one live instance. Shared by the
+/// Master-driven respawner, [`SimCluster::restart_host`] and
+/// [`SimCluster::restore`].
+fn respawn_role(
+    role: &Role,
+    subs: &[(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)],
+    host: Arc<HostControl>,
+    topo: &ClusterTopology,
+    broker: &Broker<QueryRequest>,
+    registry: &Registry,
+    state: &Mutex<ClusterState>,
+) {
+    let h = executor::spawn(
+        ExecutorSpec {
+            id: role.exec_id,
+            partition: role.partition,
+            sub: subs[role.partition as usize].0.clone(),
+            ids: subs[role.partition as usize].1.clone(),
+            host,
+            net_latency: Duration::from_micros(topo.net_latency_us),
+            batch: topo.executor_batch.max(1),
+        },
+        broker.clone(),
+        registry.clone(),
+    );
+    let mut g = state.lock().unwrap();
+    g.executors.retain(|e| !(e.id == role.exec_id && e.is_finished()));
+    g.executors.push(h);
+}
+
 /// The running simulated cluster.
 pub struct SimCluster {
     pub broker: Broker<QueryRequest>,
@@ -54,7 +92,9 @@ pub struct SimCluster {
     state: Arc<Mutex<ClusterState>>,
     master: Option<Master>,
     respawn_rx_handle: Option<std::thread::JoinHandle<()>>,
-    respawn_stop: Arc<std::sync::atomic::AtomicBool>,
+    respawn_stop: Arc<AtomicBool>,
+    /// Master-respawn gate: false parks restart requests (blackout drills).
+    respawn_enabled: Arc<AtomicBool>,
     rr: AtomicUsize,
     next_exec_id: Arc<AtomicU64>,
 }
@@ -74,6 +114,19 @@ impl SimCluster {
         topo: ClusterTopology,
         scorer: Option<Arc<dyn BatchScorer>>,
     ) -> Result<SimCluster> {
+        Self::start_with(index, topo, scorer, CoordinatorConfig::default())
+    }
+
+    /// Fully-parameterized start: [`Self::start_with_scorer`] plus an
+    /// explicit coordinator configuration (deadline, hedging). The
+    /// robustness tests and benches use this to compare hedged vs
+    /// unhedged serving on otherwise identical clusters.
+    pub fn start_with(
+        index: &PyramidIndex,
+        topo: ClusterTopology,
+        scorer: Option<Arc<dyn BatchScorer>>,
+        coord_cfg: CoordinatorConfig,
+    ) -> Result<SimCluster> {
         let subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)> = index
             .subs
             .iter()
@@ -81,7 +134,7 @@ impl SimCluster {
             .zip(index.sub_ids.iter().cloned())
             .collect();
         let router = Router::from_index(index);
-        Self::start_custom(subs, router, topo, scorer)
+        Self::start_custom_with(subs, router, topo, scorer, coord_cfg)
     }
 
     /// Start a cluster over arbitrary per-partition backends and router —
@@ -92,6 +145,17 @@ impl SimCluster {
         router: Router,
         topo: ClusterTopology,
         scorer: Option<Arc<dyn BatchScorer>>,
+    ) -> Result<SimCluster> {
+        Self::start_custom_with(subs, router, topo, scorer, CoordinatorConfig::default())
+    }
+
+    /// [`Self::start_custom`] with an explicit coordinator configuration.
+    pub fn start_custom_with(
+        subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)>,
+        router: Router,
+        topo: ClusterTopology,
+        scorer: Option<Arc<dyn BatchScorer>>,
+        coord_cfg: CoordinatorConfig,
     ) -> Result<SimCluster> {
         if topo.workers == 0 || topo.replicas == 0 || topo.coordinators == 0 {
             return Err(PyramidError::Cluster("workers/replicas/coordinators must be >= 1".into()));
@@ -158,10 +222,10 @@ impl SimCluster {
                     c as u64,
                     router.clone(),
                     broker.clone(),
-                    CoordinatorConfig::default(),
+                    coord_cfg,
                     s.clone(),
                 ),
-                None => CoordinatorNode::new(c as u64, router.clone(), broker.clone(), CoordinatorConfig::default()),
+                None => CoordinatorNode::new(c as u64, router.clone(), broker.clone(), coord_cfg),
             };
             coordinators.push(node);
         }
@@ -181,7 +245,8 @@ impl SimCluster {
             },
         );
 
-        let respawn_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let respawn_stop = Arc::new(AtomicBool::new(false));
+        let respawn_enabled = Arc::new(AtomicBool::new(true));
         let respawner = {
             let roles = roles.clone();
             let subs = subs.clone();
@@ -190,49 +255,52 @@ impl SimCluster {
             let registry = registry.clone();
             let state = state.clone();
             let stop = respawn_stop.clone();
-            let net = Duration::from_micros(topo.net_latency_us);
-            let batch = topo.executor_batch.max(1);
+            let enabled = respawn_enabled.clone();
             std::thread::Builder::new()
                 .name("cluster-respawner".into())
-                .spawn(move || loop {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    match respawn_rx.recv_timeout(Duration::from_millis(50)) {
-                        Ok(path) => {
-                            // Parse the executor id back out of the path.
-                            let Some(ids) = path.strip_prefix("/instance/exec-") else { continue };
-                            let Ok(eid) = ids.parse::<u64>() else { continue };
-                            let Some(role) = roles.iter().find(|r| r.exec_id == eid) else { continue };
-                            // Restart on an available (alive) machine —
-                            // prefer a different host than the crashed one.
-                            let target = hosts
-                                .iter()
-                                .filter(|h| h.alive.load(Ordering::Relaxed))
-                                .min_by_key(|h| (h.host == role.home_host) as usize)
-                                .cloned();
-                            let Some(host) = target else { continue };
-                            let h = executor::spawn(
-                                ExecutorSpec {
-                                    id: eid,
-                                    partition: role.partition,
-                                    sub: subs[role.partition as usize].0.clone(),
-                                    ids: subs[role.partition as usize].1.clone(),
-                                    host,
-                                    net_latency: net,
-                                    batch,
-                                },
-                                broker.clone(),
-                                registry.clone(),
-                            );
-                            // If the original recovered first the new one
-                            // exits on its own (LockHeld).
-                            let mut g = state.lock().unwrap();
-                            g.executors.retain(|e| !(e.id == eid && e.is_finished()));
-                            g.executors.push(h);
+                .spawn(move || {
+                    let respawn = |path: &str| {
+                        // Parse the executor id back out of the path.
+                        let Some(ids) = path.strip_prefix("/instance/exec-") else { return };
+                        let Ok(eid) = ids.parse::<u64>() else { return };
+                        let Some(role) = roles.iter().find(|r| r.exec_id == eid) else { return };
+                        // Restart on an available (alive) machine — prefer
+                        // a different host than the crashed one. If the
+                        // original recovered first the replacement exits
+                        // on its own (LockHeld).
+                        let target = hosts
+                            .iter()
+                            .filter(|h| h.alive.load(Ordering::Relaxed))
+                            .min_by_key(|h| (h.host == role.home_host) as usize)
+                            .cloned();
+                        let Some(host) = target else { return };
+                        respawn_role(role, &subs, host, &topo, &broker, &registry, &state);
+                    };
+                    // Requests arriving while the gate is off are parked
+                    // and replayed when it re-opens, so
+                    // `set_respawn(true)` alone heals roles that died
+                    // during a drill.
+                    let mut parked: Vec<String> = Vec::new();
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
                         }
-                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                        match respawn_rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(path) => {
+                                if enabled.load(Ordering::Relaxed) {
+                                    respawn(&path);
+                                } else {
+                                    parked.push(path);
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                        }
+                        if enabled.load(Ordering::Relaxed) && !parked.is_empty() {
+                            for path in parked.drain(..).collect::<Vec<_>>() {
+                                respawn(&path);
+                            }
+                        }
                     }
                 })
                 .expect("spawn respawner")
@@ -250,6 +318,7 @@ impl SimCluster {
             master: Some(master),
             respawn_rx_handle: Some(respawner),
             respawn_stop,
+            respawn_enabled,
             rr: AtomicUsize::new(0),
             next_exec_id,
         })
@@ -296,9 +365,103 @@ impl SimCluster {
         }
     }
 
+    /// Batched execution with per-query coverage reporting
+    /// ([`CoordinatorNode::execute_batch_detailed`]): partition blackout
+    /// degrades the affected queries (`coverage() < 1`) instead of
+    /// failing the block, so callers can tell "partial answer" from
+    /// "dead cluster".
+    pub fn execute_batch_detailed(
+        &self,
+        queries: &[&[f32]],
+        params: &QueryParams,
+    ) -> Result<Vec<QueryResult>> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).execute_batch_detailed(queries, params)
+    }
+
+    /// Single-query [`Self::execute_batch_detailed`].
+    pub fn execute_detailed(&self, query: &[f32], params: &QueryParams) -> Result<QueryResult> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).execute_detailed(query, params)
+    }
+
     /// Kill a machine: all executors on it crash (no cleanup).
     pub fn kill_host(&self, host: usize) {
         self.hosts[host].alive.store(false, Ordering::Relaxed);
+    }
+
+    /// Kill one executor (crash, no cleanup) while its host keeps serving
+    /// everything else — the fault-injection primitive behind the
+    /// recovery-matrix tests. Returns false if no live executor with this
+    /// id exists. Unless [`Self::set_respawn`] gated it off, the Master
+    /// notices the expired session and restarts the role.
+    pub fn kill_executor(&self, exec_id: u64) -> bool {
+        let g = self.state.lock().unwrap();
+        let mut found = false;
+        for e in g.executors.iter().filter(|e| e.id == exec_id && !e.is_finished()) {
+            e.crash();
+            found = true;
+        }
+        found
+    }
+
+    /// Gate the Master's automatic respawns. Disabled, a killed replica
+    /// stays dead — the only way to drill a zero-live-replica partition
+    /// without also killing every host. Restart requests arriving while
+    /// the gate is off are parked and replayed when it re-opens, so
+    /// re-enabling alone heals roles that died during the drill.
+    pub fn set_respawn(&self, enabled: bool) {
+        self.respawn_enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Heal the cluster back to nominal: re-enable respawn, revive every
+    /// host at full CPU share, and restart every role whose executor is
+    /// gone (replacements yield if the role's lock is still held).
+    pub fn restore(&self) {
+        self.respawn_enabled.store(true, Ordering::Relaxed);
+        for h in &self.hosts {
+            h.alive.store(true, Ordering::Relaxed);
+            h.cpu_share.store(100, Ordering::Relaxed);
+        }
+        for role in &self.roles {
+            let live = {
+                let g = self.state.lock().unwrap();
+                g.executors.iter().any(|e| e.id == role.exec_id && !e.is_finished())
+            };
+            if live {
+                continue;
+            }
+            respawn_role(
+                role,
+                &self.subs,
+                self.hosts[role.home_host].clone(),
+                &self.topo,
+                &self.broker,
+                &self.registry,
+                &self.state,
+            );
+        }
+    }
+
+    /// Executor ids of the live replicas currently serving `partition`.
+    pub fn executors_for_partition(&self, partition: PartitionId) -> Vec<u64> {
+        let g = self.state.lock().unwrap();
+        let mut ids: Vec<u64> = g
+            .executors
+            .iter()
+            .filter(|e| e.partition == partition && !e.is_finished())
+            .map(|e| e.id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// The replica a sub-query published with `key` (its qid) would be
+    /// served by right now — the "primary"; hedges go to another member.
+    /// None while the group has no assigned owner for that queue.
+    pub fn primary_for(&self, partition: PartitionId, key: u64) -> Option<u64> {
+        self.broker.owner_of(&topic_for(partition), &group_for(partition), key)
     }
 
     /// Bring a machine back. Respawns this host's *home* roles on it; each
@@ -306,24 +469,16 @@ impl SimCluster {
     /// the master-restarted instance elsewhere (paper §IV-B).
     pub fn restart_host(&self, host: usize) {
         self.hosts[host].alive.store(true, Ordering::Relaxed);
-        let net = Duration::from_micros(self.topo.net_latency_us);
-        let mut g = self.state.lock().unwrap();
         for role in self.roles.iter().filter(|r| r.home_host == host) {
-            let h = executor::spawn(
-                ExecutorSpec {
-                    id: role.exec_id,
-                    partition: role.partition,
-                    sub: self.subs[role.partition as usize].0.clone(),
-                    ids: self.subs[role.partition as usize].1.clone(),
-                    host: self.hosts[host].clone(),
-                    net_latency: net,
-                    batch: self.topo.executor_batch.max(1),
-                },
-                self.broker.clone(),
-                self.registry.clone(),
+            respawn_role(
+                role,
+                &self.subs,
+                self.hosts[host].clone(),
+                &self.topo,
+                &self.broker,
+                &self.registry,
+                &self.state,
             );
-            g.executors.retain(|e| !(e.id == role.exec_id && e.is_finished()));
-            g.executors.push(h);
         }
     }
 
@@ -542,6 +697,66 @@ mod tests {
         // No duplicate serving instances: live executor count equals roles.
         let live = cluster.live_executors();
         assert!(live <= 5, "{live} live executors after restart (duplicates?)");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn kill_executor_leaves_replica_serving() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 2)).unwrap();
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        for qi in 0..3 {
+            cluster.execute(queries.get(qi), &params).unwrap();
+        }
+        let replicas = cluster.executors_for_partition(0);
+        assert_eq!(replicas.len(), 2);
+        assert!(cluster.kill_executor(replicas[0]));
+        assert!(!cluster.kill_executor(999_999), "unknown id must report false");
+        // The sibling replica keeps the partition covered: queries still
+        // complete with full coverage (lease redelivery + hedge + the
+        // broker evicting the dead member).
+        std::thread::sleep(Duration::from_millis(700));
+        for qi in 0..queries.len() {
+            let r = cluster.execute_detailed(queries.get(qi), &params).unwrap();
+            assert!(
+                r.is_complete(),
+                "query {qi} lost coverage: {}/{}",
+                r.partitions_answered,
+                r.partitions_total
+            );
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn respawn_gate_and_restore() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        cluster.execute(queries.get(0), &params).unwrap();
+        cluster.set_respawn(false);
+        let victims = cluster.executors_for_partition(0);
+        for v in &victims {
+            cluster.kill_executor(*v);
+        }
+        // Past session expiry + master poll: with respawn gated off the
+        // partition must stay dark.
+        std::thread::sleep(Duration::from_millis(1200));
+        assert!(cluster.executors_for_partition(0).is_empty(), "respawn gate leaked");
+        // restore() heals the role and service resumes.
+        cluster.restore();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut healed = false;
+        while std::time::Instant::now() < deadline {
+            if !cluster.executors_for_partition(0).is_empty()
+                && cluster.execute(queries.get(1), &params).is_ok()
+            {
+                healed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        assert!(healed, "restore() did not revive partition 0");
         cluster.shutdown();
     }
 

@@ -13,14 +13,38 @@
 //! `execute_batch` is the batch-native form: one routing pass, one
 //! fan-out and one gather for a whole query block, so the coordinator
 //! stops being the serial stage in front of the batched executors.
+//!
+//! ## Robustness (paper §IV-B / Figs 11-12)
+//!
+//! The gather loop owns the query-level failure story:
+//!
+//! * **Hedged dispatch** — each outstanding (query, partition) arms a
+//!   hedge timer at a configurable quantile of recent sub-query latency
+//!   ([`HedgeConfig`]); when it fires, the same sub-query is published to
+//!   a *different* live replica of the partition's consumer group
+//!   ([`crate::broker::Broker::publish_hedge`]). Whichever partial lands
+//!   first wins; the loser is deduplicated. This bounds tail latency
+//!   under stragglers (Fig 12) without waiting for broker rebalancing.
+//! * **Eviction-driven re-issue** — when the broker evicts a dead
+//!   consumer (missed heartbeats), the gather loop re-publishes every
+//!   still-pending sub-query of the affected topic to a surviving
+//!   replica immediately instead of waiting out the block deadline
+//!   (Fig 11 node-kill recovery).
+//! * **Partial coverage** — a partition with zero live replicas cannot
+//!   answer; at the deadline the affected queries degrade to a merged
+//!   result over the partials that did arrive, reported through
+//!   [`QueryResult::coverage`] instead of an error (detailed API only;
+//!   the plain `execute`/`execute_batch` keep their timeout-error
+//!   contract for zero-coverage queries).
 
-use crate::broker::Broker;
+use crate::broker::{Broker, Eviction};
 use crate::config::QueryParams;
 use crate::error::{PyramidError, Result};
 use crate::meta::Router;
 use crate::runtime::BatchScorer;
-use crate::stats::ThroughputSeries;
-use crate::types::{merge_topk, Neighbor, PartitionId};
+use crate::stats::{QuantileWindow, ThroughputSeries};
+use crate::types::{merge_topk, Neighbor, PartitionId, QueryResult};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -28,6 +52,13 @@ use std::time::{Duration, Instant};
 /// Topic name for a sub-HNSW partition.
 pub fn topic_for(p: PartitionId) -> String {
     format!("sub-{p}")
+}
+
+/// Consumer-group name for a sub-HNSW partition's replica set. Shared by
+/// the executors that join it and the coordinator's hedged dispatch
+/// (which asks the broker for a different member of this group).
+pub fn group_for(p: PartitionId) -> String {
+    format!("grp-{p}")
 }
 
 /// A query-processing request published to a sub-HNSW topic.
@@ -62,8 +93,16 @@ pub struct PartialResult {
 pub struct CoordinatorMetrics {
     pub latencies_us: Mutex<Vec<f64>>,
     pub completed: AtomicU64,
+    /// Queries whose partial set was incomplete at the deadline.
     pub timeouts: AtomicU64,
     pub partials_received: AtomicU64,
+    /// Hedge requests fired (straggler mitigation).
+    pub hedges_fired: AtomicU64,
+    /// Sub-queries re-published after a consumer eviction.
+    pub reissues: AtomicU64,
+    /// Partials dropped because their (qid, partition) already answered —
+    /// the losing side of a hedge/retry race.
+    pub duplicates_dropped: AtomicU64,
     pub throughput: Mutex<Option<ThroughputSeries>>,
 }
 
@@ -78,6 +117,46 @@ impl CoordinatorMetrics {
     }
 }
 
+/// Hedged-dispatch tuning (paper Fig 12 straggler mitigation).
+#[derive(Debug, Clone, Copy)]
+pub struct HedgeConfig {
+    /// Master switch; disabled coordinators never send a second request.
+    pub enabled: bool,
+    /// Latency quantile of recent sub-query completions at which the
+    /// hedge timer fires (e.g. 0.95: hedge once a partial is slower than
+    /// 95% of recent history).
+    pub quantile: f64,
+    /// Floor for the hedge delay — never hedge faster than this, so a
+    /// fast healthy cluster doesn't double its request volume.
+    pub min: Duration,
+    /// Cap for the hedge delay; also used while the latency window is
+    /// still cold (fewer than [`Self::WARM_SAMPLES`] observations).
+    pub max: Duration,
+}
+
+impl HedgeConfig {
+    /// Observations required before the quantile estimate is trusted.
+    pub const WARM_SAMPLES: usize = 32;
+    /// Sliding-window capacity for the latency estimate.
+    pub const WINDOW: usize = 512;
+
+    /// Hedging disabled entirely (baseline measurement mode).
+    pub fn disabled() -> Self {
+        HedgeConfig { enabled: false, ..HedgeConfig::default() }
+    }
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig {
+            enabled: true,
+            quantile: 0.95,
+            min: Duration::from_millis(1),
+            max: Duration::from_millis(100),
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
@@ -85,15 +164,68 @@ pub struct CoordinatorConfig {
     pub timeout: Duration,
     /// Worker threads servicing `execute_async`.
     pub async_workers: usize,
+    /// Hedged-dispatch tuning.
+    pub hedge: HedgeConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { timeout: Duration::from_secs(2), async_workers: 4 }
+        CoordinatorConfig {
+            timeout: Duration::from_secs(2),
+            async_workers: 4,
+            hedge: HedgeConfig::default(),
+        }
     }
 }
 
 type AsyncJob = Box<dyn FnOnce() + Send>;
+
+/// Shared, bounded log of broker eviction events. One broker watcher per
+/// coordinator (registered at construction, so the watcher list never
+/// grows with query volume); every in-flight gather loop drains the
+/// receiver into the log and reads from its own cursor, so concurrent
+/// blocks all observe every event.
+struct EvictionLog {
+    rx: mpsc::Receiver<Eviction>,
+    /// Sequence number of `log[0]`.
+    seq_base: u64,
+    log: VecDeque<Eviction>,
+}
+
+impl EvictionLog {
+    const CAP: usize = 1024;
+
+    fn drain(&mut self) {
+        while let Ok(ev) = self.rx.try_recv() {
+            self.log.push_back(ev);
+            if self.log.len() > Self::CAP {
+                self.log.pop_front();
+                self.seq_base += 1;
+            }
+        }
+    }
+
+    fn end(&self) -> u64 {
+        self.seq_base + self.log.len() as u64
+    }
+
+    /// Events with sequence >= `*cursor`; advances the cursor to the end.
+    fn since(&mut self, cursor: &mut u64) -> Vec<Eviction> {
+        let start = (*cursor).max(self.seq_base);
+        let out: Vec<Eviction> =
+            self.log.iter().skip((start - self.seq_base) as usize).cloned().collect();
+        *cursor = self.end();
+        out
+    }
+}
+
+/// Gather-loop bookkeeping for one outstanding (query, partition).
+struct Pending {
+    /// Index of the query within the block.
+    qi: usize,
+    sent_at: Instant,
+    hedged: bool,
+}
 
 /// The coordinator node.
 pub struct CoordinatorNode {
@@ -105,31 +237,44 @@ pub struct CoordinatorNode {
     pub metrics: Arc<CoordinatorMetrics>,
     /// Optional exact re-rank backend (PJRT or native).
     scorer: Option<Arc<dyn BatchScorer>>,
+    /// Recent sub-query completion latencies (µs) feeding the hedge timer.
+    sub_latency: Mutex<QuantileWindow>,
+    evictions: Mutex<EvictionLog>,
     async_tx: Mutex<Option<mpsc::Sender<AsyncJob>>>,
     async_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl CoordinatorNode {
-    pub fn new(id: u64, router: Router, broker: Broker<QueryRequest>, cfg: CoordinatorConfig) -> Arc<Self> {
-        let node = Arc::new(CoordinatorNode {
-            id,
-            router,
-            broker,
-            cfg,
-            next_qid: AtomicU64::new(1),
-            metrics: Arc::new(CoordinatorMetrics::default()),
-            scorer: None,
-            async_tx: Mutex::new(None),
-            async_handles: Mutex::new(Vec::new()),
-        });
-        node.start_async_pool();
-        node
+    pub fn new(
+        id: u64,
+        router: Router,
+        broker: Broker<QueryRequest>,
+        cfg: CoordinatorConfig,
+    ) -> Arc<Self> {
+        Self::build(id, router, broker, cfg, None)
     }
 
     /// Attach an exact re-rank backend; queries will request candidate
     /// vectors and re-score the merged set through it (Algorithm 4 line 9
     /// on the PJRT-compiled Pallas scorer).
-    pub fn with_scorer(id: u64, router: Router, broker: Broker<QueryRequest>, cfg: CoordinatorConfig, scorer: Arc<dyn BatchScorer>) -> Arc<Self> {
+    pub fn with_scorer(
+        id: u64,
+        router: Router,
+        broker: Broker<QueryRequest>,
+        cfg: CoordinatorConfig,
+        scorer: Arc<dyn BatchScorer>,
+    ) -> Arc<Self> {
+        Self::build(id, router, broker, cfg, Some(scorer))
+    }
+
+    fn build(
+        id: u64,
+        router: Router,
+        broker: Broker<QueryRequest>,
+        cfg: CoordinatorConfig,
+        scorer: Option<Arc<dyn BatchScorer>>,
+    ) -> Arc<Self> {
+        let evict_rx = broker.eviction_watcher();
         let node = Arc::new(CoordinatorNode {
             id,
             router,
@@ -137,7 +282,9 @@ impl CoordinatorNode {
             cfg,
             next_qid: AtomicU64::new(1),
             metrics: Arc::new(CoordinatorMetrics::default()),
-            scorer: Some(scorer),
+            scorer,
+            sub_latency: Mutex::new(QuantileWindow::new(HedgeConfig::WINDOW)),
+            evictions: Mutex::new(EvictionLog { rx: evict_rx, seq_base: 0, log: VecDeque::new() }),
             async_tx: Mutex::new(None),
             async_handles: Mutex::new(Vec::new()),
         });
@@ -175,12 +322,47 @@ impl CoordinatorNode {
         &self.router
     }
 
+    /// The qid the next accepted query will be assigned (monotone hint for
+    /// tests and fault-injection harnesses that need to predict which
+    /// broker queue partition — and so which replica — a query's
+    /// sub-requests route to).
+    pub fn next_qid_hint(&self) -> u64 {
+        self.next_qid.load(Ordering::Relaxed)
+    }
+
+    /// The hedge delay the next block will arm: the configured latency
+    /// quantile over the recent sub-query window, clamped to
+    /// [`HedgeConfig::min`, `HedgeConfig::max`]; `None` when hedging is
+    /// disabled.
+    pub fn current_hedge_delay(&self) -> Option<Duration> {
+        let h = &self.cfg.hedge;
+        if !h.enabled {
+            return None;
+        }
+        let lat = self.sub_latency.lock().unwrap();
+        let d = match lat.quantile(h.quantile) {
+            Some(us) if lat.len() >= HedgeConfig::WARM_SAMPLES => {
+                Duration::from_secs_f64((us / 1e6).max(0.0))
+            }
+            _ => h.max,
+        };
+        Some(d.clamp(h.min, h.max))
+    }
+
     /// Process one query synchronously (paper Listing 1 `execute`) — a
     /// batch of one through [`Self::execute_batch`], so the two paths can
     /// never diverge.
     pub fn execute(&self, query: &[f32], params: &QueryParams) -> Result<Vec<Neighbor>> {
         let mut results = self.execute_batch(&[query], params)?;
         Ok(results.pop().expect("execute_batch returns one result per query"))
+    }
+
+    /// [`Self::execute`] with the coverage report attached. Never fails on
+    /// partial coverage: a partition blackout degrades the result
+    /// ([`QueryResult::coverage`] < 1) instead of erroring.
+    pub fn execute_detailed(&self, query: &[f32], params: &QueryParams) -> Result<QueryResult> {
+        let mut results = self.execute_batch_detailed(&[query], params)?;
+        Ok(results.pop().expect("execute_batch_detailed returns one result per query"))
     }
 
     /// Process a whole query block in one batched pass — the batch-native
@@ -195,19 +377,31 @@ impl CoordinatorNode {
     /// Queries whose partials only partially arrive by the deadline merge
     /// what they got (counted in `metrics.timeouts`); if any query
     /// receives *nothing* the whole call returns the timeout error, like
-    /// `execute` does for its single query. That makes a block
-    /// all-or-nothing under partition blackout — deliberate: a block is
-    /// one logical request and retries as one (see
-    /// [`crate::cluster::SimCluster::execute_batch`]). Callers that need
-    /// per-query failure isolation on an unhealthy cluster should issue
-    /// sequential [`Self::execute`] calls instead; `cfg.timeout` is also
-    /// per *call*, so very large blocks on a loaded cluster may warrant a
-    /// proportionally larger timeout.
+    /// `execute` does for its single query. Callers that need per-query
+    /// degradation instead of block failure use
+    /// [`Self::execute_batch_detailed`].
     pub fn execute_batch(
         &self,
         queries: &[&[f32]],
         params: &QueryParams,
     ) -> Result<Vec<Vec<Neighbor>>> {
+        let detailed = self.execute_batch_detailed(queries, params)?;
+        if detailed.iter().any(|r| r.partitions_answered == 0 && r.partitions_total > 0) {
+            return Err(PyramidError::Timeout(self.cfg.timeout));
+        }
+        Ok(detailed.into_iter().map(|r| r.neighbors).collect())
+    }
+
+    /// The failure-aware batched execution path (see the module docs):
+    /// hedged dispatch, eviction-driven re-issue, first-wins dedup, and
+    /// per-query coverage reporting. Every query in the block gets a
+    /// [`QueryResult`]; a query whose partitions all went dark comes back
+    /// with empty neighbors and `coverage() == 0` rather than an error.
+    pub fn execute_batch_detailed(
+        &self,
+        queries: &[&[f32]],
+        params: &QueryParams,
+    ) -> Result<Vec<QueryResult>> {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
@@ -222,66 +416,177 @@ impl CoordinatorNode {
         let want_vectors = self.scorer.is_some();
         let query_arcs: Vec<Arc<Vec<f32>>> =
             prepared.into_iter().map(|q| Arc::new(q.into_owned())).collect();
+        let mk_req = |qid: u64, p: PartitionId, qi: usize| QueryRequest {
+            qid,
+            partition: p,
+            query: query_arcs[qi].clone(),
+            k: params.k,
+            ef: params.ef,
+            return_vectors: want_vectors,
+            reply: reply_tx.clone(),
+        };
+        // Snapshot the eviction cursor before the fan-out: deaths already
+        // reaped are reflected in the group assignment the publishes see;
+        // anything that lands after this point is re-issued by the loop.
+        let mut evict_cursor = {
+            let mut log = self.evictions.lock().unwrap();
+            log.drain();
+            log.end()
+        };
+        let hedge_delay = self.current_hedge_delay();
         // Fan the whole block out before gathering anything: every
         // executor sees as deep a backlog as possible per drain.
-        let mut expected = 0usize;
+        // `hedge_queue` mirrors the fan-out order; since the hedge delay
+        // is constant for the block and `sent_at` is monotone in that
+        // order, due-checking is an O(1) front-peek instead of a scan of
+        // every pending entry per received partial.
+        let mut pending: HashMap<(u64, PartitionId), Pending> = HashMap::new();
+        let mut hedge_queue: VecDeque<(u64, PartitionId)> = VecDeque::new();
         for (i, parts_i) in parts.iter().enumerate() {
             let qid = base_qid + i as u64;
             for &p in parts_i {
-                self.broker.publish(
-                    &topic_for(p),
-                    qid,
-                    QueryRequest {
-                        qid,
-                        partition: p,
-                        query: query_arcs[i].clone(),
-                        k: params.k,
-                        ef: params.ef,
-                        return_vectors: want_vectors,
-                        reply: reply_tx.clone(),
-                    },
-                )?;
+                self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                pending.insert((qid, p), Pending { qi: i, sent_at: Instant::now(), hedged: false });
+                if hedge_delay.is_some() {
+                    hedge_queue.push_back((qid, p));
+                }
             }
-            expected += parts_i.len();
         }
-        drop(reply_tx);
-        // Gather all partials for the block, keyed by qid, bounded by one
-        // shared deadline.
+        // Gather partials for the block, keyed by (qid, partition), under
+        // one shared deadline. First answer per key wins; everything else
+        // is a deduplicated hedge/retry loser.
         let deadline = start + self.cfg.timeout;
         let mut got: Vec<Vec<PartialResult>> = (0..queries.len()).map(|_| Vec::new()).collect();
-        let mut seen: std::collections::HashSet<(u64, PartitionId)> =
-            std::collections::HashSet::with_capacity(expected);
-        while seen.len() < expected {
+        while !pending.is_empty() {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match reply_rx.recv_timeout(deadline - now) {
-                Ok(pr) if pr.qid >= base_qid && pr.qid < base_qid + n => {
+            // Eviction-driven re-issue: pending sub-queries on an affected
+            // topic may sit queued behind (or leased to) the dead member;
+            // re-publish them to a surviving replica immediately.
+            let evs = {
+                let mut log = self.evictions.lock().unwrap();
+                log.drain();
+                log.since(&mut evict_cursor)
+            };
+            for ev in evs {
+                let affected: Vec<(u64, PartitionId)> = pending
+                    .iter()
+                    .filter(|(k, _)| ev.topic == topic_for(k.1))
+                    .map(|(k, _)| *k)
+                    .collect();
+                for key in affected {
+                    let qi = pending[&key].qi;
+                    // Best-effort: a failed re-publish leaves the original
+                    // lease-expiry path to redeliver.
+                    let _ = self.broker.publish_hedge(
+                        &topic_for(key.1),
+                        &group_for(key.1),
+                        key.0,
+                        mk_req(key.0, key.1, qi),
+                    );
+                    if let Some(st) = pending.get_mut(&key) {
+                        st.hedged = true; // the re-issue doubles as the hedge
+                    }
+                    self.metrics.reissues.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Hedge timers: fire the second request for sub-queries slower
+            // than the armed latency quantile. The queue's prefix of
+            // answered/already-hedged keys is discarded as it surfaces, so
+            // the front is always the earliest live candidate.
+            if let Some(hd) = hedge_delay {
+                while let Some(key) = hedge_queue.front().copied() {
+                    let Some(st) = pending.get(&key) else {
+                        hedge_queue.pop_front();
+                        continue;
+                    };
+                    if st.hedged {
+                        hedge_queue.pop_front();
+                        continue;
+                    }
+                    if now < st.sent_at + hd {
+                        break; // later entries were sent even later
+                    }
+                    hedge_queue.pop_front();
+                    let qi = st.qi;
+                    let _ = self.broker.publish_hedge(
+                        &topic_for(key.1),
+                        &group_for(key.1),
+                        key.0,
+                        mk_req(key.0, key.1, qi),
+                    );
+                    if let Some(st) = pending.get_mut(&key) {
+                        st.hedged = true;
+                    }
+                    self.metrics.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Sleep until the next actionable instant: an incoming
+            // partial, the earliest unfired hedge timer, the deadline, or
+            // the 20ms eviction-poll tick, whichever is first.
+            let mut slice = deadline - now;
+            if let Some(hd) = hedge_delay {
+                if let Some(st) = hedge_queue.front().and_then(|key| pending.get(key)) {
+                    let until = (st.sent_at + hd)
+                        .saturating_duration_since(now)
+                        .max(Duration::from_micros(200));
+                    slice = slice.min(until);
+                }
+            }
+            slice = slice.min(Duration::from_millis(20));
+            match reply_rx.recv_timeout(slice) {
+                Ok(pr) => {
                     self.metrics.partials_received.fetch_add(1, Ordering::Relaxed);
-                    if seen.insert((pr.qid, pr.partition)) {
-                        got[(pr.qid - base_qid) as usize].push(pr);
+                    if pr.qid >= base_qid && pr.qid < base_qid + n {
+                        match pending.remove(&(pr.qid, pr.partition)) {
+                            Some(st) => {
+                                // Time-to-FIRST-answer feeds the estimator
+                                // for every completion, hedged or not. With
+                                // a p-quantile trigger, ~p of samples are
+                                // unhedged by construction, so the estimate
+                                // stays anchored to healthy latency
+                                // (excluding hedged completions instead
+                                // would truncate the window at the delay
+                                // and spiral it down to the min clamp);
+                                // under extreme straggle the rescued
+                                // samples can drift it up, bounded by max.
+                                let us = st.sent_at.elapsed().as_secs_f64() * 1e6;
+                                self.sub_latency.lock().unwrap().observe(us);
+                                got[(pr.qid - base_qid) as usize].push(pr);
+                            }
+                            None => {
+                                // Hedge/retry loser for an already-answered
+                                // sub-query: drop it so the merge never
+                                // sees the same partition twice.
+                                self.metrics.duplicates_dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }
                 }
-                // Defensive only: the reply channel is created per call
-                // and its senders live solely in this block's requests,
-                // so an out-of-range qid is unreachable today. The guard
-                // keeps a future shared-channel refactor from indexing
-                // out of bounds instead of skipping.
-                Ok(_) => {}
-                Err(_) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                // Unreachable while we hold reply_tx for re-issues; kept
+                // so a refactor that drops it early stays correct.
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        // Per-query merge (Algorithm 4 line 9), same path as `execute`.
+        drop(reply_tx);
+        // Per-query merge (Algorithm 4 line 9), same path as `execute`,
+        // plus the coverage report.
         let mut out = Vec::with_capacity(queries.len());
         for (i, partials) in got.into_iter().enumerate() {
-            if partials.len() < parts[i].len() {
+            let total = parts[i].len();
+            let answered = partials.len();
+            if answered < total {
                 self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
-                if partials.is_empty() {
-                    return Err(PyramidError::Timeout(self.cfg.timeout));
-                }
             }
-            out.push(self.merge(&query_arcs[i], partials, params.k)?);
+            let neighbors = self.merge(&query_arcs[i], partials, params.k)?;
+            out.push(QueryResult {
+                neighbors,
+                partitions_total: total,
+                partitions_answered: answered,
+            });
         }
         let done = Instant::now();
         let batch_us = done.duration_since(start).as_secs_f64() * 1e6;
@@ -362,5 +667,153 @@ impl std::fmt::Debug for CoordinatorNode {
             .field("id", &self.id)
             .field("partitions", &self.router.partitions())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::metric::Metric;
+
+    /// A fake executor: answers every polled request `echoes` times (a
+    /// double delivery is exactly what a hedged/retried sub-query
+    /// produces when both replicas answer), after an optional delay.
+    fn spawn_replier(
+        broker: Broker<QueryRequest>,
+        partition: PartitionId,
+        member: u64,
+        neighbors: Vec<Neighbor>,
+        echoes: u64,
+        delay: Duration,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let consumer = broker
+                .subscribe(&topic_for(partition), &group_for(partition), member)
+                .expect("subscribe");
+            while !stop.load(Ordering::Relaxed) {
+                let Some(d) = consumer.poll(Duration::from_millis(10)) else { continue };
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                let req = &d.msg;
+                for echo in 0..echoes {
+                    let _ = req.reply.send(PartialResult {
+                        qid: req.qid,
+                        partition: req.partition,
+                        neighbors: neighbors.clone(),
+                        vectors: None,
+                        executor: member + echo * 1000,
+                    });
+                }
+                consumer.ack(&d);
+            }
+            consumer.leave();
+        })
+    }
+
+    /// Regression for the duplicate-partial merge bug class: two partials
+    /// for the same (qid, partition) must not produce repeated ids or a
+    /// double-counted coverage report. Partition 0 double-delivers
+    /// instantly; partition 1 answers slowly, keeping the gather loop
+    /// alive so it actually reads (and must drop) the duplicate.
+    #[test]
+    fn double_delivery_deduped_before_merge() {
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        broker.create_topic(&topic_for(0));
+        broker.create_topic(&topic_for(1));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let fast_double = spawn_replier(
+            broker.clone(),
+            0,
+            7,
+            vec![Neighbor::new(1, 0.9), Neighbor::new(2, 0.8), Neighbor::new(3, 0.7)],
+            2,
+            Duration::ZERO,
+            stop.clone(),
+        );
+        let slow_single = spawn_replier(
+            broker.clone(),
+            1,
+            8,
+            vec![Neighbor::new(10, 0.6), Neighbor::new(11, 0.5)],
+            1,
+            Duration::from_millis(30),
+            stop.clone(),
+        );
+        // Broadcast router over two partitions: every query routes to both.
+        let router = Router::broadcast(2, Metric::L2);
+        let cfg = CoordinatorConfig {
+            timeout: Duration::from_millis(800),
+            hedge: HedgeConfig::disabled(),
+            ..CoordinatorConfig::default()
+        };
+        let node = CoordinatorNode::new(0, router, broker, cfg);
+        let q = vec![0.0f32; 8];
+        for _ in 0..4 {
+            let res = node
+                .execute_detailed(&q, &QueryParams { k: 10, ..QueryParams::default() })
+                .unwrap();
+            // One partial per partition counted, despite the double send.
+            assert_eq!(res.partitions_total, 2);
+            assert_eq!(res.partitions_answered, 2);
+            assert_eq!(res.coverage(), 1.0);
+            let ids: Vec<u32> = res.neighbors.iter().map(|n| n.id).collect();
+            assert_eq!(ids, vec![1, 2, 3, 10, 11], "repeated ids leaked through the merge");
+        }
+        // The second copies were observed and dropped, not merged.
+        assert!(
+            node.metrics.duplicates_dropped.load(Ordering::Relaxed) >= 1,
+            "dedup path never exercised"
+        );
+        stop.store(true, Ordering::Relaxed);
+        fast_double.join().unwrap();
+        slow_single.join().unwrap();
+        node.shutdown();
+    }
+
+    #[test]
+    fn hedge_delay_tracks_latency_window() {
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig::default());
+        let node = CoordinatorNode::new(
+            0,
+            Router::broadcast(1, Metric::L2),
+            broker,
+            CoordinatorConfig::default(),
+        );
+        // Cold window: falls back to the cap.
+        assert_eq!(node.current_hedge_delay(), Some(node.cfg.hedge.max));
+        // Warm window of ~500µs completions: clamps up to the floor.
+        {
+            let mut w = node.sub_latency.lock().unwrap();
+            for _ in 0..HedgeConfig::WARM_SAMPLES {
+                w.observe(500.0);
+            }
+        }
+        assert_eq!(node.current_hedge_delay(), Some(node.cfg.hedge.min));
+        // A straggler era pushes the quantile between the clamps.
+        {
+            let mut w = node.sub_latency.lock().unwrap();
+            for _ in 0..HedgeConfig::WINDOW {
+                w.observe(20_000.0); // 20ms
+            }
+        }
+        let d = node.current_hedge_delay().unwrap();
+        assert!(d >= Duration::from_millis(19) && d <= Duration::from_millis(21), "{d:?}");
+        node.shutdown();
+    }
+
+    #[test]
+    fn disabled_hedging_never_arms() {
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig::default());
+        let cfg =
+            CoordinatorConfig { hedge: HedgeConfig::disabled(), ..CoordinatorConfig::default() };
+        let node = CoordinatorNode::new(0, Router::broadcast(1, Metric::L2), broker, cfg);
+        assert_eq!(node.current_hedge_delay(), None);
+        node.shutdown();
     }
 }

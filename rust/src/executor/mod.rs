@@ -21,7 +21,7 @@
 //! stretches per-request service time like the paper's CPU-limit tool.
 
 use crate::broker::{Broker, Delivery};
-use crate::coordinator::{topic_for, PartialResult, QueryRequest};
+use crate::coordinator::{group_for, topic_for, PartialResult, QueryRequest};
 use crate::hnsw::Hnsw;
 use crate::registry::Registry;
 use crate::runtime::{BatchScorer, NativeScorer};
@@ -109,6 +109,7 @@ pub struct ExecutorHandle {
     pub partition: PartitionId,
     pub host: Arc<HostControl>,
     stop: Arc<AtomicBool>,
+    crash: Arc<AtomicBool>,
     pub served: Arc<AtomicU64>,
     handle: Option<std::thread::JoinHandle<ExitReason>>,
 }
@@ -127,6 +128,15 @@ pub enum ExitReason {
 }
 
 impl ExecutorHandle {
+    /// Crash *this one executor* (no graceful leave, no unlock — its
+    /// session leaks and only expires), leaving the rest of its host
+    /// running. The per-process analogue of [`HostControl::alive`]'s
+    /// whole-machine kill; the fault-injection entry point behind
+    /// [`crate::cluster::SimCluster::kill_executor`].
+    pub fn crash(&self) {
+        self.crash.store(true, Ordering::Relaxed);
+    }
+
     /// Politely stop the executor (leaves the group, releases the lock).
     pub fn stop(mut self) -> ExitReason {
         self.stop.store(true, Ordering::Relaxed);
@@ -155,17 +165,19 @@ impl Drop for ExecutorHandle {
 /// Spawn an executor service thread.
 pub fn spawn(spec: ExecutorSpec, broker: Broker<QueryRequest>, registry: Registry) -> ExecutorHandle {
     let stop = Arc::new(AtomicBool::new(false));
+    let crash = Arc::new(AtomicBool::new(false));
     let served = Arc::new(AtomicU64::new(0));
     let stop2 = stop.clone();
+    let crash2 = crash.clone();
     let served2 = served.clone();
     let host = spec.host.clone();
     let partition = spec.partition;
     let id = spec.id;
     let handle = std::thread::Builder::new()
         .name(format!("executor-{id}-p{partition}"))
-        .spawn(move || run(spec, broker, registry, stop2, served2))
+        .spawn(move || run(spec, broker, registry, stop2, crash2, served2))
         .expect("spawn executor");
-    ExecutorHandle { id, partition, host, stop, served, handle: Some(handle) }
+    ExecutorHandle { id, partition, host, stop, crash, served, handle: Some(handle) }
 }
 
 fn run(
@@ -173,6 +185,7 @@ fn run(
     broker: Broker<QueryRequest>,
     registry: Registry,
     stop: Arc<AtomicBool>,
+    crash: Arc<AtomicBool>,
     served: Arc<AtomicU64>,
 ) -> ExitReason {
     let lock_path = format!("/instance/exec-{}", spec.id);
@@ -183,7 +196,7 @@ fn run(
         return ExitReason::LockHeld;
     }
     let topic = topic_for(spec.partition);
-    let group = format!("grp-{}", spec.partition);
+    let group = group_for(spec.partition);
     let consumer = match broker.subscribe(&topic, &group, spec.id) {
         Ok(c) => c,
         Err(_) => return ExitReason::Stopped,
@@ -196,9 +209,10 @@ fn run(
             consumer.leave();
             return ExitReason::Stopped;
         }
-        if !spec.host.alive.load(Ordering::Relaxed) {
-            // Crash: no graceful leave, no unlock — leak the session so the
-            // lock only releases on expiry, exactly like a killed machine.
+        if !spec.host.alive.load(Ordering::Relaxed) || crash.load(Ordering::Relaxed) {
+            // Crash (whole host or this executor alone): no graceful
+            // leave, no unlock — leak the session so the lock only
+            // releases on expiry, exactly like a killed process.
             std::mem::forget(session);
             return ExitReason::HostDied;
         }
@@ -220,7 +234,7 @@ fn run(
         }
         // Messages may have been polled just as the host died; honor the
         // crash before doing work (the leases will redeliver them).
-        if !spec.host.alive.load(Ordering::Relaxed) {
+        if !spec.host.alive.load(Ordering::Relaxed) || crash.load(Ordering::Relaxed) {
             std::mem::forget(session);
             return ExitReason::HostDied;
         }
@@ -434,6 +448,30 @@ mod tests {
         assert!(registry.is_locked("/instance/exec-9"));
         std::thread::sleep(Duration::from_millis(500));
         assert!(!registry.is_locked("/instance/exec-9"));
+    }
+
+    #[test]
+    fn single_executor_crash_leaves_host_alive() {
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub();
+        let host = HostControl::new(0);
+        let h1 = spawn(
+            spec(20, sub.clone(), ids.clone(), host.clone()),
+            broker.clone(),
+            registry.clone(),
+        );
+        let h2 = spawn(spec(21, sub, ids, host.clone()), broker, registry.clone());
+        std::thread::sleep(Duration::from_millis(30));
+        h1.crash();
+        assert_eq!(h1.join(), ExitReason::HostDied);
+        // The host switch never flipped: the sibling keeps running and the
+        // crashed executor's lock lingers until session expiry.
+        assert!(host.alive.load(Ordering::Relaxed));
+        assert!(!h2.is_finished());
+        assert!(registry.is_locked("/instance/exec-20"));
+        std::thread::sleep(Duration::from_millis(500));
+        assert!(!registry.is_locked("/instance/exec-20"));
+        h2.stop();
     }
 
     #[test]

@@ -60,10 +60,11 @@ pub mod prelude {
     pub use crate::bench_harness::{drive_cluster, precision_at_k, BenchRecorder, LatencyRecorder, TablePrinter, Workload};
     pub use crate::cluster::{ClusterConfig, SimCluster};
     pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams};
+    pub use crate::coordinator::{CoordinatorConfig, HedgeConfig};
     pub use crate::dataset::{Dataset, SyntheticKind, SyntheticSpec};
     pub use crate::error::{PyramidError, Result};
     pub use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
-    pub use crate::types::{Neighbor, VectorId};
+    pub use crate::types::{Neighbor, QueryResult, VectorId};
 }

@@ -51,6 +51,49 @@ impl Running {
     }
 }
 
+/// Fixed-capacity sliding window of recent samples with on-demand
+/// quantiles — the coordinator's hedge timer reads its sub-query latency
+/// history through this (Fig 12 straggler mitigation). Ring-buffer
+/// overwrite keeps the estimate adaptive: a straggler era raises the
+/// quantile, recovery lowers it again.
+#[derive(Debug)]
+pub struct QuantileWindow {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+    filled: usize,
+}
+
+impl QuantileWindow {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        QuantileWindow { buf: vec![0.0; cap], cap, next: 0, filled: 0 }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buf[self.next] = v;
+        self.next = (self.next + 1) % self.cap;
+        self.filled = (self.filled + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    /// Nearest-rank quantile over the window, `q` in [0, 1]. None while
+    /// the window is empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.filled == 0 {
+            return None;
+        }
+        Some(percentile(&self.buf[..self.filled], (q * 100.0).clamp(0.0, 100.0)))
+    }
+}
+
 /// Completed-ops counter bucketed into fixed windows — produces the
 /// throughput-vs-time series for the failure experiment (Fig 13).
 #[derive(Debug)]
@@ -107,6 +150,22 @@ mod tests {
         assert_eq!(r.min, 1.0);
         assert_eq!(r.max, 3.0);
         assert!((r.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_window_slides() {
+        let mut w = QuantileWindow::new(4);
+        assert!(w.quantile(0.5).is_none());
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.observe(v);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.quantile(1.0), Some(4.0));
+        // Overwrites the oldest: window becomes {100, 2, 3, 4}.
+        w.observe(100.0);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.quantile(1.0), Some(100.0));
+        assert_eq!(w.quantile(0.0), Some(2.0));
     }
 
     #[test]

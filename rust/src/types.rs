@@ -44,6 +44,38 @@ impl PartialOrd for Neighbor {
     }
 }
 
+/// A query answer with its coverage report (paper §IV-B failure
+/// recovery): how many of the sub-HNSWs the router selected actually
+/// contributed a partial before the deadline. A healthy cluster always
+/// reports full coverage; a partition with zero live replicas degrades
+/// the affected queries to `coverage() < 1.0` instead of failing them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResult {
+    /// Merged top-k, best first (deduplicated across partials).
+    pub neighbors: Vec<Neighbor>,
+    /// Sub-HNSWs the routing step selected for this query.
+    pub partitions_total: usize,
+    /// Sub-HNSWs whose partial arrived before the deadline.
+    pub partitions_answered: usize,
+}
+
+impl QueryResult {
+    /// Fraction of routed partitions that answered (1.0 when none were
+    /// routed — an empty plan is trivially covered).
+    pub fn coverage(&self) -> f64 {
+        if self.partitions_total == 0 {
+            1.0
+        } else {
+            self.partitions_answered as f64 / self.partitions_total as f64
+        }
+    }
+
+    /// Whether every routed partition contributed a partial.
+    pub fn is_complete(&self) -> bool {
+        self.partitions_answered >= self.partitions_total
+    }
+}
+
 /// One query of an executor drain-batch (borrowed view into the polled
 /// requests; see [`crate::executor`]).
 #[derive(Debug, Clone, Copy)]
@@ -119,5 +151,19 @@ mod tests {
     fn merge_topk_shorter_than_k() {
         let top = merge_topk(vec![Neighbor::new(7, 1.0)], 10);
         assert_eq!(top.len(), 1);
+    }
+
+    #[test]
+    fn query_result_coverage() {
+        let full = QueryResult { neighbors: vec![], partitions_total: 4, partitions_answered: 4 };
+        assert_eq!(full.coverage(), 1.0);
+        assert!(full.is_complete());
+        let partial =
+            QueryResult { neighbors: vec![], partitions_total: 4, partitions_answered: 3 };
+        assert_eq!(partial.coverage(), 0.75);
+        assert!(!partial.is_complete());
+        let empty = QueryResult { neighbors: vec![], partitions_total: 0, partitions_answered: 0 };
+        assert_eq!(empty.coverage(), 1.0);
+        assert!(empty.is_complete());
     }
 }

@@ -1,0 +1,334 @@
+//! Robustness end-to-end tests: the paper's failure-recovery and
+//! straggler-mitigation experiments (Figs 11-12) reproduced on the
+//! simulated cluster, plus a parameterized recovery matrix over
+//! {fault} x {execution path}. All faults are injected through the
+//! `SimCluster` fault-injection API (`kill_host`, `kill_executor`,
+//! `set_cpu_share`, `set_respawn`, `restore`) — never through test-only
+//! shims inside the coordinator.
+
+use pyramid::bench_harness::precision_at_k;
+use pyramid::coordinator::{CoordinatorConfig, HedgeConfig};
+use pyramid::prelude::*;
+use pyramid::stats::percentile;
+use std::time::{Duration, Instant};
+
+fn build_index(n: usize, partitions: usize, seed: u64) -> (Dataset, Dataset, PyramidIndex) {
+    let mut spec = SyntheticSpec::deep_like(n, 16, seed);
+    spec.clusters = 32;
+    let data = spec.generate();
+    let queries = spec.queries(40);
+    let cfg = IndexConfig {
+        sample: (n / 4).max(600),
+        meta_size: 32,
+        partitions,
+        ..IndexConfig::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    (data, queries, idx)
+}
+
+fn topo(workers: usize, replicas: usize, net_latency_us: u64) -> ClusterTopology {
+    ClusterTopology {
+        workers,
+        replicas,
+        coordinators: 2,
+        net_latency_us,
+        rebalance_ms: 100,
+        executor_batch: 8,
+    }
+}
+
+/// Paper Fig 11: kill a machine mid-stream on a replicated cluster.
+/// Every query must still complete (hedge + eviction re-issue + lease
+/// redelivery + master respawn), the recall floor must hold, and no
+/// gather may hang past its deadline.
+#[test]
+fn fig11_node_kill_mid_stream_recovers() {
+    let (data, queries, idx) = build_index(4_000, 4, 21);
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let cluster = SimCluster::start(&idx, topo(4, 2, 100)).unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+
+    // Healthy baseline (also warms the coordinators' latency windows).
+    let mut baseline = Vec::new();
+    for qi in 0..workload.queries.len() {
+        baseline.push(cluster.execute(workload.queries.get(qi), &params).unwrap());
+    }
+    let p_base = workload.precision(&baseline);
+    assert!(p_base > 0.7, "healthy baseline precision {p_base}");
+
+    // Stream again, killing host 0 a third of the way through.
+    let kill_at = workload.queries.len() / 3;
+    let mut results = Vec::new();
+    for qi in 0..workload.queries.len() {
+        if qi == kill_at {
+            cluster.kill_host(0);
+        }
+        let t0 = Instant::now();
+        let res = cluster
+            .execute(workload.queries.get(qi), &params)
+            .unwrap_or_else(|e| panic!("query {qi} failed after kill: {e}"));
+        // No hung gather: one call is bounded by the per-coordinator
+        // deadline plus the single cluster-level retry.
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "query {qi} took {:?} (hung gather?)",
+            t0.elapsed()
+        );
+        results.push(res);
+    }
+    let p_kill = workload.precision(&results);
+    assert!(
+        p_kill >= p_base - 0.05,
+        "recall floor broke across node kill: baseline {p_base}, after {p_kill}"
+    );
+
+    // Throughput recovers: once the eviction + respawn settle, queries
+    // are full-coverage again.
+    std::thread::sleep(Duration::from_millis(700));
+    for qi in 0..8 {
+        let r = cluster.execute_detailed(workload.queries.get(qi), &params).unwrap();
+        assert!(r.is_complete(), "post-recovery query {qi} still degraded");
+    }
+    cluster.shutdown();
+}
+
+/// Paper Fig 12: throttle one host to 10% CPU. Hedged dispatch must keep
+/// the p99 below the unhedged cluster's p99 on the identical workload,
+/// and the hedges must actually fire.
+#[test]
+fn fig12_straggler_hedged_p99_stays_bounded() {
+    let (data, queries, idx) = build_index(3_000, 4, 33);
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+
+    let run = |hedge: HedgeConfig| -> (f64, u64, f64) {
+        let coord_cfg = CoordinatorConfig { hedge, ..CoordinatorConfig::default() };
+        let cluster = SimCluster::start_with(&idx, topo(4, 2, 500), None, coord_cfg).unwrap();
+        // Warm-up: fills the latency window so the hedge timer arms at a
+        // healthy quantile, and lets the group assignments settle.
+        for qi in 0..workload.queries.len() {
+            cluster.execute(workload.queries.get(qi), &params).unwrap();
+        }
+        cluster.set_cpu_share(0, 10);
+        let mut samples_ms = Vec::new();
+        let mut results = Vec::new();
+        for round in 0..4 {
+            for qi in 0..workload.queries.len() {
+                let t0 = Instant::now();
+                let res = cluster.execute(workload.queries.get(qi), &params).unwrap();
+                samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                if round == 0 {
+                    results.push(res);
+                }
+            }
+        }
+        let hedges: u64 = cluster
+            .coordinators()
+            .iter()
+            .map(|c| c.metrics.hedges_fired.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        let precision = workload.precision(&results);
+        cluster.shutdown();
+        (percentile(&samples_ms, 99.0), hedges, precision)
+    };
+
+    let (p99_unhedged, hedges_unhedged, prec_unhedged) = run(HedgeConfig::disabled());
+    let (p99_hedged, hedges_hedged, prec_hedged) = run(HedgeConfig::default());
+
+    assert_eq!(hedges_unhedged, 0, "disabled hedging still fired");
+    assert!(hedges_hedged > 0, "straggler never triggered a hedge");
+    assert!(
+        p99_hedged < p99_unhedged,
+        "hedging did not bound the tail: hedged p99 {p99_hedged:.2}ms \
+         vs unhedged {p99_unhedged:.2}ms"
+    );
+    // Hedging must not cost recall.
+    assert!(
+        prec_hedged >= prec_unhedged - 0.05,
+        "hedged precision {prec_hedged} fell below unhedged {prec_unhedged}"
+    );
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Fault {
+    /// Kill the replica that currently owns the next query's key — the
+    /// primary for the upcoming dispatch.
+    KillPrimary,
+    /// Kill the other replica — the hedge's target.
+    KillHedgeTarget,
+    /// Kill every replica of partition 0 with respawn gated off: a true
+    /// partition blackout. Queries degrade to partial coverage.
+    KillAllReplicas,
+    /// Throttle host 0 to 10% CPU.
+    Straggle,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Path {
+    Execute,
+    ExecuteBatch,
+}
+
+/// Recovery matrix: {kill primary, kill hedge target, kill all replicas
+/// of one partition, straggle one replica} x {execute, execute_batch}.
+/// Non-blackout faults must preserve full coverage and the recall floor;
+/// the blackout must degrade gracefully (bounded latency, reported
+/// coverage, everything else still answered).
+#[test]
+fn recovery_matrix() {
+    let (data, queries, idx) = build_index(3_000, 4, 55);
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let coord_cfg = CoordinatorConfig {
+        timeout: Duration::from_millis(600),
+        ..CoordinatorConfig::default()
+    };
+
+    let faults =
+        [Fault::KillPrimary, Fault::KillHedgeTarget, Fault::KillAllReplicas, Fault::Straggle];
+    for fault in faults {
+        for path in [Path::Execute, Path::ExecuteBatch] {
+            let mut t = topo(4, 2, 100);
+            t.coordinators = 1; // a single qid counter makes primaries predictable
+            let cluster = SimCluster::start_with(&idx, t, None, coord_cfg).unwrap();
+            // Kill scenarios rely on the *query layer* recovering, not the
+            // Master: gate respawn off so a killed replica stays dead.
+            cluster.set_respawn(false);
+
+            // Healthy warm-up: baseline precision + warm hedge window.
+            let mut baseline = Vec::new();
+            for qi in 0..20 {
+                baseline.push(cluster.execute(workload.queries.get(qi), &params).unwrap());
+            }
+            let p_base = workload.precision(&baseline);
+
+            let replicas = cluster.executors_for_partition(0);
+            assert_eq!(replicas.len(), 2, "{fault:?}/{path:?}: expected 2 replicas");
+            let next_qid = cluster.coordinator(0).next_qid_hint();
+            let primary = cluster.primary_for(0, next_qid).expect("assigned primary");
+            assert!(replicas.contains(&primary));
+            match fault {
+                Fault::KillPrimary => {
+                    assert!(cluster.kill_executor(primary));
+                }
+                Fault::KillHedgeTarget => {
+                    let other = *replicas.iter().find(|&&r| r != primary).unwrap();
+                    assert!(cluster.kill_executor(other));
+                }
+                Fault::KillAllReplicas => {
+                    for r in &replicas {
+                        assert!(cluster.kill_executor(*r));
+                    }
+                }
+                Fault::Straggle => cluster.set_cpu_share(0, 10),
+            }
+
+            let nq = 12usize;
+            let t0 = Instant::now();
+            let results: Vec<QueryResult> = match path {
+                Path::Execute => (0..nq)
+                    .map(|qi| {
+                        cluster
+                            .execute_detailed(workload.queries.get(qi), &params)
+                            .unwrap_or_else(|e| panic!("{fault:?}/{path:?} query {qi}: {e}"))
+                    })
+                    .collect(),
+                Path::ExecuteBatch => {
+                    let views: Vec<&[f32]> = (0..nq).map(|qi| workload.queries.get(qi)).collect();
+                    cluster
+                        .execute_batch_detailed(&views, &params)
+                        .unwrap_or_else(|e| panic!("{fault:?}/{path:?} batch: {e}"))
+                }
+            };
+            assert_eq!(results.len(), nq);
+            // Bounded latency: even the blackout is capped by the per-call
+            // deadline (nq calls for Execute, one call for ExecuteBatch).
+            let per_call_budget = coord_cfg.timeout + Duration::from_millis(400);
+            let calls = match path {
+                Path::Execute => nq as u32,
+                Path::ExecuteBatch => 1,
+            };
+            assert!(
+                t0.elapsed() < per_call_budget * calls,
+                "{fault:?}/{path:?}: {:?} exceeds the deadline budget (hung gather?)",
+                t0.elapsed()
+            );
+
+            if fault == Fault::KillAllReplicas {
+                // Blackout: coverage is reported, never faked. Exactly the
+                // queries the router sends to the dark partition degrade;
+                // everything else still answers in full.
+                let router = cluster.coordinator(0).router().clone();
+                let mut dark_routed = 0usize;
+                for (qi, r) in results.iter().enumerate() {
+                    let routes_dark = router
+                        .route(workload.queries.get(qi), params.branch, params.meta_ef)
+                        .contains(&0);
+                    dark_routed += routes_dark as usize;
+                    assert_eq!(
+                        r.is_complete(),
+                        !routes_dark,
+                        "{path:?} query {qi}: coverage {}/{} vs dark routing {routes_dark}",
+                        r.partitions_answered,
+                        r.partitions_total
+                    );
+                    assert!(
+                        r.partitions_answered + 1 >= r.partitions_total,
+                        "{path:?} query {qi}: more than the dark partition missing \
+                         ({}/{})",
+                        r.partitions_answered,
+                        r.partitions_total
+                    );
+                    // Whatever partitions answered contribute neighbors; a
+                    // query routed *only* to the dark partition is the one
+                    // legitimate empty answer (coverage 0 says so).
+                    if r.partitions_answered > 0 {
+                        assert!(
+                            !r.neighbors.is_empty(),
+                            "{path:?} query {qi}: answered partitions produced nothing"
+                        );
+                    } else {
+                        assert!(r.neighbors.is_empty());
+                        assert_eq!(r.coverage(), 0.0);
+                    }
+                }
+                assert!(
+                    dark_routed > 0,
+                    "{path:?}: no query routed the dark partition — blackout untested"
+                );
+            } else {
+                // Recovery faults: full coverage and the recall floor hold
+                // through the fault.
+                let mut hit = 0.0;
+                for (qi, r) in results.iter().enumerate() {
+                    assert!(
+                        r.is_complete(),
+                        "{fault:?}/{path:?} query {qi} lost coverage ({}/{})",
+                        r.partitions_answered,
+                        r.partitions_total
+                    );
+                    hit += precision_at_k(&r.neighbors, &workload.ground_truth[qi], 10);
+                }
+                let p = hit / nq as f64;
+                assert!(
+                    p >= p_base - 0.1,
+                    "{fault:?}/{path:?}: precision {p} fell below baseline {p_base}"
+                );
+            }
+            if fault == Fault::KillPrimary {
+                // The killed replica owned half the keys: at least one
+                // sub-query must have been rescued by a hedge or an
+                // eviction re-issue rather than waiting out the deadline.
+                let c = cluster.coordinator(0);
+                let rescued = c.metrics.hedges_fired.load(std::sync::atomic::Ordering::Relaxed)
+                    + c.metrics.reissues.load(std::sync::atomic::Ordering::Relaxed);
+                assert!(rescued > 0, "{path:?}: no hedge/re-issue rescued the dead primary");
+            }
+            // restore() heals every cell back to nominal before shutdown
+            // (also exercises the API).
+            cluster.restore();
+            cluster.shutdown();
+        }
+    }
+}
