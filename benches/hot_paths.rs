@@ -22,6 +22,9 @@
 //! * `router/batch-speedup b=*` — `Router::route_batch` (shared
 //!   visited-pool meta walk for a whole block) vs sequential `route`
 //!   calls, PR 2.
+//! * `ingest/*` — the streaming write path, PR 4: insert throughput,
+//!   search latency under sustained ingest vs idle, and the freshness
+//!   lag (insert -> searchable round trip).
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -30,6 +33,7 @@ use pyramid::config::{ClusterTopology, IndexConfig, QueryParams};
 use pyramid::coordinator::{CoordinatorConfig, HedgeConfig};
 use pyramid::dataset::SyntheticSpec;
 use pyramid::hnsw::{Hnsw, HnswParams, NestedHnsw};
+use pyramid::ingest::IngestConfig;
 use pyramid::meta::{PyramidIndex, Router};
 use pyramid::metric::{dot, dot_unrolled, l2_sq, l2_sq_unrolled, Metric};
 use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
@@ -274,6 +278,143 @@ fn main() {
              hedged {p50_h:.2}/{p99_h:.2} ms"
         );
         println!("  -> hedged p99 speedup vs unhedged: {speedup:.2}x");
+    }
+
+    // --- streaming ingest: write path + search-under-ingest -----------------
+    // A writable cluster (PR 4). Three recorded facets: raw write-path
+    // throughput (route + sequence-numbered log publish per insert —
+    // consumption is asynchronous), query latency while a writer streams
+    // at full tilt (the paper-style serving SLO under churn), and the
+    // freshness lag (insert -> searchable round trip, bounded by one
+    // executor poll cycle). Wall-clock percentiles like the coord drill.
+    if run("ingest") {
+        let n = if smoke { 2_000 } else { 8_000 };
+        let data = SyntheticSpec::deep_like(n, 16, 21).generate();
+        let queries = SyntheticSpec::deep_like(n, 16, 21).queries(64);
+        let extra = SyntheticSpec::deep_like(n, 16, 22).generate();
+        let cfg =
+            IndexConfig { sample: n / 4, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).expect("build ingest bench index");
+        let topo = ClusterTopology {
+            workers: 4,
+            replicas: 1,
+            coordinators: 2,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+        };
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo,
+            IngestConfig::default(),
+            CoordinatorConfig::default(),
+        )
+        .expect("start ingest bench cluster");
+        let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+        // Warm the read path (group assignments, latency windows).
+        for qi in 0..queries.len() {
+            let _ = cluster.execute(queries.get(qi), &params);
+        }
+
+        // Write-path throughput: coordinator-side cost per accepted
+        // insert. Fixed count rather than a wall-clock window — the log
+        // must stay drainable within the bench, and the consumption side
+        // (delta growth + background re-freezes) is deliberately part of
+        // the cluster the later facets measure.
+        let count = if smoke { 1_000 } else { 5_000 };
+        let t0 = Instant::now();
+        for i in 0..count {
+            cluster.insert(extra.get(i % extra.len())).expect("insert");
+        }
+        let ins_ns = t0.elapsed().as_nanos() as f64 / count as f64;
+        rec.record("ingest/insert-throughput", ins_ns);
+        println!(
+            "{:<44} {:>10.1} ns/op {:>14.0} ops/s   ({count} inserts)",
+            "ingest/insert-throughput",
+            ins_ns,
+            1e9 / ins_ns
+        );
+        assert!(
+            cluster.wait_ingest_idle(Duration::from_secs(60)),
+            "ingest bench: replicas never drained the update log"
+        );
+
+        // Search-under-ingest: per-query wall latency while one writer
+        // streams continuously (~500 inserts/s), vs the idle read path.
+        let mut idle_ms = Vec::new();
+        for round in 0..(if smoke { 2 } else { 4 }) {
+            for qi in 0..queries.len() {
+                let t0 = Instant::now();
+                let _ = cluster.execute(queries.get((qi + round) % queries.len()), &params);
+                idle_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let mut under_ms = Vec::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut j = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = cluster.insert(extra.get(j % extra.len()));
+                    j += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            });
+            for round in 0..(if smoke { 2 } else { 4 }) {
+                for qi in 0..queries.len() {
+                    let t0 = Instant::now();
+                    let _ = cluster.execute(queries.get((qi + round) % queries.len()), &params);
+                    under_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        rec.record("ingest/search-idle-p50 ms", percentile(&idle_ms, 50.0));
+        rec.record("ingest/search-under-ingest-p50 ms", percentile(&under_ms, 50.0));
+        rec.record("ingest/search-under-ingest-p99 ms", percentile(&under_ms, 99.0));
+        println!(
+            "ingest drill: idle p50 {:.2} ms, under-ingest p50/p99 {:.2}/{:.2} ms",
+            percentile(&idle_ms, 50.0),
+            percentile(&under_ms, 50.0),
+            percentile(&under_ms, 99.0)
+        );
+
+        // Freshness lag: insert -> top-1-searchable round trip. Probes
+        // that never become searchable are excluded and reported — a
+        // timeout is a failure, not a 5000ms lag sample.
+        let mut lags_ms = Vec::new();
+        let mut timed_out = 0usize;
+        for j in 0..(if smoke { 5 } else { 20 }) {
+            let v: Vec<f32> =
+                extra.get(j).iter().map(|x| x + 2.0 + j as f32 * 1e-3).collect();
+            let t0 = Instant::now();
+            let id = cluster.insert(&v).expect("freshness insert");
+            let mut found = false;
+            while !found && t0.elapsed() < Duration::from_secs(5) {
+                found = cluster
+                    .execute(&v, &params)
+                    .ok()
+                    .and_then(|r| r.first().map(|nb| nb.id))
+                    == Some(id);
+            }
+            if found {
+                lags_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            } else {
+                timed_out += 1;
+            }
+        }
+        if timed_out > 0 {
+            println!("  WARN: {timed_out} freshness probes timed out (excluded from the key)");
+        }
+        if !lags_ms.is_empty() {
+            rec.record("ingest/freshness-lag-p50 ms", percentile(&lags_ms, 50.0));
+            println!(
+                "  -> freshness lag p50 (insert -> searchable): {:.2} ms",
+                percentile(&lags_ms, 50.0)
+            );
+        }
+        println!("  ({} background re-freezes over the drill)", cluster.total_refreezes());
+        cluster.shutdown();
     }
 
     // --- merge / coordinator path -------------------------------------------

@@ -12,11 +12,12 @@ use crate::cluster::SimCluster;
 use crate::config::{ClusterTopology, IndexConfig, QueryParams};
 use crate::coordinator::{topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
 use crate::error::Result;
-use crate::executor::{ExecutorHandle, ExecutorSpec, HostControl};
+use crate::executor::{ExecutorHandle, ExecutorSpec, HostControl, IngestWiring};
+use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::PyramidIndex;
 use crate::metric::Metric;
 use crate::registry::Registry;
-use crate::types::{Neighbor, PartitionId, QueryResult};
+use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, VectorId};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -114,6 +115,37 @@ impl Coordinator {
         self.node.execute_async(query, para, callback)
     }
 
+    /// Attach the streaming-ingest write gateway (see
+    /// [`crate::ingest`]); afterwards [`Self::insert`]/[`Self::delete`]
+    /// accept writes. Coordinators of one deployment must share the
+    /// gateway (clone it) so assigned ids never collide.
+    pub fn enable_ingest(&self, gateway: IngestGateway) {
+        self.node.enable_ingest(gateway);
+    }
+
+    /// Insert one vector into the live index; returns its global id.
+    /// The vector is searchable — by [`Self::execute`] — within one
+    /// executor poll cycle, with no rebuild ([`GraphConstructor`] stays
+    /// out of the loop entirely).
+    pub fn insert(&self, vector: &[f32]) -> Result<VectorId> {
+        self.node.insert(vector)
+    }
+
+    /// Batched [`Self::insert`] (one routing pass for the block).
+    pub fn insert_batch(&self, vectors: &[&[f32]]) -> Result<Vec<VectorId>> {
+        self.node.insert_batch(vectors)
+    }
+
+    /// Delete a vector by global id (tombstoned on every partition).
+    pub fn delete(&self, id: VectorId) -> Result<()> {
+        self.node.delete(id)
+    }
+
+    /// Batched [`Self::delete`].
+    pub fn delete_batch(&self, ids: &[VectorId]) -> Result<()> {
+        self.node.delete_batch(ids)
+    }
+
     pub fn node(&self) -> &Arc<CoordinatorNode> {
         &self.node
     }
@@ -154,10 +186,45 @@ impl Executor {
                 host: HostControl::new(usize::MAX),
                 net_latency: std::time::Duration::ZERO,
                 batch: crate::executor::DEFAULT_BATCH,
+                ingest: None,
             },
             self.brokers.clone(),
             self.registry.clone(),
         ))
+    }
+
+    /// [`Self::start`], writable: the loaded sub-HNSW becomes the frozen
+    /// base of a [`LiveIndex`], and the executor tails the partition's
+    /// update topic on `update_brokers` — inserts/deletes published by
+    /// an ingest-enabled [`Coordinator`] are absorbed live, and a
+    /// replacement instance started the same way replays the retained
+    /// log from scratch (paper §IV-B recovery, for writes). Returns the
+    /// handle plus the live index for observability (delta size,
+    /// re-freeze count).
+    pub fn start_ingesting(
+        &self,
+        update_brokers: &Broker<UpdateRequest>,
+        cfg: IngestConfig,
+    ) -> Result<(ExecutorHandle, Arc<LiveIndex>)> {
+        let (sub, ids) = PyramidIndex::load_partition(&self.graph_path, self.partition as usize)?;
+        self.brokers.create_topic(&topic_for(self.partition));
+        update_brokers.create_topic(&update_topic_for(self.partition));
+        let live = Arc::new(LiveIndex::new(sub, ids.clone(), cfg));
+        let handle = crate::executor::spawn(
+            ExecutorSpec {
+                id: self.id,
+                partition: self.partition,
+                sub: live.clone(),
+                ids,
+                host: HostControl::new(usize::MAX),
+                net_latency: std::time::Duration::ZERO,
+                batch: crate::executor::DEFAULT_BATCH,
+                ingest: Some(IngestWiring { broker: update_brokers.clone(), live: live.clone() }),
+            },
+            self.brokers.clone(),
+            self.registry.clone(),
+        );
+        Ok((handle, live))
     }
 }
 

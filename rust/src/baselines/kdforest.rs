@@ -165,8 +165,8 @@ impl SubIndex for KdForest {
         self.search(query, k, ef.max(k))
     }
 
-    fn vector(&self, local_id: u32) -> &[f32] {
-        self.data.get(local_id as usize)
+    fn push_vector(&self, local_id: u32, out: &mut Vec<f32>) {
+        out.extend_from_slice(self.data.get(local_id as usize));
     }
 
     fn dim(&self) -> usize {

@@ -80,6 +80,9 @@ struct TopicState<M> {
     groups: HashMap<String, GroupState>,
     /// Total messages ever published (stats).
     published: u64,
+    /// First retained sequence of the topic's log form (see
+    /// [`Broker::publish_log`]); raised by [`Broker::truncate_log`].
+    log_start: u64,
 }
 
 struct Shared<M> {
@@ -147,6 +150,7 @@ impl<M: Send + Clone + 'static> Broker<M> {
             next_msg: 0,
             groups: HashMap::new(),
             published: 0,
+            log_start: 0,
         });
     }
 
@@ -340,6 +344,66 @@ impl<M: Send + Clone + 'static> Broker<M> {
         }
     }
 
+    /// Append a message to a topic's **retained log** and return its
+    /// sequence number. Log publishes bypass the queue partitions and the
+    /// consumer-group machinery entirely: every message is retained (no
+    /// ack removes it) and any number of independent [`LogTailer`]s can
+    /// read the full history from any sequence — the Kafka
+    /// retained-topic semantics the streaming-ingest update path needs,
+    /// where *every* replica of a partition must see *every* update in
+    /// order, and a respawned replica replays from scratch.
+    ///
+    /// A topic must be fed through either `publish` (queue semantics) or
+    /// `publish_log` (log semantics), never both: the two share the
+    /// message-id counter, and queue consumption deletes acked messages,
+    /// which would punch holes in the log.
+    pub fn publish_log(&self, topic: &str, msg: M) -> Result<u64> {
+        let mut g = self.inner.0.lock().unwrap();
+        let t = g
+            .topics
+            .get_mut(topic)
+            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let seq = t.next_msg;
+        t.next_msg += 1;
+        t.published += 1;
+        t.store.insert(seq, msg);
+        drop(g);
+        self.inner.1.notify_all();
+        Ok(seq)
+    }
+
+    /// One past the last sequence of a topic's retained log (0 for an
+    /// unknown or empty topic) — what a fully caught-up tailer's cursor
+    /// reads.
+    pub fn log_end(&self, topic: &str) -> u64 {
+        let g = self.inner.0.lock().unwrap();
+        g.topics.get(topic).map(|t| t.next_msg).unwrap_or(0)
+    }
+
+    /// A cursor-based reader over a topic's retained log, starting at
+    /// sequence `from`. Tailers are independent (each owns its cursor)
+    /// and never delete messages.
+    pub fn log_tailer(&self, topic: &str, from: u64) -> LogTailer<M> {
+        LogTailer { broker: self.clone(), topic: topic.to_string(), cursor: from }
+    }
+
+    /// Drop retained log entries with sequence < `below` (compaction
+    /// after a re-freeze has baked them into a frozen base). Tailers
+    /// whose cursor falls inside the dropped range skip forward to the
+    /// first retained sequence.
+    pub fn truncate_log(&self, topic: &str, below: u64) {
+        let mut g = self.inner.0.lock().unwrap();
+        if let Some(t) = g.topics.get_mut(topic) {
+            let below = below.min(t.next_msg);
+            if below > t.log_start {
+                for seq in t.log_start..below {
+                    t.store.remove(&seq);
+                }
+                t.log_start = below;
+            }
+        }
+    }
+
     /// Queue depth across partitions (monitoring).
     pub fn backlog(&self, topic: &str) -> usize {
         let g = self.inner.0.lock().unwrap();
@@ -350,6 +414,64 @@ impl<M: Send + Clone + 'static> Broker<M> {
     pub fn published(&self, topic: &str) -> u64 {
         let g = self.inner.0.lock().unwrap();
         g.topics.get(topic).map(|t| t.published).unwrap_or(0)
+    }
+}
+
+/// A cursor-based reader over a topic's retained log (see
+/// [`Broker::publish_log`]). Each tailer owns its cursor; reading never
+/// deletes messages, so any number of tailers replay the same history
+/// independently — the replica-side consumer of a partition's update
+/// topic.
+pub struct LogTailer<M> {
+    broker: Broker<M>,
+    topic: String,
+    cursor: u64,
+}
+
+impl<M: Send + Clone + 'static> LogTailer<M> {
+    /// Next sequence this tailer will read.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Non-blocking read of the message at the cursor, if retained.
+    /// Skips forward over truncated history.
+    pub fn try_next(&mut self) -> Option<(u64, M)> {
+        let g = self.broker.inner.0.lock().unwrap();
+        let t = g.topics.get(&self.topic)?;
+        if self.cursor < t.log_start {
+            self.cursor = t.log_start;
+        }
+        let msg = t.store.get(&self.cursor)?.clone();
+        let seq = self.cursor;
+        self.cursor += 1;
+        Some((seq, msg))
+    }
+
+    /// Blocking read: wait up to `timeout` for the next log entry.
+    pub fn next_timeout(&mut self, timeout: Duration) -> Option<(u64, M)> {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = (&self.broker.inner.0, &self.broker.inner.1);
+        let mut g = lock.lock().unwrap();
+        loop {
+            if let Some(t) = g.topics.get(&self.topic) {
+                if self.cursor < t.log_start {
+                    self.cursor = t.log_start;
+                }
+                if let Some(msg) = t.store.get(&self.cursor) {
+                    let out = (self.cursor, msg.clone());
+                    self.cursor += 1;
+                    return Some(out);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) =
+                cv.wait_timeout(g, (deadline - now).min(Duration::from_millis(20))).unwrap();
+            g = ng;
+        }
     }
 }
 
@@ -646,6 +768,65 @@ mod tests {
         let d = c.poll(Duration::from_millis(300)).expect("delivered");
         assert_eq!(d.msg, 9);
         c.ack(&d);
+    }
+
+    #[test]
+    fn log_publish_and_independent_tailers_replay() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("log");
+        for v in 0..10u64 {
+            assert_eq!(b.publish_log("log", v * 10).unwrap(), v);
+        }
+        assert_eq!(b.log_end("log"), 10);
+        assert_eq!(b.log_end("missing"), 0);
+        // Two tailers read the full history independently, in order.
+        for _ in 0..2 {
+            let mut t = b.log_tailer("log", 0);
+            for v in 0..10u64 {
+                let (seq, msg) = t.try_next().expect("retained entry");
+                assert_eq!((seq, msg), (v, v * 10));
+            }
+            assert!(t.try_next().is_none(), "tailer read past the end");
+            assert_eq!(t.cursor(), 10);
+        }
+        // A mid-log cursor resumes exactly where it points.
+        let mut t = b.log_tailer("log", 7);
+        assert_eq!(t.try_next().unwrap(), (7, 70));
+    }
+
+    #[test]
+    fn log_tailer_blocks_until_publish() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("log");
+        let mut t = b.log_tailer("log", 0);
+        assert!(t.next_timeout(Duration::from_millis(20)).is_none());
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.publish_log("log", 42u64).unwrap();
+        });
+        let (seq, msg) = t.next_timeout(Duration::from_millis(500)).expect("woken by publish");
+        assert_eq!((seq, msg), (0, 42));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn log_truncation_skips_tailers_forward() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("log");
+        for v in 0..8u64 {
+            b.publish_log("log", v).unwrap();
+        }
+        b.truncate_log("log", 5);
+        // A from-scratch tailer lands on the first retained entry.
+        let mut t = b.log_tailer("log", 0);
+        assert_eq!(t.try_next().unwrap(), (5, 5));
+        assert_eq!(t.try_next().unwrap(), (6, 6));
+        // Truncation below the current start is a no-op.
+        b.truncate_log("log", 2);
+        assert_eq!(b.log_tailer("log", 0).try_next().unwrap(), (5, 5));
+        // log_end is unaffected by truncation.
+        assert_eq!(b.log_end("log"), 8);
     }
 
     #[test]

@@ -19,21 +19,75 @@
 //! injector), [`SimCluster::set_respawn`] gates the Master's automatic
 //! restarts (off = a killed replica *stays* dead, for blackout drills),
 //! and [`SimCluster::restore`] heals everything back to nominal.
+//!
+//! [`SimCluster::start_ingesting`] deploys the **writable** variant:
+//! coordinators accept `insert`/`delete`, every executor replica serves
+//! a [`LiveIndex`] (frozen base + delta + tombstones) and tails its
+//! partition's update log, and a respawned replica replays the log from
+//! scratch — see [`crate::ingest`].
 
 use crate::broker::{Broker, BrokerConfig};
 use crate::config::{ClusterTopology, QueryParams};
 use crate::coordinator::{group_for, topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
 use crate::error::{PyramidError, Result};
-use crate::executor::{self, ExecutorHandle, ExecutorSpec, HostControl, SubIndex};
+use crate::executor::{self, ExecutorHandle, ExecutorSpec, HostControl, IngestWiring, SubIndex};
+use crate::hnsw::Hnsw;
+use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::{PyramidIndex, Router};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
 use crate::runtime::BatchScorer;
-use crate::types::{Neighbor, PartitionId, QueryResult, VectorId};
+use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, VectorId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 pub use crate::config::ClusterTopology as ClusterConfig;
+
+/// One live (writable) replica registered with the cluster: which
+/// executor instance owns it and the [`LiveIndex`] it serves. Replaced
+/// wholesale when the Master respawns the role — the fresh instance gets
+/// a fresh LiveIndex and replays the partition's update log from 0.
+struct LiveEntry {
+    exec_id: u64,
+    partition: PartitionId,
+    live: Arc<LiveIndex>,
+}
+
+/// Cluster-wide streaming-ingest state: the update broker + per-partition
+/// frozen bases live replicas wrap, the coordinators' shared write
+/// gateway, and the registry of currently-live writable replicas.
+struct IngestRuntime {
+    gateway: IngestGateway,
+    cfg: IngestConfig,
+    /// Construct-time frozen base per partition — what a (re)spawned
+    /// replica layers its fresh delta over before replaying the log.
+    bases: Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>)>,
+    lives: Mutex<Vec<LiveEntry>>,
+    /// Re-freezes completed by replaced (killed + respawned) replica
+    /// incarnations, so [`SimCluster::total_refreezes`] stays monotonic
+    /// across faults.
+    retired_refreezes: AtomicU64,
+}
+
+impl IngestRuntime {
+    /// Build a fresh live replica for `role`'s partition, register it
+    /// (replacing any previous incarnation of the same executor id) and
+    /// return the executor wiring for it.
+    fn wire_role(&self, exec_id: u64, partition: PartitionId) -> (Arc<dyn SubIndex>, IngestWiring) {
+        let (base, ids) = &self.bases[partition as usize];
+        let live = Arc::new(LiveIndex::new(base.clone(), ids.clone(), self.cfg));
+        let mut lv = self.lives.lock().unwrap();
+        for old in lv.iter().filter(|e| e.exec_id == exec_id) {
+            self.retired_refreezes.fetch_add(old.live.refreezes(), Ordering::Relaxed);
+        }
+        lv.retain(|e| e.exec_id != exec_id);
+        lv.push(LiveEntry { exec_id, partition, live: live.clone() });
+        (
+            live.clone() as Arc<dyn SubIndex>,
+            IngestWiring { broker: self.gateway.broker().clone(), live },
+        )
+    }
+}
 
 /// Immutable description of one executor role (partition replica).
 #[derive(Debug, Clone)]
@@ -47,12 +101,45 @@ struct ClusterState {
     executors: Vec<ExecutorHandle>,
 }
 
+/// Build the spec for one executor role. Read-only clusters share the
+/// per-partition `Arc<dyn SubIndex>`; ingesting clusters instead give
+/// every spawned instance a **fresh** [`LiveIndex`] over the shared
+/// frozen base plus the update wiring to replay the partition's log —
+/// which is exactly what makes respawn recovery real rather than
+/// state-sharing sleight of hand.
+fn build_spec(
+    role: &Role,
+    subs: &[(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)],
+    host: Arc<HostControl>,
+    topo: &ClusterTopology,
+    ingest: Option<&Arc<IngestRuntime>>,
+) -> ExecutorSpec {
+    let (sub, wiring) = match ingest {
+        Some(rt) => {
+            let (sub, w) = rt.wire_role(role.exec_id, role.partition);
+            (sub, Some(w))
+        }
+        None => (subs[role.partition as usize].0.clone(), None),
+    };
+    ExecutorSpec {
+        id: role.exec_id,
+        partition: role.partition,
+        sub,
+        ids: subs[role.partition as usize].1.clone(),
+        host,
+        net_latency: Duration::from_micros(topo.net_latency_us),
+        batch: topo.executor_batch.max(1),
+        ingest: wiring,
+    }
+}
+
 /// Spawn an executor for `role` on `host` and swap it into the cluster
 /// state (dropping any finished handle with the same id). A replacement
 /// that finds the role's lock still held exits on its own (LockHeld), so
 /// racing spawns resolve to exactly one live instance. Shared by the
 /// Master-driven respawner, [`SimCluster::restart_host`] and
 /// [`SimCluster::restore`].
+#[allow(clippy::too_many_arguments)]
 fn respawn_role(
     role: &Role,
     subs: &[(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)],
@@ -61,17 +148,10 @@ fn respawn_role(
     broker: &Broker<QueryRequest>,
     registry: &Registry,
     state: &Mutex<ClusterState>,
+    ingest: Option<&Arc<IngestRuntime>>,
 ) {
     let h = executor::spawn(
-        ExecutorSpec {
-            id: role.exec_id,
-            partition: role.partition,
-            sub: subs[role.partition as usize].0.clone(),
-            ids: subs[role.partition as usize].1.clone(),
-            host,
-            net_latency: Duration::from_micros(topo.net_latency_us),
-            batch: topo.executor_batch.max(1),
-        },
+        build_spec(role, subs, host, topo, ingest),
         broker.clone(),
         registry.clone(),
     );
@@ -95,6 +175,8 @@ pub struct SimCluster {
     respawn_stop: Arc<AtomicBool>,
     /// Master-respawn gate: false parks restart requests (blackout drills).
     respawn_enabled: Arc<AtomicBool>,
+    /// Streaming-ingest state; None for read-only clusters.
+    ingest: Option<Arc<IngestRuntime>>,
     rr: AtomicUsize,
     next_exec_id: Arc<AtomicU64>,
 }
@@ -134,7 +216,49 @@ impl SimCluster {
             .zip(index.sub_ids.iter().cloned())
             .collect();
         let router = Router::from_index(index);
-        Self::start_custom_with(subs, router, topo, scorer, coord_cfg)
+        Self::start_core(subs, router, topo, scorer, coord_cfg, None)
+    }
+
+    /// Start a **writable** cluster: every executor replica serves a
+    /// [`LiveIndex`] over its partition's frozen base and tails the
+    /// partition's update log, and every coordinator accepts
+    /// `insert`/`delete` through the shared [`IngestGateway`] — the
+    /// streaming-ingest deployment (see [`crate::ingest`]).
+    pub fn start_ingesting(
+        index: &PyramidIndex,
+        topo: ClusterTopology,
+        ingest_cfg: IngestConfig,
+        coord_cfg: CoordinatorConfig,
+    ) -> Result<SimCluster> {
+        let subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)> = index
+            .subs
+            .iter()
+            .map(|s| s.clone() as Arc<dyn SubIndex>)
+            .zip(index.sub_ids.iter().cloned())
+            .collect();
+        let bases: Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>)> =
+            index.subs.iter().cloned().zip(index.sub_ids.iter().cloned()).collect();
+        let router = Router::from_index(index);
+        // Fresh ids start above everything construction assigned.
+        let first_free = index
+            .sub_ids
+            .iter()
+            .flat_map(|v| v.iter())
+            .copied()
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        let update_broker: Broker<UpdateRequest> = Broker::new(BrokerConfig::default());
+        let gateway =
+            IngestGateway::new(update_broker, index.partitions(), first_free, Some(index.meta.dim()));
+        let runtime = Arc::new(IngestRuntime {
+            gateway,
+            cfg: ingest_cfg,
+            bases,
+            lives: Mutex::new(Vec::new()),
+            retired_refreezes: AtomicU64::new(0),
+        });
+        Self::start_core(subs, router, topo, None, coord_cfg, Some(runtime))
     }
 
     /// Start a cluster over arbitrary per-partition backends and router —
@@ -156,6 +280,18 @@ impl SimCluster {
         topo: ClusterTopology,
         scorer: Option<Arc<dyn BatchScorer>>,
         coord_cfg: CoordinatorConfig,
+    ) -> Result<SimCluster> {
+        Self::start_core(subs, router, topo, scorer, coord_cfg, None)
+    }
+
+    /// The one true start path: every public constructor funnels here.
+    fn start_core(
+        subs: Vec<(Arc<dyn SubIndex>, Arc<Vec<VectorId>>)>,
+        router: Router,
+        topo: ClusterTopology,
+        scorer: Option<Arc<dyn BatchScorer>>,
+        coord_cfg: CoordinatorConfig,
+        ingest: Option<Arc<IngestRuntime>>,
     ) -> Result<SimCluster> {
         if topo.workers == 0 || topo.replicas == 0 || topo.coordinators == 0 {
             return Err(PyramidError::Cluster("workers/replicas/coordinators must be >= 1".into()));
@@ -199,22 +335,15 @@ impl SimCluster {
         let mut executors = Vec::with_capacity(roles.len());
         for role in &roles {
             executors.push(executor::spawn(
-                ExecutorSpec {
-                    id: role.exec_id,
-                    partition: role.partition,
-                    sub: subs[role.partition as usize].0.clone(),
-                    ids: subs[role.partition as usize].1.clone(),
-                    host: hosts[role.home_host].clone(),
-                    net_latency: Duration::from_micros(topo.net_latency_us),
-                    batch: topo.executor_batch.max(1),
-                },
+                build_spec(role, &subs, hosts[role.home_host].clone(), &topo, ingest.as_ref()),
                 broker.clone(),
                 registry.clone(),
             ));
         }
         let state = Arc::new(Mutex::new(ClusterState { executors }));
 
-        // Coordinators share the router (the broadcast meta-HNSW replica).
+        // Coordinators share the router (the broadcast meta-HNSW replica)
+        // and, when ingesting, the write gateway (shared id allocator).
         let mut coordinators = Vec::with_capacity(topo.coordinators);
         for c in 0..topo.coordinators {
             let node = match &scorer {
@@ -227,6 +356,9 @@ impl SimCluster {
                 ),
                 None => CoordinatorNode::new(c as u64, router.clone(), broker.clone(), coord_cfg),
             };
+            if let Some(rt) = &ingest {
+                node.enable_ingest(rt.gateway.clone());
+            }
             coordinators.push(node);
         }
 
@@ -256,6 +388,7 @@ impl SimCluster {
             let state = state.clone();
             let stop = respawn_stop.clone();
             let enabled = respawn_enabled.clone();
+            let ingest = ingest.clone();
             std::thread::Builder::new()
                 .name("cluster-respawner".into())
                 .spawn(move || {
@@ -274,7 +407,16 @@ impl SimCluster {
                             .min_by_key(|h| (h.host == role.home_host) as usize)
                             .cloned();
                         let Some(host) = target else { return };
-                        respawn_role(role, &subs, host, &topo, &broker, &registry, &state);
+                        respawn_role(
+                            role,
+                            &subs,
+                            host,
+                            &topo,
+                            &broker,
+                            &registry,
+                            &state,
+                            ingest.as_ref(),
+                        );
                     };
                     // Requests arriving while the gate is off are parked
                     // and replayed when it re-opens, so
@@ -319,6 +461,7 @@ impl SimCluster {
             respawn_rx_handle: Some(respawner),
             respawn_stop,
             respawn_enabled,
+            ingest,
             rr: AtomicUsize::new(0),
             next_exec_id,
         })
@@ -385,6 +528,107 @@ impl SimCluster {
         self.coordinator(c).execute_detailed(query, params)
     }
 
+    /// Insert one vector through a round-robin coordinator (write path;
+    /// requires [`Self::start_ingesting`]). Returns the assigned global
+    /// id; the vector is searchable on every replica within one
+    /// executor poll cycle, with no rebuild.
+    pub fn insert(&self, vector: &[f32]) -> Result<VectorId> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).insert(vector)
+    }
+
+    /// Batched [`Self::insert`] (one routing pass for the block).
+    pub fn insert_batch(&self, vectors: &[&[f32]]) -> Result<Vec<VectorId>> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).insert_batch(vectors)
+    }
+
+    /// Delete a vector by global id (tombstone broadcast; see
+    /// [`CoordinatorNode::delete`]).
+    pub fn delete(&self, id: VectorId) -> Result<()> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).delete(id)
+    }
+
+    /// Batched [`Self::delete`].
+    pub fn delete_batch(&self, ids: &[VectorId]) -> Result<()> {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.coordinator(c).delete_batch(ids)
+    }
+
+    /// Block until every live writable replica has applied its
+    /// partition's full update log (freshness barrier for tests and
+    /// drills). True when converged within `timeout`; trivially true on
+    /// read-only clusters. Dead replicas are skipped — they converge by
+    /// replay after the Master respawns them.
+    pub fn wait_ingest_idle(&self, timeout: Duration) -> bool {
+        let Some(rt) = &self.ingest else { return true };
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let live_ids: Vec<u64> = {
+                let g = self.state.lock().unwrap();
+                g.executors.iter().filter(|e| !e.is_finished()).map(|e| e.id).collect()
+            };
+            let ends: Vec<u64> = (0..self.subs.len())
+                .map(|p| rt.gateway.broker().log_end(&update_topic_for(p as PartitionId)))
+                .collect();
+            let converged = {
+                let lv = rt.lives.lock().unwrap();
+                lv.iter()
+                    .filter(|e| live_ids.contains(&e.exec_id))
+                    .all(|e| e.live.applied_seq() >= ends[e.partition as usize])
+            };
+            if converged {
+                return true;
+            }
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Synchronously re-freeze every live writable replica (compact
+    /// delta + tombstones into a fresh frozen base and swap it under
+    /// queries). Returns how many replicas swapped. Test/drill hook —
+    /// production relies on the threshold-triggered background freeze.
+    pub fn refreeze_all(&self) -> usize {
+        let Some(rt) = &self.ingest else { return 0 };
+        let live_ids: Vec<u64> = {
+            let g = self.state.lock().unwrap();
+            g.executors.iter().filter(|e| !e.is_finished()).map(|e| e.id).collect()
+        };
+        let targets: Vec<Arc<LiveIndex>> = {
+            let lv = rt.lives.lock().unwrap();
+            lv.iter()
+                .filter(|e| live_ids.contains(&e.exec_id))
+                .map(|e| e.live.clone())
+                .collect()
+        };
+        targets.iter().filter(|l| l.refreeze()).count()
+    }
+
+    /// Completed re-freeze swaps across the currently-registered
+    /// writable replicas (0 on read-only clusters).
+    pub fn total_refreezes(&self) -> u64 {
+        self.ingest
+            .as_ref()
+            .map(|rt| {
+                rt.retired_refreezes.load(Ordering::Relaxed)
+                    + rt.lives.lock().unwrap().iter().map(|e| e.live.refreezes()).sum::<u64>()
+            })
+            .unwrap_or(0)
+    }
+
+    /// One past the last sequence of a partition's update log (0 on
+    /// read-only clusters).
+    pub fn update_log_end(&self, p: PartitionId) -> u64 {
+        self.ingest
+            .as_ref()
+            .map(|rt| rt.gateway.broker().log_end(&update_topic_for(p)))
+            .unwrap_or(0)
+    }
+
     /// Kill a machine: all executors on it crash (no cleanup).
     pub fn kill_host(&self, host: usize) {
         self.hosts[host].alive.store(false, Ordering::Relaxed);
@@ -439,6 +683,7 @@ impl SimCluster {
                 &self.broker,
                 &self.registry,
                 &self.state,
+                self.ingest.as_ref(),
             );
         }
     }
@@ -478,6 +723,7 @@ impl SimCluster {
                 &self.broker,
                 &self.registry,
                 &self.state,
+                self.ingest.as_ref(),
             );
         }
     }
@@ -519,16 +765,9 @@ impl SimCluster {
     /// Allocate a fresh executor id (elastic scale-out).
     pub fn add_executor(&self, partition: PartitionId, host: usize) -> u64 {
         let eid = self.next_exec_id.fetch_add(1, Ordering::Relaxed);
+        let role = Role { exec_id: eid, partition, home_host: host };
         let h = executor::spawn(
-            ExecutorSpec {
-                id: eid,
-                partition,
-                sub: self.subs[partition as usize].0.clone(),
-                ids: self.subs[partition as usize].1.clone(),
-                host: self.hosts[host].clone(),
-                net_latency: Duration::from_micros(self.topo.net_latency_us),
-                batch: self.topo.executor_batch.max(1),
-            },
+            build_spec(&role, &self.subs, self.hosts[host].clone(), &self.topo, self.ingest.as_ref()),
             self.broker.clone(),
             self.registry.clone(),
         );

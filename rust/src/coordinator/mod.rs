@@ -36,18 +36,36 @@
 //!   [`QueryResult::coverage`] instead of an error (detailed API only;
 //!   the plain `execute`/`execute_batch` keep their timeout-error
 //!   contract for zero-coverage queries).
+//! * **Hedge budget** — [`HedgeConfig::max_hedges_per_sec`] caps the
+//!   duplicate publish volume with a token bucket; a sustained
+//!   straggler suppresses timers past the budget instead of doubling
+//!   every slow sub-query (`metrics.hedges_suppressed`).
+//!
+//! ## Write path (streaming ingestion, [`crate::ingest`])
+//!
+//! With [`CoordinatorNode::enable_ingest`] wired, the coordinator also
+//! accepts `insert`/`delete` (single + batch): inserts route through the
+//! same meta-HNSW to the nearest meta vertex's partition and land on the
+//! partition's sequence-numbered update log; deletes broadcast
+//! tombstones to every partition's log. Executor replicas tail those
+//! logs into their live indexes — see the ingest module docs.
 
 use crate::broker::{Broker, Eviction};
 use crate::config::QueryParams;
 use crate::error::{PyramidError, Result};
+use crate::ingest::IngestGateway;
 use crate::meta::Router;
 use crate::runtime::BatchScorer;
-use crate::stats::{QuantileWindow, ThroughputSeries};
-use crate::types::{merge_topk, Neighbor, PartitionId, QueryResult};
+use crate::stats::{QuantileWindow, ThroughputSeries, TokenBucket};
+use crate::types::{merge_topk, Neighbor, PartitionId, QueryResult, UpdateOp, VectorId};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Meta-HNSW beam width for insert routing (branch is always 1: the
+/// nearest meta vertex's partition, the construct-time assignment rule).
+const INSERT_META_EF: usize = 64;
 
 /// Topic name for a sub-HNSW partition.
 pub fn topic_for(p: PartitionId) -> String {
@@ -103,6 +121,13 @@ pub struct CoordinatorMetrics {
     /// Partials dropped because their (qid, partition) already answered —
     /// the losing side of a hedge/retry race.
     pub duplicates_dropped: AtomicU64,
+    /// Hedge timers that fired but found the per-second budget empty
+    /// ([`HedgeConfig::max_hedges_per_sec`]) — overload protection.
+    pub hedges_suppressed: AtomicU64,
+    /// Inserts accepted onto the write path.
+    pub inserts_published: AtomicU64,
+    /// Deletes accepted onto the write path.
+    pub deletes_published: AtomicU64,
     pub throughput: Mutex<Option<ThroughputSeries>>,
 }
 
@@ -132,6 +157,14 @@ pub struct HedgeConfig {
     /// Cap for the hedge delay; also used while the latency window is
     /// still cold (fewer than [`Self::WARM_SAMPLES`] observations).
     pub max: Duration,
+    /// Hedge budget: at most this many hedge publishes per second
+    /// (token bucket, burst = one second's worth), so a *sustained*
+    /// straggler degrades to bounded duplicate volume instead of
+    /// doubling every slow sub-query. `<= 0` disables the cap (the
+    /// pre-budget behavior; the min-clamp is then the only throttle).
+    /// Eviction-driven re-issues are never budgeted — they are
+    /// correctness recovery, not tail-latency insurance.
+    pub max_hedges_per_sec: f64,
 }
 
 impl HedgeConfig {
@@ -153,6 +186,7 @@ impl Default for HedgeConfig {
             quantile: 0.95,
             min: Duration::from_millis(1),
             max: Duration::from_millis(100),
+            max_hedges_per_sec: 0.0,
         }
     }
 }
@@ -239,6 +273,11 @@ pub struct CoordinatorNode {
     scorer: Option<Arc<dyn BatchScorer>>,
     /// Recent sub-query completion latencies (µs) feeding the hedge timer.
     sub_latency: Mutex<QuantileWindow>,
+    /// Hedge-publish budget (None = uncapped; see
+    /// [`HedgeConfig::max_hedges_per_sec`]).
+    hedge_budget: Mutex<Option<TokenBucket>>,
+    /// Write-path gateway; None until ingestion is enabled.
+    ingest: Mutex<Option<IngestGateway>>,
     evictions: Mutex<EvictionLog>,
     async_tx: Mutex<Option<mpsc::Sender<AsyncJob>>>,
     async_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -284,6 +323,11 @@ impl CoordinatorNode {
             metrics: Arc::new(CoordinatorMetrics::default()),
             scorer,
             sub_latency: Mutex::new(QuantileWindow::new(HedgeConfig::WINDOW)),
+            hedge_budget: Mutex::new((cfg.hedge.max_hedges_per_sec > 0.0).then(|| {
+                let rate = cfg.hedge.max_hedges_per_sec;
+                TokenBucket::new(rate, rate)
+            })),
+            ingest: Mutex::new(None),
             evictions: Mutex::new(EvictionLog { rx: evict_rx, seq_base: 0, log: VecDeque::new() }),
             async_tx: Mutex::new(None),
             async_handles: Mutex::new(Vec::new()),
@@ -347,6 +391,101 @@ impl CoordinatorNode {
             _ => h.max,
         };
         Some(d.clamp(h.min, h.max))
+    }
+
+    /// Spend one hedge token (always true when no budget is configured).
+    fn take_hedge_token(&self) -> bool {
+        match self.hedge_budget.lock().unwrap().as_mut() {
+            Some(b) => b.try_take(Instant::now()),
+            None => true,
+        }
+    }
+
+    /// Attach the write-path gateway, turning this coordinator into an
+    /// ingestion endpoint ([`Self::insert`] / [`Self::delete`]). All
+    /// coordinators of a cluster share one gateway (clones share the id
+    /// allocator), so concurrent writers never collide on ids.
+    pub fn enable_ingest(&self, gateway: IngestGateway) {
+        *self.ingest.lock().unwrap() = Some(gateway);
+    }
+
+    fn ingest_gateway(&self) -> Result<IngestGateway> {
+        self.ingest.lock().unwrap().clone().ok_or_else(|| {
+            PyramidError::Cluster(
+                "ingestion not enabled on this coordinator (enable_ingest / start_ingesting)"
+                    .into(),
+            )
+        })
+    }
+
+    /// Insert one vector into the live index; returns its assigned
+    /// global id. Routed to the partition of its nearest meta vertex —
+    /// the construct-time assignment rule (Algorithm 3 lines 7-10) — and
+    /// published onto that partition's update log; every replica absorbs
+    /// it within one poll cycle, no rebuild involved.
+    pub fn insert(&self, vector: &[f32]) -> Result<VectorId> {
+        let mut ids = self.insert_batch(&[vector])?;
+        Ok(ids.pop().expect("insert_batch returns one id per vector"))
+    }
+
+    /// Batched [`Self::insert`]: one meta-HNSW routing pass for the
+    /// whole block, one log append per vector. Returns the assigned ids
+    /// in input order.
+    pub fn insert_batch(&self, vectors: &[&[f32]]) -> Result<Vec<VectorId>> {
+        let gateway = self.ingest_gateway()?;
+        if vectors.is_empty() {
+            return Ok(Vec::new());
+        }
+        if let Some(d) = self.router.dim().or_else(|| gateway.dim()) {
+            for v in vectors {
+                if v.len() != d {
+                    return Err(PyramidError::Index(format!(
+                        "insert dim {} != index dim {d}",
+                        v.len()
+                    )));
+                }
+            }
+        }
+        let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
+            vectors.iter().map(|v| self.router.prepare_query(v)).collect();
+        let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
+        let routed = self.router.route_batch(&views, 1, INSERT_META_EF);
+        let mut out = Vec::with_capacity(vectors.len());
+        for (i, parts) in routed.iter().enumerate() {
+            let p = *parts
+                .first()
+                .ok_or_else(|| PyramidError::Cluster("insert routed to no partition".into()))?;
+            let id = gateway.allocate_id();
+            gateway.publish(
+                p,
+                UpdateOp::Insert { id, vector: Arc::new(prepared[i].to_vec()) },
+                self.id,
+            )?;
+            self.metrics.inserts_published.fetch_add(1, Ordering::Relaxed);
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    /// Delete a vector by global id. The coordinator does not track
+    /// id→partition placement (executors own that), so the tombstone is
+    /// broadcast to every partition's update log; partitions that never
+    /// stored the id compact the inert tombstone away at their next
+    /// re-freeze.
+    pub fn delete(&self, id: VectorId) -> Result<()> {
+        self.delete_batch(&[id])
+    }
+
+    /// Batched [`Self::delete`].
+    pub fn delete_batch(&self, ids: &[VectorId]) -> Result<()> {
+        let gateway = self.ingest_gateway()?;
+        for &id in ids {
+            for p in 0..self.router.partitions() {
+                gateway.publish(p as PartitionId, UpdateOp::Delete { id }, self.id)?;
+            }
+            self.metrics.deletes_published.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
     }
 
     /// Process one query synchronously (paper Listing 1 `execute`) — a
@@ -511,6 +650,18 @@ impl CoordinatorNode {
                     }
                     hedge_queue.pop_front();
                     let qi = st.qi;
+                    // Budget gate: a sustained straggler era fires a timer
+                    // per sub-query; past the per-second cap the hedges are
+                    // suppressed (the original request still completes via
+                    // lease redelivery / rebalancing — only the duplicate
+                    // is skipped).
+                    if !self.take_hedge_token() {
+                        if let Some(st) = pending.get_mut(&key) {
+                            st.hedged = true; // resolved: will not re-arm
+                        }
+                        self.metrics.hedges_suppressed.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
                     let _ = self.broker.publish_hedge(
                         &topic_for(key.1),
                         &group_for(key.1),
@@ -814,6 +965,67 @@ mod tests {
             CoordinatorConfig { hedge: HedgeConfig::disabled(), ..CoordinatorConfig::default() };
         let node = CoordinatorNode::new(0, Router::broadcast(1, Metric::L2), broker, cfg);
         assert_eq!(node.current_hedge_delay(), None);
+        node.shutdown();
+    }
+
+    /// Satellite acceptance: a sustained straggler cannot trigger
+    /// unbounded duplicate publishes — past the per-second budget the
+    /// hedge timers are suppressed, and the suppression is visible in
+    /// the metrics.
+    #[test]
+    fn hedge_budget_caps_duplicate_publishes_under_sustained_straggle() {
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        broker.create_topic(&topic_for(0));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // Every sub-query takes ~25ms — far past the 2ms hedge cap, so
+        // every query's hedge timer fires (a sustained straggler).
+        let replier = spawn_replier(
+            broker.clone(),
+            0,
+            5,
+            vec![Neighbor::new(1, 0.9)],
+            1,
+            Duration::from_millis(25),
+            stop.clone(),
+        );
+        const RATE: f64 = 2.0; // hedges per second
+        let cfg = CoordinatorConfig {
+            timeout: Duration::from_millis(500),
+            hedge: HedgeConfig {
+                min: Duration::from_millis(1),
+                max: Duration::from_millis(2),
+                max_hedges_per_sec: RATE,
+                ..HedgeConfig::default()
+            },
+            ..CoordinatorConfig::default()
+        };
+        let node = CoordinatorNode::new(0, Router::broadcast(1, Metric::L2), broker, cfg);
+        let q = vec![0.0f32; 8];
+        let n_queries = 30u64;
+        let t0 = Instant::now();
+        for _ in 0..n_queries {
+            node.execute(&q, &QueryParams { k: 1, ..QueryParams::default() }).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let fired = node.metrics.hedges_fired.load(Ordering::Relaxed);
+        let suppressed = node.metrics.hedges_suppressed.load(Ordering::Relaxed);
+        // Every timer either fired or was suppressed.
+        assert_eq!(fired + suppressed, n_queries, "every slow sub-query arms its timer");
+        // Token-bucket bound: burst (== RATE) + refill over the run, with
+        // slack for timing jitter — and strictly fewer than one hedge per
+        // query, which is what an unbudgeted coordinator would publish.
+        let bound = RATE + elapsed * RATE + 2.0;
+        assert!(
+            (fired as f64) <= bound,
+            "hedge budget leaked: {fired} fired > bound {bound:.1} over {elapsed:.2}s"
+        );
+        assert!(fired < n_queries, "budget never engaged: {fired}/{n_queries} hedged");
+        assert!(suppressed > 0, "suppression path never exercised");
+        stop.store(true, Ordering::Relaxed);
+        replier.join().unwrap();
         node.shutdown();
     }
 }

@@ -104,6 +104,16 @@ impl Dataset {
     pub fn norms(&self) -> Vec<f32> {
         self.iter().map(crate::metric::norm).collect()
     }
+
+    /// Append one row in place (the streaming delta-index write path).
+    /// Copies the buffer first if any clone still shares it, so existing
+    /// views are never mutated under a reader.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "push_row dim mismatch");
+        let buf = std::sync::Arc::make_mut(&mut self.data);
+        buf.extend_from_slice(row);
+        self.n += 1;
+    }
 }
 
 /// A sub-dataset: rows owned by one partition plus their global ids.
@@ -178,6 +188,18 @@ mod tests {
         for row in ds.iter().skip(1) {
             assert!((crate::metric::norm(row) - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn push_row_grows_without_touching_clones() {
+        let mut ds = toy();
+        let view = ds.clone();
+        ds.push_row(&[100.0, 101.0, 102.0, 103.0]);
+        assert_eq!(ds.len(), 6);
+        assert_eq!(ds.get(5), &[100.0, 101.0, 102.0, 103.0]);
+        // The pre-push clone still sees the old buffer.
+        assert_eq!(view.len(), 5);
+        assert_eq!(view.get(4), ds.get(4));
     }
 
     #[test]

@@ -19,13 +19,21 @@
 //! Host conditions are injected through [`HostControl`]: `alive=false`
 //! makes the executor exit without cleanup (crash), `cpu_share < 100`
 //! stretches per-request service time like the paper's CPU-limit tool.
+//!
+//! With [`ExecutorSpec::ingest`] wired, the loop also serves the **write
+//! path**: each iteration pumps the partition's update log into the
+//! replica's [`LiveIndex`] before blocking on the query poll, so a fresh
+//! insert is searchable within one poll cycle, and a respawned replica
+//! (cursor 0) replays the whole log back to parity while already
+//! answering queries from its frozen base.
 
 use crate::broker::{Broker, Delivery};
 use crate::coordinator::{group_for, topic_for, PartialResult, QueryRequest};
 use crate::hnsw::Hnsw;
+use crate::ingest::{LiveIndex, UpdateConsumer};
 use crate::registry::Registry;
 use crate::runtime::{BatchScorer, NativeScorer};
-use crate::types::{BatchQuery, Neighbor, PartitionId, VectorId};
+use crate::types::{BatchQuery, Neighbor, PartitionId, UpdateRequest, VectorId};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -50,9 +58,21 @@ pub trait SubIndex: Send + Sync {
         queries.iter().map(|q| self.search_local(q.query, q.k, q.ef)).collect()
     }
 
-    /// Row accessor (for return_vectors).
-    fn vector(&self, local_id: u32) -> &[f32];
+    /// Append the vector behind an id [`Self::search_local`] returned to
+    /// `out` (the `return_vectors` path). By-copy rather than by-borrow
+    /// so backends whose storage swaps under queries (the live ingest
+    /// index re-freezing its base) can serve it from behind a lock.
+    fn push_vector(&self, local_id: u32, out: &mut Vec<f32>);
+
     fn dim(&self) -> usize;
+
+    /// True when [`Self::search_local`] already returns **global** ids
+    /// (the executor then skips its local→global translation). The live
+    /// ingest index does: its id space mixes base rows and delta rows,
+    /// so only the backend itself can resolve them.
+    fn translates_ids(&self) -> bool {
+        false
+    }
 }
 
 impl SubIndex for Hnsw {
@@ -64,8 +84,8 @@ impl SubIndex for Hnsw {
         Hnsw::search_batch(self, queries, scorer)
     }
 
-    fn vector(&self, local_id: u32) -> &[f32] {
-        self.data().get(local_id as usize)
+    fn push_vector(&self, local_id: u32, out: &mut Vec<f32>) {
+        out.extend_from_slice(self.data().get(local_id as usize));
     }
 
     fn dim(&self) -> usize {
@@ -89,6 +109,14 @@ impl HostControl {
     }
 }
 
+/// Streaming-ingest wiring for one executor replica: the update-broker
+/// handle its [`UpdateConsumer`] tails and the [`LiveIndex`] it applies
+/// into (the same object `ExecutorSpec::sub` serves queries from).
+pub struct IngestWiring {
+    pub broker: Broker<UpdateRequest>,
+    pub live: Arc<LiveIndex>,
+}
+
 /// Executor identity + wiring.
 pub struct ExecutorSpec {
     /// Globally unique executor id (also the consumer-group member id).
@@ -101,6 +129,8 @@ pub struct ExecutorSpec {
     pub net_latency: Duration,
     /// Max requests drained per poll (>= 1; see [`DEFAULT_BATCH`]).
     pub batch: usize,
+    /// Streaming-ingest wiring; None serves a read-only index.
+    pub ingest: Option<IngestWiring>,
 }
 
 /// Handle to a running executor thread.
@@ -203,6 +233,11 @@ fn run(
     };
     let batch_cap = spec.batch.max(1);
     let mut batch: Vec<Delivery<QueryRequest>> = Vec::with_capacity(batch_cap);
+    // Update pump: tails the partition's update log from this replica's
+    // replay cursor (0 for a fresh instance — full replay of everything
+    // the previous incarnation had absorbed, paper §IV-B for writes).
+    let mut updates: Option<UpdateConsumer> =
+        spec.ingest.as_ref().map(|w| UpdateConsumer::new(&w.broker, spec.partition, w.live.clone()));
 
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -218,6 +253,12 @@ fn run(
         }
         if !session.heartbeat() {
             return ExitReason::SessionLost;
+        }
+        // Absorb pending updates before blocking on the query poll:
+        // freshly published vectors become searchable within one poll
+        // cycle, bounded per iteration so serving latency stays flat.
+        if let Some(u) = updates.as_mut() {
+            u.pump();
         }
         let Some(first) = consumer.poll(Duration::from_millis(20)) else {
             continue;
@@ -263,15 +304,17 @@ fn run(
         }
         for (delivery, local) in batch.iter().zip(&locals) {
             let req = &delivery.msg;
-            let neighbors: Vec<Neighbor> = local
-                .iter()
-                .map(|n| Neighbor::new(spec.ids[n.id as usize], n.score))
-                .collect();
+            let neighbors: Vec<Neighbor> = if spec.sub.translates_ids() {
+                // Live-index results already carry global ids.
+                local.clone()
+            } else {
+                local.iter().map(|n| Neighbor::new(spec.ids[n.id as usize], n.score)).collect()
+            };
             let vectors = if req.return_vectors {
                 let d = spec.sub.dim();
                 let mut buf = Vec::with_capacity(local.len() * d);
                 for n in local {
-                    buf.extend_from_slice(spec.sub.vector(n.id));
+                    spec.sub.push_vector(n.id, &mut buf);
                 }
                 Some(Arc::new(buf))
             } else {
@@ -338,6 +381,7 @@ mod tests {
             host,
             net_latency: Duration::ZERO,
             batch: DEFAULT_BATCH,
+            ingest: None,
         }
     }
 
@@ -416,6 +460,54 @@ mod tests {
         got.sort_unstable();
         assert_eq!(got, (0..24).collect::<Vec<_>>());
         assert_eq!(h.served.load(Ordering::Relaxed), 24);
+        h.stop();
+    }
+
+    #[test]
+    fn ingesting_executor_serves_fresh_inserts_with_global_ids() {
+        use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
+        use crate::types::UpdateOp;
+
+        let (broker, registry) = wiring();
+        let (sub, ids) = tiny_sub(); // 400 rows, global ids 1000..1400
+        let data = sub.data().clone();
+        let update_broker: Broker<crate::types::UpdateRequest> = Broker::new(BrokerConfig::default());
+        let gw = IngestGateway::new(update_broker.clone(), 1, 5_000, Some(12));
+        let cfg = IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() };
+        let live = Arc::new(LiveIndex::new(sub, ids.clone(), cfg));
+        let s = ExecutorSpec {
+            id: 30,
+            partition: 0,
+            sub: live.clone(),
+            ids,
+            host: HostControl::new(0),
+            net_latency: Duration::ZERO,
+            batch: DEFAULT_BATCH,
+            ingest: Some(IngestWiring { broker: update_broker.clone(), live: live.clone() }),
+        };
+        let h = spawn(s, broker.clone(), registry);
+
+        // Publish an insert; it must become searchable with NO rebuild.
+        let id = gw.allocate_id();
+        let novel: Vec<f32> = data.get(0).iter().map(|v| v + 0.5).collect();
+        gw.publish(0, UpdateOp::Insert { id, vector: Arc::new(novel.clone()) }, 0).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (tx, rx) = mpsc::channel();
+        let mut found = false;
+        while Instant::now() < deadline {
+            let mut req = request(tx.clone(), novel.clone());
+            req.qid = 99;
+            broker.publish(&topic_for(0), 99, req).unwrap();
+            let pr = rx.recv_timeout(Duration::from_secs(2)).expect("partial");
+            if pr.neighbors[0].id == id {
+                found = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(found, "inserted vector never became searchable");
+        assert_eq!(live.refreezes(), 0, "no rebuild may be involved");
+        assert_eq!(update_topic_for(0), "upd-0");
         h.stop();
     }
 

@@ -82,6 +82,64 @@ fn prune(g: &mut NestedHnsw, level: usize, u: u32, cap: usize) {
     g.layers[level].lists[u as usize] = kept;
 }
 
+/// Connect a freshly searched node into the graph: select neighbors per
+/// layer, write its forward edges, add the reverse edges and prune any
+/// list the reverse edge overflowed (Algorithm 2 lines 9-12). Shared by
+/// the bulk build loop and the incremental [`insert`].
+fn wire_node(g: &mut NestedHnsw, id: u32, node_level: usize, per_layer: Vec<Vec<Neighbor>>) {
+    for (t, cands) in per_layer.into_iter().enumerate() {
+        if t > node_level {
+            break;
+        }
+        let m_cap = if t == 0 { g.params.m0 } else { g.params.m };
+        let selected = select_neighbors(g, cands, m_cap, g.params.select_heuristic);
+        g.layers[t].lists[id as usize] = selected.clone();
+        // Reverse edges + prune.
+        for v in selected {
+            g.layers[t].lists[v as usize].push(id);
+            if g.layers[t].lists[v as usize].len() > m_cap {
+                prune(g, t, v, m_cap);
+            }
+        }
+    }
+}
+
+/// Append one row and wire it into the mutable graph — Algorithm 2 for a
+/// single late arrival, the streaming delta-index write path. The level
+/// draw is seeded by `(params.seed, id)` so replaying the same update log
+/// reproduces an identical graph on every replica.
+pub(crate) fn insert(g: &mut NestedHnsw, row: &[f32]) -> u32 {
+    let id = g.data.len() as u32;
+    g.data.push_row(row);
+    g.visited_pool.grow(g.data.len());
+    let mut rng = Rng::seed_from_u64(
+        g.params.seed ^ 0xDE17A ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let node_level = (draw_level(&mut rng, g.params.level_lambda())).min(31);
+    g.levels.push(node_level as u8);
+    let prev_max = g.layers.len() - 1;
+    // Every layer needs a (possibly empty) list slot for the new node; new
+    // top layers get slots for every node. The search below never visits
+    // `id` (no edges point at it yet), so growing first is safe.
+    for l in &mut g.layers {
+        l.lists.push(Vec::new());
+    }
+    while g.layers.len() <= node_level {
+        g.layers.push(Layer::with_nodes(g.data.len()));
+    }
+    if id == 0 {
+        g.entry = 0;
+        return 0;
+    }
+    let q = g.data.get(id as usize).to_vec();
+    let per_layer = search_for_insert(g, &q, node_level.min(prev_max), g.params.ef_construction);
+    wire_node(g, id, node_level, per_layer);
+    if node_level > prev_max {
+        g.entry = id;
+    }
+    id
+}
+
 pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result<NestedHnsw> {
     let n = data.len();
     let mut rng = Rng::seed_from_u64(params.seed ^ 0xC0FF_EE11);
@@ -110,21 +168,7 @@ pub(crate) fn build(data: Dataset, metric: Metric, params: HnswParams) -> Result
         let node_level = levels[id as usize] as usize;
         let q = g.data.get(id as usize).to_vec();
         let per_layer = search_for_insert(&g, &q, node_level.min(cur_max), g.params.ef_construction);
-        for (t, cands) in per_layer.into_iter().enumerate() {
-            if t > node_level {
-                break;
-            }
-            let m_cap = if t == 0 { g.params.m0 } else { g.params.m };
-            let selected = select_neighbors(&g, cands, m_cap, g.params.select_heuristic);
-            g.layers[t].lists[id as usize] = selected.clone();
-            // Reverse edges + prune.
-            for v in selected {
-                g.layers[t].lists[v as usize].push(id);
-                if g.layers[t].lists[v as usize].len() > m_cap {
-                    prune(&mut g, t, v, m_cap);
-                }
-            }
-        }
+        wire_node(&mut g, id, node_level, per_layer);
         if node_level > cur_max {
             cur_max = node_level;
             g.entry = id;
@@ -166,6 +210,72 @@ mod tests {
         sorted.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
         let top8: Vec<u32> = sorted.iter().take(8).map(|n| n.id).collect();
         assert_eq!(plain, top8);
+    }
+
+    #[test]
+    fn incremental_insert_matches_bulk_quality() {
+        // Build over the first 700 rows, stream the remaining 300 in via
+        // insert(); the grown graph must serve both old and new items.
+        let full = SyntheticSpec::deep_like(1_000, 16, 9).generate();
+        let head_ids: Vec<u32> = (0..700).collect();
+        let head = full.subset(&head_ids);
+        let mut g = NestedHnsw::build(head, Metric::L2, HnswParams::default()).unwrap();
+        for i in 700..1_000 {
+            let id = g.insert(full.get(i));
+            assert_eq!(id, i as u32);
+        }
+        assert_eq!(g.len(), 1_000);
+        // Degree bounds hold after reverse-edge pruning.
+        for (t, layer) in g.layers.iter().enumerate() {
+            let cap = if t == 0 { g.params.m0 } else { g.params.m };
+            for (u, list) in layer.lists.iter().enumerate() {
+                assert!(list.len() <= cap, "layer {t} node {u} degree {} > {cap}", list.len());
+            }
+            assert_eq!(layer.lists.len(), 1_000, "layer {t} missing slots");
+        }
+        // Every item — bulk-built and streamed — is its own nearest
+        // neighbor, both on the mutable graph and after freezing.
+        for i in [0usize, 350, 700, 850, 999] {
+            let res = g.search(full.get(i), 1, 80);
+            assert_eq!(res[0].id, i as u32, "nested: item {i} not its own NN");
+        }
+        let frozen = g.freeze();
+        for i in [0usize, 350, 700, 850, 999] {
+            let res = frozen.search(full.get(i), 1, 80);
+            assert_eq!(res[0].id, i as u32, "frozen: item {i} not its own NN");
+        }
+    }
+
+    #[test]
+    fn incremental_insert_recall_close_to_bulk() {
+        let spec = SyntheticSpec::deep_like(2_000, 16, 31);
+        let full = spec.generate();
+        let queries = spec.queries(25);
+        let bulk = NestedHnsw::build(full.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let head_ids: Vec<u32> = (0..1_400).collect();
+        let mut streamed =
+            NestedHnsw::build(full.subset(&head_ids), Metric::L2, HnswParams::default()).unwrap();
+        for i in 1_400..2_000 {
+            streamed.insert(full.get(i));
+        }
+        let recall = |g: &NestedHnsw| {
+            let mut hits = 0usize;
+            for qi in 0..queries.len() {
+                let q = queries.get(qi);
+                let gt: std::collections::HashSet<u32> = crate::bruteforce::search(&full, q, Metric::L2, 10)
+                    .iter()
+                    .map(|n| n.id)
+                    .collect();
+                hits += g.search(q, 10, 100).iter().filter(|n| gt.contains(&n.id)).count();
+            }
+            hits as f64 / (queries.len() * 10) as f64
+        };
+        let r_bulk = recall(&bulk);
+        let r_streamed = recall(&streamed);
+        assert!(
+            r_streamed >= r_bulk - 0.05,
+            "streamed recall {r_streamed} far below bulk {r_bulk}"
+        );
     }
 
     #[test]

@@ -206,6 +206,25 @@ impl NestedHnsw {
         search::search(self, query, k, ef).0
     }
 
+    /// Append one row and wire it into the graph (Algorithm 2 for a
+    /// single late arrival) — the streaming delta-index write path.
+    /// Returns the new row's local id. Level draws are seeded by
+    /// `(params.seed, id)`, so replaying the same insert sequence
+    /// reproduces an identical graph on every replica.
+    pub fn insert(&mut self, row: &[f32]) -> u32 {
+        build::insert(self, row)
+    }
+
+    /// Construction parameters this graph was built with.
+    pub fn params(&self) -> HnswParams {
+        self.params
+    }
+
+    /// Row accessor (local ids).
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
     pub fn len(&self) -> usize {
         self.data.len()
     }
@@ -314,6 +333,13 @@ impl Hnsw {
 
     pub fn metric(&self) -> Metric {
         self.metric
+    }
+
+    /// Construction parameters this graph was built with — the re-freeze
+    /// compactor reuses them so a compacted base matches the original's
+    /// shape.
+    pub fn params(&self) -> HnswParams {
+        self.params
     }
 
     pub fn max_layer(&self) -> usize {

@@ -157,7 +157,19 @@ impl VisitedPool {
     }
 
     fn take(&self) -> VisitedList {
-        self.pool.lock().unwrap().pop().unwrap_or_else(|| VisitedList::new(self.n))
+        let mut v = self.pool.lock().unwrap().pop().unwrap_or_else(|| VisitedList::new(self.n));
+        if v.epoch.len() < self.n {
+            // The graph grew since this list was pooled (delta inserts);
+            // fresh stamps (0) are always unvisited in the current epoch.
+            v.epoch.resize(self.n, 0);
+        }
+        v
+    }
+
+    /// Raise the pool's node capacity after the graph grew (incremental
+    /// insert). Pooled lists are lazily resized on the next checkout.
+    pub(crate) fn grow(&mut self, n: usize) {
+        self.n = self.n.max(n);
     }
 
     fn put(&self, v: VisitedList) {

@@ -1,0 +1,607 @@
+//! The live (writable) per-partition index: a frozen CSR base plus a
+//! small mutable delta graph and a tombstone set, with a background
+//! re-freeze compactor that folds the delta back into a fresh frozen
+//! base under queries.
+//!
+//! ## Anatomy
+//!
+//! * **Base** — the construct-time (or last re-frozen) [`Hnsw`]: the CSR
+//!   serving layout executors have always searched, plus its local→global
+//!   id map and a reverse map for vector fetches. Swapped atomically
+//!   behind an `Arc` at every re-freeze.
+//! * **Delta** — a [`NestedHnsw`] grown one [`NestedHnsw::insert`] at a
+//!   time as updates stream in. Small by construction: the re-freeze
+//!   threshold bounds it, so its nested-vec layout (slower to walk than
+//!   CSR, but mutable) never dominates query time.
+//! * **Tombstones** — deleted global ids, each stamped with the update
+//!   sequence that deleted it. Search filters them from both base and
+//!   delta hits; re-freeze drops the baked-in ones.
+//!
+//! Every state transition is keyed by the partition's [`UpdateSeq`]: the
+//! delta remembers which sequence produced each row, the base remembers
+//! the sequence it covers, and `applied` is the next sequence expected —
+//! which is exactly the replay cursor a respawned replica hands to its
+//! [`crate::broker::LogTailer`].
+//!
+//! ## Re-freeze protocol
+//!
+//! `refreeze` snapshots (base, delta, tombstones, cut = applied) under
+//! the lock, builds a fresh `Hnsw` over the surviving rows *outside* the
+//! lock (queries and new updates keep flowing), then re-locks and swaps:
+//! the new base covers everything `< cut`, delta entries and tombstones
+//! `>= cut` (applied during the build) are carried over, the rest drop.
+//! A search observes either the old state or the new one, never a
+//! half-swap.
+
+use super::IngestConfig;
+use crate::dataset::Dataset;
+use crate::executor::SubIndex;
+use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
+use crate::metric::Metric;
+use crate::types::{merge_topk, Neighbor, UpdateOp, UpdateRequest, UpdateSeq, VectorId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Tombstone count above which search widens its base/delta beams to
+/// compensate for filtered hits, capped so heavy delete churn degrades
+/// gracefully instead of inflating every query.
+const TOMBSTONE_SLACK_CAP: usize = 64;
+
+/// Ingest counters (per live index, i.e. per executor replica).
+#[derive(Debug, Default)]
+pub struct IngestMetrics {
+    pub inserts_applied: AtomicU64,
+    pub deletes_applied: AtomicU64,
+    /// Completed base swaps.
+    pub refreezes: AtomicU64,
+    /// Updates dropped for shape errors (dimension mismatch).
+    pub rejected: AtomicU64,
+}
+
+/// One frozen-base generation (immutable; swapped wholesale).
+struct BaseGen {
+    graph: Arc<Hnsw>,
+    /// Local row -> global id.
+    ids: Arc<Vec<VectorId>>,
+    /// Global id -> local row (vector fetches).
+    by_global: HashMap<VectorId, u32>,
+    /// Updates with sequence < `covered` are baked into this base.
+    covered: UpdateSeq,
+}
+
+impl BaseGen {
+    fn new(graph: Arc<Hnsw>, ids: Arc<Vec<VectorId>>, covered: UpdateSeq) -> BaseGen {
+        let by_global = ids.iter().enumerate().map(|(l, &g)| (g, l as u32)).collect();
+        BaseGen { graph, ids, by_global, covered }
+    }
+}
+
+/// The mutable overlay: rows inserted since the base was frozen.
+#[derive(Default)]
+struct Delta {
+    graph: Option<NestedHnsw>,
+    /// Delta-local row -> global id.
+    ids: Vec<VectorId>,
+    /// Delta-local row -> sequence that inserted it.
+    seqs: Vec<UpdateSeq>,
+}
+
+impl Delta {
+    /// Append one dim-checked row: grow the delta graph (creating it on
+    /// the first row) and record the row's global id + sequence. Shared
+    /// by the apply path and the re-freeze tail carry-over.
+    fn push(
+        &mut self,
+        row: &[f32],
+        gid: VectorId,
+        seq: UpdateSeq,
+        metric: Metric,
+        params: HnswParams,
+        dim: usize,
+    ) {
+        match &mut self.graph {
+            Some(g) => {
+                g.insert(row);
+            }
+            None => {
+                let ds = Dataset::from_vec(row.to_vec(), dim).expect("dim-checked row");
+                self.graph = Some(
+                    NestedHnsw::build(ds, metric, params).expect("single-row delta build"),
+                );
+            }
+        }
+        self.ids.push(gid);
+        self.seqs.push(seq);
+    }
+}
+
+struct LiveState {
+    base: Arc<BaseGen>,
+    delta: Delta,
+    /// Deleted global id -> sequence that deleted it.
+    tombstones: HashMap<VectorId, UpdateSeq>,
+    /// Next update sequence expected (== the replay cursor).
+    applied: UpdateSeq,
+    /// A re-freeze build is in flight (snapshot taken, swap pending).
+    freezing: bool,
+}
+
+/// A writable per-partition index: frozen base + delta + tombstones (see
+/// the module docs). Implements [`SubIndex`], so executors serve it
+/// exactly like a plain frozen graph — except its results are already in
+/// the global id space ([`SubIndex::translates_ids`]).
+pub struct LiveIndex {
+    metric: Metric,
+    dim: usize,
+    delta_params: HnswParams,
+    cfg: IngestConfig,
+    state: Mutex<LiveState>,
+    pub metrics: IngestMetrics,
+}
+
+impl LiveIndex {
+    /// Wrap a frozen base (shared with the construct-time index) in a
+    /// live, writable view with an empty delta. `applied` starts at 0:
+    /// a fresh instance replays the partition's whole update log, which
+    /// is exactly what a respawned replica must do.
+    pub fn new(base: Arc<Hnsw>, ids: Arc<Vec<VectorId>>, cfg: IngestConfig) -> LiveIndex {
+        let metric = base.metric();
+        let dim = base.dim();
+        let delta_params = base.params();
+        LiveIndex {
+            metric,
+            dim,
+            delta_params,
+            cfg,
+            state: Mutex::new(LiveState {
+                base: Arc::new(BaseGen::new(base, ids, 0)),
+                delta: Delta::default(),
+                tombstones: HashMap::new(),
+                applied: 0,
+                freezing: false,
+            }),
+            metrics: IngestMetrics::default(),
+        }
+    }
+
+    pub fn config(&self) -> IngestConfig {
+        self.cfg
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Next update sequence this replica expects — the cursor a replay
+    /// tailer starts from.
+    pub fn applied_seq(&self) -> UpdateSeq {
+        self.state.lock().unwrap().applied
+    }
+
+    /// Rows currently in the delta overlay.
+    pub fn delta_len(&self) -> usize {
+        self.state.lock().unwrap().delta.ids.len()
+    }
+
+    /// Live tombstone count (not yet compacted away).
+    pub fn tombstones_len(&self) -> usize {
+        self.state.lock().unwrap().tombstones.len()
+    }
+
+    /// Rows in the current frozen base.
+    pub fn base_len(&self) -> usize {
+        self.state.lock().unwrap().base.graph.len()
+    }
+
+    /// Completed re-freeze swaps.
+    pub fn refreezes(&self) -> u64 {
+        self.metrics.refreezes.load(Ordering::Relaxed)
+    }
+
+    /// Apply one update from the partition's log. Idempotent under
+    /// replay: sequences below the cursor are skipped, so re-delivering
+    /// a prefix of the log (lease expiry, respawn overlap) cannot
+    /// double-insert.
+    pub fn apply(&self, seq: UpdateSeq, req: &UpdateRequest) {
+        let mut st = self.state.lock().unwrap();
+        if seq < st.applied {
+            return; // already applied (replay overlap)
+        }
+        st.applied = seq + 1;
+        match &req.op {
+            UpdateOp::Insert { id, vector } => {
+                if vector.len() != self.dim {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                st.delta.push(vector, *id, seq, self.metric, self.delta_params, self.dim);
+                self.metrics.inserts_applied.fetch_add(1, Ordering::Relaxed);
+            }
+            UpdateOp::Delete { id } => {
+                st.tombstones.insert(*id, seq);
+                self.metrics.deletes_applied.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Merged top-k over base + delta with tombstones filtered; results
+    /// carry **global** ids. Both walks widen by a capped slack so a
+    /// burst of deletes cannot silently shrink result sets below k.
+    pub fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        let st = self.state.lock().unwrap();
+        let slack = st.tombstones.len().min(TOMBSTONE_SLACK_CAP);
+        let kk = k + slack;
+        let ef = ef.max(kk);
+        let mut partials: Vec<Neighbor> = Vec::with_capacity(kk * 2);
+        for n in st.base.graph.search(query, kk, ef) {
+            let gid = st.base.ids[n.id as usize];
+            if !st.tombstones.contains_key(&gid) {
+                partials.push(Neighbor::new(gid, n.score));
+            }
+        }
+        if let Some(g) = &st.delta.graph {
+            for n in g.search(query, kk, ef) {
+                let gid = st.delta.ids[n.id as usize];
+                if !st.tombstones.contains_key(&gid) {
+                    partials.push(Neighbor::new(gid, n.score));
+                }
+            }
+        }
+        merge_topk(partials, k)
+    }
+
+    /// Spawn a background re-freeze if the delta + tombstone volume
+    /// crossed the configured threshold and no build is already in
+    /// flight. The executor's poll loop calls this after every update
+    /// pump; the build runs on its own thread and swaps atomically.
+    pub fn maybe_refreeze(self: &Arc<Self>) {
+        let due = {
+            let st = self.state.lock().unwrap();
+            !st.freezing
+                && st.delta.ids.len() + st.tombstones.len() >= self.cfg.refreeze_threshold
+        };
+        if due {
+            let me = self.clone();
+            // Detached: holds its own Arc; refreeze() re-checks the
+            // freezing flag, so a racing second spawn exits immediately.
+            let _ = std::thread::Builder::new()
+                .name("ingest-refreeze".into())
+                .spawn(move || {
+                    me.refreeze();
+                });
+        }
+    }
+
+    /// Compact delta + base into a fresh frozen base and swap it in (see
+    /// the module docs for the cut-sequence protocol). Returns true when
+    /// a swap happened; false when there was nothing to compact, another
+    /// freeze was in flight, or every row was tombstoned (the old base
+    /// keeps serving through the tombstone filter — a frozen graph over
+    /// zero rows is not buildable).
+    pub fn refreeze(&self) -> bool {
+        // Snapshot under the lock.
+        let (base, delta_rows, delta_ids, tombstones, cut) = {
+            let mut st = self.state.lock().unwrap();
+            if st.freezing || (st.delta.ids.is_empty() && st.tombstones.is_empty()) {
+                return false;
+            }
+            st.freezing = true;
+            let delta_rows: Vec<Vec<f32>> = match &st.delta.graph {
+                Some(g) => (0..g.len()).map(|i| g.data().get(i).to_vec()).collect(),
+                None => Vec::new(),
+            };
+            (
+                st.base.clone(),
+                delta_rows,
+                st.delta.ids.clone(),
+                st.tombstones.clone(),
+                st.applied,
+            )
+        };
+        // Build the compacted base outside the lock: queries and updates
+        // keep flowing against the old state meanwhile.
+        let mut rows: Vec<f32> = Vec::new();
+        let mut ids: Vec<VectorId> = Vec::new();
+        for (local, &gid) in base.ids.iter().enumerate() {
+            if !tombstones.contains_key(&gid) {
+                rows.extend_from_slice(base.graph.data().get(local));
+                ids.push(gid);
+            }
+        }
+        for (row, &gid) in delta_rows.iter().zip(&delta_ids) {
+            // Every snapshotted delta entry has sequence < cut.
+            if !tombstones.contains_key(&gid) {
+                rows.extend_from_slice(row);
+                ids.push(gid);
+            }
+        }
+        let built = if ids.is_empty() {
+            None
+        } else {
+            Dataset::from_vec(rows, self.dim)
+                .and_then(|ds| Hnsw::build(ds, self.metric, base.graph.params()))
+                .ok()
+        };
+        let Some(new_graph) = built else {
+            self.state.lock().unwrap().freezing = false;
+            return false;
+        };
+        let new_base = Arc::new(BaseGen::new(Arc::new(new_graph), Arc::new(ids), cut));
+        // Carry-over, phase 1: snapshot the post-cut tail under the lock
+        // and build its graph OUTSIDE it — under sustained ingest the
+        // tail (everything applied during the base build) can be large,
+        // and queries must not stall behind its construction.
+        let (tail_rows, tail_meta, cut2) = {
+            let st = self.state.lock().unwrap();
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            let mut meta: Vec<(VectorId, UpdateSeq)> = Vec::new();
+            if let Some(g) = &st.delta.graph {
+                for (local, (&gid, &seq)) in st.delta.ids.iter().zip(&st.delta.seqs).enumerate() {
+                    if seq >= cut {
+                        rows.push(g.data().get(local).to_vec());
+                        meta.push((gid, seq));
+                    }
+                }
+            }
+            (rows, meta, st.applied)
+        };
+        let mut tail = Delta::default();
+        for (row, &(gid, seq)) in tail_rows.iter().zip(&tail_meta) {
+            tail.push(row, gid, seq, self.metric, self.delta_params, self.dim);
+        }
+        // Carry-over, phase 2 + swap: rows that arrived during the tail
+        // build (seq >= cut2) are appended incrementally under the lock —
+        // a handful at most, each an O(log n) insert.
+        let mut st = self.state.lock().unwrap();
+        if let Some(g) = &st.delta.graph {
+            for (local, (&gid, &seq)) in st.delta.ids.iter().zip(&st.delta.seqs).enumerate() {
+                if seq >= cut2 {
+                    tail.push(
+                        g.data().get(local),
+                        gid,
+                        seq,
+                        self.metric,
+                        self.delta_params,
+                        self.dim,
+                    );
+                }
+            }
+        }
+        st.base = new_base;
+        st.delta = tail;
+        st.tombstones.retain(|_, s| *s >= cut);
+        st.freezing = false;
+        self.metrics.refreezes.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Copy the vector behind a **global** id into `out` (the
+    /// `return_vectors` path). A row deleted between search and fetch is
+    /// replaced by zeros so the caller's row alignment survives the race.
+    fn copy_vector(&self, global_id: VectorId, out: &mut Vec<f32>) {
+        let st = self.state.lock().unwrap();
+        if let Some(pos) = st.delta.ids.iter().position(|&g| g == global_id) {
+            let g = st.delta.graph.as_ref().expect("delta rows imply delta graph");
+            out.extend_from_slice(g.data().get(pos));
+            return;
+        }
+        if let Some(&local) = st.base.by_global.get(&global_id) {
+            out.extend_from_slice(st.base.graph.data().get(local as usize));
+            return;
+        }
+        out.extend(std::iter::repeat(0.0f32).take(self.dim));
+    }
+}
+
+impl SubIndex for LiveIndex {
+    fn search_local(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        LiveIndex::search(self, query, k, ef)
+    }
+
+    fn push_vector(&self, local_id: u32, out: &mut Vec<f32>) {
+        self.copy_vector(local_id, out);
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn translates_ids(&self) -> bool {
+        true
+    }
+}
+
+impl std::fmt::Debug for LiveIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.state.lock().unwrap();
+        f.debug_struct("LiveIndex")
+            .field("metric", &self.metric)
+            .field("base", &st.base.graph.len())
+            .field("base_covers", &st.base.covered)
+            .field("delta", &st.delta.ids.len())
+            .field("tombstones", &st.tombstones.len())
+            .field("applied", &st.applied)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bruteforce;
+    use crate::dataset::SyntheticSpec;
+    use crate::hnsw::HnswParams;
+
+    fn cfg() -> IngestConfig {
+        IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() }
+    }
+
+    fn insert_req(id: VectorId, v: &[f32]) -> UpdateRequest {
+        UpdateRequest { op: UpdateOp::Insert { id, vector: Arc::new(v.to_vec()) }, coordinator: 0 }
+    }
+
+    fn delete_req(id: VectorId) -> UpdateRequest {
+        UpdateRequest { op: UpdateOp::Delete { id }, coordinator: 0 }
+    }
+
+    /// Base over the first `split` rows; the rest streamed as inserts.
+    fn split_live(data: &Dataset, metric: Metric, split: usize) -> LiveIndex {
+        let head: Vec<VectorId> = (0..split as u32).collect();
+        let base =
+            Hnsw::build(data.subset(&head), metric, HnswParams::default()).unwrap();
+        let live = LiveIndex::new(Arc::new(base), Arc::new(head), cfg());
+        for i in split..data.len() {
+            live.apply((i - split) as u64, &insert_req(i as u32, data.get(i)));
+        }
+        live
+    }
+
+    /// Satellite acceptance: recall parity between insert-then-search on
+    /// the delta and a full rebuild containing the same vectors, within
+    /// 2%, on all three metrics.
+    #[test]
+    fn delta_recall_parity_with_full_rebuild_three_metrics() {
+        for (metric, seed) in [(Metric::L2, 51u64), (Metric::Ip, 53), (Metric::Angular, 59)] {
+            let spec = SyntheticSpec::deep_like(2_400, 16, seed);
+            let data = if metric.normalizes_items() {
+                spec.generate().normalized()
+            } else {
+                spec.generate()
+            };
+            let queries = if metric.normalizes_items() {
+                spec.queries(30).normalized()
+            } else {
+                spec.queries(30)
+            };
+            let live = split_live(&data, metric, 1_800);
+            let full = Hnsw::build(data.clone(), metric, HnswParams::default()).unwrap();
+            let mut hits_live = 0usize;
+            let mut hits_full = 0usize;
+            for qi in 0..queries.len() {
+                let q = queries.get(qi);
+                let gt: std::collections::HashSet<u32> =
+                    bruteforce::search(&data, q, metric, 10).iter().map(|n| n.id).collect();
+                hits_live += live.search(q, 10, 100).iter().filter(|n| gt.contains(&n.id)).count();
+                hits_full += full.search(q, 10, 100).iter().filter(|n| gt.contains(&n.id)).count();
+            }
+            let total = (queries.len() * 10) as f64;
+            let r_live = hits_live as f64 / total;
+            let r_full = hits_full as f64 / total;
+            assert!(
+                r_live >= r_full - 0.02,
+                "{metric}: delta recall {r_live} vs full rebuild {r_full} (> 2% apart)"
+            );
+        }
+    }
+
+    #[test]
+    fn inserted_rows_searchable_and_exact_top1() {
+        let data = SyntheticSpec::deep_like(1_000, 12, 3).generate();
+        let live = split_live(&data, Metric::L2, 800);
+        assert_eq!(live.delta_len(), 200);
+        for i in [800usize, 900, 999, 0, 500] {
+            let top = live.search(data.get(i), 1, 60);
+            assert_eq!(top[0].id, i as u32, "item {i} not its own top-1");
+        }
+    }
+
+    #[test]
+    fn tombstones_filter_base_and_delta_and_refreeze_compacts() {
+        let data = SyntheticSpec::deep_like(900, 12, 5).generate();
+        let live = split_live(&data, Metric::L2, 700); // delta: 700..900, seqs 0..200
+        // Delete one base row and one delta row.
+        live.apply(200, &delete_req(10));
+        live.apply(201, &delete_req(750));
+        for victim in [10usize, 750] {
+            let ids: Vec<u32> =
+                live.search(data.get(victim), 10, 80).iter().map(|n| n.id).collect();
+            assert!(!ids.contains(&(victim as u32)), "tombstoned {victim} returned");
+        }
+        let base_before = live.base_len();
+        assert!(live.refreeze(), "refreeze should swap");
+        // 700 base - 1 dead + 200 delta - 1 dead.
+        assert_eq!(live.base_len(), base_before - 1 + 199);
+        assert_eq!(live.delta_len(), 0);
+        assert_eq!(live.tombstones_len(), 0);
+        assert_eq!(live.applied_seq(), 202);
+        // Still filtered after the swap; survivors still searchable.
+        for victim in [10usize, 750] {
+            let ids: Vec<u32> =
+                live.search(data.get(victim), 10, 80).iter().map(|n| n.id).collect();
+            assert!(!ids.contains(&(victim as u32)), "{victim} resurrected by re-freeze");
+        }
+        assert_eq!(live.search(data.get(820), 1, 60)[0].id, 820);
+        // Nothing left to compact.
+        assert!(!live.refreeze());
+    }
+
+    #[test]
+    fn replay_is_idempotent() {
+        let data = SyntheticSpec::deep_like(600, 12, 7).generate();
+        let live = split_live(&data, Metric::L2, 500);
+        let applied = live.applied_seq();
+        let len = live.delta_len();
+        // Replaying the full prefix (what a lease-expiry redelivery or a
+        // respawn overlap produces) must change nothing.
+        for i in 500..600 {
+            live.apply((i - 500) as u64, &insert_req(i as u32, data.get(i)));
+        }
+        assert_eq!(live.applied_seq(), applied);
+        assert_eq!(live.delta_len(), len);
+        assert_eq!(live.search(data.get(555), 1, 60)[0].id, 555);
+    }
+
+    #[test]
+    fn updates_during_refreeze_cut_are_preserved() {
+        // Simulate "updates land between snapshot and swap" by applying
+        // with sequences >= the cut after a synchronous refreeze: the
+        // carried-over tail must survive the *next* refreeze too.
+        let data = SyntheticSpec::deep_like(700, 12, 9).generate();
+        let live = split_live(&data, Metric::L2, 600); // seqs 0..100
+        assert!(live.refreeze());
+        assert_eq!(live.base_len(), 700);
+        // Post-cut world: one more insert + one delete of a baked row.
+        let extra: Vec<f32> = data.get(0).iter().map(|v| v + 0.25).collect();
+        live.apply(100, &insert_req(9_000, &extra));
+        live.apply(101, &delete_req(650));
+        assert_eq!(live.search(&extra, 1, 60)[0].id, 9_000);
+        assert!(live.refreeze());
+        assert_eq!(live.base_len(), 700); // +1 insert, -1 delete
+        assert_eq!(live.delta_len(), 0);
+        assert_eq!(live.search(&extra, 1, 60)[0].id, 9_000);
+        let ids: Vec<u32> = live.search(data.get(650), 10, 80).iter().map(|n| n.id).collect();
+        assert!(!ids.contains(&650));
+    }
+
+    #[test]
+    fn all_rows_tombstoned_keeps_serving_via_filter() {
+        let data = SyntheticSpec::deep_like(40, 8, 11).generate();
+        let ids: Vec<u32> = (0..40).collect();
+        let base = Hnsw::build(data.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let live = LiveIndex::new(Arc::new(base), Arc::new(ids), cfg());
+        for i in 0..40u32 {
+            live.apply(i as u64, &delete_req(i));
+        }
+        assert!(live.search(data.get(3), 10, 50).is_empty());
+        // Every row dead: the swap is refused, the filter keeps serving.
+        assert!(!live.refreeze());
+        assert!(live.search(data.get(3), 10, 50).is_empty());
+    }
+
+    #[test]
+    fn copy_vector_resolves_base_and_delta_ids() {
+        let data = SyntheticSpec::deep_like(300, 8, 13).generate();
+        let live = split_live(&data, Metric::L2, 250);
+        let mut out = Vec::new();
+        live.copy_vector(20, &mut out); // base row
+        assert_eq!(&out[..], data.get(20));
+        out.clear();
+        live.copy_vector(270, &mut out); // delta row
+        assert_eq!(&out[..], data.get(270));
+        out.clear();
+        live.copy_vector(99_999, &mut out); // vanished: zero-padded
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,275 @@
+//! Streaming ingestion — the live write path (new-workload extension of
+//! the paper's read-only architecture).
+//!
+//! Pyramid's construct-time pipeline froze the dataset at
+//! `GraphConstructor::construct`; this module adds the other half of a
+//! production serving system: `insert`/`delete` flowing through the same
+//! broker-centric spine as queries.
+//!
+//! ## Data flow
+//!
+//! 1. A coordinator accepts `insert(vec)` / `delete(id)` (single or
+//!    batch, surfaced on [`crate::api::Coordinator`] and
+//!    [`crate::cluster::SimCluster`]). Inserts are routed to one
+//!    partition by the **same meta-HNSW walk** that routes queries
+//!    (branch = 1 — the nearest meta vertex's partition, exactly the
+//!    construct-time assignment rule, Algorithm 3 lines 7-10); deletes
+//!    are broadcast to every partition (a tombstone for an absent id is
+//!    inert and is compacted away).
+//! 2. The update is published through the broker onto the partition's
+//!    **update topic** (`upd-<p>`) as a retained, sequence-numbered log
+//!    entry ([`crate::broker::Broker::publish_log`]).
+//! 3. Every executor replica of the partition tails the log with its own
+//!    cursor ([`UpdateConsumer`], pumped from the executor's poll loop)
+//!    into its own [`LiveIndex`]: a small mutable delta graph over the
+//!    frozen base, plus tombstones. New vectors are searchable within
+//!    one poll cycle — no rebuild, no restart.
+//! 4. When the delta crosses [`IngestConfig::refreeze_threshold`], a
+//!    background **re-freeze** compacts base + delta − tombstones into a
+//!    fresh frozen CSR base and swaps it atomically under queries.
+//!
+//! ## Recovery
+//!
+//! The update log *is* the recovery story (the write-side analogue of
+//! the paper's §IV-B broker replay): a respawned replica starts with an
+//! empty delta over the construct-time base and a cursor at 0, replays
+//! the partition's retained log, and converges to the same state as its
+//! siblings — [`LiveIndex::apply`] is idempotent under replay, and every
+//! level draw in the delta graph is seeded by (seed, id), so replicas
+//! replaying the same log build identical graphs.
+
+mod live;
+
+pub use live::{IngestMetrics, LiveIndex};
+
+use crate::broker::{Broker, LogTailer};
+use crate::error::Result;
+use crate::types::{PartitionId, UpdateOp, UpdateRequest, UpdateSeq, VectorId};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Name of a partition's update topic (retained-log form; the query
+/// topic `sub-<p>` keeps its queue semantics).
+pub fn update_topic_for(p: PartitionId) -> String {
+    format!("upd-{p}")
+}
+
+/// Streaming-ingest tuning knobs (shared by every replica's
+/// [`LiveIndex`] and the executors' update pumps).
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Delta rows + tombstones that trigger a background re-freeze.
+    pub refreeze_threshold: usize,
+    /// Max updates an executor applies per poll-loop iteration, so a
+    /// replay burst cannot starve query serving.
+    pub max_updates_per_poll: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { refreeze_threshold: 512, max_updates_per_poll: 256 }
+    }
+}
+
+/// Coordinator-side write gateway: allocates globally unique vector ids
+/// and publishes updates onto the per-partition update topics. Clones
+/// share the id allocator and the broker handle, so every coordinator of
+/// a cluster can accept writes concurrently without id collisions.
+#[derive(Clone)]
+pub struct IngestGateway {
+    broker: Broker<UpdateRequest>,
+    next_id: Arc<AtomicU32>,
+    /// Index dimensionality, when known: mis-shaped inserts are rejected
+    /// at publish time instead of being silently dropped by every
+    /// replica's shape check after the caller already holds an id.
+    dim: Option<usize>,
+}
+
+impl IngestGateway {
+    /// Create the gateway and its update topics. `first_free_id` must be
+    /// above every id the construct-time index assigned (typically the
+    /// dataset length). Pass the index dimensionality as `dim` whenever
+    /// it is known — `None` defers shape errors to the replicas' apply
+    /// path, which only *counts* rejections (`IngestMetrics::rejected`).
+    pub fn new(
+        broker: Broker<UpdateRequest>,
+        partitions: usize,
+        first_free_id: VectorId,
+        dim: Option<usize>,
+    ) -> IngestGateway {
+        for p in 0..partitions {
+            broker.create_topic(&update_topic_for(p as PartitionId));
+        }
+        IngestGateway { broker, next_id: Arc::new(AtomicU32::new(first_free_id)), dim }
+    }
+
+    /// Allocate a fresh global vector id.
+    pub fn allocate_id(&self) -> VectorId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Index dimensionality, when the gateway knows it.
+    pub fn dim(&self) -> Option<usize> {
+        self.dim
+    }
+
+    /// Append one update to a partition's log; returns its sequence.
+    /// Inserts are shape-checked against the gateway's dim (when known)
+    /// so a mis-sized vector fails here, not silently on every replica.
+    pub fn publish(&self, p: PartitionId, op: UpdateOp, coordinator: u64) -> Result<UpdateSeq> {
+        if let (Some(d), UpdateOp::Insert { vector, .. }) = (self.dim, &op) {
+            if vector.len() != d {
+                return Err(crate::error::PyramidError::Index(format!(
+                    "insert dim {} != index dim {d}",
+                    vector.len()
+                )));
+            }
+        }
+        self.broker.publish_log(&update_topic_for(p), UpdateRequest { op, coordinator })
+    }
+
+    /// One past the last sequence of a partition's update log.
+    pub fn log_end(&self, p: PartitionId) -> UpdateSeq {
+        self.broker.log_end(&update_topic_for(p))
+    }
+
+    /// The underlying update-broker handle (executor wiring).
+    pub fn broker(&self) -> &Broker<UpdateRequest> {
+        &self.broker
+    }
+}
+
+/// Executor-side update pump: tails one partition's update log from the
+/// replica's replay cursor and applies entries into its [`LiveIndex`],
+/// bounded per call so serving latency stays flat under replay bursts.
+pub struct UpdateConsumer {
+    tailer: LogTailer<UpdateRequest>,
+    live: Arc<LiveIndex>,
+    budget: usize,
+}
+
+impl UpdateConsumer {
+    /// Tail `partition`'s update log starting from the live index's
+    /// replay cursor (0 for a fresh replica — full-log replay).
+    pub fn new(
+        broker: &Broker<UpdateRequest>,
+        partition: PartitionId,
+        live: Arc<LiveIndex>,
+    ) -> UpdateConsumer {
+        let tailer = broker.log_tailer(&update_topic_for(partition), live.applied_seq());
+        let budget = live.config().max_updates_per_poll.max(1);
+        UpdateConsumer { tailer, live, budget }
+    }
+
+    /// Apply up to the per-poll budget of pending updates, then kick the
+    /// background re-freeze check. Returns how many were applied.
+    pub fn pump(&mut self) -> usize {
+        let mut applied = 0usize;
+        while applied < self.budget {
+            match self.tailer.try_next() {
+                Some((seq, req)) => {
+                    self.live.apply(seq, &req);
+                    applied += 1;
+                }
+                None => break,
+            }
+        }
+        self.live.maybe_refreeze();
+        applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::dataset::SyntheticSpec;
+    use crate::hnsw::{Hnsw, HnswParams};
+    use crate::metric::Metric;
+
+    #[test]
+    fn gateway_allocates_unique_ids_across_clones() {
+        let broker: Broker<UpdateRequest> = Broker::new(BrokerConfig::default());
+        let gw = IngestGateway::new(broker, 2, 1_000, None);
+        let gw2 = gw.clone();
+        let mut ids: Vec<VectorId> = (0..50).map(|_| gw.allocate_id()).collect();
+        ids.extend((0..50).map(|_| gw2.allocate_id()));
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100, "clones handed out duplicate ids");
+        assert_eq!(*ids.iter().min().unwrap(), 1_000);
+    }
+
+    #[test]
+    fn consumer_replays_log_into_live_index_and_resumes() {
+        let data = SyntheticSpec::deep_like(500, 12, 17).generate();
+        let ids: Vec<u32> = (0..400).collect();
+        let base = Hnsw::build(data.subset(&ids), Metric::L2, HnswParams::default()).unwrap();
+        let base = Arc::new(base);
+        let base_ids = Arc::new(ids);
+
+        let broker: Broker<UpdateRequest> = Broker::new(BrokerConfig::default());
+        let gw = IngestGateway::new(broker.clone(), 1, 500, Some(12));
+        for i in 400..450 {
+            gw.publish(
+                0,
+                UpdateOp::Insert { id: i as u32, vector: Arc::new(data.get(i).to_vec()) },
+                0,
+            )
+            .unwrap();
+        }
+
+        let cfg = IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() };
+        let live = Arc::new(LiveIndex::new(base.clone(), base_ids.clone(), cfg));
+        let mut pump = UpdateConsumer::new(&broker, 0, live.clone());
+        assert_eq!(pump.pump(), 50);
+        assert_eq!(live.applied_seq(), 50);
+        assert_eq!(live.search(data.get(425), 1, 60)[0].id, 425);
+
+        // More updates arrive: the same consumer resumes at its cursor.
+        for i in 450..460 {
+            gw.publish(
+                0,
+                UpdateOp::Insert { id: i as u32, vector: Arc::new(data.get(i).to_vec()) },
+                0,
+            )
+            .unwrap();
+        }
+        assert_eq!(pump.pump(), 10);
+        assert_eq!(live.search(data.get(455), 1, 60)[0].id, 455);
+
+        // A "respawned" replica — fresh LiveIndex, cursor 0 — replays the
+        // whole log and converges to the same state.
+        let live2 = Arc::new(LiveIndex::new(base, base_ids, cfg));
+        let mut pump2 = UpdateConsumer::new(&broker, 0, live2.clone());
+        assert_eq!(pump2.pump(), 60);
+        assert_eq!(live2.applied_seq(), live.applied_seq());
+        assert_eq!(live2.delta_len(), live.delta_len());
+        assert_eq!(live2.search(data.get(455), 1, 60)[0].id, 455);
+    }
+
+    #[test]
+    fn pump_budget_bounds_per_call_work() {
+        let data = SyntheticSpec::deep_like(300, 8, 19).generate();
+        let ids: Vec<u32> = (0..200).collect();
+        let base = Hnsw::build(data.subset(&ids), Metric::L2, HnswParams::default()).unwrap();
+        let broker: Broker<UpdateRequest> = Broker::new(BrokerConfig::default());
+        let gw = IngestGateway::new(broker.clone(), 1, 300, Some(8));
+        for i in 200..280 {
+            gw.publish(
+                0,
+                UpdateOp::Insert { id: i as u32, vector: Arc::new(data.get(i).to_vec()) },
+                0,
+            )
+            .unwrap();
+        }
+        let cfg = IngestConfig { refreeze_threshold: usize::MAX, max_updates_per_poll: 32 };
+        let live = Arc::new(LiveIndex::new(Arc::new(base), Arc::new(ids), cfg));
+        let mut pump = UpdateConsumer::new(&broker, 0, live.clone());
+        assert_eq!(pump.pump(), 32);
+        assert_eq!(pump.pump(), 32);
+        assert_eq!(pump.pump(), 16);
+        assert_eq!(pump.pump(), 0);
+        assert_eq!(live.delta_len(), 80);
+    }
+}

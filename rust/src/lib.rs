@@ -43,6 +43,7 @@ pub mod dataset;
 pub mod error;
 pub mod executor;
 pub mod hnsw;
+pub mod ingest;
 pub mod kmeans;
 pub mod meta;
 pub mod metric;
@@ -64,7 +65,8 @@ pub mod prelude {
     pub use crate::dataset::{Dataset, SyntheticKind, SyntheticSpec};
     pub use crate::error::{PyramidError, Result};
     pub use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
+    pub use crate::ingest::{IngestConfig, IngestGateway, LiveIndex};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
-    pub use crate::types::{Neighbor, QueryResult, VectorId};
+    pub use crate::types::{Neighbor, QueryResult, UpdateOp, VectorId};
 }

@@ -49,6 +49,12 @@ impl Router {
         self.metric
     }
 
+    /// Vector dimensionality of the meta graph (None for broadcast
+    /// routers, which carry no vectors) — the write path's shape check.
+    pub fn dim(&self) -> Option<usize> {
+        self.meta.as_ref().map(|m| m.dim())
+    }
+
     /// Normalize the query if the metric requires it, returning a cow-ish
     /// owned copy only when needed.
     pub fn prepare_query<'a>(&self, query: &'a [f32]) -> std::borrow::Cow<'a, [f32]> {

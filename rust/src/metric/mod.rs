@@ -6,9 +6,10 @@
 //! is raw.
 //!
 //! Two kernel tiers serve the HNSW graph walk (irregular access,
-//! batch-of-1): explicit AVX2/FMA kernels selected at runtime with
-//! `is_x86_feature_detected!` ([`dot`], [`l2_sq`]), falling back to the
-//! portable 16-lane unrolled scalar forms ([`dot_unrolled`],
+//! batch-of-1): explicit SIMD kernels selected at runtime — AVX2/FMA via
+//! `is_x86_feature_detected!` on x86_64, NEON via
+//! `is_aarch64_feature_detected!` on aarch64 ([`dot`], [`l2_sq`]) —
+//! falling back to the portable 16-lane unrolled scalar forms ([`dot_unrolled`],
 //! [`l2_sq_unrolled`]) that LLVM auto-vectorizes under
 //! `target-cpu=native`. Setting `PYRAMID_FORCE_SCALAR=1` pins dispatch to
 //! the portable tier regardless of CPU features (CI's scalar-fallback
@@ -182,9 +183,9 @@ type Kernel = fn(&[f32], &[f32]) -> f32;
 /// set (to anything but `0`), kernel dispatch ignores the CPU feature
 /// probe and selects the portable unrolled forms. CI's `scalar-fallback`
 /// job sets it so the portable tier is compiled *and executed* on every
-/// push instead of only on non-AVX2 hardware. Memoized once per process —
-/// the kernel choice must never flip mid-run.
-#[cfg(target_arch = "x86_64")]
+/// push instead of only on non-AVX2/NEON hardware. Memoized once per
+/// process — the kernel choice must never flip mid-run.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 fn force_scalar() -> bool {
     static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *FORCE
@@ -207,6 +208,13 @@ fn dot_kernel() -> Kernel {
             return |a, b| unsafe { x86::dot_avx2(a, b) };
         }
     }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if !force_scalar() && std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence just verified at runtime.
+            return |a, b| unsafe { neon::dot_neon(a, b) };
+        }
+    }
     dot_unrolled
 }
 
@@ -221,6 +229,13 @@ fn l2_kernel() -> Kernel {
         {
             // SAFETY: AVX2 + FMA presence just verified at runtime.
             return |a, b| unsafe { x86::l2_sq_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if !force_scalar() && std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence just verified at runtime.
+            return |a, b| unsafe { neon::l2_sq_neon(a, b) };
         }
     }
     l2_sq_unrolled
@@ -311,6 +326,77 @@ mod x86 {
         let h = _mm_add_ps(q, _mm_movehl_ps(q, q));
         let s = _mm_add_ss(h, _mm_shuffle_ps::<0x55>(h, h));
         let mut sum = _mm_cvtss_f32(s);
+        while i < n {
+            let d = *pa.add(i) - *pb.add(i);
+            sum += d * d;
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// Explicit NEON kernels for aarch64 — the same two-accumulator FMA-chain
+/// shape as the AVX2 tier, at 4 lanes per vector. NEON is mandatory on
+/// aarch64 but the runtime probe (`is_aarch64_feature_detected!`) is kept
+/// anyway so the dispatch mirrors the x86 tier exactly, including the
+/// `PYRAMID_FORCE_SCALAR` pin. Float addition order differs from the
+/// scalar kernels, so results agree to ~1e-4 relative — the same
+/// quickcheck property (`simd_matches_scalar_property`) that pins the
+/// AVX2 tier pins this one on aarch64 hosts.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            sum += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn l2_sq_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc0 = vfmaq_f32(acc0, d0, d0);
+            let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            acc1 = vfmaq_f32(acc1, d1, d1);
+            i += 8;
+        }
+        if i + 4 <= n {
+            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc0 = vfmaq_f32(acc0, d0, d0);
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
         while i < n {
             let d = *pa.add(i) - *pb.add(i);
             sum += d * d;

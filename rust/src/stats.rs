@@ -94,6 +94,43 @@ impl QuantileWindow {
     }
 }
 
+/// Classic token bucket: `rate` tokens/second refill up to `burst`
+/// capacity; each `try_take` spends one token or fails. The coordinator's
+/// hedge budget (cap on duplicate sub-query publishes per second) runs on
+/// this so a sustained straggler cannot double the cluster's request
+/// volume — hedging degrades to "at most `rate` per second" instead of
+/// "one per slow sub-query". The clock is passed in (`Instant`) so tests
+/// drive it deterministically.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: std::time::Instant,
+}
+
+impl TokenBucket {
+    /// Starts full (a quiet period earns the full burst).
+    pub fn new(rate_per_sec: f64, burst: f64) -> Self {
+        let rate = rate_per_sec.max(0.0);
+        let burst = burst.max(1.0);
+        TokenBucket { rate, burst, tokens: burst, last: std::time::Instant::now() }
+    }
+
+    /// Spend one token at time `now`; false when the bucket is empty.
+    pub fn try_take(&mut self, now: std::time::Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
 /// Completed-ops counter bucketed into fixed windows — produces the
 /// throughput-vs-time series for the failure experiment (Fig 13).
 #[derive(Debug)]
@@ -166,6 +203,36 @@ mod tests {
         assert_eq!(w.len(), 4);
         assert_eq!(w.quantile(1.0), Some(100.0));
         assert_eq!(w.quantile(0.0), Some(2.0));
+    }
+
+    #[test]
+    fn token_bucket_caps_burst_and_refills_at_rate() {
+        let t0 = std::time::Instant::now();
+        let mut b = TokenBucket::new(10.0, 3.0);
+        // Full burst up front, then empty.
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0));
+        // 10/s: after 100ms exactly one token has refilled.
+        let t1 = t0 + std::time::Duration::from_millis(100);
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1));
+        // A long quiet period refills to burst, never beyond.
+        let t2 = t1 + std::time::Duration::from_secs(60);
+        assert!(b.try_take(t2));
+        assert!(b.try_take(t2));
+        assert!(b.try_take(t2));
+        assert!(!b.try_take(t2));
+    }
+
+    #[test]
+    fn token_bucket_zero_rate_never_refills() {
+        let t0 = std::time::Instant::now();
+        let mut b = TokenBucket::new(0.0, 2.0);
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0 + std::time::Duration::from_secs(3600)));
     }
 
     #[test]

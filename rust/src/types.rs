@@ -6,6 +6,35 @@ pub type VectorId = u32;
 /// Partition / sub-dataset index (`i` in the paper's `X^i`).
 pub type PartitionId = u16;
 
+/// Position of an update in a partition's sequence-numbered update log
+/// (the broker's retained-log message id; see
+/// [`crate::broker::Broker::publish_log`]). Replicas track the next
+/// expected sequence so a respawned instance can replay exactly the
+/// updates it missed.
+pub type UpdateSeq = u64;
+
+/// One write operation on the live index (the streaming-ingest analogue
+/// of a query request). Inserts carry the coordinator-assigned global id
+/// and the prepared (normalized, for angular metrics) vector; deletes
+/// carry only the id and are broadcast to every partition — a tombstone
+/// for an id a partition never stored is inert and is compacted away at
+/// the next re-freeze.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UpdateOp {
+    Insert { id: VectorId, vector: std::sync::Arc<Vec<f32>> },
+    Delete { id: VectorId },
+}
+
+/// An update published to a partition's update topic. The sequence number
+/// is not part of the message: it is the message's position in the
+/// retained log, assigned by the broker at publish time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateRequest {
+    pub op: UpdateOp,
+    /// Issuing coordinator (debugging / metrics attribution).
+    pub coordinator: u64,
+}
+
 /// A scored search hit. Scores follow the paper's convention: **larger is
 /// more similar** (Euclidean uses negative squared distance).
 #[derive(Debug, Clone, Copy, PartialEq)]

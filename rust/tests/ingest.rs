@@ -1,0 +1,316 @@
+//! Streaming-ingest end-to-end tests: the PR 4 acceptance criteria.
+//!
+//! A vector inserted through `api::Coordinator::insert` (and through
+//! `SimCluster::insert`) must be returned by `execute` without any
+//! rebuild call, stay searchable across a forced re-freeze swap, and
+//! stay searchable after a `kill_executor` + Master respawn — where the
+//! replacement replica starts from the construct-time frozen base and
+//! converges purely by replaying the partition's sequence-numbered
+//! update log (the paper's broker-replay recovery story, for writes).
+//! Tombstoned ids must never surface, across the same two transitions.
+
+use pyramid::broker::{Broker, BrokerConfig};
+use pyramid::config::DatasetConfig;
+use pyramid::coordinator::{CoordinatorConfig, QueryRequest};
+use pyramid::prelude::*;
+use pyramid::registry::{Registry, RegistryConfig};
+use pyramid::types::UpdateRequest;
+use pyramid::util::tempdir::TempDir;
+use std::time::{Duration, Instant};
+
+/// Poll `execute` until `want` is the top-1 hit for `q` (freshness is
+/// bounded by one executor poll cycle, not synchronous with `insert`).
+fn wait_top1<F>(mut execute: F, want: u32, timeout: Duration) -> bool
+where
+    F: FnMut() -> Option<Vec<Neighbor>>,
+{
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(res) = execute() {
+            if res.first().map(|n| n.id) == Some(want) {
+                return true;
+            }
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+}
+
+/// Poll `execute` until `victim` is absent from the result ids (tombstone
+/// application is asynchronous like any other update).
+fn wait_absent<F>(mut execute: F, victim: u32, timeout: Duration) -> bool
+where
+    F: FnMut() -> Option<Vec<Neighbor>>,
+{
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(res) = execute() {
+            if !res.iter().any(|n| n.id == victim) {
+                return true;
+            }
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+}
+
+/// Acceptance: the paper-Listings deployment (GraphConstructor +
+/// api::Executor + api::Coordinator), writable. An inserted vector is
+/// returned by `execute` with no rebuild involved, survives a forced
+/// re-freeze swap, and a deleted id disappears and stays gone after the
+/// swap.
+#[test]
+fn api_insert_searchable_without_rebuild_and_across_refreeze() {
+    let n = 2_000usize;
+    let gc = GraphConstructor::new(
+        DatasetConfig::synthetic(SyntheticKind::DeepLike, n, 16, 5),
+        Metric::L2,
+        IndexConfig { sample: 600, meta_size: 16, partitions: 2, ..Default::default() },
+    );
+    let dir = TempDir::new("ingest-api").unwrap();
+    gc.construct(dir.path()).unwrap();
+
+    let brokers: Broker<QueryRequest> = Broker::new(BrokerConfig {
+        rebalance_pause: Duration::from_millis(1),
+        ..BrokerConfig::default()
+    });
+    let update_broker: Broker<UpdateRequest> = Broker::new(BrokerConfig::default());
+    let registry = Registry::new(RegistryConfig::default());
+    // Threshold at MAX so the only re-freeze in this test is the forced
+    // one — pinning that "searchable" never required a rebuild.
+    let icfg = IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() };
+    let (e0, live0) = Executor::new(brokers.clone(), registry.clone(), dir.path(), 0, 100)
+        .start_ingesting(&update_broker, icfg)
+        .unwrap();
+    let (e1, live1) = Executor::new(brokers.clone(), registry.clone(), dir.path(), 1, 101)
+        .start_ingesting(&update_broker, icfg)
+        .unwrap();
+
+    let coord = Coordinator::new(brokers, dir.path(), 0).unwrap();
+    coord.enable_ingest(IngestGateway::new(update_broker, 2, n as u32, Some(16)));
+
+    let data = DatasetConfig::synthetic(SyntheticKind::DeepLike, n, 16, 5).load().unwrap();
+    let params = QueryParams { k: 10, branch: 2, ef: 80, meta_ef: 80 };
+
+    // Read path sanity before any write.
+    let res = coord.execute(data.get(17), &params).unwrap();
+    assert_eq!(res[0].id, 17);
+
+    // Insert: searchable by execute() within one poll cycle, id above
+    // everything construction assigned, zero re-freezes involved.
+    let novel: Vec<f32> = data.get(7).iter().map(|v| v + 0.4).collect();
+    let id = coord.insert(&novel).unwrap();
+    assert!(id >= n as u32, "assigned id {id} collides with construct-time ids");
+    assert!(
+        wait_top1(|| coord.execute(&novel, &params).ok(), id, Duration::from_secs(5)),
+        "inserted vector never became searchable through execute"
+    );
+    assert_eq!(live0.refreezes() + live1.refreezes(), 0, "no rebuild may be involved");
+
+    // Delete a construct-time row: it must drop out of results.
+    coord.delete(17).unwrap();
+    assert!(
+        wait_absent(|| coord.execute(data.get(17), &params).ok(), 17, Duration::from_secs(5)),
+        "tombstoned id 17 still returned"
+    );
+
+    // Forced re-freeze swap on both replicas, under the running cluster:
+    // the insert stays searchable, the tombstone stays filtered.
+    let swapped = [live0.refreeze(), live1.refreeze()];
+    assert!(swapped.iter().any(|&s| s), "no replica had anything to compact");
+    assert!(
+        wait_top1(|| coord.execute(&novel, &params).ok(), id, Duration::from_secs(5)),
+        "inserted vector lost by the re-freeze swap"
+    );
+    let res = coord.execute(data.get(17), &params).unwrap();
+    assert!(!res.iter().any(|n| n.id == 17), "re-freeze resurrected tombstoned id 17");
+
+    // Batch forms round-trip too.
+    let more: Vec<Vec<f32>> =
+        (0..4).map(|j| data.get(j).iter().map(|v| v + 0.6 + j as f32 * 0.01).collect()).collect();
+    let views: Vec<&[f32]> = more.iter().map(|v| v.as_slice()).collect();
+    let ids = coord.insert_batch(&views).unwrap();
+    assert_eq!(ids.len(), 4);
+    for (v, &vid) in more.iter().zip(&ids) {
+        assert!(
+            wait_top1(|| coord.execute(v, &params).ok(), vid, Duration::from_secs(5)),
+            "batch-inserted vector {vid} never became searchable"
+        );
+    }
+    coord.delete_batch(&ids[..2]).unwrap();
+    for &vid in &ids[..2] {
+        assert!(
+            wait_absent(|| coord.execute(&more[0], &params).ok(), vid, Duration::from_secs(5)),
+            "batch-deleted id {vid} still returned"
+        );
+    }
+
+    e0.stop();
+    e1.stop();
+    coord.node().shutdown();
+}
+
+fn ingesting_cluster(
+    n: usize,
+    partitions: usize,
+    seed: u64,
+) -> (Dataset, SimCluster, QueryParams) {
+    let spec = SyntheticSpec::deep_like(n, 16, seed);
+    let data = spec.generate();
+    let cfg = IndexConfig {
+        sample: (n / 4).max(600),
+        meta_size: 32,
+        partitions,
+        ..IndexConfig::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    // replicas = 1: after a kill there is no surviving sibling, so a
+    // vector being searchable again can ONLY come from the respawned
+    // replica replaying the update log — the recovery under test.
+    let topo = ClusterTopology {
+        workers: partitions,
+        replicas: 1,
+        coordinators: 2,
+        net_latency_us: 0,
+        rebalance_ms: 100,
+        executor_batch: 8,
+    };
+    let cluster = SimCluster::start_ingesting(
+        &idx,
+        topo,
+        IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let params = QueryParams { k: 10, branch: 3, ef: 100, meta_ef: 100 };
+    (data, cluster, params)
+}
+
+/// Kill every live executor, then block until the Master has respawned a
+/// replica for every partition AND every replica has replayed its
+/// partition's full update log.
+fn kill_all_and_wait_replay(cluster: &SimCluster, partitions: usize) {
+    for p in 0..partitions as u16 {
+        for e in cluster.executors_for_partition(p) {
+            assert!(cluster.kill_executor(e), "executor {e} was not live");
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let all_back =
+            (0..partitions as u16).all(|p| !cluster.executors_for_partition(p).is_empty());
+        if all_back && cluster.wait_ingest_idle(Duration::from_millis(200)) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "respawn + replay never converged");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Acceptance: inserts survive a forced re-freeze swap and a full
+/// kill + respawn, where the replacement replicas converge by replay.
+#[test]
+fn cluster_insert_survives_refreeze_swap_and_respawn_replay() {
+    let partitions = 3usize;
+    let (data, cluster, params) = ingesting_cluster(3_000, partitions, 9);
+
+    // Warm the read path.
+    for qi in 0..10 {
+        cluster.execute(data.get(qi * 31), &params).unwrap();
+    }
+
+    // Insert a block of novel vectors through the write path.
+    let novel: Vec<Vec<f32>> = (0..24)
+        .map(|j| data.get(j * 7).iter().map(|v| v + 0.3 + j as f32 * 0.01).collect())
+        .collect();
+    let views: Vec<&[f32]> = novel.iter().map(|v| v.as_slice()).collect();
+    let ids = cluster.insert_batch(&views).unwrap();
+    assert!(cluster.wait_ingest_idle(Duration::from_secs(10)), "replicas never caught up");
+    assert_eq!(cluster.total_refreezes(), 0, "no rebuild may be involved");
+    for (v, &id) in novel.iter().zip(&ids) {
+        assert!(
+            wait_top1(|| cluster.execute(v, &params).ok(), id, Duration::from_secs(5)),
+            "inserted {id} never became searchable"
+        );
+    }
+
+    // Forced re-freeze: delta compacts into a fresh frozen base, swapped
+    // under the running cluster; everything stays searchable.
+    assert!(cluster.refreeze_all() >= 1, "no replica swapped");
+    assert!(cluster.total_refreezes() >= 1);
+    for (v, &id) in novel.iter().zip(&ids) {
+        assert!(
+            wait_top1(|| cluster.execute(v, &params).ok(), id, Duration::from_secs(5)),
+            "inserted {id} lost by the re-freeze swap"
+        );
+    }
+
+    // Kill every replica. The respawned instances wrap the CONSTRUCT-TIME
+    // base (they never saw the compacted one) with a cursor at 0 — the
+    // inserts coming back is pure update-log replay.
+    kill_all_and_wait_replay(&cluster, partitions);
+    for (v, &id) in novel.iter().zip(&ids) {
+        assert!(
+            wait_top1(|| cluster.execute(v, &params).ok(), id, Duration::from_secs(8)),
+            "inserted {id} not searchable after respawn replay"
+        );
+    }
+    cluster.shutdown();
+}
+
+/// Satellite acceptance: tombstoned ids never appear in results —
+/// neither a deleted construct-time row nor a deleted streamed row —
+/// including across a re-freeze swap and a replica respawn replay.
+#[test]
+fn tombstones_hold_across_swap_and_respawn_replay() {
+    let partitions = 2usize;
+    let (data, cluster, params) = ingesting_cluster(2_000, partitions, 13);
+
+    // Stream two rows in; keep one, delete the other plus a base row.
+    let keep: Vec<f32> = data.get(40).iter().map(|v| v + 0.5).collect();
+    let kill: Vec<f32> = data.get(41).iter().map(|v| v + 0.5).collect();
+    let keep_id = cluster.insert(&keep).unwrap();
+    let kill_id = cluster.insert(&kill).unwrap();
+    assert!(cluster.wait_ingest_idle(Duration::from_secs(10)));
+    assert!(wait_top1(|| cluster.execute(&kill, &params).ok(), kill_id, Duration::from_secs(5)));
+
+    cluster.delete(kill_id).unwrap(); // delta row
+    cluster.delete(55).unwrap(); // construct-time row
+    assert!(
+        wait_absent(|| cluster.execute(&kill, &params).ok(), kill_id, Duration::from_secs(5)),
+        "deleted delta row {kill_id} still returned"
+    );
+    assert!(
+        wait_absent(|| cluster.execute(data.get(55), &params).ok(), 55, Duration::from_secs(5)),
+        "deleted base row 55 still returned"
+    );
+
+    let check_gone = |label: &str| {
+        let res = cluster.execute(&kill, &params).unwrap();
+        assert!(!res.iter().any(|n| n.id == kill_id), "{label}: {kill_id} resurrected");
+        let res = cluster.execute(data.get(55), &params).unwrap();
+        assert!(!res.iter().any(|n| n.id == 55), "{label}: 55 resurrected");
+    };
+
+    // Across the swap (tombstones compacted away, rows physically gone).
+    assert!(cluster.refreeze_all() >= 1);
+    check_gone("after re-freeze");
+    assert!(
+        wait_top1(|| cluster.execute(&keep, &params).ok(), keep_id, Duration::from_secs(5)),
+        "surviving insert {keep_id} lost by re-freeze"
+    );
+
+    // Across a full respawn: replay re-applies inserts AND deletes in
+    // log order, so the dead ids must stay dead.
+    kill_all_and_wait_replay(&cluster, partitions);
+    check_gone("after respawn replay");
+    assert!(
+        wait_top1(|| cluster.execute(&keep, &params).ok(), keep_id, Duration::from_secs(8)),
+        "surviving insert {keep_id} not searchable after respawn replay"
+    );
+    cluster.shutdown();
+}
