@@ -5,16 +5,24 @@ Usage: bench_trend.py <fresh.json> <baseline.json>
 
 Both files are the flat {"bench name": number} objects BenchRecorder
 writes. For ns/op entries a higher fresh value is a regression; entries
-whose name contains "speedup" are ratios where *lower* is the regression
-direction. Anything more than THRESHOLD worse than baseline emits a
-GitHub ::warning:: annotation. This script never fails the job — shared
-runners are too noisy to gate on; the annotations are the trend signal.
+whose name contains "speedup" or "-ratio" are ratios where *lower* is
+the regression direction (this covers the sq8 tier's
+"metric/sq8-speedup", "hnsw/sq8-walk-speedup ef=*" and
+"e2e/sq8-memory-ratio" keys). Entries whose name contains
+"recall-delta" are absolute recall gaps (f32 minus quantized recall@10,
+already in [0, 1]-ish units): relative thresholds are meaningless near
+zero, so they regress when the gap *widens* by more than
+RECALL_DELTA_THRESHOLD — the same 2% bound the sq8 acceptance tests
+pin. Anything worse than its threshold emits a GitHub ::warning::
+annotation. This script never fails the job — shared runners are too
+noisy to gate on; the annotations are the trend signal.
 """
 
 import json
 import sys
 
 THRESHOLD = 0.25
+RECALL_DELTA_THRESHOLD = 0.02
 
 
 def main(fresh_path, baseline_path):
@@ -41,12 +49,27 @@ def main(fresh_path, baseline_path):
     for name in sorted(fresh):
         ref = base.get(name)
         val = fresh[name]
-        if not isinstance(ref, (int, float)) or isinstance(ref, bool) or ref <= 0:
+        is_recall_delta = "recall-delta" in name
+        if not isinstance(ref, (int, float)) or isinstance(ref, bool):
+            continue
+        if ref <= 0 and not is_recall_delta:
             continue
         if not isinstance(val, (int, float)) or isinstance(val, bool):
             continue
         compared += 1
-        if "speedup" in name:
+        if is_recall_delta:
+            # Absolute gap in recall units; regression = the gap widening
+            # past the acceptance bound, regardless of the tiny baseline.
+            widened = val - ref
+            if widened > RECALL_DELTA_THRESHOLD:
+                regressions += 1
+                print(
+                    f"::warning file={baseline_path}::bench regression: {name} "
+                    f"{ref:+.3f} -> {val:+.3f} recall gap "
+                    f"(widened by {widened:+.3f} absolute)"
+                )
+            continue
+        if "speedup" in name or "-ratio" in name:
             delta = (ref - val) / ref  # ratio metric: lower = regression
             arrow = f"{ref:.2f}x -> {val:.2f}x"
         else:

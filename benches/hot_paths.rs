@@ -25,6 +25,11 @@
 //! * `ingest/*` — the streaming write path, PR 4: insert throughput,
 //!   search latency under sustained ingest vs idle, and the freshness
 //!   lag (insert -> searchable round trip).
+//! * `metric/sq8-speedup`, `hnsw/sq8-walk-speedup ef=*`,
+//!   `e2e/sq8-recall-delta`, `e2e/sq8-memory-ratio` — the SQ8 quantized
+//!   scoring tier, PR 5: integer-kernel block scoring vs f32, the
+//!   quantized walk + exact refine vs the f32 walk on the same frozen
+//!   graph, and the end-to-end recall cost / memory win.
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -36,6 +41,7 @@ use pyramid::hnsw::{Hnsw, HnswParams, NestedHnsw};
 use pyramid::ingest::IngestConfig;
 use pyramid::meta::{PyramidIndex, Router};
 use pyramid::metric::{dot, dot_unrolled, l2_sq, l2_sq_unrolled, Metric};
+use pyramid::quant::QuantPlane;
 use pyramid::runtime::{default_artifacts_dir, BatchScorer, NativeScorer, PjrtScorer};
 use pyramid::stats::percentile;
 use pyramid::types::{merge_topk, BatchQuery, Neighbor};
@@ -188,6 +194,113 @@ fn main() {
                 8
             });
         }
+    }
+
+    // --- SQ8 quantized scoring tier (PR 5) ----------------------------------
+    // Three facets. (1) Raw block scoring: one query against a dense row
+    // block through the f32 kernels vs the integer kernels over codes —
+    // the bandwidth story isolated from the graph. (2) The walk: f32 vs
+    // quantized+refined search on the SAME frozen graph. (3) End-to-end
+    // recall delta + memory ratio on a quantized PyramidIndex (recorded
+    // as numbers, not timings — the trend step watches the delta).
+    if run("sq8") || run("metric/sq8") {
+        let d = 96usize;
+        let n = if smoke { 16_384 } else { 65_536 };
+        let data = SyntheticSpec::deep_like(n, d, 41).generate();
+        let q = SyntheticSpec::deep_like(n, d, 41).queries(1);
+        let plane = QuantPlane::encode_dataset(&data, 0);
+        let view = plane.view();
+        let pq = plane.codec().prepare_query(q.get(0));
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut out: Vec<f32> = Vec::with_capacity(n);
+        let f32_ns = bench(&mut rec, &format!("metric/score-block f32 n={n} d={d}"), &mut || {
+            Metric::L2.score_many(q.get(0), data.raw(), d, &mut out);
+            std::hint::black_box(out.last().copied());
+            n as u64
+        });
+        let sq8_ns = bench(&mut rec, &format!("metric/score-block sq8 n={n} d={d}"), &mut || {
+            view.score_ids(Metric::L2, &pq, &ids, &mut out);
+            std::hint::black_box(out.last().copied());
+            n as u64
+        });
+        let speedup = f32_ns / sq8_ns;
+        rec.record("metric/sq8-speedup", speedup);
+        println!("  -> sq8 block-scoring speedup vs f32 @ d={d}: {speedup:.2}x");
+    }
+
+    if run("sq8") || run("hnsw/sq8") {
+        let n = if smoke { 10_000 } else { 50_000 };
+        let data = SyntheticSpec::deep_like(n, 96, 3).generate();
+        let queries = SyntheticSpec::deep_like(n, 96, 3).queries(256);
+        // One graph, both tiers: search_f32 ignores the plane, search
+        // runs the quantized walk + exact top-refine_k re-rank.
+        let h = Hnsw::build_sq8(data, Metric::L2, HnswParams::default(), 0).unwrap();
+        for ef in [50usize, 100, 200] {
+            let mut qi = 0usize;
+            let f32_ns = bench(&mut rec, &format!("hnsw/search-f32 n={n} ef={ef}"), &mut || {
+                let q = queries.get(qi % queries.len());
+                std::hint::black_box(h.search_f32(q, 10, ef));
+                qi += 1;
+                1
+            });
+            let mut qj = 0usize;
+            let sq8_ns = bench(&mut rec, &format!("hnsw/search-sq8 n={n} ef={ef}"), &mut || {
+                let q = queries.get(qj % queries.len());
+                std::hint::black_box(h.search(q, 10, ef));
+                qj += 1;
+                1
+            });
+            let speedup = f32_ns / sq8_ns;
+            rec.record(&format!("hnsw/sq8-walk-speedup ef={ef}"), speedup);
+            println!("  -> sq8 walk speedup vs f32 @ ef={ef}: {speedup:.2}x");
+        }
+        println!(
+            "  (plane: {} KiB vs {} KiB f32 rows)",
+            h.sq8_bytes().unwrap() / 1024,
+            h.len() * 96 * 4 / 1024
+        );
+    }
+
+    if run("sq8") || run("e2e/sq8") {
+        let n = if smoke { 4_000 } else { 8_000 };
+        let mut spec = SyntheticSpec::deep_like(n, 24, 55);
+        spec.clusters = 48;
+        let data = spec.generate();
+        let queries = spec.queries(if smoke { 24 } else { 48 });
+        let base_cfg = IndexConfig {
+            sample: n / 4,
+            meta_size: 48,
+            partitions: 6,
+            ..IndexConfig::default()
+        };
+        let qcfg = IndexConfig { quantize: true, refine_k: 40, ..base_cfg };
+        let f32_idx = PyramidIndex::build(&data, Metric::L2, &base_cfg).expect("f32 e2e index");
+        let sq8_idx = PyramidIndex::build(&data, Metric::L2, &qcfg).expect("sq8 e2e index");
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        let recall = |idx: &PyramidIndex| -> f64 {
+            let mut hits = 0usize;
+            for qi in 0..queries.len() {
+                let q = queries.get(qi);
+                let gt: std::collections::HashSet<u32> =
+                    pyramid::bruteforce::search(&data, q, Metric::L2, 10)
+                        .iter()
+                        .map(|nb| nb.id)
+                        .collect();
+                hits += idx.search(q, &params).iter().filter(|nb| gt.contains(&nb.id)).count();
+            }
+            hits as f64 / (queries.len() * 10) as f64
+        };
+        let (r_f32, r_sq8) = (recall(&f32_idx), recall(&sq8_idx));
+        let rows: usize = sq8_idx.subs.iter().map(|s| s.len() * s.dim() * 4).sum();
+        let planes: usize = sq8_idx.subs.iter().map(|s| s.sq8_bytes().unwrap_or(0)).sum();
+        rec.record("e2e/sq8-recall-delta", r_f32 - r_sq8);
+        rec.record("e2e/sq8-memory-ratio", rows as f64 / planes.max(1) as f64);
+        println!(
+            "sq8 e2e: recall@10 f32 {r_f32:.3} vs sq8 {r_sq8:.3} (delta {:+.3}); \
+             vector plane {rows} B -> code plane {planes} B ({:.2}x)",
+            r_f32 - r_sq8,
+            rows as f64 / planes.max(1) as f64
+        );
     }
 
     // --- meta-HNSW routing: batched vs sequential ---------------------------

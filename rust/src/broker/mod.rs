@@ -380,6 +380,14 @@ impl<M: Send + Clone + 'static> Broker<M> {
         g.topics.get(topic).map(|t| t.next_msg).unwrap_or(0)
     }
 
+    /// First retained sequence of a topic's log (0 until a
+    /// [`Self::truncate_log`] raises it) — the observable effect of the
+    /// cluster's low-water-mark compaction.
+    pub fn log_start(&self, topic: &str) -> u64 {
+        let g = self.inner.0.lock().unwrap();
+        g.topics.get(topic).map(|t| t.log_start).unwrap_or(0)
+    }
+
     /// A cursor-based reader over a topic's retained log, starting at
     /// sequence `from`. Tailers are independent (each owns its cursor)
     /// and never delete messages.

@@ -36,9 +36,9 @@ use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::{PyramidIndex, Router};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
 use crate::runtime::BatchScorer;
-use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, VectorId};
+use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, UpdateSeq, VectorId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::time::Duration;
 
 pub use crate::config::ClusterTopology as ClusterConfig;
@@ -54,14 +54,19 @@ struct LiveEntry {
 }
 
 /// Cluster-wide streaming-ingest state: the update broker + per-partition
-/// frozen bases live replicas wrap, the coordinators' shared write
+/// checkpoint bases live replicas wrap, the coordinators' shared write
 /// gateway, and the registry of currently-live writable replicas.
 struct IngestRuntime {
     gateway: IngestGateway,
     cfg: IngestConfig,
-    /// Construct-time frozen base per partition — what a (re)spawned
-    /// replica layers its fresh delta over before replaying the log.
-    bases: Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>)>,
+    /// Respawn **checkpoint** per partition: the most-compacted frozen
+    /// base any replica has re-frozen (the construct-time base at
+    /// covered sequence 0 initially). A (re)spawned replica layers its
+    /// fresh delta over this and replays the log from the checkpoint's
+    /// covered sequence — which is what makes truncating the log below
+    /// the cross-replica low-water-mark safe: no future replay ever
+    /// needs a truncated entry.
+    bases: Mutex<Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>, UpdateSeq)>>,
     lives: Mutex<Vec<LiveEntry>>,
     /// Re-freezes completed by replaced (killed + respawned) replica
     /// incarnations, so [`SimCluster::total_refreezes`] stays monotonic
@@ -70,22 +75,86 @@ struct IngestRuntime {
 }
 
 impl IngestRuntime {
-    /// Build a fresh live replica for `role`'s partition, register it
-    /// (replacing any previous incarnation of the same executor id) and
-    /// return the executor wiring for it.
-    fn wire_role(&self, exec_id: u64, partition: PartitionId) -> (Arc<dyn SubIndex>, IngestWiring) {
-        let (base, ids) = &self.bases[partition as usize];
-        let live = Arc::new(LiveIndex::new(base.clone(), ids.clone(), self.cfg));
+    /// Build a fresh live replica for `role`'s partition over the
+    /// partition's checkpoint base, register it (replacing any previous
+    /// incarnation of the same executor id) and return the executor
+    /// wiring for it. The replica's re-freeze hook feeds
+    /// [`Self::note_refreeze`].
+    fn wire_role(
+        self: &Arc<Self>,
+        exec_id: u64,
+        partition: PartitionId,
+    ) -> (Arc<dyn SubIndex>, IngestWiring) {
+        // Checkpoint read and registration happen under ONE lives
+        // critical section: a concurrent note_refreeze (which takes the
+        // lives lock first) cannot advance the truncation low-water-mark
+        // between us reading the checkpoint and this replica's covered
+        // sequence joining the mark — otherwise a brand-new replica
+        // (elastic add, no old entry holding the mark down) could find
+        // its replay cursor below a freshly-truncated log_start and
+        // silently skip updates. Lock order is lives -> bases, matching
+        // note_refreeze (which never holds both at once).
         let mut lv = self.lives.lock().unwrap();
+        let (base, ids, covered) = self.bases.lock().unwrap()[partition as usize].clone();
+        let live = Arc::new(LiveIndex::with_checkpoint(base, ids, covered, self.cfg));
+        let rt: Weak<IngestRuntime> = Arc::downgrade(self);
+        live.set_on_refreeze(move || {
+            if let Some(rt) = rt.upgrade() {
+                rt.note_refreeze(partition);
+            }
+        });
         for old in lv.iter().filter(|e| e.exec_id == exec_id) {
             self.retired_refreezes.fetch_add(old.live.refreezes(), Ordering::Relaxed);
         }
         lv.retain(|e| e.exec_id != exec_id);
         lv.push(LiveEntry { exec_id, partition, live: live.clone() });
+        drop(lv);
         (
             live.clone() as Arc<dyn SubIndex>,
             IngestWiring { broker: self.gateway.broker().clone(), live },
         )
+    }
+
+    /// A replica of `partition` completed a re-freeze: advance the
+    /// partition's respawn checkpoint to the most-compacted base, then
+    /// truncate the update log below the **low-water-mark** — the
+    /// minimum covered sequence across every registered replica of the
+    /// partition. A lagging replica (smaller covered sequence — not yet
+    /// re-frozen, or a respawn mid-replay) holds the mark down, so
+    /// nothing it still needs is ever dropped; once the last replica
+    /// compacts past a sequence, [`Broker::truncate_log`] reclaims it
+    /// (closing the "logs grow unbounded" item — ROADMAP ingestion).
+    fn note_refreeze(&self, partition: PartitionId) {
+        // The whole advance — mark computation, checkpoint update AND
+        // truncation — runs under the `lives` lock. Releasing it between
+        // any two of those steps would let a concurrent `wire_role` read
+        // the stale checkpoint, register a replica whose replay cursor
+        // is below a truncation this thread is about to issue, and lose
+        // updates (the tailer silently skips to `log_start`). Holding
+        // `lives` throughout means a replica is either registered before
+        // the mark is computed (and holds it down) or wired after the
+        // checkpoint advanced (and starts at/above any truncation
+        // point). Lock order everywhere: lives -> bases -> broker.
+        let lv = self.lives.lock().unwrap();
+        let mut low = u64::MAX;
+        let mut best: Option<(Arc<Hnsw>, Arc<Vec<VectorId>>, UpdateSeq)> = None;
+        for e in lv.iter().filter(|e| e.partition == partition) {
+            let snap = e.live.base_snapshot();
+            low = low.min(snap.2);
+            if best.as_ref().map(|b| b.2 < snap.2).unwrap_or(true) {
+                best = Some(snap);
+            }
+        }
+        if let Some(snap) = best {
+            let mut bases = self.bases.lock().unwrap();
+            if snap.2 > bases[partition as usize].2 {
+                bases[partition as usize] = snap;
+            }
+        }
+        if low != u64::MAX && low > 0 {
+            self.gateway.broker().truncate_log(&update_topic_for(partition), low);
+        }
+        drop(lv);
     }
 }
 
@@ -236,8 +305,13 @@ impl SimCluster {
             .map(|s| s.clone() as Arc<dyn SubIndex>)
             .zip(index.sub_ids.iter().cloned())
             .collect();
-        let bases: Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>)> =
-            index.subs.iter().cloned().zip(index.sub_ids.iter().cloned()).collect();
+        let bases: Vec<(Arc<Hnsw>, Arc<Vec<VectorId>>, UpdateSeq)> = index
+            .subs
+            .iter()
+            .cloned()
+            .zip(index.sub_ids.iter().cloned())
+            .map(|(h, ids)| (h, ids, 0))
+            .collect();
         let router = Router::from_index(index);
         // Fresh ids start above everything construction assigned.
         let first_free = index
@@ -254,7 +328,7 @@ impl SimCluster {
         let runtime = Arc::new(IngestRuntime {
             gateway,
             cfg: ingest_cfg,
-            bases,
+            bases: Mutex::new(bases),
             lives: Mutex::new(Vec::new()),
             retired_refreezes: AtomicU64::new(0),
         });
@@ -629,6 +703,17 @@ impl SimCluster {
             .unwrap_or(0)
     }
 
+    /// First retained sequence of a partition's update log — rises above
+    /// 0 once every replica of the partition has re-frozen past a prefix
+    /// and the low-water-mark truncation reclaimed it (0 on read-only
+    /// clusters and while any replica still lags).
+    pub fn update_log_start(&self, p: PartitionId) -> u64 {
+        self.ingest
+            .as_ref()
+            .map(|rt| rt.gateway.broker().log_start(&update_topic_for(p)))
+            .unwrap_or(0)
+    }
+
     /// Kill a machine: all executors on it crash (no cleanup).
     pub fn kill_host(&self, host: usize) {
         self.hosts[host].alive.store(false, Ordering::Relaxed);
@@ -996,6 +1081,109 @@ mod tests {
             std::thread::sleep(Duration::from_millis(100));
         }
         assert!(healed, "restore() did not revive partition 0");
+        cluster.shutdown();
+    }
+
+    /// Satellite acceptance (SQ8 PR): update-log truncation follows the
+    /// cross-replica low-water-mark — a lagging replica blocks it, and
+    /// once every replica has re-frozen past a prefix the broker
+    /// reclaims it.
+    #[test]
+    fn log_truncation_blocked_by_laggard_until_all_refreeze() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 2),
+            IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let extra = SyntheticSpec::deep_like(200, 16, 99).generate();
+        for i in 0..extra.len() {
+            cluster.insert(extra.get(i)).unwrap();
+        }
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)), "replicas never caught up");
+        let p = (0..4u16)
+            .find(|&p| cluster.update_log_end(p) > 0)
+            .expect("no partition received updates");
+        let end = cluster.update_log_end(p);
+        let rt = cluster.ingest.as_ref().unwrap();
+        let lives: Vec<Arc<LiveIndex>> = {
+            let lv = rt.lives.lock().unwrap();
+            lv.iter().filter(|e| e.partition == p).map(|e| e.live.clone()).collect()
+        };
+        assert_eq!(lives.len(), 2, "two replicas expected for partition {p}");
+        // First replica compacts: the laggard's covered sequence (0)
+        // holds the low-water-mark down, so nothing may be truncated.
+        assert!(lives[0].refreeze());
+        assert_eq!(lives[0].covered_seq(), end);
+        assert_eq!(cluster.update_log_start(p), 0, "laggard must block truncation");
+        // Laggard catches up: the mark advances and the prefix is gone.
+        assert!(lives[1].refreeze());
+        assert_eq!(
+            cluster.update_log_start(p),
+            end,
+            "fully re-frozen partition must truncate to the low-water-mark"
+        );
+        cluster.shutdown();
+    }
+
+    /// After truncation, a killed replica respawns over the partition's
+    /// re-frozen checkpoint base and replays only the log tail — the
+    /// truncated prefix is never needed, and every insert stays
+    /// searchable.
+    #[test]
+    fn respawn_after_truncation_serves_from_checkpoint() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 2),
+            IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let extra = SyntheticSpec::deep_like(120, 16, 101).generate();
+        let inserted: Vec<(u32, usize)> =
+            (0..extra.len()).map(|i| (cluster.insert(extra.get(i)).unwrap(), i)).collect();
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+        assert!(cluster.refreeze_all() > 0);
+        let p = (0..4u16).find(|&p| cluster.update_log_end(p) > 0).expect("no updates");
+        assert_eq!(
+            cluster.update_log_start(p),
+            cluster.update_log_end(p),
+            "all replicas re-froze: partition {p} log should be fully truncated"
+        );
+        // Kill one replica of p; the Master respawns it — necessarily
+        // from the checkpoint, since the log prefix no longer exists.
+        let replicas = cluster.executors_for_partition(p);
+        assert!(cluster.kill_executor(replicas[0]));
+        let deadline = std::time::Instant::now() + Duration::from_secs(8);
+        while cluster.executors_for_partition(p).len() < 2
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        assert_eq!(cluster.executors_for_partition(p).len(), 2, "role not respawned");
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+        // The respawned replica's cursor starts at the checkpoint — at or
+        // past the truncation point, so replay never touched the hole.
+        {
+            let rt = cluster.ingest.as_ref().unwrap();
+            let lv = rt.lives.lock().unwrap();
+            for e in lv.iter().filter(|e| e.partition == p) {
+                assert!(
+                    e.live.covered_seq() >= cluster.update_log_start(p),
+                    "replica cursor below the truncated prefix"
+                );
+            }
+        }
+        // Every insert is still answerable with full coverage.
+        let params = QueryParams { k: 1, branch: 4, ef: 100, meta_ef: 100 };
+        for (id, i) in inserted.iter().step_by(17) {
+            let r = cluster.execute_detailed(extra.get(*i), &params).unwrap();
+            assert!(r.is_complete(), "insert {id} query lost coverage");
+            assert_eq!(r.neighbors[0].id, *id, "insert {id} vanished after truncation+respawn");
+        }
         cluster.shutdown();
     }
 

@@ -131,6 +131,17 @@ pub struct IndexConfig {
     pub epsilon: f64,
     /// MIPS replication factor r (Alg 5; 0 disables replication).
     pub mips_replication: usize,
+    /// Serve sub-HNSWs through the SQ8 quantized tier: each partition
+    /// trains a per-dimension min/max codec over its rows, the graph
+    /// walk scores 1-byte codes through integer kernels, and the best
+    /// `refine_k` beam entries are re-ranked exactly. ~4× smaller
+    /// resident vector plane per executor. Default **off** (f32 serving,
+    /// bit-identical to the pre-SQ8 system). The meta-HNSW always stays
+    /// f32 — routing is tiny and accuracy-critical.
+    pub quantize: bool,
+    /// Exact re-rank budget for quantized search (0 = auto, 4·k at query
+    /// time; clamped to ≥ k). Only meaningful with `quantize`.
+    pub refine_k: usize,
     /// HNSW parameters shared by meta- and sub-HNSWs.
     pub hnsw: HnswParams,
     pub seed: u64,
@@ -144,6 +155,8 @@ impl Default for IndexConfig {
             partitions: 10,
             epsilon: 0.05,
             mips_replication: 0,
+            quantize: false,
+            refine_k: 0,
             hnsw: HnswParams::default(),
             seed: 0,
         }
@@ -158,6 +171,8 @@ impl IndexConfig {
             ("partitions", Json::num(self.partitions as f64)),
             ("epsilon", Json::num(self.epsilon)),
             ("mips_replication", Json::num(self.mips_replication as f64)),
+            ("quantize", Json::Bool(self.quantize)),
+            ("refine_k", Json::num(self.refine_k as f64)),
             ("seed", Json::num(self.seed as f64)),
             (
                 "hnsw",
@@ -188,6 +203,12 @@ impl IndexConfig {
         }
         if let Some(v) = j.get("mips_replication").and_then(Json::as_usize) {
             c.mips_replication = v;
+        }
+        if let Some(v) = j.get("quantize").and_then(Json::as_bool) {
+            c.quantize = v;
+        }
+        if let Some(v) = j.get("refine_k").and_then(Json::as_usize) {
+            c.refine_k = v;
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             c.seed = v as u64;
@@ -398,6 +419,12 @@ impl PyramidConfig {
         if self.query.branch == 0 || self.query.k == 0 {
             return Err(err("query.branch and query.k must be >= 1"));
         }
+        if self.index.quantize && self.index.refine_k != 0 && self.index.refine_k < self.query.k {
+            return Err(err(format!(
+                "index.refine_k {} must be 0 (auto) or >= query.k {}",
+                self.index.refine_k, self.query.k
+            )));
+        }
         if self.cluster.workers == 0 || self.cluster.replicas == 0 {
             return Err(err("cluster.workers/replicas must be >= 1"));
         }
@@ -439,6 +466,24 @@ mod tests {
         c.validate().unwrap();
         let ds = c.dataset.load().unwrap();
         assert_eq!((ds.len(), ds.dim()), (1000, 32));
+    }
+
+    #[test]
+    fn sq8_fields_roundtrip_and_default_off() {
+        let mut c = PyramidConfig::example();
+        assert!(!c.index.quantize, "quantization must default off");
+        c.index.quantize = true;
+        c.index.refine_k = 64;
+        let back = PyramidConfig::from_json_text(&c.to_json_text()).unwrap();
+        assert!(back.index.quantize);
+        assert_eq!(back.index.refine_k, 64);
+        back.validate().unwrap();
+        // refine_k below k is rejected (0 = auto stays fine).
+        let mut bad = back.clone();
+        bad.index.refine_k = 3; // query.k defaults to 10
+        assert!(bad.validate().is_err());
+        bad.index.refine_k = 0;
+        bad.validate().unwrap();
     }
 
     #[test]

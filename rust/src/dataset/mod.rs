@@ -11,23 +11,38 @@ pub use synthetic::{SyntheticKind, SyntheticSpec};
 use crate::error::{PyramidError, Result};
 use crate::metric::normalize_in_place;
 use crate::types::VectorId;
+use crate::util::aligned::AlignedF32;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
 /// A dense, row-major f32 vector collection.
 ///
-/// Storage is a single contiguous buffer behind an `Arc` so sub-dataset
-/// views and worker threads can share it without copies.
+/// Storage is a single contiguous **32-byte-aligned** buffer
+/// ([`AlignedF32`]) behind an `Arc` so sub-dataset views and worker
+/// threads can share it without copies, and so AVX2/NEON row loads start
+/// from an aligned base instead of wherever the allocator placed a plain
+/// `Vec` (rows themselves land on 32-byte boundaries whenever `d` is a
+/// multiple of 8, which every benchmarked configuration uses).
 #[derive(Debug, Clone)]
 pub struct Dataset {
-    data: Arc<Vec<f32>>,
+    data: Arc<AlignedF32>,
     n: usize,
     d: usize,
 }
 
 impl Dataset {
-    /// Wrap an existing buffer. `data.len()` must equal `n * d`.
+    /// Wrap an existing buffer. `data.len()` must equal `n * d`. Copies
+    /// once into the aligned store; producers that build large buffers
+    /// should write into an [`AlignedF32`] directly and use
+    /// [`Self::from_aligned`] to avoid the transient second allocation.
     pub fn from_vec(data: Vec<f32>, d: usize) -> Result<Self> {
+        Self::from_aligned(AlignedF32::from_vec(data), d)
+    }
+
+    /// Wrap an already-aligned buffer without copying (the re-freeze
+    /// compactor's path: its row gather writes straight into the buffer
+    /// that becomes the new base's storage).
+    pub fn from_aligned(data: AlignedF32, d: usize) -> Result<Self> {
         if d == 0 || data.len() % d != 0 {
             return Err(PyramidError::Dataset(format!(
                 "buffer length {} is not a multiple of dim {d}",
@@ -93,7 +108,7 @@ impl Dataset {
 
     /// Materialize a subset of rows as a new dataset (sub-dataset `X^i`).
     pub fn subset(&self, ids: &[VectorId]) -> Dataset {
-        let mut buf = Vec::with_capacity(ids.len() * self.d);
+        let mut buf = AlignedF32::with_capacity(ids.len() * self.d);
         for &i in ids {
             buf.extend_from_slice(self.get(i as usize));
         }
@@ -200,6 +215,28 @@ mod tests {
         // The pre-push clone still sees the old buffer.
         assert_eq!(view.len(), 5);
         assert_eq!(view.get(4), ds.get(4));
+    }
+
+    /// Satellite acceptance (SQ8 PR): row storage is allocated 32-byte
+    /// aligned so vector loads on the f32 plane never straddle cache
+    /// lines for lane-multiple dims — including after in-place growth
+    /// (`push_row` reallocations) and for derived datasets.
+    #[test]
+    fn row_storage_is_32_byte_aligned() {
+        let mut ds = Dataset::from_vec((0..32 * 9).map(|i| i as f32).collect(), 8).unwrap();
+        assert_eq!(ds.raw().as_ptr() as usize % 32, 0);
+        for _ in 0..100 {
+            ds.push_row(&[1.0; 8]);
+        }
+        assert_eq!(ds.raw().as_ptr() as usize % 32, 0, "push_row realloc lost alignment");
+        let sub = ds.subset(&[0, 5, 7]);
+        assert_eq!(sub.raw().as_ptr() as usize % 32, 0, "subset lost alignment");
+        let norm = ds.normalized();
+        assert_eq!(norm.raw().as_ptr() as usize % 32, 0, "normalized lost alignment");
+        // d = 8 floats = 32 bytes: every row starts on an aligned boundary.
+        for i in 0..ds.len() {
+            assert_eq!(ds.get(i).as_ptr() as usize % 32, 0, "row {i} misaligned");
+        }
     }
 
     #[test]

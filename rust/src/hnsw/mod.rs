@@ -21,6 +21,21 @@
 //! SIMD pass ([`crate::metric::Metric::score_rows`]); the per-edge form
 //! survives as [`Hnsw::search_per_edge`], the bench baseline.
 //!
+//! ## The SQ8 scoring tier
+//!
+//! A frozen graph can carry an optional **code plane**
+//! ([`crate::quant::QuantPlane`], built by [`Hnsw::build_sq8`] /
+//! [`Hnsw::with_sq8`]): every row quantized to 1-byte SQ8 codes in
+//! fixed-stride 32-byte-aligned blocks beside the CSR, so the walk's
+//! block addressing and prefetch scheme carry over while each hop
+//! streams a quarter of the bytes. With a plane attached, search walks
+//! the graph on integer kernels and finishes with an exact f32 re-rank
+//! of the best `refine_k` beam entries — returned scores are always
+//! exact, and recall impact is bounded by beam ordering only (pinned to
+//! within 2% of the f32 walk in `rust/tests/sq8.rs`). No plane (the
+//! default) means every path below is bit-identical to the pre-SQ8
+//! implementation.
+//!
 //! Construction is sequential per graph (insert order = id order, seeded
 //! level draws, fully deterministic); Pyramid parallelizes across the `w`
 //! sub-HNSWs with the threads substrate instead (see [`crate::meta`]).
@@ -34,9 +49,11 @@ pub use search::SearchStats;
 use crate::dataset::Dataset;
 use crate::error::{PyramidError, Result};
 use crate::metric::Metric;
+use crate::quant::{QuantPlane, Sq8View};
 use crate::runtime::BatchScorer;
 use crate::types::{BatchQuery, Neighbor};
 use search::VisitedPool;
+use std::sync::Arc;
 
 /// HNSW construction parameters. Defaults follow the paper's §V-A setup:
 /// max out-degree 32 on the bottom layer, 16 above, search factor 100.
@@ -215,6 +232,24 @@ impl NestedHnsw {
         build::insert(self, row)
     }
 
+    /// SQ8 search over this (mutable, nested-vec) graph through an
+    /// externally-maintained code view — the live delta index scores its
+    /// streamed rows through the same quantized tier as the frozen base
+    /// (see [`crate::ingest`]): quantized walk + exact top-`refine_k`
+    /// re-rank over the retained f32 rows. `view` must hold one code row
+    /// per graph node, in node order.
+    pub(crate) fn search_sq8(
+        &self,
+        view: Sq8View<'_>,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        refine_k: usize,
+    ) -> Vec<Neighbor> {
+        debug_assert_eq!(view.len(), self.len());
+        search::search_sq8(self, view, query, k, ef, refine_k).0
+    }
+
     /// Construction parameters this graph was built with.
     pub fn params(&self) -> HnswParams {
         self.params
@@ -263,12 +298,28 @@ impl NestedHnsw {
             levels: self.levels,
             entry: self.entry,
             visited_pool: self.visited_pool,
+            quant: None,
         }
+    }
+
+    /// [`Self::freeze`] plus an SQ8 code plane trained on this graph's
+    /// rows (see [`Hnsw::with_sq8`]).
+    pub fn freeze_sq8(self, refine_k: usize) -> Hnsw {
+        self.freeze().with_sq8(refine_k)
     }
 }
 
 /// An immutable HNSW index over a [`Dataset`], served from the frozen CSR
 /// adjacency (see the module docs for the layout).
+///
+/// An optional **SQ8 code plane** ([`crate::quant::QuantPlane`]) lies
+/// beside the CSR: fixed-stride 32-byte-aligned 1-byte code rows mirroring
+/// the f32 rows. When present (built via [`Hnsw::with_sq8`] /
+/// [`Hnsw::build_sq8`], default **off**), [`Hnsw::search`] drives the walk
+/// with the integer kernels over codes (4× less memory traffic per hop)
+/// and exact-re-ranks the best `refine_k` beam entries over the retained
+/// f32 rows, so returned neighbors always carry exact scores. Without a
+/// plane every path is bit-identical to the pre-SQ8 implementation.
 pub struct Hnsw {
     pub(crate) data: Dataset,
     pub(crate) metric: Metric,
@@ -280,6 +331,8 @@ pub struct Hnsw {
     /// Entry vertex (a node on the top layer).
     pub(crate) entry: u32,
     pub(crate) visited_pool: VisitedPool,
+    /// SQ8 code plane; `None` serves the graph purely from f32 rows.
+    pub(crate) quant: Option<Arc<QuantPlane>>,
 }
 
 impl Hnsw {
@@ -289,8 +342,44 @@ impl Hnsw {
         NestedHnsw::build(data, metric, params).map(NestedHnsw::freeze)
     }
 
+    /// [`Self::build`] plus an SQ8 code plane: the walk serves from
+    /// 1-byte codes with an exact top-`refine_k` re-rank (0 = auto, 4·k).
+    pub fn build_sq8(
+        data: Dataset,
+        metric: Metric,
+        params: HnswParams,
+        refine_k: usize,
+    ) -> Result<Self> {
+        Ok(Self::build(data, metric, params)?.with_sq8(refine_k))
+    }
+
+    /// Train an SQ8 codec on this graph's rows and attach the encoded
+    /// plane; subsequent [`Self::search`]/[`Self::search_batch`] calls
+    /// run the quantized walk + exact refine. The f32 rows are retained
+    /// for the re-rank and the `return_vectors`/re-freeze paths.
+    pub fn with_sq8(mut self, refine_k: usize) -> Hnsw {
+        self.quant = Some(Arc::new(QuantPlane::encode_dataset(&self.data, refine_k)));
+        self
+    }
+
+    /// Whether an SQ8 code plane is attached.
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// The attached SQ8 plane, if any.
+    pub fn quant_plane(&self) -> Option<&Arc<QuantPlane>> {
+        self.quant.as_ref()
+    }
+
+    /// Bytes held by the SQ8 code plane (codes + per-row corrections).
+    pub fn sq8_bytes(&self) -> Option<usize> {
+        self.quant.as_ref().map(|p| p.bytes())
+    }
+
     /// Top-k search with beam width `ef` (paper Algorithm 1). Returns up to
-    /// `k` neighbors, best first.
+    /// `k` neighbors, best first. With an SQ8 plane attached the walk is
+    /// quantized and the result exact-refined; otherwise fully exact.
     pub fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
         self.search_with_stats(query, k, ef).0
     }
@@ -298,14 +387,25 @@ impl Hnsw {
     /// [`Self::search`] plus hop/distance-evaluation counters for the bench
     /// harness and perf work.
     pub fn search_with_stats(&self, query: &[f32], k: usize, ef: usize) -> (Vec<Neighbor>, SearchStats) {
-        search::search(self, query, k, ef)
+        match &self.quant {
+            Some(p) => search::search_sq8(self, p.view(), query, k, ef, p.refine_for(k)),
+            None => search::search(self, query, k, ef),
+        }
     }
 
-    /// [`Self::search`] with the pre-block-walk per-edge scoring (one
+    /// Exact f32 search regardless of any attached SQ8 plane — the
+    /// baseline the quantized tier is measured and recall-pinned against
+    /// (`hnsw/sq8-walk-speedup` in `benches/hot_paths.rs`).
+    pub fn search_f32(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        search::search(self, query, k, ef).0
+    }
+
+    /// [`Self::search_f32`] with the pre-block-walk per-edge scoring (one
     /// [`crate::metric::Metric::score`] call per neighbor instead of one
     /// [`crate::metric::Metric::score_rows`] pass per neighbor block).
-    /// Returns bit-identical results; kept as the measured baseline for
-    /// the `hnsw/block-walk-speedup` metric in `benches/hot_paths.rs`.
+    /// Always exact (ignores any SQ8 plane) and bit-identical to the
+    /// exact block walk; kept as the measured baseline for the
+    /// `hnsw/block-walk-speedup` metric in `benches/hot_paths.rs`.
     pub fn search_per_edge(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
         search::search_per_edge(self, query, k, ef).0
     }
@@ -314,9 +414,14 @@ impl Hnsw {
     /// share a single visited-list checkout and scratch buffer, and each
     /// query's beam candidates are re-ranked as one dense block through
     /// `scorer` (the executor hands in its [`BatchScorer`] here — paper
-    /// §IV-A's query-processing hot loop, batched).
+    /// §IV-A's query-processing hot loop, batched). With an SQ8 plane the
+    /// walks are quantized and the re-rank (now mandatory — walk scores
+    /// are approximate) covers the best `refine_k` beam entries.
     pub fn search_batch(&self, queries: &[BatchQuery<'_>], scorer: &dyn BatchScorer) -> Vec<Vec<Neighbor>> {
-        search::search_batch(self, queries, scorer)
+        match &self.quant {
+            Some(p) => search::search_batch_sq8(self, p, queries, scorer),
+            None => search::search_batch(self, queries, scorer),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -366,11 +471,12 @@ impl Hnsw {
         self.layers[0].edge_count()
     }
 
-    /// Approximate memory footprint (bytes) of vectors + adjacency.
+    /// Approximate memory footprint (bytes) of vectors + adjacency +
+    /// (when attached) the SQ8 code plane.
     pub fn memory_bytes(&self) -> usize {
         let vecs = self.data.len() * self.data.dim() * 4;
         let adj: usize = self.layers.iter().map(FrozenLayer::bytes).sum();
-        vecs + adj
+        vecs + adj + self.sq8_bytes().unwrap_or(0)
     }
 }
 
@@ -624,6 +730,71 @@ mod tests {
         fn name(&self) -> &'static str {
             "forced-rerank"
         }
+    }
+
+    /// Attaching an SQ8 plane must not perturb the exact path at all:
+    /// `search_f32`/`search_per_edge` on the quantized graph are
+    /// bit-identical to `search` on the same graph without a plane
+    /// (quantization defaults off; this pins that "off" and "ignored"
+    /// mean the same thing).
+    #[test]
+    fn sq8_plane_leaves_exact_paths_bit_identical() {
+        let ds = small();
+        let plain = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let quant = Hnsw::build_sq8(ds.clone(), Metric::L2, HnswParams::default(), 0).unwrap();
+        assert!(quant.is_quantized() && !plain.is_quantized());
+        for i in [0usize, 13, 512, 1999] {
+            let q = ds.get(i);
+            assert_eq!(plain.search(q, 10, 80), quant.search_f32(q, 10, 80), "item {i}");
+            assert_eq!(plain.search(q, 10, 80), quant.search_per_edge(q, 10, 80), "item {i}");
+        }
+    }
+
+    /// Quantized search returns exact scores (the refine step re-scores
+    /// with the f32 kernels) and finds each item as its own top-1.
+    #[test]
+    fn sq8_search_exact_top1_and_exact_scores() {
+        let ds = small();
+        let h = Hnsw::build_sq8(ds.clone(), Metric::L2, HnswParams::default(), 0).unwrap();
+        for i in [0usize, 7, 512, 1999] {
+            let res = h.search(ds.get(i), 5, 60);
+            assert_eq!(res[0].id, i as u32, "item {i} not its own NN under SQ8");
+            assert_eq!(res[0].score, 0.0, "refined score must be exact");
+            for n in &res {
+                let exact = Metric::L2.score(ds.get(i), ds.get(n.id as usize));
+                assert_eq!(n.score.to_bits(), exact.to_bits(), "score not exact-refined");
+            }
+        }
+    }
+
+    /// The SQ8 batched path (executor drain loop) must agree with the
+    /// sequential SQ8 search — both re-rank the same beam through exact
+    /// kernels, via the BatchScorer and the native fallback alike.
+    #[test]
+    fn sq8_search_batch_matches_sequential_sq8() {
+        let ds = small();
+        let h = Hnsw::build_sq8(ds.clone(), Metric::L2, HnswParams::default(), 0).unwrap();
+        let queries: Vec<&[f32]> = (0..12).map(|i| ds.get(i * 11)).collect();
+        let batch: Vec<BatchQuery<'_>> =
+            queries.iter().map(|q| BatchQuery { query: q, k: 10, ef: 60 }).collect();
+        for scorer in [&NativeScorer as &dyn BatchScorer, &ForcedRerank] {
+            let out = h.search_batch(&batch, scorer);
+            for (i, q) in queries.iter().enumerate() {
+                let seq: Vec<u32> = h.search(q, 10, 60).iter().map(|n| n.id).collect();
+                let bat: Vec<u32> = out[i].iter().map(|n| n.id).collect();
+                assert_eq!(bat, seq, "sq8 batched query {i} diverges ({})", scorer.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_memory_accounting() {
+        let ds = small();
+        let plain = Hnsw::build(ds.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let quant = Hnsw::build_sq8(ds, Metric::L2, HnswParams::default(), 0).unwrap();
+        let plane = quant.sq8_bytes().unwrap();
+        assert!(plane > 0);
+        assert_eq!(quant.memory_bytes(), plain.memory_bytes() + plane);
     }
 
     #[test]

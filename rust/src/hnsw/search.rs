@@ -8,30 +8,38 @@
 //! The walk is generic over [`GraphView`], so it monomorphizes once for
 //! the frozen CSR form ([`super::Hnsw`], the serving hot path) and once
 //! for the nested-vec build form ([`super::NestedHnsw`]) with no dynamic
-//! dispatch in either.
+//! dispatch in either — and over [`WalkScorer`], the scoring tier:
 //!
-//! Scoring is **block-wise**: each hop gathers the unvisited neighbors of
-//! the expanded vertex (one fixed-stride block read on the frozen bottom
-//! layer), prefetches their vector rows, and scores the whole block
-//! through [`Metric::score_rows`] in a single kernel-dispatched pass —
-//! one feature probe and one set of hoisted per-query invariants per
-//! block instead of per edge. Scores are bit-identical to the per-edge
-//! form, which is kept compilable (`BLOCK = false` instantiations,
-//! surfaced as [`super::Hnsw::search_per_edge`]) as the measured baseline
-//! in `benches/hot_paths.rs`.
+//! * [`ExactWalk`] streams f32 rows through the dispatched SIMD kernels
+//!   ([`Metric::score_rows`] per gathered neighbor block) — bit-identical
+//!   to the pre-refactor walk.
+//! * [`Sq8Walk`] streams 1-byte SQ8 codes through the integer kernels
+//!   ([`crate::quant`]): the query is encoded once per search, each hop
+//!   reads a quarter of the bytes, and the beam's best `refine_k`
+//!   entries are re-scored with the exact f32 kernels after the walk
+//!   closes ([`search_sq8`]) so the returned top-k carries exact scores.
+//!
+//! Scoring is **block-wise** either way: each hop gathers the unvisited
+//! neighbors of the expanded vertex (one fixed-stride block read on the
+//! frozen bottom layer), prefetches their storage rows, and scores the
+//! whole block in a single kernel-dispatched pass. The per-edge form is
+//! kept compilable (`BLOCK = false` instantiations, surfaced as
+//! [`super::Hnsw::search_per_edge`]) as the measured baseline in
+//! `benches/hot_paths.rs`.
 
 use super::{Hnsw, NestedHnsw};
 use crate::dataset::Dataset;
 use crate::metric::Metric;
+use crate::quant::{QuantPlane, Sq8Query, Sq8View};
 use crate::runtime::BatchScorer;
-use crate::types::{BatchQuery, Neighbor};
+use crate::types::{merge_topk, BatchQuery, Neighbor};
 use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
 /// Per-search counters (used by the bench harness and §Perf work).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SearchStats {
-    /// Similarity function evaluations.
+    /// Similarity function evaluations (quantized + exact on SQ8 paths).
     pub dist_evals: u64,
     /// Graph-walk vertex expansions across all layers.
     pub hops: u64,
@@ -196,6 +204,66 @@ fn prefetch_row(row: &[f32]) {
     let _ = row;
 }
 
+/// The walk's scoring tier: how a candidate vertex id turns into a score
+/// against the current query. Monomorphized into the walk alongside
+/// [`GraphView`] — no dynamic dispatch on the hot path.
+pub(crate) trait WalkScorer {
+    /// Score one vertex (entry seeding + the per-edge baseline path).
+    fn score_one(&self, v: u32) -> f32;
+    /// Score a gathered id block in one kernel-dispatched pass.
+    fn score_block(&self, ids: &[u32], out: &mut Vec<f32>);
+    /// Prefetch the storage row `score_one`/`score_block` will read.
+    fn prefetch(&self, v: u32);
+}
+
+/// Exact f32 scoring over the graph's retained rows — the pre-SQ8 walk,
+/// bit-identical results.
+pub(crate) struct ExactWalk<'a> {
+    metric: Metric,
+    data: &'a Dataset,
+    query: &'a [f32],
+}
+
+impl WalkScorer for ExactWalk<'_> {
+    #[inline]
+    fn score_one(&self, v: u32) -> f32 {
+        self.metric.score(self.query, self.data.get(v as usize))
+    }
+
+    fn score_block(&self, ids: &[u32], out: &mut Vec<f32>) {
+        self.metric.score_rows(self.query, ids.iter().map(|&v| self.data.get(v as usize)), out);
+    }
+
+    #[inline]
+    fn prefetch(&self, v: u32) {
+        prefetch_row(self.data.get(v as usize));
+    }
+}
+
+/// SQ8 scoring over a code view: integer kernels over 1-byte codes, the
+/// query encoded once at construction.
+pub(crate) struct Sq8Walk<'a> {
+    metric: Metric,
+    view: Sq8View<'a>,
+    q: Sq8Query,
+}
+
+impl WalkScorer for Sq8Walk<'_> {
+    #[inline]
+    fn score_one(&self, v: u32) -> f32 {
+        self.view.score(self.metric, &self.q, v as usize)
+    }
+
+    fn score_block(&self, ids: &[u32], out: &mut Vec<f32>) {
+        self.view.score_ids(self.metric, &self.q, ids, out);
+    }
+
+    #[inline]
+    fn prefetch(&self, v: u32) {
+        self.view.prefetch(v as usize);
+    }
+}
+
 /// Min-heap wrapper: `BinaryHeap<std::cmp::Reverse<Neighbor>>` keeps the
 /// *worst* result on top so `W` can be bounded in O(log |W|).
 type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
@@ -204,18 +272,17 @@ type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
 ///
 /// `entries` seeds both heaps (already scored); returns the best `factor`
 /// vertices found, unsorted. `scratch` is a reusable id buffer: each hop
-/// gathers the unvisited neighbors into it (issuing their vector
-/// prefetches) before any of them is scored. With `BLOCK = true` (the
-/// serving default) the gathered block is scored through
-/// [`Metric::score_rows`] in one kernel-dispatched pass; `BLOCK = false`
-/// keeps the per-edge [`Metric::score`] calls as the measured baseline.
-/// Scores are bit-identical either way, so both instantiations return
-/// identical results.
+/// gathers the unvisited neighbors into it (issuing their storage
+/// prefetches through the scorer) before any of them is scored. With
+/// `BLOCK = true` (the serving default) the gathered block is scored in
+/// one kernel-dispatched pass; `BLOCK = false` keeps the per-edge calls
+/// as the measured baseline. Scores are bit-identical either way, so
+/// both instantiations return identical results.
 #[allow(clippy::too_many_arguments)]
-fn search_level<G: GraphView, const BLOCK: bool>(
+fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
     g: &G,
+    scorer: &S,
     level: usize,
-    query: &[f32],
     entries: &[Neighbor],
     factor: usize,
     visited: &mut VisitedList,
@@ -223,8 +290,6 @@ fn search_level<G: GraphView, const BLOCK: bool>(
     scores: &mut Vec<f32>,
     stats: &mut SearchStats,
 ) -> Vec<Neighbor> {
-    let data = g.dataset();
-    let metric = g.metric();
     let mut cand: BinaryHeap<Neighbor> = BinaryHeap::new(); // max-heap C
     let mut res: ResultHeap = BinaryHeap::new(); // min-heap W
     visited.next_epoch();
@@ -249,19 +314,19 @@ fn search_level<G: GraphView, const BLOCK: bool>(
         scratch.clear();
         for &v in g.neighbors(level, c.id) {
             if visited.visit(v) {
-                prefetch_row(data.get(v as usize));
+                scorer.prefetch(v);
                 scratch.push(v);
             }
         }
         stats.dist_evals += scratch.len() as u64;
         if BLOCK {
-            // One SIMD pass over the whole neighbor block: the kernel is
-            // dispatched once and per-query invariants are hoisted; the
+            // One kernel pass over the whole neighbor block: dispatched
+            // once, per-query invariants hoisted inside the scorer; the
             // rows were prefetched during the gather above.
-            metric.score_rows(query, scratch.iter().map(|&v| data.get(v as usize)), scores);
+            scorer.score_block(scratch, scores);
         }
         for (j, &v) in scratch.iter().enumerate() {
-            let s = if BLOCK { scores[j] } else { metric.score(query, data.get(v as usize)) };
+            let s = if BLOCK { scores[j] } else { scorer.score_one(v) };
             let worst = res.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
             if res.len() < factor || s > worst {
                 let n = Neighbor::new(v, s);
@@ -280,9 +345,9 @@ fn search_level<G: GraphView, const BLOCK: bool>(
 /// whole bottom-layer beam (up to `max(ef, k)` results, best first) so
 /// batched callers can re-rank it; plain `search` truncates to `k`.
 #[allow(clippy::too_many_arguments)]
-fn search_beam<G: GraphView, const BLOCK: bool>(
+fn search_beam<G: GraphView, S: WalkScorer, const BLOCK: bool>(
     g: &G,
-    query: &[f32],
+    scorer: &S,
     k: usize,
     ef: usize,
     visited: &mut VisitedList,
@@ -291,13 +356,13 @@ fn search_beam<G: GraphView, const BLOCK: bool>(
     stats: &mut SearchStats,
 ) -> Vec<Neighbor> {
     let entry = g.entry_point();
-    let entry_score = g.metric().score(query, g.dataset().get(entry as usize));
+    let entry_score = scorer.score_one(entry);
     stats.dist_evals += 1;
     let mut eps = vec![Neighbor::new(entry, entry_score)];
     // Greedy descent through the upper layers (factor 1).
     for t in (1..=g.max_layer()).rev() {
         let found =
-            search_level::<G, BLOCK>(g, t, query, &eps, 1, visited, scratch, scores, stats);
+            search_level::<G, S, BLOCK>(g, scorer, t, &eps, 1, visited, scratch, scores, stats);
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
@@ -305,7 +370,7 @@ fn search_beam<G: GraphView, const BLOCK: bool>(
     // Beam search on the bottom layer with factor max(ef, k).
     let factor = ef.max(k).max(1);
     let mut found =
-        search_level::<G, BLOCK>(g, 0, query, &eps, factor, visited, scratch, scores, stats);
+        search_level::<G, S, BLOCK>(g, scorer, 0, &eps, factor, visited, scratch, scores, stats);
     // Score-desc with id tiebreak: the same total order `merge_topk` uses,
     // so sequential and batched paths agree even on exact score ties.
     found.sort_unstable_by(|a, b| {
@@ -317,19 +382,21 @@ fn search_beam<G: GraphView, const BLOCK: bool>(
     found
 }
 
-/// Full multi-layer search (Algorithm 1). Returns (top-k best first, stats).
+/// Full multi-layer exact search (Algorithm 1). Returns (top-k best
+/// first, stats).
 pub(crate) fn search<G: GraphView>(
     g: &G,
     query: &[f32],
     k: usize,
     ef: usize,
 ) -> (Vec<Neighbor>, SearchStats) {
+    let scorer = ExactWalk { metric: g.metric(), data: g.dataset(), query };
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::with_capacity(64);
-    let mut found = search_beam::<G, true>(
-        g, query, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    let mut found = search_beam::<G, _, true>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
     );
     g.visited_pool().put(visited);
     found.truncate(k);
@@ -348,15 +415,63 @@ pub(crate) fn search_per_edge<G: GraphView>(
     k: usize,
     ef: usize,
 ) -> (Vec<Neighbor>, SearchStats) {
+    let scorer = ExactWalk { metric: g.metric(), data: g.dataset(), query };
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::new(); // untouched on the per-edge path
-    let mut found = search_beam::<G, false>(
-        g, query, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    let mut found = search_beam::<G, _, false>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
     );
     g.visited_pool().put(visited);
     found.truncate(k);
+    (found, stats)
+}
+
+/// Exact re-rank of the best `take` beam entries with the f32 kernels:
+/// the refine step every SQ8 search ends with. Returns the exact-scored
+/// top-k in `merge_topk`'s total order.
+fn refine_beam<G: GraphView>(
+    g: &G,
+    query: &[f32],
+    beam: &[Neighbor],
+    take: usize,
+    k: usize,
+    scores: &mut Vec<f32>,
+    stats: &mut SearchStats,
+) -> Vec<Neighbor> {
+    let take = take.min(beam.len());
+    let data = g.dataset();
+    g.metric().score_rows(query, beam[..take].iter().map(|n| data.get(n.id as usize)), scores);
+    stats.dist_evals += take as u64;
+    let exact: Vec<Neighbor> =
+        beam[..take].iter().zip(scores.iter()).map(|(n, &s)| Neighbor::new(n.id, s)).collect();
+    merge_topk(exact, k)
+}
+
+/// SQ8 search: quantized walk (integer kernels over `view`'s codes) +
+/// exact top-`refine_k` re-rank over the retained f32 rows. Generic over
+/// the graph form so the frozen base and the live delta graph run the
+/// same path. Returned neighbors carry **exact** scores.
+pub(crate) fn search_sq8<G: GraphView>(
+    g: &G,
+    view: Sq8View<'_>,
+    query: &[f32],
+    k: usize,
+    ef: usize,
+    refine_k: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    let q = view.codec.prepare_query(query);
+    let scorer = Sq8Walk { metric: g.metric(), view, q };
+    let mut stats = SearchStats::default();
+    let mut visited = g.visited_pool().take();
+    let mut scratch = Vec::with_capacity(64);
+    let mut scores = Vec::with_capacity(64);
+    let beam = search_beam::<G, _, true>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    );
+    g.visited_pool().put(visited);
+    let found = refine_beam(g, query, &beam, refine_k.max(k), k, &mut scores, &mut stats);
     (found, stats)
 }
 
@@ -370,6 +485,11 @@ pub(crate) fn search_per_edge<G: GraphView>(
 /// rescore is skipped: the beam is already exact-scored and sorted in the
 /// same total order, so the result is bit-identical and the hot path pays
 /// nothing for the re-rank structure.
+///
+/// NOTE: [`search_batch_sq8`] mirrors this drain loop for the quantized
+/// tier (different scorer, no identity shortcut, bounded refine gather) —
+/// changes to the gather/rerank/fallback sequence here must be applied
+/// there too.
 pub(crate) fn search_batch<G: GraphView>(
     g: &G,
     queries: &[BatchQuery<'_>],
@@ -386,8 +506,9 @@ pub(crate) fn search_batch<G: GraphView>(
     let mut ids: Vec<u32> = Vec::new();
     let mut out = Vec::with_capacity(queries.len());
     for bq in queries {
-        let mut beam = search_beam::<G, true>(
-            g, bq.query, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        let walk = ExactWalk { metric, data, query: bq.query };
+        let mut beam = search_beam::<G, _, true>(
+            g, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
         );
         if identity {
             beam.truncate(bq.k);
@@ -416,6 +537,56 @@ pub(crate) fn search_batch<G: GraphView>(
     out
 }
 
+/// Batched SQ8 search: quantized walks sharing one visited checkout, each
+/// beam's best `refine_k` entries re-ranked **exactly** — through the
+/// batch scorer backend when available (its block path), or the native
+/// f32 kernels on backend failure. Unlike [`search_batch`], the identity
+/// shortcut never applies: walk scores are approximate by construction,
+/// so the re-rank is mandatory.
+///
+/// NOTE: deliberate structural twin of [`search_batch`] — the shared
+/// drain-loop shape (visited checkout, per-query beam, gather, rerank,
+/// fallback) must stay in lockstep between the two.
+pub(crate) fn search_batch_sq8(
+    h: &Hnsw,
+    plane: &QuantPlane,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+) -> Vec<Vec<Neighbor>> {
+    let metric = h.metric();
+    let view = plane.view();
+    let mut stats = SearchStats::default();
+    let mut visited = h.visited_pool().take();
+    let mut scratch = Vec::with_capacity(64);
+    let mut scores = Vec::with_capacity(64);
+    let data = h.dataset();
+    let mut block: Vec<f32> = Vec::new();
+    let mut ids: Vec<u32> = Vec::new();
+    let mut out = Vec::with_capacity(queries.len());
+    for bq in queries {
+        let q = view.codec.prepare_query(bq.query);
+        let walk = Sq8Walk { metric, view, q };
+        let beam = search_beam::<Hnsw, _, true>(
+            h, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        );
+        let take = plane.refine_for(bq.k).min(beam.len());
+        block.clear();
+        ids.clear();
+        for n in &beam[..take] {
+            ids.push(n.id);
+            block.extend_from_slice(data.get(n.id as usize));
+        }
+        match scorer.rerank(metric, bq.query, &block, &ids, bq.k) {
+            Ok(top) => out.push(top),
+            Err(_) => {
+                out.push(refine_beam(h, bq.query, &beam, take, bq.k, &mut scores, &mut stats));
+            }
+        }
+    }
+    h.visited_pool().put(visited);
+    out
+}
+
 /// Greedy insert-time descent used by construction (Algorithm 2 lines 6-8):
 /// identical walk to [`search`] but exposed per-layer so build can harvest
 /// `ef_construction` candidates at each level <= `target_level`.
@@ -425,17 +596,18 @@ pub(crate) fn search_for_insert(
     target_level: usize,
     ef: usize,
 ) -> Vec<Vec<Neighbor>> {
+    let scorer = ExactWalk { metric: g.metric, data: &g.data, query };
     let mut stats = SearchStats::default();
     let mut visited = g.visited_pool.take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::with_capacity(64);
-    let entry_score = g.metric.score(query, g.data.get(g.entry as usize));
+    let entry_score = scorer.score_one(g.entry);
     let mut eps = vec![Neighbor::new(g.entry, entry_score)];
     let max_layer = g.max_layer();
     // Greedy descent above the insertion level.
     for t in ((target_level + 1)..=max_layer).rev() {
-        let found = search_level::<NestedHnsw, true>(
-            g, t, query, &eps, 1, &mut visited, &mut scratch, &mut scores, &mut stats,
+        let found = search_level::<NestedHnsw, _, true>(
+            g, &scorer, t, &eps, 1, &mut visited, &mut scratch, &mut scores, &mut stats,
         );
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
@@ -445,8 +617,8 @@ pub(crate) fn search_for_insert(
     // per-layer candidate sets.
     let mut per_layer = Vec::new();
     for t in (0..=target_level.min(max_layer)).rev() {
-        let found = search_level::<NestedHnsw, true>(
-            g, t, query, &eps, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        let found = search_level::<NestedHnsw, _, true>(
+            g, &scorer, t, &eps, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
         );
         eps = found.clone();
         per_layer.push(found);

@@ -3,12 +3,16 @@
 //! executors load at startup).
 //!
 //! Format (little-endian): magic, version, metric, params, n, d, entry,
-//! levels, layer count, per-layer adjacency, then the raw vector data.
-//! The on-disk adjacency is the portable nested form (per-node length +
-//! ids) regardless of the in-memory layout: saving walks the frozen CSR
-//! slices, loading reconstructs nested lists and re-freezes — freezing is
-//! deterministic, so a save/load round trip reproduces the CSR blocks
-//! bit-for-bit.
+//! levels, layer count, per-layer adjacency, then the raw vector data;
+//! version 2 appends the SQ8 flag + refine budget. The on-disk adjacency
+//! is the portable nested form (per-node length + ids) regardless of the
+//! in-memory layout: saving walks the frozen CSR slices, loading
+//! reconstructs nested lists and re-freezes — freezing is deterministic,
+//! so a save/load round trip reproduces the CSR blocks bit-for-bit. The
+//! SQ8 code plane is **derived**, not stored: codec training + encoding
+//! over the (saved) rows is deterministic, so loading re-trains it from
+//! the flag and reproduces identical codes at a quarter of the file
+//! size it would otherwise cost.
 
 use super::search::VisitedPool;
 use super::{Hnsw, HnswParams, Layer, NestedHnsw};
@@ -46,7 +50,7 @@ impl Hnsw {
     /// Serialize to a writer.
     pub fn save_to(&self, w: &mut impl Write) -> Result<()> {
         w_u32(w, MAGIC)?;
-        w_u32(w, 1)?; // version
+        w_u32(w, 2)?; // version (2 = trailing SQ8 section)
         let metric = match self.metric {
             Metric::L2 => 0u32,
             Metric::Angular => 1,
@@ -78,6 +82,17 @@ impl Hnsw {
                 w.write_all(&v.to_le_bytes())?;
             }
         }
+        // v2 trailer: SQ8 tier flag + raw refine budget.
+        match &self.quant {
+            Some(p) => {
+                w_u32(w, 1)?;
+                w_u32(w, p.refine_k() as u32)?;
+            }
+            None => {
+                w_u32(w, 0)?;
+                w_u32(w, 0)?;
+            }
+        }
         Ok(())
     }
 
@@ -97,7 +112,7 @@ impl Hnsw {
             return Err(PyramidError::Index("bad HNSW magic".into()));
         }
         let version = r_u32(r)?;
-        if version != 1 {
+        if !(1..=2).contains(&version) {
             return Err(PyramidError::Index(format!("unsupported HNSW version {version}")));
         }
         let metric = match r_u32(r)? {
@@ -136,7 +151,7 @@ impl Hnsw {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(NestedHnsw {
+        let nested = NestedHnsw {
             data: Dataset::from_vec(data, d)?,
             metric,
             params: HnswParams { m, m0, ef_construction, select_heuristic, seed },
@@ -144,8 +159,11 @@ impl Hnsw {
             levels,
             entry,
             visited_pool: VisitedPool::new(n),
-        }
-        .freeze())
+        };
+        let (quantized, refine_k) =
+            if version >= 2 { (r_u32(r)? != 0, r_u32(r)? as usize) } else { (false, 0) };
+        let h = nested.freeze();
+        Ok(if quantized { h.with_sq8(refine_k) } else { h })
     }
 
     /// Deserialize from a file path.
@@ -177,6 +195,23 @@ mod tests {
             let a = h.search(ds.get(i), 5, 50);
             let b = h2.search(ds.get(i), 5, 50);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_sq8_plane() {
+        let ds = SyntheticSpec::deep_like(400, 16, 23).generate();
+        let h = Hnsw::build_sq8(ds.clone(), Metric::L2, HnswParams::default(), 48).unwrap();
+        let mut buf = Vec::new();
+        h.save_to(&mut buf).unwrap();
+        let h2 = Hnsw::load_from(&mut buf.as_slice()).unwrap();
+        assert!(h2.is_quantized());
+        let (p, p2) = (h.quant_plane().unwrap(), h2.quant_plane().unwrap());
+        assert_eq!(p2.refine_k(), 48);
+        // Deterministic retrain: identical codes byte-for-byte.
+        assert_eq!(p.codes(), p2.codes());
+        for i in 0..8 {
+            assert_eq!(h.search(ds.get(i), 5, 50), h2.search(ds.get(i), 5, 50));
         }
     }
 

@@ -8,20 +8,31 @@
 //! * **Base** — the construct-time (or last re-frozen) [`Hnsw`]: the CSR
 //!   serving layout executors have always searched, plus its local→global
 //!   id map and a reverse map for vector fetches. Swapped atomically
-//!   behind an `Arc` at every re-freeze.
+//!   behind an `Arc` at every re-freeze. With the SQ8 tier enabled the
+//!   base carries a code plane and serves the quantized walk + exact
+//!   refine transparently.
 //! * **Delta** — a [`NestedHnsw`] grown one [`NestedHnsw::insert`] at a
 //!   time as updates stream in. Small by construction: the re-freeze
 //!   threshold bounds it, so its nested-vec layout (slower to walk than
-//!   CSR, but mutable) never dominates query time.
+//!   CSR, but mutable) never dominates query time. When the base is
+//!   quantized, **inserts encode on apply**: each streamed row's SQ8
+//!   codes (under the serving base's codec) are appended beside the
+//!   delta, and the merged search walks the delta through the same
+//!   integer-kernel tier as the base — one scoring discipline across
+//!   both planes, with exact re-ranks keeping returned scores exact.
 //! * **Tombstones** — deleted global ids, each stamped with the update
 //!   sequence that deleted it. Search filters them from both base and
 //!   delta hits; re-freeze drops the baked-in ones.
 //!
 //! Every state transition is keyed by the partition's [`UpdateSeq`]: the
 //! delta remembers which sequence produced each row, the base remembers
-//! the sequence it covers, and `applied` is the next sequence expected —
-//! which is exactly the replay cursor a respawned replica hands to its
-//! [`crate::broker::LogTailer`].
+//! the sequence it covers ([`LiveIndex::covered_seq`]), and `applied` is
+//! the next sequence expected — which is exactly the replay cursor a
+//! respawned replica hands to its [`crate::broker::LogTailer`]. A replica
+//! may be constructed from a **checkpoint** ([`LiveIndex::with_checkpoint`]):
+//! a re-frozen base covering sequences `< covered`, so it replays only
+//! the log tail — the contract that makes update-log truncation safe
+//! (see [`crate::cluster`]'s low-water-mark wiring).
 //!
 //! ## Re-freeze protocol
 //!
@@ -31,14 +42,21 @@
 //! the new base covers everything `< cut`, delta entries and tombstones
 //! `>= cut` (applied during the build) are carried over, the rest drop.
 //! A search observes either the old state or the new one, never a
-//! half-swap.
+//! half-swap. Under the SQ8 tier the rebuild **re-trains the codec**
+//! over base + delta − tombstones and re-encodes everything — including
+//! the carried-over tail, which switches to the new codec atomically
+//! with the swap. After a successful swap the re-freeze hook fires
+//! ([`LiveIndex::set_on_refreeze`]) so the cluster can advance the
+//! partition's log-truncation watermark.
 
 use super::IngestConfig;
 use crate::dataset::Dataset;
 use crate::executor::SubIndex;
 use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
 use crate::metric::Metric;
+use crate::quant::{code_stride, Sq8Codec, Sq8View};
 use crate::types::{merge_topk, Neighbor, UpdateOp, UpdateRequest, UpdateSeq, VectorId};
+use crate::util::aligned::{AlignedF32, AlignedU8};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -85,12 +103,21 @@ struct Delta {
     ids: Vec<VectorId>,
     /// Delta-local row -> sequence that inserted it.
     seqs: Vec<UpdateSeq>,
+    /// SQ8 codes of every delta row, stride-padded — encoded with the
+    /// serving base's codec as each insert is applied. Present (and 1:1
+    /// with `ids`) iff the base carries a code plane.
+    codes: AlignedU8,
+    corr: Vec<f32>,
+    norm: Vec<f32>,
 }
 
 impl Delta {
     /// Append one dim-checked row: grow the delta graph (creating it on
-    /// the first row) and record the row's global id + sequence. Shared
-    /// by the apply path and the re-freeze tail carry-over.
+    /// the first row), record the row's global id + sequence, and — when
+    /// the serving base is quantized — encode the row's SQ8 codes
+    /// alongside. Shared by the apply path and the re-freeze tail
+    /// carry-over (which passes the *new* base's codec).
+    #[allow(clippy::too_many_arguments)]
     fn push(
         &mut self,
         row: &[f32],
@@ -99,6 +126,7 @@ impl Delta {
         metric: Metric,
         params: HnswParams,
         dim: usize,
+        codec: Option<&Sq8Codec>,
     ) {
         match &mut self.graph {
             Some(g) => {
@@ -113,6 +141,20 @@ impl Delta {
         }
         self.ids.push(gid);
         self.seqs.push(seq);
+        if let Some(c) = codec {
+            let stride = code_stride(dim);
+            let mut buf = vec![0u8; stride];
+            let (corr, norm) = c.encode_into(row, &mut buf);
+            self.codes.extend_from_slice(&buf);
+            self.corr.push(corr);
+            self.norm.push(norm);
+        }
+    }
+
+    /// Whether every delta row has codes (the quantized-walk invariant:
+    /// codes are either kept for the whole generation or not at all).
+    fn codes_complete(&self) -> bool {
+        !self.ids.is_empty() && self.corr.len() == self.ids.len()
     }
 }
 
@@ -127,6 +169,10 @@ struct LiveState {
     freezing: bool,
 }
 
+/// Fired after every completed re-freeze swap (cluster-side log
+/// truncation watermark advance).
+type RefreezeHook = Box<dyn Fn() + Send + Sync>;
+
 /// A writable per-partition index: frozen base + delta + tombstones (see
 /// the module docs). Implements [`SubIndex`], so executors serve it
 /// exactly like a plain frozen graph — except its results are already in
@@ -136,7 +182,14 @@ pub struct LiveIndex {
     dim: usize,
     delta_params: HnswParams,
     cfg: IngestConfig,
+    /// Serve (re-frozen) bases through the SQ8 tier. Derived at
+    /// construction: `cfg.quantize || base.is_quantized()` — a quantized
+    /// base never silently degrades to f32 at its first re-freeze.
+    quantize: bool,
+    /// Raw refine budget for quantized rebuilds (0 = auto).
+    refine_k: usize,
     state: Mutex<LiveState>,
+    on_refreeze: Mutex<Option<RefreezeHook>>,
     pub metrics: IngestMetrics,
 }
 
@@ -144,23 +197,48 @@ impl LiveIndex {
     /// Wrap a frozen base (shared with the construct-time index) in a
     /// live, writable view with an empty delta. `applied` starts at 0:
     /// a fresh instance replays the partition's whole update log, which
-    /// is exactly what a respawned replica must do.
+    /// is exactly what a respawned replica must do when no re-frozen
+    /// checkpoint exists.
     pub fn new(base: Arc<Hnsw>, ids: Arc<Vec<VectorId>>, cfg: IngestConfig) -> LiveIndex {
+        Self::with_checkpoint(base, ids, 0, cfg)
+    }
+
+    /// Wrap a **checkpoint** base: a frozen graph that already covers
+    /// every update with sequence `< covered`. The replay cursor starts
+    /// at `covered`, so the replica only tails the log from there — the
+    /// construction the cluster uses to respawn replicas after the
+    /// update log has been truncated below the cross-replica
+    /// low-water-mark.
+    pub fn with_checkpoint(
+        base: Arc<Hnsw>,
+        ids: Arc<Vec<VectorId>>,
+        covered: UpdateSeq,
+        cfg: IngestConfig,
+    ) -> LiveIndex {
         let metric = base.metric();
         let dim = base.dim();
         let delta_params = base.params();
+        let quantize = cfg.quantize || base.is_quantized();
+        let refine_k = if cfg.refine_k != 0 {
+            cfg.refine_k
+        } else {
+            base.quant_plane().map(|p| p.refine_k()).unwrap_or(0)
+        };
         LiveIndex {
             metric,
             dim,
             delta_params,
             cfg,
+            quantize,
+            refine_k,
             state: Mutex::new(LiveState {
-                base: Arc::new(BaseGen::new(base, ids, 0)),
+                base: Arc::new(BaseGen::new(base, ids, covered)),
                 delta: Delta::default(),
                 tombstones: HashMap::new(),
-                applied: 0,
+                applied: covered,
                 freezing: false,
             }),
+            on_refreeze: Mutex::new(None),
             metrics: IngestMetrics::default(),
         }
     }
@@ -173,10 +251,37 @@ impl LiveIndex {
         self.metric
     }
 
+    /// Whether (re-frozen) bases serve through the SQ8 tier.
+    pub fn quantized(&self) -> bool {
+        self.quantize
+    }
+
     /// Next update sequence this replica expects — the cursor a replay
     /// tailer starts from.
     pub fn applied_seq(&self) -> UpdateSeq {
         self.state.lock().unwrap().applied
+    }
+
+    /// Every update with sequence below this is baked into the current
+    /// frozen base — this replica's contribution to the partition's
+    /// log-truncation low-water-mark.
+    pub fn covered_seq(&self) -> UpdateSeq {
+        self.state.lock().unwrap().base.covered
+    }
+
+    /// The current frozen base (graph, id map, covered sequence) — the
+    /// cluster checkpoints the most-compacted one of these per partition
+    /// so respawned replicas need only the log tail.
+    pub fn base_snapshot(&self) -> (Arc<Hnsw>, Arc<Vec<VectorId>>, UpdateSeq) {
+        let st = self.state.lock().unwrap();
+        (st.base.graph.clone(), st.base.ids.clone(), st.base.covered)
+    }
+
+    /// Register a hook fired after every completed re-freeze swap (with
+    /// no internal lock held). The cluster uses it to advance the
+    /// partition's update-log truncation watermark.
+    pub fn set_on_refreeze(&self, f: impl Fn() + Send + Sync + 'static) {
+        *self.on_refreeze.lock().unwrap() = Some(Box::new(f));
     }
 
     /// Rows currently in the delta overlay.
@@ -204,7 +309,8 @@ impl LiveIndex {
     /// a prefix of the log (lease expiry, respawn overlap) cannot
     /// double-insert.
     pub fn apply(&self, seq: UpdateSeq, req: &UpdateRequest) {
-        let mut st = self.state.lock().unwrap();
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
         if seq < st.applied {
             return; // already applied (replay overlap)
         }
@@ -215,7 +321,12 @@ impl LiveIndex {
                     self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                     return;
                 }
-                st.delta.push(vector, *id, seq, self.metric, self.delta_params, self.dim);
+                // Encode on apply: streamed rows join the quantized tier
+                // under the *serving* base's codec (re-trained codecs
+                // re-encode the carried tail at the next swap).
+                let base = st.base.clone();
+                let codec = base.graph.quant_plane().map(|p| p.codec());
+                st.delta.push(vector, *id, seq, self.metric, self.delta_params, self.dim, codec);
                 self.metrics.inserts_applied.fetch_add(1, Ordering::Relaxed);
             }
             UpdateOp::Delete { id } => {
@@ -228,6 +339,9 @@ impl LiveIndex {
     /// Merged top-k over base + delta with tombstones filtered; results
     /// carry **global** ids. Both walks widen by a capped slack so a
     /// burst of deletes cannot silently shrink result sets below k.
+    /// Under the SQ8 tier both walks are quantized with exact re-ranks
+    /// (the base internally, the delta through its apply-time codes), so
+    /// every partial carries exact scores and the merge stays consistent.
     pub fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
         let st = self.state.lock().unwrap();
         let slack = st.tombstones.len().min(TOMBSTONE_SLACK_CAP);
@@ -241,7 +355,20 @@ impl LiveIndex {
             }
         }
         if let Some(g) = &st.delta.graph {
-            for n in g.search(query, kk, ef) {
+            let hits = match st.base.graph.quant_plane() {
+                Some(p) if st.delta.codes_complete() => {
+                    let view = Sq8View {
+                        codec: p.codec(),
+                        codes: &st.delta.codes,
+                        stride: code_stride(self.dim),
+                        corr: &st.delta.corr,
+                        norm: &st.delta.norm,
+                    };
+                    g.search_sq8(view, query, kk, ef, p.refine_for(kk))
+                }
+                _ => g.search(query, kk, ef),
+            };
+            for n in hits {
                 let gid = st.delta.ids[n.id as usize];
                 if !st.tombstones.contains_key(&gid) {
                     partials.push(Neighbor::new(gid, n.score));
@@ -273,6 +400,18 @@ impl LiveIndex {
         }
     }
 
+    /// Build a frozen base over the surviving rows, re-training the SQ8
+    /// codec when this index serves quantized. Takes the gathered rows
+    /// in their final aligned buffer — no copy on the re-freeze path.
+    fn build_base(&self, rows: AlignedF32, params: HnswParams) -> Option<Hnsw> {
+        let ds = Dataset::from_aligned(rows, self.dim).ok()?;
+        if self.quantize {
+            Hnsw::build_sq8(ds, self.metric, params, self.refine_k).ok()
+        } else {
+            Hnsw::build(ds, self.metric, params).ok()
+        }
+    }
+
     /// Compact delta + base into a fresh frozen base and swap it in (see
     /// the module docs for the cut-sequence protocol). Returns true when
     /// a swap happened; false when there was nothing to compact, another
@@ -300,8 +439,9 @@ impl LiveIndex {
             )
         };
         // Build the compacted base outside the lock: queries and updates
-        // keep flowing against the old state meanwhile.
-        let mut rows: Vec<f32> = Vec::new();
+        // keep flowing against the old state meanwhile. Rows gather
+        // straight into the aligned buffer the new base will own.
+        let mut rows = AlignedF32::with_capacity((base.ids.len() + delta_ids.len()) * self.dim);
         let mut ids: Vec<VectorId> = Vec::new();
         for (local, &gid) in base.ids.iter().enumerate() {
             if !tombstones.contains_key(&gid) {
@@ -316,18 +456,17 @@ impl LiveIndex {
                 ids.push(gid);
             }
         }
-        let built = if ids.is_empty() {
-            None
-        } else {
-            Dataset::from_vec(rows, self.dim)
-                .and_then(|ds| Hnsw::build(ds, self.metric, base.graph.params()))
-                .ok()
-        };
+        let built =
+            if ids.is_empty() { None } else { self.build_base(rows, base.graph.params()) };
         let Some(new_graph) = built else {
             self.state.lock().unwrap().freezing = false;
             return false;
         };
-        let new_base = Arc::new(BaseGen::new(Arc::new(new_graph), Arc::new(ids), cut));
+        let new_graph = Arc::new(new_graph);
+        let new_base = Arc::new(BaseGen::new(new_graph.clone(), Arc::new(ids), cut));
+        // Tail rows re-encode under the retrained codec (`new_graph`'s
+        // plane) so the delta's code plane swaps atomically with the
+        // base it scores against.
         // Carry-over, phase 1: snapshot the post-cut tail under the lock
         // and build its graph OUTSIDE it — under sustained ingest the
         // tail (everything applied during the base build) can be large,
@@ -348,12 +487,21 @@ impl LiveIndex {
         };
         let mut tail = Delta::default();
         for (row, &(gid, seq)) in tail_rows.iter().zip(&tail_meta) {
-            tail.push(row, gid, seq, self.metric, self.delta_params, self.dim);
+            tail.push(
+                row,
+                gid,
+                seq,
+                self.metric,
+                self.delta_params,
+                self.dim,
+                new_graph.quant_plane().map(|p| p.codec()),
+            );
         }
         // Carry-over, phase 2 + swap: rows that arrived during the tail
         // build (seq >= cut2) are appended incrementally under the lock —
         // a handful at most, each an O(log n) insert.
-        let mut st = self.state.lock().unwrap();
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
         if let Some(g) = &st.delta.graph {
             for (local, (&gid, &seq)) in st.delta.ids.iter().zip(&st.delta.seqs).enumerate() {
                 if seq >= cut2 {
@@ -364,6 +512,7 @@ impl LiveIndex {
                         self.metric,
                         self.delta_params,
                         self.dim,
+                        new_graph.quant_plane().map(|p| p.codec()),
                     );
                 }
             }
@@ -372,7 +521,13 @@ impl LiveIndex {
         st.delta = tail;
         st.tombstones.retain(|_, s| *s >= cut);
         st.freezing = false;
+        drop(guard);
         self.metrics.refreezes.fetch_add(1, Ordering::Relaxed);
+        // Fire the watermark hook with no internal lock held: it reads
+        // back through base_snapshot()/covered_seq().
+        if let Some(hook) = self.on_refreeze.lock().unwrap().as_ref() {
+            hook();
+        }
         true
     }
 
@@ -417,6 +572,7 @@ impl std::fmt::Debug for LiveIndex {
         let st = self.state.lock().unwrap();
         f.debug_struct("LiveIndex")
             .field("metric", &self.metric)
+            .field("quantized", &self.quantize)
             .field("base", &st.base.graph.len())
             .field("base_covers", &st.base.covered)
             .field("delta", &st.delta.ids.len())
@@ -447,10 +603,23 @@ mod tests {
 
     /// Base over the first `split` rows; the rest streamed as inserts.
     fn split_live(data: &Dataset, metric: Metric, split: usize) -> LiveIndex {
+        split_live_with(data, metric, split, cfg())
+    }
+
+    fn split_live_with(
+        data: &Dataset,
+        metric: Metric,
+        split: usize,
+        cfg: IngestConfig,
+    ) -> LiveIndex {
         let head: Vec<VectorId> = (0..split as u32).collect();
-        let base =
-            Hnsw::build(data.subset(&head), metric, HnswParams::default()).unwrap();
-        let live = LiveIndex::new(Arc::new(base), Arc::new(head), cfg());
+        let base = if cfg.quantize {
+            Hnsw::build_sq8(data.subset(&head), metric, HnswParams::default(), cfg.refine_k)
+                .unwrap()
+        } else {
+            Hnsw::build(data.subset(&head), metric, HnswParams::default()).unwrap()
+        };
+        let live = LiveIndex::new(Arc::new(base), Arc::new(head), cfg);
         for i in split..data.len() {
             live.apply((i - split) as u64, &insert_req(i as u32, data.get(i)));
         }
@@ -504,6 +673,102 @@ mod tests {
             let top = live.search(data.get(i), 1, 60);
             assert_eq!(top[0].id, i as u32, "item {i} not its own top-1");
         }
+    }
+
+    /// SQ8 live tier: streamed inserts encode on apply, search stays
+    /// exact-top-1 through the quantized walks, and a re-freeze
+    /// re-trains the codec over base + delta (the new base is quantized
+    /// and the compacted rows remain searchable).
+    #[test]
+    fn sq8_live_inserts_encode_on_apply_and_refreeze_retrains() {
+        let data = SyntheticSpec::deep_like(900, 16, 23).generate();
+        let qcfg = IngestConfig { quantize: true, ..cfg() };
+        let live = split_live_with(&data, Metric::L2, 700, qcfg);
+        assert!(live.quantized());
+        // Delta codes were built on apply, 1:1 with delta rows.
+        {
+            let st = live.state.lock().unwrap();
+            assert!(st.delta.codes_complete());
+            assert_eq!(st.delta.corr.len(), 200);
+            assert_eq!(st.delta.codes.len(), 200 * code_stride(16));
+            assert!(st.base.graph.is_quantized());
+        }
+        for i in [0usize, 350, 700, 899] {
+            let top = live.search(data.get(i), 1, 80);
+            assert_eq!(top[0].id, i as u32, "item {i} not its own top-1 under SQ8");
+        }
+        // Re-freeze: codec re-trained over the union, delta reset.
+        assert!(live.refreeze());
+        assert_eq!(live.base_len(), 900);
+        assert_eq!(live.delta_len(), 0);
+        let (base, _, covered) = live.base_snapshot();
+        assert!(base.is_quantized(), "re-freeze dropped the SQ8 plane");
+        assert_eq!(covered, 200);
+        assert_eq!(live.covered_seq(), 200);
+        for i in [0usize, 350, 700, 899] {
+            let top = live.search(data.get(i), 1, 80);
+            assert_eq!(top[0].id, i as u32, "item {i} lost after quantized re-freeze");
+        }
+        // Post-swap inserts encode under the retrained codec.
+        live.apply(200, &insert_req(5_000, data.get(0)));
+        let st = live.state.lock().unwrap();
+        assert!(st.delta.codes_complete());
+    }
+
+    /// A quantized base keeps its tier even when the ingest config does
+    /// not ask for quantization (no silent f32 downgrade at re-freeze).
+    #[test]
+    fn quantized_base_keeps_tier_without_config_flag() {
+        let data = SyntheticSpec::deep_like(400, 8, 29).generate();
+        let head: Vec<VectorId> = (0..300).collect();
+        let base =
+            Hnsw::build_sq8(data.subset(&head), Metric::L2, HnswParams::default(), 32).unwrap();
+        let live = LiveIndex::new(Arc::new(base), Arc::new(head), cfg());
+        assert!(live.quantized());
+        for i in 300..400 {
+            live.apply((i - 300) as u64, &insert_req(i as u32, data.get(i)));
+        }
+        assert!(live.refreeze());
+        let (base, _, _) = live.base_snapshot();
+        assert!(base.is_quantized());
+        assert_eq!(
+            base.quant_plane().unwrap().refine_k(),
+            32,
+            "refine budget must survive the re-freeze"
+        );
+    }
+
+    #[test]
+    fn refreeze_hook_fires_after_swap() {
+        let data = SyntheticSpec::deep_like(500, 8, 31).generate();
+        let live = Arc::new(split_live(&data, Metric::L2, 400));
+        let seen = Arc::new(AtomicU64::new(0));
+        let (seen2, live2) = (seen.clone(), live.clone());
+        live.set_on_refreeze(move || {
+            // The hook observes the *new* base already swapped in.
+            seen2.fetch_add(live2.covered_seq(), Ordering::Relaxed);
+        });
+        assert!(live.refreeze());
+        assert_eq!(seen.load(Ordering::Relaxed), 100);
+        // No swap -> no hook.
+        assert!(!live.refreeze());
+        assert_eq!(seen.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn checkpoint_construction_starts_cursor_at_covered() {
+        let data = SyntheticSpec::deep_like(300, 8, 37).generate();
+        let ids: Vec<VectorId> = (0..300).collect();
+        let base = Hnsw::build(data.clone(), Metric::L2, HnswParams::default()).unwrap();
+        let live = LiveIndex::with_checkpoint(Arc::new(base), Arc::new(ids), 40, cfg());
+        assert_eq!(live.applied_seq(), 40);
+        assert_eq!(live.covered_seq(), 40);
+        // Sequences below the checkpoint replay as no-ops.
+        live.apply(10, &insert_req(9_000, data.get(0)));
+        assert_eq!(live.delta_len(), 0);
+        live.apply(40, &insert_req(9_001, data.get(1)));
+        assert_eq!(live.delta_len(), 1);
+        assert_eq!(live.search(data.get(1), 1, 50)[0].id, 9_001);
     }
 
     #[test]

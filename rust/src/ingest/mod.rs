@@ -63,11 +63,26 @@ pub struct IngestConfig {
     /// Max updates an executor applies per poll-loop iteration, so a
     /// replay burst cannot starve query serving.
     pub max_updates_per_poll: usize,
+    /// Serve re-frozen bases through the SQ8 quantized tier: every
+    /// re-freeze **re-trains** the codec over the surviving rows
+    /// (base + delta − tombstones) and encodes the fresh base. A base
+    /// that is already quantized keeps its tier regardless of this flag,
+    /// so a cluster started over a quantized index stays quantized.
+    /// Default **off** (f32 serving, bit-identical to pre-SQ8 behavior).
+    pub quantize: bool,
+    /// Exact re-rank budget for quantized search (0 = auto, 4·k); only
+    /// meaningful with `quantize` (or a quantized base).
+    pub refine_k: usize,
 }
 
 impl Default for IngestConfig {
     fn default() -> Self {
-        IngestConfig { refreeze_threshold: 512, max_updates_per_poll: 256 }
+        IngestConfig {
+            refreeze_threshold: 512,
+            max_updates_per_poll: 256,
+            quantize: false,
+            refine_k: 0,
+        }
     }
 }
 
@@ -263,7 +278,11 @@ mod tests {
             )
             .unwrap();
         }
-        let cfg = IngestConfig { refreeze_threshold: usize::MAX, max_updates_per_poll: 32 };
+        let cfg = IngestConfig {
+            refreeze_threshold: usize::MAX,
+            max_updates_per_poll: 32,
+            ..IngestConfig::default()
+        };
         let live = Arc::new(LiveIndex::new(Arc::new(base), Arc::new(ids), cfg));
         let mut pump = UpdateConsumer::new(&broker, 0, live.clone());
         assert_eq!(pump.pump(), 32);

@@ -48,6 +48,7 @@ pub mod kmeans;
 pub mod meta;
 pub mod metric;
 pub mod partition;
+pub mod quant;
 pub mod registry;
 pub mod runtime;
 pub mod stats;
@@ -68,5 +69,6 @@ pub mod prelude {
     pub use crate::ingest::{IngestConfig, IngestGateway, LiveIndex};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
+    pub use crate::quant::{QuantPlane, Sq8Codec};
     pub use crate::types::{Neighbor, QueryResult, UpdateOp, VectorId};
 }

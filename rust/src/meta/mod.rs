@@ -165,7 +165,10 @@ impl PyramidIndex {
 
         // 6. Sub-HNSW per partition (Alg 3 lines 11-12), parallel across
         // partitions — the distributed workflow builds these on separate
-        // workers.
+        // workers. With `cfg.quantize` each partition additionally trains
+        // its own SQ8 codec over its rows and serves the quantized walk +
+        // exact refine (the per-partition training is what keeps codec
+        // ranges tight — Alg 3's locality does the clustering for us).
         let t0 = Instant::now();
         let members_ref = &members;
         let data_ref = &data;
@@ -174,7 +177,11 @@ impl PyramidIndex {
                 let sub = SubDataset::new(data_ref, members_ref[p].clone());
                 let mut params = cfg.hnsw;
                 params.seed = cfg.seed ^ (0x5B + p as u64);
-                let h = Hnsw::build(sub.local, metric, params)?;
+                let h = if cfg.quantize {
+                    Hnsw::build_sq8(sub.local, metric, params, cfg.refine_k)?
+                } else {
+                    Hnsw::build(sub.local, metric, params)?
+                };
                 Ok((Arc::new(h), Arc::new(sub.global_ids)))
             });
         let mut subs = Vec::with_capacity(w);

@@ -186,7 +186,7 @@ type Kernel = fn(&[f32], &[f32]) -> f32;
 /// push instead of only on non-AVX2/NEON hardware. Memoized once per
 /// process — the kernel choice must never flip mid-run.
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
-fn force_scalar() -> bool {
+pub(crate) fn force_scalar() -> bool {
     static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *FORCE
         .get_or_init(|| std::env::var_os("PYRAMID_FORCE_SCALAR").map(|v| v != "0").unwrap_or(false))

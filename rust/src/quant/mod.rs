@@ -1,0 +1,885 @@
+//! SQ8 scalar quantization: the compressed scoring tier (perf_opt PR 5).
+//!
+//! The HNSW walk is memory-bandwidth bound — every hop streams random f32
+//! rows through the kernels in [`crate::metric`], so the dataset's
+//! resident size, not FLOPs, caps throughput and the per-machine
+//! partition size. This module shrinks the walk's working set 4× by
+//! scoring over 1-byte codes and leaves exactness to a bounded re-rank:
+//!
+//! * [`Sq8Codec`] — a **per-dimension min/max affine codec** trained on a
+//!   partition's rows: per-dimension offsets `lo_j = min_j` with one
+//!   shared step `s = max_j(max_j − min_j) / 255`, so `x_j ≈ lo_j + s·c_j`
+//!   with `c_j ∈ [0, 255]`. The step is shared across dimensions (uniform
+//!   absolute resolution — the right trade for distances, where
+//!   wide-range dimensions dominate) because that is what lets the
+//!   distance algebra factor into *pure integer* dot products:
+//!   queries are encoded through the same codec once per search, and
+//!
+//!   - `‖q̂ − x̂‖² = s² · Σ (d_j − c_j)²` (offsets cancel — one integer L2),
+//!   - `q̂·x̂ = Σlo² + s·(Σlo_j·d_j + Σlo_j·c_j) + s² · Σ d_j·c_j`, where
+//!     `Σlo_j·c_j` is precomputed per row at encode time,
+//!   - cosine divides the reconstructed dot by precomputed decoded norms.
+//!
+//! * Integer kernels ([`idot`], [`il2`]) — runtime-dispatched AVX2
+//!   (`cvtepu8_epi16` + `madd_epi16`: the `maddubs`/VNNI-free shape that
+//!   is fast on every AVX2 part and fully stable-toolchain), NEON
+//!   (`vmull_u8` + `vpadal`), and a 16-lane unrolled scalar fallback —
+//!   behind the same probe-once dispatch and `PYRAMID_FORCE_SCALAR` pin
+//!   as the f32 tier. Integer arithmetic is exact, so all three tiers
+//!   return **identical** values (pinned bitwise by the tests below),
+//!   and the only approximation anywhere is the codec itself.
+//!
+//! * [`QuantPlane`] — the codes for a frozen graph's rows, laid out
+//!   beside the CSR in fixed-stride 32-byte-aligned blocks (stride =
+//!   `d` rounded up to 32), so the walk's block addressing and software
+//!   prefetch carry over from the f32 plane unchanged. Per-row `Σlo·c`
+//!   and decoded-norm correction floats ride along (8 bytes/row).
+//!
+//! Quantized search drives the *walk* with approximate scores and then
+//! re-ranks the best `refine_k` beam entries with the exact f32 kernels
+//! (the rows are retained), so recall impact is bounded by beam ordering
+//! only — see [`crate::hnsw`] for the walk integration.
+
+use crate::dataset::Dataset;
+use crate::metric::Metric;
+use crate::util::aligned::AlignedU8;
+
+/// Code rows are padded to this many bytes so every row starts on a
+/// 32-byte boundary of the (32-byte-aligned) plane.
+pub const CODE_ALIGN: usize = 32;
+
+/// Fixed code-row stride for dimension `d`: `d` rounded up to 32 bytes.
+#[inline]
+pub fn code_stride(d: usize) -> usize {
+    d.div_ceil(CODE_ALIGN) * CODE_ALIGN
+}
+
+// ---------------------------------------------------------------------------
+// Integer kernels
+// ---------------------------------------------------------------------------
+
+/// A u8×u8 reduction kernel (dot or squared L2 over code vectors).
+type IKernel = fn(&[u8], &[u8]) -> u32;
+
+/// Pick the integer dot kernel once (see [`crate::metric`]'s dispatch —
+/// same probe, same `PYRAMID_FORCE_SCALAR` pin, memoized by std).
+#[inline]
+fn idot_kernel() -> IKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !crate::metric::force_scalar() && std::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just verified at runtime.
+            return |a, b| unsafe { x86::idot_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if !crate::metric::force_scalar() && std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence just verified at runtime.
+            return |a, b| unsafe { neon::idot_neon(a, b) };
+        }
+    }
+    idot_unrolled
+}
+
+/// Pick the integer squared-L2 kernel once (see [`idot_kernel`]).
+#[inline]
+fn il2_kernel() -> IKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !crate::metric::force_scalar() && std::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just verified at runtime.
+            return |a, b| unsafe { x86::il2_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if !crate::metric::force_scalar() && std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence just verified at runtime.
+            return |a, b| unsafe { neon::il2_neon(a, b) };
+        }
+    }
+    il2_unrolled
+}
+
+/// Integer dot product of two code vectors, runtime-dispatched. Exact —
+/// every tier returns the same value.
+#[inline]
+pub fn idot(a: &[u8], b: &[u8]) -> u32 {
+    idot_kernel()(a, b)
+}
+
+/// Integer squared L2 distance of two code vectors, runtime-dispatched.
+#[inline]
+pub fn il2(a: &[u8], b: &[u8]) -> u32 {
+    il2_kernel()(a, b)
+}
+
+/// Portable integer dot: 16 u32 accumulator lanes over `chunks_exact`,
+/// auto-vectorizable. Oracle for the SIMD tiers (which must match it
+/// bit-for-bit — integer arithmetic has no reassociation error).
+#[inline]
+pub fn idot_unrolled(a: &[u8], b: &[u8]) -> u32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0u32; 16];
+    let ca = a[..n].chunks_exact(16);
+    let cb = b[..n].chunks_exact(16);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        for l in 0..16 {
+            acc[l] += x[l] as u32 * y[l] as u32;
+        }
+    }
+    let mut s: u32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        s += *x as u32 * *y as u32;
+    }
+    s
+}
+
+/// Portable integer squared L2 (see [`idot_unrolled`]).
+#[inline]
+pub fn il2_unrolled(a: &[u8], b: &[u8]) -> u32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0u32; 16];
+    let ca = a[..n].chunks_exact(16);
+    let cb = b[..n].chunks_exact(16);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        for l in 0..16 {
+            let d = x[l] as i32 - y[l] as i32;
+            acc[l] += (d * d) as u32;
+        }
+    }
+    let mut s: u32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        let d = *x as i32 - *y as i32;
+        s += (d * d) as u32;
+    }
+    s
+}
+
+/// AVX2 integer kernels. Codes are zero-extended u8→i16
+/// (`cvtepu8_epi16`) and reduced with `madd_epi16` — 16 bytes per step,
+/// i32 accumulator lanes. Each madd lane sums two products ≤ 255² so a
+/// lane saturates only past ~260k dims; realistic dims are ≤ 4096.
+/// No `maddubs` (whose i8 operand would force an offset dance) and no
+/// AVX-512/VNNI (not on stable), per the dispatch contract in the module
+/// docs.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    #[inline]
+    unsafe fn hsum_epi32(v: __m256i) -> u32 {
+        let q = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let h = _mm_add_epi32(q, _mm_unpackhi_epi64(q, q));
+        let s = _mm_add_epi32(h, _mm_shuffle_epi32::<0x55>(h));
+        _mm_cvtsi128_si32(s) as u32
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn idot_avx2(a: &[u8], b: &[u8]) -> u32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm256_cvtepu8_epi16(_mm_loadu_si128(pa.add(i) as *const __m128i));
+            let vb = _mm256_cvtepu8_epi16(_mm_loadu_si128(pb.add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+            i += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while i < n {
+            sum += *pa.add(i) as u32 * *pb.add(i) as u32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn il2_avx2(a: &[u8], b: &[u8]) -> u32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm256_cvtepu8_epi16(_mm_loadu_si128(pa.add(i) as *const __m128i));
+            let vb = _mm256_cvtepu8_epi16(_mm_loadu_si128(pb.add(i) as *const __m128i));
+            let d = _mm256_sub_epi16(va, vb); // ±255 fits i16
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(d, d));
+            i += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while i < n {
+            let d = *pa.add(i) as i32 - *pb.add(i) as i32;
+            sum += (d * d) as u32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// NEON integer kernels: widening `vmull_u8` products folded pairwise
+/// into u32 lanes with `vpadalq_u16` — 8 bytes per step, same exactness
+/// contract as the AVX2 tier.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn idot_neon(a: &[u8], b: &[u8]) -> u32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_u32(0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = vmull_u8(vld1_u8(pa.add(i)), vld1_u8(pb.add(i))); // u16x8
+            acc = vpadalq_u16(acc, prod);
+            i += 8;
+        }
+        let mut sum = vaddvq_u32(acc);
+        while i < n {
+            sum += *pa.add(i) as u32 * *pb.add(i) as u32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn il2_neon(a: &[u8], b: &[u8]) -> u32 {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_u32(0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = vabd_u8(vld1_u8(pa.add(i)), vld1_u8(pb.add(i))); // |a-b| u8x8
+            acc = vpadalq_u16(acc, vmull_u8(d, d));
+            i += 8;
+        }
+        let mut sum = vaddvq_u32(acc);
+        while i < n {
+            let d = *pa.add(i) as i32 - *pb.add(i) as i32;
+            sum += (d * d) as u32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// Per-dimension min/max affine SQ8 codec (see the module docs for why
+/// the step is shared across dimensions).
+#[derive(Debug, Clone)]
+pub struct Sq8Codec {
+    /// Per-dimension offset (trained minimum).
+    lo: Vec<f32>,
+    /// Per-dimension trained maximum (kept for introspection/round-trip
+    /// error accounting; decode only needs `lo` and `step`).
+    hi: Vec<f32>,
+    /// Shared quantization step (`> 0`; 1.0 for a degenerate range so
+    /// decode stays exact at `lo`).
+    step: f32,
+    inv_step: f32,
+    /// `Σ lo_j²` — the constant term of the reconstructed inner product.
+    lo_sq: f32,
+}
+
+/// A query encoded through a codec, with its hoisted per-query
+/// correction terms — computed once per search, reused for every
+/// candidate block.
+#[derive(Debug, Clone)]
+pub struct Sq8Query {
+    pub codes: Vec<u8>,
+    /// `Σ lo_j · d_j` over the query's codes.
+    pub corr: f32,
+    /// Decoded-query Euclidean norm (Angular denominator).
+    pub norm: f32,
+}
+
+impl Sq8Codec {
+    /// Train over an iterator of rows (all of length `d`). Empty input
+    /// yields a degenerate codec that encodes everything to 0 and
+    /// decodes to 0.0.
+    pub fn train<'a, I>(rows: I, d: usize) -> Sq8Codec
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        let mut any = false;
+        for row in rows {
+            any = true;
+            for j in 0..d {
+                let v = row[j];
+                if v < lo[j] {
+                    lo[j] = v;
+                }
+                if v > hi[j] {
+                    hi[j] = v;
+                }
+            }
+        }
+        if !any {
+            lo.iter_mut().for_each(|v| *v = 0.0);
+            hi.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let max_range = lo.iter().zip(&hi).map(|(l, h)| h - l).fold(0.0f32, f32::max);
+        let step = if max_range > 0.0 { max_range / 255.0 } else { 1.0 };
+        let lo_sq = lo.iter().map(|&v| v as f64 * v as f64).sum::<f64>() as f32;
+        Sq8Codec { lo, hi, step, inv_step: 1.0 / step, lo_sq }
+    }
+
+    /// Train over every row of a dataset.
+    pub fn train_dataset(data: &Dataset) -> Sq8Codec {
+        Sq8Codec::train(data.iter(), data.dim())
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Shared quantization step — the worst-case per-dimension
+    /// reconstruction error for in-range values is `step / 2`.
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    /// Trained per-dimension range (introspection).
+    pub fn range(&self, j: usize) -> (f32, f32) {
+        (self.lo[j], self.hi[j])
+    }
+
+    /// Encode one row into `codes` (length >= `dim`; padding bytes past
+    /// `dim` are left untouched). Returns the per-row correction pair
+    /// `(Σ lo_j·c_j, decoded-row norm)`.
+    pub fn encode_into(&self, row: &[f32], codes: &mut [u8]) -> (f32, f32) {
+        let d = self.dim();
+        debug_assert_eq!(row.len(), d);
+        let mut corr = 0.0f64;
+        let mut csq = 0u64;
+        for j in 0..d {
+            let t = (row[j] - self.lo[j]) * self.inv_step;
+            let c = t.round().clamp(0.0, 255.0) as u8;
+            codes[j] = c;
+            corr += self.lo[j] as f64 * c as f64;
+            csq += c as u64 * c as u64;
+        }
+        let corr = corr as f32;
+        let norm_sq = self.lo_sq as f64
+            + 2.0 * self.step as f64 * corr as f64
+            + (self.step as f64 * self.step as f64) * csq as f64;
+        (corr, norm_sq.max(0.0).sqrt() as f32)
+    }
+
+    /// Decode codes back to f32 (`x̂_j = lo_j + step·c_j`).
+    pub fn decode_into(&self, codes: &[u8], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            self.lo.iter().zip(codes).map(|(&l, &c)| l + self.step * c as f32),
+        );
+    }
+
+    /// Encode a query once per search (same transform as rows; values
+    /// outside the trained range clamp, which the exact re-rank absorbs).
+    pub fn prepare_query(&self, q: &[f32]) -> Sq8Query {
+        let mut codes = vec![0u8; self.dim()];
+        let (corr, norm) = self.encode_into(q, &mut codes);
+        Sq8Query { codes, corr, norm }
+    }
+
+    /// Reconstructed score of a code row against a prepared query —
+    /// the scalar form of the block path in [`Sq8View::score_ids`],
+    /// identical arithmetic.
+    #[inline]
+    pub fn score_codes(
+        &self,
+        metric: Metric,
+        q: &Sq8Query,
+        row: &[u8],
+        row_corr: f32,
+        row_norm: f32,
+    ) -> f32 {
+        match metric {
+            Metric::L2 => -(self.step * self.step * il2(&q.codes, row) as f32),
+            Metric::Ip => self.recon_dot(q, row, row_corr),
+            Metric::Angular => {
+                let d0 = self.recon_dot(q, row, row_corr);
+                if q.norm <= 1e-12 || row_norm <= 1e-12 {
+                    0.0
+                } else {
+                    d0 / (q.norm * row_norm)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn recon_dot(&self, q: &Sq8Query, row: &[u8], row_corr: f32) -> f32 {
+        self.lo_sq
+            + self.step * (q.corr + row_corr)
+            + self.step * self.step * idot(&q.codes, row) as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Code plane + borrowed view
+// ---------------------------------------------------------------------------
+
+/// Borrowed view over a set of code rows + their corrections — the form
+/// the graph walk scores through. Both the frozen plane
+/// ([`QuantPlane::view`]) and the live delta's code buffer produce one.
+#[derive(Clone, Copy)]
+pub struct Sq8View<'a> {
+    pub codec: &'a Sq8Codec,
+    /// Fixed-stride code rows (`stride` bytes per row).
+    pub codes: &'a [u8],
+    pub stride: usize,
+    /// Per-row `Σ lo_j·c_j`.
+    pub corr: &'a [f32],
+    /// Per-row decoded norm.
+    pub norm: &'a [f32],
+}
+
+impl<'a> Sq8View<'a> {
+    /// Code row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [u8] {
+        &self.codes[i * self.stride..i * self.stride + self.codec.dim()]
+    }
+
+    /// Rows in the view.
+    pub fn len(&self) -> usize {
+        if self.stride == 0 {
+            0
+        } else {
+            self.codes.len() / self.stride
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Software-prefetch code row `i` (one cache line covers a whole
+    /// d≤64 row — a quarter of the f32 plane's footprint per hop).
+    #[inline(always)]
+    pub fn prefetch(&self, i: usize) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: prefetch has no memory effects; any address is allowed.
+        unsafe {
+            use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch::<_MM_HINT_T0>(self.codes.as_ptr().add(i * self.stride) as *const i8);
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = i;
+    }
+
+    /// Score one row (see [`Sq8Codec::score_codes`]).
+    #[inline]
+    pub fn score(&self, metric: Metric, q: &Sq8Query, i: usize) -> f32 {
+        self.codec.score_codes(metric, q, self.row(i), self.corr[i], self.norm[i])
+    }
+
+    /// Score a gathered id block in one pass: the integer kernel is
+    /// dispatched once and the per-query corrections are already hoisted
+    /// inside `q` — the SQ8 mirror of [`Metric::score_rows`].
+    pub fn score_ids(&self, metric: Metric, q: &Sq8Query, ids: &[u32], out: &mut Vec<f32>) {
+        out.clear();
+        let c = self.codec;
+        match metric {
+            Metric::L2 => {
+                let k = il2_kernel();
+                let s2 = c.step * c.step;
+                for &v in ids {
+                    out.push(-(s2 * k(&q.codes, self.row(v as usize)) as f32));
+                }
+            }
+            Metric::Ip => {
+                let k = idot_kernel();
+                let s2 = c.step * c.step;
+                for &v in ids {
+                    let i = v as usize;
+                    out.push(
+                        c.lo_sq
+                            + c.step * (q.corr + self.corr[i])
+                            + s2 * k(&q.codes, self.row(i)) as f32,
+                    );
+                }
+            }
+            Metric::Angular => {
+                let k = idot_kernel();
+                let s2 = c.step * c.step;
+                for &v in ids {
+                    let i = v as usize;
+                    let d0 = c.lo_sq
+                        + c.step * (q.corr + self.corr[i])
+                        + s2 * k(&q.codes, self.row(i)) as f32;
+                    let rn = self.norm[i];
+                    out.push(if q.norm <= 1e-12 || rn <= 1e-12 { 0.0 } else { d0 / (q.norm * rn) });
+                }
+            }
+        }
+    }
+}
+
+/// The owned SQ8 plane of a frozen graph: trained codec + every row's
+/// codes in 32-byte-aligned fixed-stride blocks, plus the per-row
+/// correction floats and the re-rank budget.
+#[derive(Debug, Clone)]
+pub struct QuantPlane {
+    codec: Sq8Codec,
+    codes: AlignedU8,
+    stride: usize,
+    corr: Vec<f32>,
+    norm: Vec<f32>,
+    /// Exact re-rank budget: how many of the best beam entries are
+    /// re-scored with the f32 kernels after the quantized walk. 0 = auto
+    /// (4·k at query time). Clamped to ≥ k at use.
+    refine_k: usize,
+}
+
+impl QuantPlane {
+    /// Train a codec on `data` and encode every row.
+    pub fn encode_dataset(data: &Dataset, refine_k: usize) -> QuantPlane {
+        let codec = Sq8Codec::train_dataset(data);
+        let d = data.dim();
+        let stride = code_stride(d);
+        let mut codes = AlignedU8::with_capacity(data.len() * stride);
+        let mut corr = Vec::with_capacity(data.len());
+        let mut norm = Vec::with_capacity(data.len());
+        let mut rowbuf = vec![0u8; stride];
+        for row in data.iter() {
+            rowbuf[d..].iter_mut().for_each(|b| *b = 0);
+            let (c, n) = codec.encode_into(row, &mut rowbuf);
+            codes.extend_from_slice(&rowbuf);
+            corr.push(c);
+            norm.push(n);
+        }
+        QuantPlane { codec, codes, stride, corr, norm, refine_k }
+    }
+
+    pub fn codec(&self) -> &Sq8Codec {
+        &self.codec
+    }
+
+    pub fn len(&self) -> usize {
+        self.corr.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.corr.is_empty()
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Raw code bytes (tests assert the 32-byte alignment contract).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// The raw configured re-rank budget (0 = auto) — what a re-freeze
+    /// carries into the next plane.
+    pub fn refine_k(&self) -> usize {
+        self.refine_k
+    }
+
+    /// Configured re-rank budget for `k` results: the stored `refine_k`
+    /// (auto → 4·k), never below `k`.
+    pub fn refine_for(&self, k: usize) -> usize {
+        let base = if self.refine_k == 0 { 4 * k } else { self.refine_k };
+        base.max(k)
+    }
+
+    /// Plane memory footprint: codes + correction floats.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + (self.corr.len() + self.norm.len()) * std::mem::size_of::<f32>()
+    }
+
+    pub fn view(&self) -> Sq8View<'_> {
+        Sq8View {
+            codec: &self.codec,
+            codes: &self.codes,
+            stride: self.stride,
+            corr: &self.corr,
+            norm: &self.norm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    fn naive_idot(a: &[u8], b: &[u8]) -> u32 {
+        a.iter().zip(b).map(|(&x, &y)| x as u32 * y as u32).sum()
+    }
+
+    fn naive_il2(a: &[u8], b: &[u8]) -> u32 {
+        a.iter().zip(b).map(|(&x, &y)| (x as i32 - y as i32).pow(2) as u32).sum()
+    }
+
+    #[test]
+    fn integer_kernels_match_naive_all_lengths() {
+        // Cover every tail class of the 16-byte SIMD step and the 16-lane
+        // scalar unroll, including non-multiples of 32 (satellite).
+        for n in 0..70usize {
+            let a: Vec<u8> = (0..n).map(|i| (i * 37 + 11) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|i| (i * 101 + 3) as u8).collect();
+            assert_eq!(idot_unrolled(&a, &b), naive_idot(&a, &b), "idot_unrolled n={n}");
+            assert_eq!(il2_unrolled(&a, &b), naive_il2(&a, &b), "il2_unrolled n={n}");
+            // Dispatched tiers are exact integer arithmetic: identical.
+            assert_eq!(idot(&a, &b), naive_idot(&a, &b), "idot n={n}");
+            assert_eq!(il2(&a, &b), naive_il2(&a, &b), "il2 n={n}");
+        }
+    }
+
+    #[test]
+    fn integer_kernels_saturated_inputs() {
+        let a = vec![255u8; 67];
+        let b = vec![255u8; 67];
+        assert_eq!(idot(&a, &b), 255 * 255 * 67);
+        assert_eq!(il2(&a, &b), 0);
+        let z = vec![0u8; 67];
+        assert_eq!(il2(&a, &z), 255 * 255 * 67);
+    }
+
+    /// Mirror of the f32 tier's pin: under `PYRAMID_FORCE_SCALAR=1` the
+    /// dispatched kernels must be the portable forms. Integer kernels
+    /// are exact in every tier, so equality must hold bitwise regardless
+    /// — this documents that the env pin also governs this dispatch.
+    #[test]
+    fn force_scalar_env_pins_integer_dispatch() {
+        for n in [7usize, 16, 33, 96, 131] {
+            let a: Vec<u8> = (0..n).map(|i| (i * 7) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|i| (255 - i * 3) as u8).collect();
+            assert_eq!(idot(&a, &b), idot_unrolled(&a, &b), "idot n={n}");
+            assert_eq!(il2(&a, &b), il2_unrolled(&a, &b), "il2 n={n}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_error_within_half_step() {
+        crate::util::quickcheck::check(100, |g| {
+            let d = g.usize_in(1, 131); // non-multiples of 32 included
+            let rows: Vec<Vec<f32>> = (0..g.usize_in(2, 20)).map(|_| g.vec_f32(d)).collect();
+            let codec = Sq8Codec::train(rows.iter().map(|r| r.as_slice()), d);
+            let bound = 0.5 * codec.step() + 1e-5;
+            let mut codes = vec![0u8; d];
+            let mut back = Vec::new();
+            for (ri, row) in rows.iter().enumerate() {
+                codec.encode_into(row, &mut codes);
+                codec.decode_into(&codes, &mut back);
+                for j in 0..d {
+                    let err = (row[j] - back[j]).abs();
+                    if err > bound {
+                        return Err(format!(
+                            "row {ri} dim {j}: |{} - {}| = {err} > step/2 = {bound}",
+                            row[j], back[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_constant_dataset_decodes_exactly() {
+        let rows = vec![vec![3.5f32, -1.0, 0.0]; 4];
+        let codec = Sq8Codec::train(rows.iter().map(|r| r.as_slice()), 3);
+        assert_eq!(codec.step(), 1.0);
+        let mut codes = vec![0u8; 3];
+        codec.encode_into(&rows[0], &mut codes);
+        assert_eq!(codes, vec![0, 0, 0]);
+        let mut back = Vec::new();
+        codec.decode_into(&codes, &mut back);
+        assert_eq!(back, rows[0]);
+    }
+
+    /// Satellite acceptance: quantized kernel scores equal scoring the
+    /// *dequantized* vectors with the scalar f32 kernels, up to float
+    /// rounding, and equal scoring the originals within the codec's own
+    /// error bound — on non-multiple-of-32 dims, for all three metrics.
+    /// (The same property runs under `PYRAMID_FORCE_SCALAR=1` in CI's
+    /// scalar-fallback job, covering both dispatch tiers, and compiles
+    /// for both the AVX2 and NEON architectures.)
+    #[test]
+    fn quantized_score_matches_dequantized_scalar_and_error_bound() {
+        crate::util::quickcheck::check(150, |g| {
+            let d = g.usize_in(1, 100);
+            let n = g.usize_in(2, 12);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d)).collect();
+            let q = g.vec_f32(d);
+            let metric = *g.choose(&[Metric::L2, Metric::Angular, Metric::Ip]);
+            let codec = Sq8Codec::train(rows.iter().map(|r| r.as_slice()), d);
+            let pq = codec.prepare_query(&q);
+            let mut qhat = Vec::new();
+            codec.decode_into(&pq.codes, &mut qhat);
+            let mut codes = vec![0u8; d];
+            let mut xhat = Vec::new();
+            for (ri, row) in rows.iter().enumerate() {
+                let (corr, norm) = codec.encode_into(row, &mut codes);
+                let got = codec.score_codes(metric, &pq, &codes, corr, norm);
+                codec.decode_into(&codes, &mut xhat);
+                // (a) identical to scoring the decoded vectors exactly,
+                // up to f32 rounding of the factored algebra.
+                let want = metric.score(&qhat, &xhat);
+                let tol = 2e-3 * (1.0 + want.abs());
+                if (got - want).abs() > tol {
+                    return Err(format!(
+                        "{metric} row {ri} d={d}: quant {got} vs dequantized-scalar {want}"
+                    ));
+                }
+                // (b) within the codec's error bound of the exact score,
+                // computed from the actual reconstruction errors.
+                let exact = metric.score(&q, row);
+                let bound = score_error_bound(metric, &codec, &q, &qhat, row, &xhat);
+                if (got - exact).abs() > bound {
+                    return Err(format!(
+                        "{metric} row {ri} d={d}: quant {got} vs exact {exact} \
+                         beyond codec bound {bound}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Instance-wise error bound for a quantized score: propagate the
+    /// actual per-vector reconstruction errors through each metric's
+    /// algebra, plus float-rounding slack.
+    fn score_error_bound(
+        metric: Metric,
+        codec: &Sq8Codec,
+        q: &[f32],
+        qhat: &[f32],
+        x: &[f32],
+        xhat: &[f32],
+    ) -> f32 {
+        let l2 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(u, v)| (u - v) * (u - v)).sum::<f32>().sqrt()
+        };
+        let nrm = |a: &[f32]| -> f32 { a.iter().map(|v| v * v).sum::<f32>().sqrt() };
+        let eq = l2(q, qhat);
+        let ex = l2(x, xhat);
+        let slack = 1e-3 * (1.0 + nrm(q) * nrm(x)) + 1e-4;
+        match metric {
+            Metric::L2 => {
+                // | ||q-x||² - ||q̂-x̂||² | <= (e_q+e_x)·(||q-x|| + ||q̂-x̂||).
+                let del = eq + ex;
+                del * (l2(q, x) + l2(qhat, xhat)) + slack
+            }
+            Metric::Ip => {
+                // |q·x - q̂·x̂| <= e_x·||q|| + e_q·||x̂||.
+                ex * nrm(q) + eq * nrm(xhat) + slack
+            }
+            Metric::Angular => {
+                // Cosine is bounded by the angle perturbations of each
+                // side: |Δcos| <= e_q/||q|| + e_x/||x|| (+ guard slack).
+                let (nq, nx) = (nrm(q), nrm(x));
+                if nq <= 1e-6 || nx <= 1e-6 {
+                    2.0 + slack // degenerate: cosine guard returns 0
+                } else {
+                    2.0 * (eq / nq + ex / nx) + slack
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_ids_block_matches_scalar_score_codes() {
+        let data = SyntheticSpec::deep_like(200, 24, 9).generate();
+        let plane = QuantPlane::encode_dataset(&data, 0);
+        let view = plane.view();
+        let q = plane.codec().prepare_query(data.get(7));
+        let ids: Vec<u32> = (0..200).step_by(3).collect();
+        for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+            let mut block = Vec::new();
+            view.score_ids(metric, &q, &ids, &mut block);
+            assert_eq!(block.len(), ids.len());
+            for (j, &v) in ids.iter().enumerate() {
+                let want = view.score(metric, &q, v as usize);
+                assert_eq!(
+                    block[j].to_bits(),
+                    want.to_bits(),
+                    "{metric} id {v}: block path diverges from scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plane_layout_aligned_and_4x_smaller() {
+        let d = 96usize;
+        let data = SyntheticSpec::deep_like(512, d, 5).generate();
+        let plane = QuantPlane::encode_dataset(&data, 0);
+        // Base pointer and every row 32-byte aligned; stride padded.
+        assert_eq!(plane.codes().as_ptr() as usize % 32, 0);
+        assert_eq!(plane.stride() % CODE_ALIGN, 0);
+        assert_eq!(plane.stride(), 96);
+        for i in [0usize, 1, 17, 511] {
+            assert_eq!(plane.view().row(i).as_ptr() as usize % 32, 0, "row {i} misaligned");
+        }
+        // Acceptance: the code plane is ~4x smaller than the f32 rows.
+        let f32_bytes = data.len() * d * 4;
+        let ratio = f32_bytes as f64 / plane.bytes() as f64;
+        assert!(ratio >= 3.0, "plane only {ratio:.2}x smaller ({} bytes)", plane.bytes());
+    }
+
+    #[test]
+    fn refine_budget_clamps() {
+        let data = SyntheticSpec::deep_like(32, 8, 3).generate();
+        let auto = QuantPlane::encode_dataset(&data, 0);
+        assert_eq!(auto.refine_for(10), 40);
+        let fixed = QuantPlane::encode_dataset(&data, 64);
+        assert_eq!(fixed.refine_for(10), 64);
+        assert_eq!(fixed.refine_for(100), 100, "refine_k must never drop below k");
+    }
+
+    #[test]
+    fn exact_top1_survives_quantized_scoring() {
+        // Self-queries: the quantized tier must rank each row's own code
+        // first (or tie) among all rows for L2 — a coarse sanity check
+        // that the algebra is wired right end to end.
+        let data = SyntheticSpec::deep_like(300, 16, 31).generate();
+        let plane = QuantPlane::encode_dataset(&data, 0);
+        let view = plane.view();
+        let ids: Vec<u32> = (0..data.len() as u32).collect();
+        let mut scores = Vec::new();
+        for probe in [0usize, 42, 299] {
+            let q = plane.codec().prepare_query(data.get(probe));
+            view.score_ids(Metric::L2, &q, &ids, &mut scores);
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            assert_eq!(
+                scores[best].to_bits(),
+                scores[probe].to_bits(),
+                "probe {probe}: own code not maximal"
+            );
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! 32-byte-aligned growable buffers for the SIMD scoring planes.
+//!
+//! `Vec<f32>` only guarantees 4-byte alignment and `Vec<u8>` a single
+//! byte, so a 256-bit load of a row can straddle two cache lines
+//! depending on where the allocator happened to place the buffer. These
+//! wrappers store the payload in `#[repr(align(32))]` lanes — the
+//! allocator must then hand back a 32-byte-aligned base pointer — and
+//! expose the contents as ordinary `&[f32]` / `&[u8]` slices via `Deref`,
+//! so call sites index and iterate exactly as they would a `Vec`.
+//!
+//! The [`crate::dataset::Dataset`] f32 row store and the SQ8 code plane
+//! ([`crate::quant::QuantPlane`]) both allocate through these; the code
+//! plane additionally pads its row stride to 32 bytes so *every* row (not
+//! just the buffer base) starts on an aligned boundary.
+
+use std::ops::{Deref, DerefMut};
+
+/// One 32-byte f32 lane; the alignment carrier for [`AlignedF32`].
+#[repr(C, align(32))]
+#[derive(Debug, Clone, Copy)]
+struct LaneF32([f32; 8]);
+
+/// One 32-byte u8 lane; the alignment carrier for [`AlignedU8`].
+#[repr(C, align(32))]
+#[derive(Debug, Clone, Copy)]
+struct LaneU8([u8; 32]);
+
+/// Growable `f32` buffer whose base pointer is always 32-byte aligned.
+#[derive(Debug, Clone, Default)]
+pub struct AlignedF32 {
+    lanes: Vec<LaneF32>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub fn new() -> Self {
+        AlignedF32::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        AlignedF32 { lanes: Vec::with_capacity(n.div_ceil(8)), len: 0 }
+    }
+
+    /// Copy an unaligned `Vec` into an aligned buffer.
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        let mut b = AlignedF32::with_capacity(v.len());
+        b.extend_from_slice(&v);
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `LaneF32` is `repr(C, align(32))` over `[f32; 8]` (no
+        // padding), so the lane storage is a contiguous run of
+        // `lanes.len() * 8` valid f32s; `len` never exceeds that.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr() as *const f32, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: see `as_slice`; unique access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr() as *mut f32, self.len) }
+    }
+
+    pub fn extend_from_slice(&mut self, s: &[f32]) {
+        let need = self.len + s.len();
+        let lanes = need.div_ceil(8);
+        if lanes > self.lanes.len() {
+            self.lanes.resize(lanes, LaneF32([0.0; 8]));
+        }
+        // SAFETY: lane storage now covers `lanes * 8 >= need` f32 slots.
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr() as *mut f32, lanes * 8) };
+        dst[self.len..need].copy_from_slice(s);
+        self.len = need;
+    }
+}
+
+impl Deref for AlignedF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+/// Growable byte buffer whose base pointer is always 32-byte aligned —
+/// the SQ8 code plane's storage.
+#[derive(Debug, Clone, Default)]
+pub struct AlignedU8 {
+    lanes: Vec<LaneU8>,
+    len: usize,
+}
+
+impl AlignedU8 {
+    pub fn new() -> Self {
+        AlignedU8::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        AlignedU8 { lanes: Vec::with_capacity(n.div_ceil(32)), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `LaneU8` is `repr(C, align(32))` over `[u8; 32]` (no
+        // padding): contiguous `lanes.len() * 32` valid bytes, `len`
+        // never exceeds that.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr() as *const u8, self.len) }
+    }
+
+    pub fn extend_from_slice(&mut self, s: &[u8]) {
+        let need = self.len + s.len();
+        let lanes = need.div_ceil(32);
+        if lanes > self.lanes.len() {
+            self.lanes.resize(lanes, LaneU8([0u8; 32]));
+        }
+        // SAFETY: lane storage now covers `lanes * 32 >= need` bytes.
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr() as *mut u8, lanes * 32) };
+        dst[self.len..need].copy_from_slice(s);
+        self.len = need;
+    }
+}
+
+impl Deref for AlignedU8 {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_buffer_base_is_32_byte_aligned() {
+        for n in [0usize, 1, 7, 8, 9, 96, 1000] {
+            let b = AlignedF32::from_vec((0..n).map(|i| i as f32).collect());
+            assert_eq!(b.as_ptr() as usize % 32, 0, "n={n} base misaligned");
+            assert_eq!(b.len(), n);
+            for (i, &v) in b.iter().enumerate() {
+                assert_eq!(v, i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn u8_buffer_base_is_32_byte_aligned() {
+        for n in [0usize, 1, 31, 32, 33, 97] {
+            let mut b = AlignedU8::new();
+            b.extend_from_slice(&(0..n).map(|i| i as u8).collect::<Vec<_>>());
+            assert_eq!(b.as_ptr() as usize % 32, 0, "n={n} base misaligned");
+            assert_eq!(b.len(), n);
+            assert!(b.iter().enumerate().all(|(i, &v)| v == i as u8));
+        }
+    }
+
+    #[test]
+    fn extend_grows_and_preserves_alignment_and_content() {
+        let mut b = AlignedF32::new();
+        for chunk in 0..50 {
+            let s: Vec<f32> = (0..7).map(|i| (chunk * 7 + i) as f32).collect();
+            b.extend_from_slice(&s);
+            assert_eq!(b.as_ptr() as usize % 32, 0, "misaligned after chunk {chunk}");
+        }
+        assert_eq!(b.len(), 350);
+        assert!(b.iter().enumerate().all(|(i, &v)| v == i as f32));
+        // Clones keep the alignment too (fresh lane allocation).
+        let c = b.clone();
+        assert_eq!(c.as_ptr() as usize % 32, 0);
+        assert_eq!(&c[..], &b[..]);
+    }
+
+    #[test]
+    fn mutation_through_deref_mut() {
+        let mut b = AlignedF32::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        for row in b.chunks_exact_mut(2) {
+            row[0] += 10.0;
+        }
+        assert_eq!(&b[..], &[11.0, 2.0, 13.0, 4.0]);
+    }
+}

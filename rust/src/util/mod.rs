@@ -5,6 +5,7 @@
 //! available. Everything the system needs from them is implemented here as
 //! small, tested substrates:
 //!
+//! * [`aligned`] — 32-byte-aligned growable buffers (SIMD row stores)
 //! * [`rng`] — seeded SplitMix64/xoshiro PRNG + distributions
 //! * [`json`] — JSON parse/serialize (artifact manifest, configs, results)
 //! * [`threads`] — scoped parallel map / chunked for-each (rayon substitute)
@@ -12,6 +13,7 @@
 //! * [`quickcheck`] — seeded property-testing loop (proptest substitute)
 //! * [`tempdir`] — unique temp directories for tests
 
+pub mod aligned;
 pub mod cli;
 pub mod json;
 pub mod quickcheck;

@@ -1,0 +1,209 @@
+//! SQ8 quantized-tier acceptance tests (perf_opt PR 5).
+//!
+//! Pins the PR's acceptance criteria end to end:
+//! * quantized search with `refine_k >= k` holds recall@10 within 2% of
+//!   the f32 path at equal `ef`, on all three metrics — at the single
+//!   graph level, the `PyramidIndex` level and through a served cluster;
+//! * the code plane is ~4× smaller than the f32 rows and lives in
+//!   32-byte-aligned fixed-stride blocks;
+//! * quantization defaults off (the plain build path never grows a
+//!   plane, so every pre-existing pinned-equality test is untouched);
+//! * the live ingest tier keeps the contract under streaming writes and
+//!   codec-retraining re-freezes.
+
+use pyramid::bruteforce;
+use pyramid::cluster::SimCluster;
+use pyramid::config::{ClusterTopology, IndexConfig, QueryParams};
+use pyramid::coordinator::CoordinatorConfig;
+use pyramid::dataset::{Dataset, SyntheticSpec};
+use pyramid::hnsw::{Hnsw, HnswParams};
+use pyramid::ingest::IngestConfig;
+use pyramid::meta::PyramidIndex;
+use pyramid::metric::Metric;
+use std::time::Duration;
+
+fn recall_at_10(
+    data: &Dataset,
+    queries: &Dataset,
+    metric: Metric,
+    mut search: impl FnMut(&[f32]) -> Vec<pyramid::types::Neighbor>,
+) -> f64 {
+    let mut hits = 0usize;
+    for qi in 0..queries.len() {
+        let q = queries.get(qi);
+        let gt: std::collections::HashSet<u32> =
+            bruteforce::search(data, q, metric, 10).iter().map(|n| n.id).collect();
+        hits += search(q).iter().filter(|n| gt.contains(&n.id)).count();
+    }
+    hits as f64 / (queries.len() * 10) as f64
+}
+
+/// Acceptance: SQ8 walk + exact refine holds recall@10 within 2% of the
+/// f32 walk at equal `ef`, all three metrics, on the same graph.
+#[test]
+fn sq8_recall_within_2pct_of_f32_all_metrics() {
+    for (metric, seed) in [(Metric::L2, 61u64), (Metric::Ip, 67), (Metric::Angular, 71)] {
+        let spec = SyntheticSpec::deep_like(4_000, 24, seed);
+        let data = if metric.normalizes_items() {
+            spec.generate().normalized()
+        } else {
+            spec.generate()
+        };
+        let queries = if metric.normalizes_items() {
+            spec.queries(40).normalized()
+        } else {
+            spec.queries(40)
+        };
+        // One build, then attach the plane: both tiers serve the
+        // identical graph, so the comparison isolates the scoring tier.
+        let nested =
+            pyramid::hnsw::NestedHnsw::build(data.clone(), metric, HnswParams::default()).unwrap();
+        let h = nested.freeze().with_sq8(40); // refine_k = 4k >= k
+        let r_f32 = recall_at_10(&data, &queries, metric, |q| h.search_f32(q, 10, 100));
+        let r_sq8 = recall_at_10(&data, &queries, metric, |q| h.search(q, 10, 100));
+        assert!(
+            r_sq8 >= r_f32 - 0.02,
+            "{metric}: sq8 recall {r_sq8} vs f32 {r_f32} (> 2% apart)"
+        );
+    }
+}
+
+/// Acceptance: the code plane measures ~4× smaller than the f32 rows it
+/// mirrors, base and every row 32-byte aligned.
+#[test]
+fn sq8_code_plane_4x_smaller_and_aligned() {
+    let d = 96usize;
+    let data = SyntheticSpec::deep_like(2_000, d, 73).generate();
+    let h = Hnsw::build_sq8(data, Metric::L2, HnswParams::default(), 0).unwrap();
+    let plane = h.quant_plane().unwrap();
+    let f32_bytes = h.len() * d * 4;
+    let ratio = f32_bytes as f64 / plane.bytes() as f64;
+    assert!(ratio >= 3.0, "code plane only {ratio:.2}x smaller");
+    assert_eq!(plane.codes().as_ptr() as usize % 32, 0, "plane base misaligned");
+    assert_eq!(plane.stride() % 32, 0, "stride not 32-byte padded");
+}
+
+/// Acceptance at the index level: a quantized `PyramidIndex` (config
+/// surface: `IndexConfig::quantize` + `refine_k`) holds recall@10 within
+/// 2% of the identically-configured f32 index.
+#[test]
+fn sq8_pyramid_index_recall_within_2pct() {
+    let mut spec = SyntheticSpec::deep_like(6_000, 24, 77);
+    spec.clusters = 48;
+    let data = spec.generate();
+    let queries = spec.queries(40);
+    let base_cfg = IndexConfig { sample: 1_500, meta_size: 48, partitions: 6, ..Default::default() };
+    let qcfg = IndexConfig { quantize: true, refine_k: 40, ..base_cfg };
+    let f32_idx = PyramidIndex::build(&data, Metric::L2, &base_cfg).unwrap();
+    let sq8_idx = PyramidIndex::build(&data, Metric::L2, &qcfg).unwrap();
+    assert!(sq8_idx.subs.iter().all(|s| s.is_quantized()));
+    assert!(f32_idx.subs.iter().all(|s| !s.is_quantized()), "quantize must default off");
+    assert!(!sq8_idx.meta.is_quantized(), "meta routing graph must stay f32");
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let r_f32 = recall_at_10(&data, &queries, Metric::L2, |q| f32_idx.search(q, &params));
+    let r_sq8 = recall_at_10(&data, &queries, Metric::L2, |q| sq8_idx.search(q, &params));
+    assert!(r_sq8 >= r_f32 - 0.02, "pyramid sq8 recall {r_sq8} vs f32 {r_f32}");
+    // Memory story: summed code planes ~4x smaller than summed f32 rows.
+    let rows: usize = sq8_idx.subs.iter().map(|s| s.len() * s.dim() * 4).sum();
+    let planes: usize = sq8_idx.subs.iter().map(|s| s.sq8_bytes().unwrap()).sum();
+    assert!(rows as f64 / planes as f64 >= 3.0);
+}
+
+/// A cluster over a quantized index serves through the executors'
+/// batched drain path (SubIndex -> Hnsw::search_batch -> quantized walk
+/// + scorer re-rank) and must agree with the local quantized index.
+#[test]
+fn sq8_cluster_matches_local_quantized_index() {
+    let mut spec = SyntheticSpec::deep_like(4_000, 16, 81);
+    spec.clusters = 32;
+    let data = spec.generate();
+    let queries = spec.queries(20);
+    let cfg = IndexConfig {
+        sample: 1_000,
+        meta_size: 32,
+        partitions: 4,
+        quantize: true,
+        refine_k: 40,
+        ..Default::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    let topo = ClusterTopology {
+        workers: 4,
+        replicas: 1,
+        coordinators: 2,
+        net_latency_us: 0,
+        rebalance_ms: 50,
+        executor_batch: 4,
+    };
+    let cluster = SimCluster::start(&idx, topo).unwrap();
+    let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+    for qi in 0..queries.len() {
+        let q = queries.get(qi);
+        let local = idx.search(q, &params);
+        let dist = cluster.execute(q, &params).expect("distributed sq8 query");
+        assert_eq!(
+            local.iter().map(|n| n.id).collect::<Vec<_>>(),
+            dist.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {qi}: cluster diverges from local quantized index"
+        );
+    }
+    cluster.shutdown();
+}
+
+/// Streaming writes through the quantized live tier: inserts are
+/// searchable pre-re-freeze (encoded on apply into the delta's code
+/// plane), survive a codec-retraining re-freeze, and deletes never
+/// resurface across the swap.
+#[test]
+fn sq8_live_ingest_cluster_end_to_end() {
+    let mut spec = SyntheticSpec::deep_like(3_000, 16, 91);
+    spec.clusters = 32;
+    let data = spec.generate();
+    let extra = SyntheticSpec::deep_like(60, 16, 92).generate();
+    let cfg = IndexConfig {
+        sample: 800,
+        meta_size: 32,
+        partitions: 4,
+        quantize: true,
+        ..Default::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    let topo = ClusterTopology {
+        workers: 4,
+        replicas: 1,
+        coordinators: 2,
+        net_latency_us: 0,
+        rebalance_ms: 50,
+        executor_batch: 4,
+    };
+    let icfg = IngestConfig { refreeze_threshold: usize::MAX, quantize: true, ..Default::default() };
+    let cluster =
+        SimCluster::start_ingesting(&idx, topo, icfg, CoordinatorConfig::default()).unwrap();
+    let params = QueryParams { k: 5, branch: 4, ef: 100, meta_ef: 100 };
+
+    // Inserts: searchable as their own top-1 with zero re-freezes.
+    let ids: Vec<u32> = (0..extra.len()).map(|i| cluster.insert(extra.get(i)).unwrap()).collect();
+    assert!(cluster.wait_ingest_idle(Duration::from_secs(30)), "replicas never drained");
+    assert_eq!(cluster.total_refreezes(), 0);
+    for (i, &id) in ids.iter().enumerate().step_by(7) {
+        let r = cluster.execute(extra.get(i), &params).unwrap();
+        assert_eq!(r[0].id, id, "insert {i} not searchable pre-refreeze");
+    }
+
+    // Delete a few, then force the codec-retraining re-freeze.
+    let dead: Vec<u32> = ids.iter().step_by(11).copied().collect();
+    cluster.delete_batch(&dead).unwrap();
+    assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+    assert!(cluster.refreeze_all() > 0);
+
+    for (i, &id) in ids.iter().enumerate() {
+        let r = cluster.execute(extra.get(i), &params).unwrap();
+        let returned: Vec<u32> = r.iter().map(|n| n.id).collect();
+        if dead.contains(&id) {
+            assert!(!returned.contains(&id), "deleted {id} resurfaced after sq8 re-freeze");
+        } else if i % 7 == 0 {
+            assert_eq!(returned[0], id, "insert {i} lost by sq8 re-freeze");
+        }
+    }
+    cluster.shutdown();
+}
