@@ -591,6 +591,37 @@ fn main() {
         }
     }
 
+    // --- chaos: seeded schedules against a live cluster ---------------------
+    // A handful of smoke schedules through the chaos runner (ISSUE 6).
+    // `chaos/violations` must stay 0 — it is a correctness canary riding
+    // the bench trend, not a timing. `chaos/recovery-p99 ms` tracks the
+    // heal -> full-coverage latency across the schedules (the full
+    // distribution comes from the 500-schedule nightly sweep).
+    if run("chaos") {
+        use pyramid::chaos::runner::{harness_index, run_schedule_on, HARNESS_INDEX_SEED};
+        use pyramid::chaos::schedule::ChaosSpec;
+        let idx = harness_index(HARNESS_INDEX_SEED).expect("chaos harness index");
+        let count = if smoke { 2 } else { 4 };
+        let mut violations = 0usize;
+        let mut recovery = Vec::new();
+        for seed in 0..count as u64 {
+            let spec = ChaosSpec { steps: 6, step_ms: 10, ..ChaosSpec::for_seed(0xBEEF + seed) };
+            let report = run_schedule_on(&idx, &spec).expect("chaos schedule run");
+            violations += report.violations.len();
+            recovery.push(report.recovery_ms as f64);
+            for v in &report.violations {
+                println!("  CHAOS VIOLATION (seed {}): {v}", spec.seed);
+            }
+        }
+        rec.record("chaos/violations", violations as f64);
+        rec.record("chaos/recovery-p99 ms", percentile(&recovery, 99.0));
+        println!(
+            "chaos drill: {count} schedules, {violations} violations, \
+             recovery p99 {:.0} ms",
+            percentile(&recovery, 99.0)
+        );
+    }
+
     if emit_json {
         let path = std::path::Path::new("BENCH_hot_paths.json");
         rec.write_json(path).expect("write bench json");

@@ -1,0 +1,111 @@
+//! Nightly chaos sweep (ISSUE 6 satellite; CI `chaos-nightly` job).
+//!
+//! Runs N seeded schedules (default 500) over one shared harness index
+//! and checks every robustness invariant the runner enforces (see
+//! `pyramid::chaos::runner`). On the first violation it prints the
+//! failing schedule line — committable verbatim to
+//! `rust/tests/chaos_corpus/` — runs the minimization ladder
+//! (`ChaosSpec::minimized`) to find a smaller repro, and exits
+//! nonzero.
+//!
+//!     cargo run --release --example chaos_nightly -- --schedules 500
+//!     cargo run --release --example chaos_nightly -- --smoke true
+//!
+//! Flags: `--schedules N` (count), `--base-seed S` (first seed),
+//! `--smoke true` (tiny sweep for CI's regular job / local sanity).
+
+use pyramid::chaos::runner::{harness_index, run_schedule_on, HARNESS_INDEX_SEED};
+use pyramid::prelude::*;
+use pyramid::stats::percentile;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args = pyramid::util::cli::Args::from_env();
+    let smoke = args.get_bool("smoke");
+    let schedules = if smoke { 5 } else { args.get_usize("schedules", 500) };
+    let base_seed = args.get_u64("base-seed", 1);
+
+    println!("== Pyramid chaos nightly: {schedules} schedules from seed {base_seed} ==");
+    let t_build = Instant::now();
+    let idx = harness_index(HARNESS_INDEX_SEED)?;
+    println!("harness index built in {:?}", t_build.elapsed());
+
+    let mut recovery_ms: Vec<f64> = Vec::new();
+    let mut total_violations = 0usize;
+    let t0 = Instant::now();
+    for i in 0..schedules {
+        let spec = if smoke {
+            // Short schedules so the smoke pass stays in CI budget.
+            ChaosSpec { steps: 6, step_ms: 10, ..ChaosSpec::for_seed(base_seed + i as u64) }
+        } else {
+            ChaosSpec::for_seed(base_seed + i as u64)
+        };
+        let report = run_schedule_on(&idx, &spec)?;
+        recovery_ms.push(report.recovery_ms as f64);
+        if !report.ok() {
+            total_violations += report.violations.len();
+            eprintln!("\nFAILING SEED — commit this line to rust/tests/chaos_corpus/:");
+            eprintln!("{spec}");
+            for v in &report.violations {
+                eprintln!("  violation: {v}");
+            }
+            eprintln!("timeline:");
+            for t in &report.timeline {
+                eprintln!("  {t}");
+            }
+            minimize(&idx, &spec);
+            eprintln!(
+                "\n{} violation(s) at seed {} after {} clean schedule(s).",
+                report.violations.len(),
+                spec.seed,
+                i
+            );
+            std::process::exit(1);
+        }
+        if (i + 1) % 50 == 0 || i + 1 == schedules {
+            println!(
+                "  {}/{} clean ({:.1}s elapsed, recovery p99 {:.0} ms)",
+                i + 1,
+                schedules,
+                t0.elapsed().as_secs_f64(),
+                percentile(&recovery_ms, 99.0)
+            );
+        }
+    }
+    println!(
+        "all {schedules} schedules clean; {total_violations} violations; \
+         recovery p50 {:.0} ms, p99 {:.0} ms",
+        percentile(&recovery_ms, 50.0),
+        percentile(&recovery_ms, 99.0)
+    );
+    Ok(())
+}
+
+/// Walk the minimization ladder: try each strictly-smaller candidate,
+/// recursing into the first one that still violates, and print the
+/// smallest failing schedule found.
+fn minimize(idx: &PyramidIndex, spec: &ChaosSpec) {
+    eprintln!("\nminimizing (ladder of {} candidates per level)...", spec.minimized().len());
+    let mut current = *spec;
+    loop {
+        let mut smaller: Option<ChaosSpec> = None;
+        for cand in current.minimized() {
+            match run_schedule_on(idx, &cand) {
+                Ok(r) if !r.ok() => {
+                    smaller = Some(cand);
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("  candidate errored (skipped): {e}"),
+            }
+        }
+        match smaller {
+            Some(s) => {
+                eprintln!("  still fails: {s}");
+                current = s;
+            }
+            None => break,
+        }
+    }
+    eprintln!("minimized repro:\n{current}");
+}

@@ -112,7 +112,7 @@ impl Coordinator {
     where
         F: FnOnce(Result<Vec<Neighbor>>) + Send + 'static,
     {
-        self.node.execute_async(query, para, callback)
+        self.node.clone().execute_async(query, para, callback)
     }
 
     /// Attach the streaming-ingest write gateway (see
@@ -219,7 +219,11 @@ impl Executor {
                 host: HostControl::new(usize::MAX),
                 net_latency: std::time::Duration::ZERO,
                 batch: crate::executor::DEFAULT_BATCH,
-                ingest: Some(IngestWiring { broker: update_brokers.clone(), live: live.clone() }),
+                ingest: Some(IngestWiring {
+                    broker: update_brokers.clone(),
+                    live: live.clone(),
+                    freeze: None,
+                }),
             },
             self.brokers.clone(),
             self.registry.clone(),

@@ -1,0 +1,403 @@
+//! Deterministic chaos engine (ISSUE 6 tentpole).
+//!
+//! The paper's production story rests on behavior under partial failure
+//! (Figs 11/12), and Bahmani et al.'s distributed-LSH study (PAPERS.md)
+//! shows that *message-level* network behavior — drops, delays, duplicate
+//! deliveries, partitions — dominates distributed-search tails long
+//! before whole nodes die. This module injects exactly those faults at
+//! the [`crate::broker::Broker`] publish/consume seam, composing with the
+//! existing process-level API (`kill_executor`, `set_cpu_share`,
+//! respawn):
+//!
+//! * a seeded [`FaultPlan`] decides one [`MsgFate`] per message from a
+//!   splittable RNG stream (`seed ^ op-index`), so a plan's per-message
+//!   decision sequence is reproducible from its seed;
+//! * host-pair **network partitions** (`cut_link`/`heal_link`) between
+//!   endpoint ids: a cut consumer stops heartbeating (and is evicted,
+//!   exactly as a dead one would be), a cut publisher loses its fan-out,
+//!   and a cut reply path drops partials after the executor did the work;
+//! * [`ChaosCounters`] expose every injected fault for the metrics
+//!   surface (`QueryResult::metrics`, `SimCluster::chaos_metrics`).
+//!
+//! Fates are topic-class aware: full fates apply only to query fan-out
+//! topics (`sub-*`); retained logs (`upd-*`, `frz-*`) keep their
+//! sequence contract, so only delivery *delay* applies to them; the
+//! async-job journal (`jobs`) is exempt entirely — an acknowledged
+//! journal write is durable by definition, and killing the *consumer*
+//! side (the coordinator) is the interesting fault there.
+//!
+//! Determinism contract (EXPERIMENTS.md §9): the fault *decision stream*
+//! and the schedule driver's *action timeline* are bit-reproducible from
+//! the seed. Which thread observes a given fault first is OS-scheduler
+//! dependent — the invariant checkers are written against outcomes
+//! (coverage accounting, convergence, callback delivery), not
+//! interleavings.
+
+pub mod runner;
+pub mod schedule;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// "No endpoint": never participates in a cut. Consumers subscribed
+/// through the plain [`crate::broker::Broker::subscribe`] use this.
+pub const EP_NONE: u64 = u64::MAX;
+
+/// The broker itself, as a cut target: `cut_link(x, EP_BROKER)` models
+/// host `x` losing its network link entirely (can neither consume nor
+/// publish), as opposed to a cut between two specific endpoints.
+pub const EP_BROKER: u64 = u64::MAX - 1;
+
+/// Endpoint id of a simulated host (executors inherit their host's).
+pub fn host_endpoint(host: usize) -> u64 {
+    host as u64
+}
+
+/// Endpoint id of a coordinator (disjoint from host ids by the high bit).
+pub fn coordinator_endpoint(id: u64) -> u64 {
+    (1u64 << 32) | id
+}
+
+/// Per-message fault probabilities. All zero (plus a zero-width delay
+/// range) means "quiet": every message is delivered untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Message silently dropped at publish (lost datagram).
+    pub drop_prob: f64,
+    /// Message enqueued twice (duplicate delivery).
+    pub dup_prob: f64,
+    /// Message enqueued at the *front* of its queue (overtakes older ones).
+    pub reorder_prob: f64,
+    /// Message held invisible for a sampled duration before delivery.
+    pub delay_prob: f64,
+    /// Inclusive lower bound of the sampled delivery delay.
+    pub delay_min: Duration,
+    /// Inclusive upper bound of the sampled delivery delay.
+    pub delay_max: Duration,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            delay_prob: 0.0,
+            delay_min: Duration::from_millis(1),
+            delay_max: Duration::from_millis(5),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when no probabilistic fault can fire (cuts are separate).
+    pub fn is_quiet(&self) -> bool {
+        self.drop_prob <= 0.0
+            && self.dup_prob <= 0.0
+            && self.reorder_prob <= 0.0
+            && self.delay_prob <= 0.0
+    }
+}
+
+/// What happens to one published message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MsgFate {
+    Deliver,
+    Drop,
+    Duplicate,
+    Reorder,
+    Delay(Duration),
+}
+
+/// Injected-fault counters (monotonic, lock-free). Snapshot with
+/// [`ChaosCounters::snapshot`] for the metrics surface.
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    pub messages_dropped: AtomicU64,
+    pub messages_delayed: AtomicU64,
+    pub duplicates_injected: AtomicU64,
+    pub messages_reordered: AtomicU64,
+    /// Executor→coordinator partials dropped by a cut reply link.
+    pub replies_dropped: AtomicU64,
+    /// Coordinator fan-out publishes suppressed by a cut publish link.
+    pub publishes_cut: AtomicU64,
+}
+
+/// Plain-value copy of [`ChaosCounters`] at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosSnapshot {
+    pub messages_dropped: u64,
+    pub messages_delayed: u64,
+    pub duplicates_injected: u64,
+    pub messages_reordered: u64,
+    pub replies_dropped: u64,
+    pub publishes_cut: u64,
+}
+
+impl ChaosCounters {
+    pub fn snapshot(&self) -> ChaosSnapshot {
+        ChaosSnapshot {
+            messages_dropped: self.messages_dropped.load(Ordering::Relaxed),
+            messages_delayed: self.messages_delayed.load(Ordering::Relaxed),
+            duplicates_injected: self.duplicates_injected.load(Ordering::Relaxed),
+            messages_reordered: self.messages_reordered.load(Ordering::Relaxed),
+            replies_dropped: self.replies_dropped.load(Ordering::Relaxed),
+            publishes_cut: self.publishes_cut.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A seeded, shareable fault-injection plan. Install on every broker of a
+/// cluster with [`crate::broker::Broker::set_chaos`] (one plan can serve
+/// several brokers; they share the decision stream and counters).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: Mutex<FaultSpec>,
+    ops: AtomicU64,
+    pub counters: ChaosCounters,
+    /// Active link cuts as unordered endpoint pairs.
+    cuts: Mutex<HashSet<(u64, u64)>>,
+}
+
+fn link_key(a: u64, b: u64) -> (u64, u64) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, spec: FaultSpec) -> Arc<Self> {
+        Arc::new(FaultPlan {
+            seed,
+            spec: Mutex::new(spec),
+            ops: AtomicU64::new(0),
+            counters: ChaosCounters::default(),
+            cuts: Mutex::new(HashSet::new()),
+        })
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        *self.spec.lock().unwrap()
+    }
+
+    /// Swap the fault probabilities mid-run (schedule steps escalate and
+    /// quiesce without rebuilding the plan; cuts and counters persist).
+    pub fn set_spec(&self, spec: FaultSpec) {
+        *self.spec.lock().unwrap() = spec;
+    }
+
+    /// One decision RNG per consumed op index: same seed -> same decision
+    /// stream, independent of wall clock.
+    fn draw(&self) -> Rng {
+        let i = self.ops.fetch_add(1, Ordering::Relaxed);
+        Rng::seed_from_u64(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Decide the fate of a queue-semantics publish to `topic`, counting
+    /// the injected fault. Only query fan-out topics (`sub-*`) get the
+    /// full fate set; everything else is delivered untouched.
+    pub fn fate_for_publish(&self, topic: &str) -> MsgFate {
+        if !topic.starts_with("sub-") {
+            return MsgFate::Deliver;
+        }
+        self.decide()
+    }
+
+    /// Decide the delivery delay (the only legal fault) for a retained-log
+    /// publish. Logs carry sequence-numbered state (updates, freeze
+    /// proposals); dropping or reordering them would violate the log
+    /// contract rather than simulate a network, so only `delay_prob`
+    /// applies.
+    pub fn delay_for_log(&self, topic: &str) -> Option<Duration> {
+        if !(topic.starts_with("upd-") || topic.starts_with("frz-")) {
+            return None;
+        }
+        let spec = *self.spec.lock().unwrap();
+        if spec.delay_prob <= 0.0 {
+            return None;
+        }
+        let mut rng = self.draw();
+        if rng.f64() < spec.delay_prob {
+            self.counters.messages_delayed.fetch_add(1, Ordering::Relaxed);
+            Some(Self::sample_delay(&mut rng, &spec))
+        } else {
+            None
+        }
+    }
+
+    fn decide(&self) -> MsgFate {
+        let spec = *self.spec.lock().unwrap();
+        if spec.is_quiet() {
+            return MsgFate::Deliver;
+        }
+        let mut rng = self.draw();
+        let r = rng.f64();
+        let mut edge = spec.drop_prob;
+        if r < edge {
+            self.counters.messages_dropped.fetch_add(1, Ordering::Relaxed);
+            return MsgFate::Drop;
+        }
+        edge += spec.dup_prob;
+        if r < edge {
+            self.counters.duplicates_injected.fetch_add(1, Ordering::Relaxed);
+            return MsgFate::Duplicate;
+        }
+        edge += spec.reorder_prob;
+        if r < edge {
+            self.counters.messages_reordered.fetch_add(1, Ordering::Relaxed);
+            return MsgFate::Reorder;
+        }
+        edge += spec.delay_prob;
+        if r < edge {
+            self.counters.messages_delayed.fetch_add(1, Ordering::Relaxed);
+            return MsgFate::Delay(Self::sample_delay(&mut rng, &spec));
+        }
+        MsgFate::Deliver
+    }
+
+    fn sample_delay(rng: &mut Rng, spec: &FaultSpec) -> Duration {
+        let lo = spec.delay_min.as_micros() as u64;
+        let hi = (spec.delay_max.as_micros() as u64).max(lo);
+        Duration::from_micros(if hi == lo { lo } else { rng.range_u64(lo, hi + 1) })
+    }
+
+    /// Sever the link between two endpoints (order-insensitive).
+    pub fn cut_link(&self, a: u64, b: u64) {
+        self.cuts.lock().unwrap().insert(link_key(a, b));
+    }
+
+    pub fn heal_link(&self, a: u64, b: u64) {
+        self.cuts.lock().unwrap().remove(&link_key(a, b));
+    }
+
+    pub fn heal_all(&self) {
+        self.cuts.lock().unwrap().clear();
+    }
+
+    /// Whether the link between `a` and `b` is currently cut. `EP_NONE`
+    /// on either side is never cut (opted-out endpoint).
+    pub fn is_cut(&self, a: u64, b: u64) -> bool {
+        if a == EP_NONE || b == EP_NONE {
+            return false;
+        }
+        self.cuts.lock().unwrap().contains(&link_key(a, b))
+    }
+
+    /// Number of currently-active network partitions (link cuts).
+    pub fn active_cuts(&self) -> usize {
+        self.cuts.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_plan_delivers_everything() {
+        let plan = FaultPlan::new(7, FaultSpec::default());
+        for _ in 0..100 {
+            assert_eq!(plan.fate_for_publish("sub-0"), MsgFate::Deliver);
+        }
+        assert_eq!(plan.counters.snapshot(), ChaosSnapshot::default());
+    }
+
+    #[test]
+    fn decision_stream_reproducible_by_seed() {
+        let spec = FaultSpec {
+            drop_prob: 0.2,
+            dup_prob: 0.2,
+            reorder_prob: 0.2,
+            delay_prob: 0.2,
+            ..FaultSpec::default()
+        };
+        let a = FaultPlan::new(42, spec);
+        let b = FaultPlan::new(42, spec);
+        let fa: Vec<MsgFate> = (0..200).map(|_| a.fate_for_publish("sub-0")).collect();
+        let fb: Vec<MsgFate> = (0..200).map(|_| b.fate_for_publish("sub-0")).collect();
+        assert_eq!(fa, fb);
+        let c = FaultPlan::new(43, spec);
+        let fc: Vec<MsgFate> = (0..200).map(|_| c.fate_for_publish("sub-0")).collect();
+        assert_ne!(fa, fc);
+        // Every fate class fired somewhere in 200 draws at p=0.2 each.
+        assert!(a.counters.snapshot().messages_dropped > 0);
+        assert!(a.counters.snapshot().duplicates_injected > 0);
+        assert!(a.counters.snapshot().messages_reordered > 0);
+        assert!(a.counters.snapshot().messages_delayed > 0);
+    }
+
+    #[test]
+    fn fates_respect_topic_classes() {
+        let spec = FaultSpec { drop_prob: 1.0, ..FaultSpec::default() };
+        let plan = FaultPlan::new(1, spec);
+        assert_eq!(plan.fate_for_publish("sub-3"), MsgFate::Drop);
+        // Journal and unknown topics are exempt.
+        assert_eq!(plan.fate_for_publish("jobs"), MsgFate::Deliver);
+        assert_eq!(plan.fate_for_publish("upd-0"), MsgFate::Deliver);
+        // Logs only ever see delay.
+        assert!(plan.delay_for_log("upd-0").is_none()); // delay_prob = 0
+        let plan = FaultPlan::new(
+            1,
+            FaultSpec { delay_prob: 1.0, ..FaultSpec::default() },
+        );
+        assert!(plan.delay_for_log("upd-0").is_some());
+        assert!(plan.delay_for_log("frz-2").is_some());
+        assert!(plan.delay_for_log("jobs").is_none());
+        assert!(plan.delay_for_log("sub-0").is_none());
+    }
+
+    #[test]
+    fn cuts_are_symmetric_and_healable() {
+        let plan = FaultPlan::new(0, FaultSpec::default());
+        let (a, b) = (host_endpoint(2), coordinator_endpoint(1));
+        assert!(!plan.is_cut(a, b));
+        plan.cut_link(a, b);
+        assert!(plan.is_cut(a, b));
+        assert!(plan.is_cut(b, a));
+        assert_eq!(plan.active_cuts(), 1);
+        // EP_NONE never participates.
+        plan.cut_link(EP_NONE, b);
+        assert!(!plan.is_cut(EP_NONE, b));
+        plan.heal_link(a, b);
+        assert!(!plan.is_cut(a, b));
+        plan.heal_all();
+        assert_eq!(plan.active_cuts(), 0);
+    }
+
+    #[test]
+    fn endpoint_spaces_disjoint() {
+        assert_ne!(host_endpoint(5), coordinator_endpoint(5));
+        assert_ne!(coordinator_endpoint(0), EP_BROKER);
+        assert_ne!(coordinator_endpoint(u32::MAX as u64), EP_NONE);
+    }
+
+    #[test]
+    fn delay_sampled_within_bounds() {
+        let spec = FaultSpec {
+            delay_prob: 1.0,
+            delay_min: Duration::from_micros(100),
+            delay_max: Duration::from_micros(300),
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::new(9, spec);
+        for _ in 0..100 {
+            match plan.fate_for_publish("sub-0") {
+                MsgFate::Delay(d) => {
+                    assert!(d >= Duration::from_micros(100) && d <= Duration::from_micros(300))
+                }
+                f => panic!("expected delay, got {f:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! Chaos schedule driver: run a seeded [`ChaosSpec`] against a live
+//! ingesting cluster and check the robustness invariants.
+//!
+//! One seed reproduces one run: the per-message fault decisions (the
+//! [`super::FaultPlan`] stream), the per-step action timeline (kills,
+//! cuts, throttles) and every query/write vector are all derived from
+//! `spec.seed`, and the traffic is **pre-generated** before the run so
+//! runtime outcomes (a failed insert, a retried query) can never skew a
+//! decision stream. The determinism contract is therefore: same seed →
+//! same fault decisions and same action [`ChaosReport::timeline`].
+//! Thread *interleaving* is not reproduced — invariants are written
+//! against outcomes (answers, coverage, durability), never timings.
+//!
+//! Invariants checked during the run:
+//!
+//! * every accepted query returns an answer or an explicit partial
+//!   coverage report — an error escaping the chaos-induced classes
+//!   (`Timeout`, `Cluster`) is a violation;
+//! * a coverage report never claims more answered partitions than
+//!   routed, and answered partitions contribute neighbors;
+//! * live replicas of a partition never serve freeze epochs more than
+//!   one apart, unless a laggard-timeout waiver fired.
+//!
+//! Invariants checked after quiescing (faults healed, cluster
+//! restored, logs drained):
+//!
+//! * full coverage returns within a bounded recovery window;
+//! * every accepted insert is findable; no tombstoned id resurfaces;
+//! * every submitted async callback fires exactly once — even when the
+//!   submitting coordinator was killed mid-run (survivor adoption).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::schedule::ChaosSpec;
+use super::{host_endpoint, ChaosSnapshot, FaultSpec, EP_BROKER};
+use crate::cluster::SimCluster;
+use crate::config::{ClusterTopology, IndexConfig, QueryParams};
+use crate::coordinator::CoordinatorConfig;
+use crate::dataset::SyntheticSpec;
+use crate::error::{PyramidError, Result};
+use crate::ingest::IngestConfig;
+use crate::meta::PyramidIndex;
+use crate::metric::Metric;
+use crate::types::{PartitionId, VectorId};
+use crate::util::rng::Rng;
+
+/// Harness shape shared by every schedule (the nightly sweep holds the
+/// cluster shape fixed and enumerates seeds).
+const WORKERS: usize = 4;
+const REPLICAS: usize = 2;
+const COORDINATORS: usize = 2;
+/// Index seed for [`run_schedule`]'s self-built index, fixed so a
+/// corpus line replays the identical run through either entry point.
+pub const HARNESS_INDEX_SEED: u64 = 7;
+
+/// Outcome of one schedule run.
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub spec: ChaosSpec,
+    /// The seeded per-step action log — identical across runs of the
+    /// same seed (the reproducibility regression anchor).
+    pub timeline: Vec<String>,
+    /// Invariant violations; empty means the run passed.
+    pub violations: Vec<String>,
+    /// Cluster-wide injected-fault counters at the end of the run.
+    pub counters: ChaosSnapshot,
+    /// Heal → first full-coverage answer, milliseconds.
+    pub recovery_ms: u64,
+    pub queries_run: u64,
+    pub writes_ok: u64,
+    /// Writes rejected by a dead/timed-out coordinator (tolerated, but
+    /// reported — a rejected write carries no durability obligation).
+    pub writes_failed: u64,
+    pub async_submitted: u64,
+    pub async_fired: u64,
+    pub refreezes: u64,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Build the fixed harness index (2 400 x 16-d synthetic, 4 sub-HNSWs)
+/// the nightly sweep shares across schedules.
+pub fn harness_index(seed: u64) -> Result<PyramidIndex> {
+    let mut spec = SyntheticSpec::deep_like(2_400, 16, seed);
+    spec.clusters = 32;
+    let data = spec.generate();
+    let cfg = IndexConfig { sample: 600, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+    PyramidIndex::build(&data, Metric::L2, &cfg)
+}
+
+/// [`run_schedule_on`] over a freshly built harness index.
+pub fn run_schedule(spec: &ChaosSpec) -> Result<ChaosReport> {
+    let idx = harness_index(HARNESS_INDEX_SEED)?;
+    run_schedule_on(&idx, spec)
+}
+
+/// Chaos-induced error classes: what a query/write is allowed to return
+/// while faults are active (a dead coordinator rejects with `Cluster`,
+/// a starved gather with `Timeout`). Anything else escaping is a bug.
+fn chaos_tolerable(e: &PyramidError) -> bool {
+    matches!(e, PyramidError::Timeout(_) | PyramidError::Cluster(_))
+}
+
+/// Deterministic traffic for one run, generated up front (see module
+/// docs: no decision stream may depend on runtime outcomes).
+struct Traffic {
+    /// Per write: (delete-roll, target-pick, insert vector).
+    writes: Vec<(f64, u64, Vec<f32>)>,
+    queries: Vec<Vec<f32>>,
+    asyncs: Vec<Vec<f32>>,
+    probe: Vec<f32>,
+}
+
+fn pregenerate(spec: &ChaosSpec, dim: usize) -> Traffic {
+    let mut rng = Rng::seed_from_u64(spec.seed ^ 0x7A31_C0DE_7A31_C0DE);
+    // Query vectors live in the data's unit-ish cube; inserts sit on a
+    // +5.0 shelf far off the synthetic manifold, so an exact-vector
+    // probe finds the inserted row as its own nearest neighbor.
+    let unit = |rng: &mut Rng| (0..dim).map(|_| rng.f64() as f32).collect::<Vec<f32>>();
+    let steps = spec.steps as usize;
+    let writes = (0..steps * spec.writes_per_step as usize)
+        .map(|_| {
+            let roll = rng.f64();
+            let pick = rng.next_u64();
+            let v: Vec<f32> = (0..dim).map(|_| 5.0 + rng.f64() as f32).collect();
+            (roll, pick, v)
+        })
+        .collect();
+    let queries = (0..steps * spec.queries_per_step as usize).map(|_| unit(&mut rng)).collect();
+    let asyncs = (0..steps).map(|_| unit(&mut rng)).collect();
+    let probe = unit(&mut rng);
+    Traffic { writes, queries, asyncs, probe }
+}
+
+/// Run one schedule against an ingesting cluster built over `index`
+/// (coordinated freezes on, chaos installed on every broker). Returns
+/// the report; violations are collected, never panicked, so the
+/// nightly sweep can print the failing seed and keep minimizing.
+pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosReport> {
+    let dim = index.meta.dim();
+    let partitions = index.partitions();
+    let topo = ClusterTopology {
+        workers: WORKERS,
+        replicas: REPLICAS,
+        coordinators: COORDINATORS,
+        net_latency_us: 50,
+        rebalance_ms: 50,
+        executor_batch: 8,
+    };
+    let ingest_cfg = IngestConfig {
+        refreeze_threshold: 32,
+        coordinate_freezes: true,
+        freeze_laggard_timeout: Duration::from_millis(1_500),
+        ..IngestConfig::default()
+    };
+    let coord_cfg =
+        CoordinatorConfig { timeout: Duration::from_millis(300), ..CoordinatorConfig::default() };
+    let cluster = SimCluster::start_ingesting(index, topo, ingest_cfg, coord_cfg)?;
+    let plan = cluster.enable_chaos(spec.seed, spec.faults);
+    let traffic = pregenerate(spec, dim);
+    // Action stream: separate derivation from the fault-decision and
+    // traffic streams so the three never alias.
+    let mut actions = Rng::seed_from_u64(spec.seed ^ 0xA5A5_5A5A_A5A5_5A5A);
+    let params = QueryParams { k: 10, branch: partitions, ef: 100, meta_ef: 100 };
+
+    let mut timeline: Vec<String> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut inserted: Vec<(VectorId, Vec<f32>)> = Vec::new();
+    let mut deleted: Vec<(VectorId, Vec<f32>)> = Vec::new();
+    let mut killed_coords: HashSet<usize> = HashSet::new();
+    let fired = Arc::new(AtomicU64::new(0));
+    let mut async_submitted = 0u64;
+    let mut queries_run = 0u64;
+    let mut writes_ok = 0u64;
+    let mut writes_failed = 0u64;
+
+    for step in 0..spec.steps as usize {
+        // --- one seeded fault action ---
+        match actions.below(8) {
+            0 | 1 => timeline.push(format!("t={step} calm")),
+            2 => {
+                let p = actions.below(partitions);
+                let r = actions.below(REPLICAS);
+                // Roles are assigned partition-major at start, so the
+                // initial replica ids of partition p are p*R .. p*R+R.
+                let eid = (p * REPLICAS + r) as u64;
+                timeline.push(format!("t={step} kill-exec id={eid}"));
+                cluster.kill_executor(eid);
+            }
+            3 => {
+                let h = actions.below(WORKERS);
+                timeline.push(format!("t={step} cut host={h}"));
+                plan.cut_link(host_endpoint(h), EP_BROKER);
+            }
+            4 => {
+                timeline.push(format!("t={step} heal-all"));
+                plan.heal_all();
+            }
+            5 => {
+                let h = actions.below(WORKERS);
+                let share = 10 + actions.below(40) as u32;
+                timeline.push(format!("t={step} throttle host={h} share={share}"));
+                cluster.set_cpu_share(h, share);
+            }
+            6 => {
+                // Never kill the last live coordinator: the invariants
+                // assume a survivor exists to adopt journaled jobs.
+                let candidates: Vec<usize> =
+                    (0..COORDINATORS).filter(|i| !killed_coords.contains(i)).collect();
+                if candidates.len() > 1 {
+                    let victim = candidates[actions.below(candidates.len())];
+                    killed_coords.insert(victim);
+                    timeline.push(format!("t={step} kill-coordinator id={victim}"));
+                    cluster.kill_coordinator(victim);
+                } else {
+                    timeline.push(format!("t={step} calm"));
+                }
+            }
+            _ => {
+                timeline.push(format!("t={step} restore"));
+                plan.heal_all();
+                cluster.restore();
+            }
+        }
+
+        // --- one async submission (journaled; callback must fire even
+        //     if the submitting coordinator dies later) ---
+        {
+            let f = fired.clone();
+            let q = traffic.asyncs[step].clone();
+            if cluster
+                .execute_async(q, params, move |_| {
+                    f.fetch_add(1, Ordering::Relaxed);
+                })
+                .is_ok()
+            {
+                async_submitted += 1;
+            }
+        }
+
+        // --- writes (inserts with occasional deletes) ---
+        for w in 0..spec.writes_per_step as usize {
+            let (roll, pick, v) = &traffic.writes[step * spec.writes_per_step as usize + w];
+            if *roll < 0.2 && !inserted.is_empty() {
+                let i = (pick % inserted.len() as u64) as usize;
+                let (id, vec) = inserted.swap_remove(i);
+                match cluster.delete(id) {
+                    Ok(()) => {
+                        deleted.push((id, vec));
+                        writes_ok += 1;
+                    }
+                    Err(e) => {
+                        // Rejected: the id stays live, no obligation.
+                        inserted.push((id, vec));
+                        writes_failed += 1;
+                        if !chaos_tolerable(&e) {
+                            violations.push(format!("t={step} delete error class: {e}"));
+                        }
+                    }
+                }
+            } else {
+                match cluster.insert(v) {
+                    Ok(id) => {
+                        inserted.push((id, v.clone()));
+                        writes_ok += 1;
+                    }
+                    Err(e) => {
+                        writes_failed += 1;
+                        if !chaos_tolerable(&e) {
+                            violations.push(format!("t={step} insert error class: {e}"));
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- queries (alternating the two serving paths) ---
+        for qi in 0..spec.queries_per_step as usize {
+            let v = &traffic.queries[step * spec.queries_per_step as usize + qi];
+            queries_run += 1;
+            if qi % 2 == 0 {
+                match cluster.execute_detailed(v, &params) {
+                    Ok(r) => {
+                        if r.partitions_answered > r.partitions_total {
+                            violations.push(format!(
+                                "t={step} coverage overreports: {}/{}",
+                                r.partitions_answered, r.partitions_total
+                            ));
+                        }
+                        if r.partitions_answered > 0 && r.neighbors.is_empty() {
+                            violations.push(format!(
+                                "t={step} answered partitions produced no neighbors"
+                            ));
+                        }
+                    }
+                    Err(e) if chaos_tolerable(&e) => {}
+                    Err(e) => violations.push(format!("t={step} query error class: {e}")),
+                }
+            } else {
+                match cluster.execute(v, &params) {
+                    Ok(_) => {}
+                    Err(e) if chaos_tolerable(&e) => {}
+                    Err(e) => violations.push(format!("t={step} query error class: {e}")),
+                }
+            }
+        }
+
+        // --- epoch-gap invariant: live replicas of a partition never
+        //     serve layouts more than one freeze epoch apart. Epoch 0
+        //     replicas are still bootstrapping (a respawn adopts the
+        //     retained proposal log on its first tick) and are skipped;
+        //     a laggard-timeout waiver excuses the gap by design. ---
+        for p in 0..partitions {
+            let eps: Vec<u64> = cluster
+                .freeze_epochs(p as PartitionId)
+                .into_iter()
+                .filter(|&e| e > 0)
+                .collect();
+            if let (Some(&mx), Some(&mn)) = (eps.iter().max(), eps.iter().min()) {
+                if mx - mn > 1 && cluster.freeze_laggard_timeouts() == 0 {
+                    violations
+                        .push(format!("t={step} partition {p} freeze epochs diverged: {eps:?}"));
+                }
+            }
+        }
+
+        std::thread::sleep(Duration::from_millis(spec.step_ms));
+    }
+
+    // ---- quiesce: faults off, links healed, roles restored ----
+    plan.set_spec(FaultSpec::default());
+    plan.heal_all();
+    cluster.restore();
+
+    // Recovery: heal → first full-coverage answer.
+    let t0 = Instant::now();
+    let mut recovered = false;
+    while t0.elapsed() < Duration::from_secs(10) {
+        if let Ok(r) = cluster.execute_detailed(&traffic.probe, &params) {
+            if r.is_complete() {
+                recovered = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let recovery_ms = t0.elapsed().as_millis() as u64;
+    if !recovered {
+        violations.push("cluster never recovered full coverage after heal".into());
+    }
+    if !cluster.wait_ingest_idle(Duration::from_secs(15)) {
+        violations.push("update logs never drained after heal".into());
+    }
+
+    // Durability: accepted inserts findable, tombstones never resurface.
+    for (id, v) in inserted.iter().rev().take(10) {
+        match cluster.execute_detailed(v, &params) {
+            Ok(r) => {
+                if !r.neighbors.iter().any(|n| n.id == *id) {
+                    violations.push(format!("accepted insert {id} not findable post-quiesce"));
+                }
+            }
+            Err(e) => violations.push(format!("post-quiesce probe failed: {e}")),
+        }
+    }
+    for (id, v) in deleted.iter().rev().take(10) {
+        if let Ok(r) = cluster.execute_detailed(v, &params) {
+            if r.neighbors.iter().any(|n| n.id == *id) {
+                violations.push(format!("tombstoned id {id} resurfaced post-quiesce"));
+            }
+        }
+    }
+
+    // Async: every journaled callback fires (survivor adoption included).
+    let a0 = Instant::now();
+    while fired.load(Ordering::Relaxed) < async_submitted && a0.elapsed() < Duration::from_secs(8) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let async_fired = fired.load(Ordering::Relaxed);
+    if async_fired < async_submitted {
+        violations.push(format!("async callbacks lost: {async_fired}/{async_submitted} fired"));
+    }
+    let parked = cluster.async_jobs_pending();
+    if parked != 0 {
+        violations.push(format!("{parked} async jobs still parked post-quiesce"));
+    }
+
+    let counters = cluster.chaos_metrics();
+    let refreezes = cluster.total_refreezes();
+    cluster.shutdown();
+    Ok(ChaosReport {
+        spec: *spec,
+        timeline,
+        violations,
+        counters,
+        recovery_ms,
+        queries_run,
+        writes_ok,
+        writes_failed,
+        async_submitted,
+        async_fired,
+        refreezes,
+    })
+}

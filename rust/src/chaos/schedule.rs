@@ -1,0 +1,203 @@
+//! Chaos schedule grammar (EXPERIMENTS.md §9).
+//!
+//! A schedule is one line of whitespace-separated `key=value` pairs —
+//! trivially diffable, greppable, and committable to
+//! `rust/tests/chaos_corpus/` when the nightly sweep finds a violating
+//! seed:
+//!
+//! ```text
+//! seed=1337 steps=12 step_ms=30 queries=4 writes=6 \
+//!     drop=0.05 dup=0.05 reorder=0.05 delay=0.10 \
+//!     delay_min_us=1000 delay_max_us=3000
+//! ```
+//!
+//! Every key has a default, so `seed=1337` alone is a valid schedule;
+//! unknown keys are an error (a corpus typo must not silently replay a
+//! different schedule than the one that failed).
+
+use std::time::Duration;
+
+use super::FaultSpec;
+use crate::error::{PyramidError, Result};
+
+/// A complete, self-contained chaos schedule. The seed drives *both* the
+/// per-message fault decisions and the per-step action timeline, so one
+/// u64 reproduces the whole run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    /// Number of schedule steps (one action + traffic burst each).
+    pub steps: u32,
+    /// Wall-clock pacing between steps.
+    pub step_ms: u64,
+    /// Queries issued per step (alternating execute / batch paths).
+    pub queries_per_step: u32,
+    /// Writes (inserts, with occasional deletes) issued per step.
+    pub writes_per_step: u32,
+    pub faults: FaultSpec,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            seed: 1,
+            steps: 12,
+            step_ms: 30,
+            queries_per_step: 4,
+            writes_per_step: 6,
+            faults: FaultSpec {
+                drop_prob: 0.05,
+                dup_prob: 0.05,
+                reorder_prob: 0.05,
+                delay_prob: 0.10,
+                delay_min: Duration::from_micros(500),
+                delay_max: Duration::from_micros(3000),
+            },
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// The default schedule shape at a given seed (the nightly sweep
+    /// enumerates seeds over this shape).
+    pub fn for_seed(seed: u64) -> Self {
+        ChaosSpec { seed, ..ChaosSpec::default() }
+    }
+
+    /// Parse the `key=value` grammar. Inverse of [`std::fmt::Display`].
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut spec = ChaosSpec::default();
+        for tok in s.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| PyramidError::Config(format!("chaos schedule: bad token {tok:?}")))?;
+            let bad = |_| PyramidError::Config(format!("chaos schedule: bad value {tok:?}"));
+            match key {
+                "seed" => spec.seed = val.parse().map_err(bad)?,
+                "steps" => spec.steps = val.parse().map_err(bad)?,
+                "step_ms" => spec.step_ms = val.parse().map_err(bad)?,
+                "queries" => spec.queries_per_step = val.parse().map_err(bad)?,
+                "writes" => spec.writes_per_step = val.parse().map_err(bad)?,
+                "drop" => spec.faults.drop_prob = val.parse().map_err(bad)?,
+                "dup" => spec.faults.dup_prob = val.parse().map_err(bad)?,
+                "reorder" => spec.faults.reorder_prob = val.parse().map_err(bad)?,
+                "delay" => spec.faults.delay_prob = val.parse().map_err(bad)?,
+                "delay_min_us" => {
+                    spec.faults.delay_min = Duration::from_micros(val.parse().map_err(bad)?)
+                }
+                "delay_max_us" => {
+                    spec.faults.delay_max = Duration::from_micros(val.parse().map_err(bad)?)
+                }
+                _ => {
+                    return Err(PyramidError::Config(format!(
+                        "chaos schedule: unknown key {key:?}"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Strictly-smaller candidate schedules that might still reproduce a
+    /// failure, in the order the nightly minimizer should try them:
+    /// fewer steps first (shorter repro), then single fault classes
+    /// zeroed, then traffic reductions.
+    pub fn minimized(&self) -> Vec<ChaosSpec> {
+        let mut out = Vec::new();
+        if self.steps > 2 {
+            out.push(ChaosSpec { steps: self.steps / 2, ..*self });
+        }
+        let f = self.faults;
+        if f.drop_prob > 0.0 {
+            out.push(ChaosSpec { faults: FaultSpec { drop_prob: 0.0, ..f }, ..*self });
+        }
+        if f.dup_prob > 0.0 {
+            out.push(ChaosSpec { faults: FaultSpec { dup_prob: 0.0, ..f }, ..*self });
+        }
+        if f.reorder_prob > 0.0 {
+            out.push(ChaosSpec { faults: FaultSpec { reorder_prob: 0.0, ..f }, ..*self });
+        }
+        if f.delay_prob > 0.0 {
+            out.push(ChaosSpec { faults: FaultSpec { delay_prob: 0.0, ..f }, ..*self });
+        }
+        if self.writes_per_step > 0 {
+            out.push(ChaosSpec { writes_per_step: 0, ..*self });
+        }
+        if self.queries_per_step > 1 {
+            out.push(ChaosSpec { queries_per_step: self.queries_per_step / 2, ..*self });
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for ChaosSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} steps={} step_ms={} queries={} writes={} \
+             drop={} dup={} reorder={} delay={} delay_min_us={} delay_max_us={}",
+            self.seed,
+            self.steps,
+            self.step_ms,
+            self.queries_per_step,
+            self.writes_per_step,
+            self.faults.drop_prob,
+            self.faults.dup_prob,
+            self.faults.reorder_prob,
+            self.faults.delay_prob,
+            self.faults.delay_min.as_micros(),
+            self.faults.delay_max.as_micros(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let spec = ChaosSpec {
+            seed: 1337,
+            steps: 7,
+            step_ms: 15,
+            queries_per_step: 3,
+            writes_per_step: 9,
+            faults: FaultSpec {
+                drop_prob: 0.25,
+                dup_prob: 0.125,
+                reorder_prob: 0.0,
+                delay_prob: 0.5,
+                delay_min: Duration::from_micros(200),
+                delay_max: Duration::from_micros(900),
+            },
+        };
+        let line = spec.to_string();
+        assert_eq!(ChaosSpec::parse(&line).unwrap(), spec);
+    }
+
+    #[test]
+    fn partial_line_fills_defaults() {
+        let spec = ChaosSpec::parse("seed=99").unwrap();
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.steps, ChaosSpec::default().steps);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ChaosSpec::parse("seed=1 sneed=2").is_err());
+        assert!(ChaosSpec::parse("seed").is_err());
+        assert!(ChaosSpec::parse("steps=abc").is_err());
+    }
+
+    #[test]
+    fn minimized_candidates_are_strictly_smaller() {
+        let spec = ChaosSpec::default();
+        let cands = spec.minimized();
+        assert!(!cands.is_empty());
+        for c in cands {
+            assert_ne!(c, spec);
+            assert_eq!(c.seed, spec.seed, "minimization never changes the seed");
+        }
+    }
+}

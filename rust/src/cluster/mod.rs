@@ -27,11 +27,16 @@
 //! scratch — see [`crate::ingest`].
 
 use crate::broker::{Broker, BrokerConfig};
+use crate::chaos::{host_endpoint, ChaosSnapshot, FaultPlan, FaultSpec};
 use crate::config::{ClusterTopology, QueryParams};
-use crate::coordinator::{group_for, topic_for, CoordinatorConfig, CoordinatorNode, QueryRequest};
+use crate::coordinator::{
+    group_for, topic_for, AsyncCallbacks, AsyncJobMsg, CoordinatorConfig, CoordinatorNode,
+    QueryRequest,
+};
 use crate::error::{PyramidError, Result};
 use crate::executor::{self, ExecutorHandle, ExecutorSpec, HostControl, IngestWiring, SubIndex};
 use crate::hnsw::Hnsw;
+use crate::ingest::freeze::{FreezeController, FreezeMsg, FreezeStatus};
 use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::{PyramidIndex, Router};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
@@ -39,7 +44,7 @@ use crate::runtime::BatchScorer;
 use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, UpdateSeq, VectorId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub use crate::config::ClusterTopology as ClusterConfig;
 
@@ -51,6 +56,10 @@ struct LiveEntry {
     exec_id: u64,
     partition: PartitionId,
     live: Arc<LiveIndex>,
+    /// Freeze-epoch status (coordinated-freeze clusters only): the
+    /// handle siblings' peer snapshots read and
+    /// [`SimCluster::freeze_epochs`] reports.
+    freeze: Option<Arc<FreezeStatus>>,
 }
 
 /// Cluster-wide streaming-ingest state: the update broker + per-partition
@@ -72,6 +81,12 @@ struct IngestRuntime {
     /// incarnations, so [`SimCluster::total_refreezes`] stays monotonic
     /// across faults.
     retired_refreezes: AtomicU64,
+    /// Per-partition freeze-gossip broker (`frz-<p>` retained logs;
+    /// only used when [`IngestConfig::coordinate_freezes`] is on).
+    freeze_broker: Broker<FreezeMsg>,
+    /// Shared clock base for freeze-liveness stamps: every replica's
+    /// `last_tick_ms` is measured from this instant.
+    clock: Instant,
 }
 
 impl IngestRuntime {
@@ -81,9 +96,10 @@ impl IngestRuntime {
     /// wiring for it. The replica's re-freeze hook feeds
     /// [`Self::note_refreeze`].
     fn wire_role(
-        self: &Arc<Self>,
+        self: Arc<Self>,
         exec_id: u64,
         partition: PartitionId,
+        endpoint: u64,
     ) -> (Arc<dyn SubIndex>, IngestWiring) {
         // Checkpoint read and registration happen under ONE lives
         // critical section: a concurrent note_refreeze (which takes the
@@ -97,7 +113,7 @@ impl IngestRuntime {
         let mut lv = self.lives.lock().unwrap();
         let (base, ids, covered) = self.bases.lock().unwrap()[partition as usize].clone();
         let live = Arc::new(LiveIndex::with_checkpoint(base, ids, covered, self.cfg));
-        let rt: Weak<IngestRuntime> = Arc::downgrade(self);
+        let rt: Weak<IngestRuntime> = Arc::downgrade(&self);
         live.set_on_refreeze(move || {
             if let Some(rt) = rt.upgrade() {
                 rt.note_refreeze(partition);
@@ -107,11 +123,53 @@ impl IngestRuntime {
             self.retired_refreezes.fetch_add(old.live.refreezes(), Ordering::Relaxed);
         }
         lv.retain(|e| e.exec_id != exec_id);
-        lv.push(LiveEntry { exec_id, partition, live: live.clone() });
+        // Coordinated freezes: give the replica a controller whose peer
+        // snapshot reads every registered sibling of the partition. The
+        // closure only takes the lives lock (never while the controller
+        // holds anything), so the lives -> bases order is preserved.
+        let freeze_ctl = if self.cfg.coordinate_freezes {
+            let rt: Weak<IngestRuntime> = Arc::downgrade(&self);
+            let peers = Box::new(move || {
+                rt.upgrade()
+                    .map(|rt| {
+                        rt.lives
+                            .lock()
+                            .unwrap()
+                            .iter()
+                            .filter(|e| e.partition == partition)
+                            .filter_map(|e| e.freeze.clone())
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            });
+            Some(Arc::new(FreezeController::new(
+                self.freeze_broker.clone(),
+                partition,
+                exec_id,
+                endpoint,
+                live.clone(),
+                peers,
+                self.cfg.refreeze_threshold,
+                self.cfg.freeze_laggard_timeout,
+                self.clock,
+            )))
+        } else {
+            None
+        };
+        lv.push(LiveEntry {
+            exec_id,
+            partition,
+            live: live.clone(),
+            freeze: freeze_ctl.as_ref().map(|c| c.status()),
+        });
         drop(lv);
         (
             live.clone() as Arc<dyn SubIndex>,
-            IngestWiring { broker: self.gateway.broker().clone(), live },
+            IngestWiring {
+                broker: self.gateway.broker().clone(),
+                live,
+                freeze: freeze_ctl,
+            },
         )
     }
 
@@ -185,7 +243,8 @@ fn build_spec(
 ) -> ExecutorSpec {
     let (sub, wiring) = match ingest {
         Some(rt) => {
-            let (sub, w) = rt.wire_role(role.exec_id, role.partition);
+            let (sub, w) =
+                rt.clone().wire_role(role.exec_id, role.partition, host_endpoint(host.host));
             (sub, Some(w))
         }
         None => (subs[role.partition as usize].0.clone(), None),
@@ -246,6 +305,12 @@ pub struct SimCluster {
     respawn_enabled: Arc<AtomicBool>,
     /// Streaming-ingest state; None for read-only clusters.
     ingest: Option<Arc<IngestRuntime>>,
+    /// Async-job journal shared by every coordinator (failover path).
+    jobs_broker: Broker<AsyncJobMsg>,
+    /// Parked async callbacks, first-completer-wins across coordinators.
+    async_callbacks: Arc<AsyncCallbacks>,
+    /// Installed fault plan, if any ([`Self::enable_chaos`]).
+    chaos: Mutex<Option<Arc<FaultPlan>>>,
     rr: AtomicUsize,
     next_exec_id: Arc<AtomicU64>,
 }
@@ -331,6 +396,8 @@ impl SimCluster {
             bases: Mutex::new(bases),
             lives: Mutex::new(Vec::new()),
             retired_refreezes: AtomicU64::new(0),
+            freeze_broker: Broker::new(BrokerConfig::default()),
+            clock: Instant::now(),
         });
         Self::start_core(subs, router, topo, None, coord_cfg, Some(runtime))
     }
@@ -436,6 +503,16 @@ impl SimCluster {
             coordinators.push(node);
         }
 
+        // Async-job failover: every coordinator journals execute_async
+        // jobs to one shared broker and completes from it, so a killed
+        // coordinator's in-flight jobs are adopted by a survivor and the
+        // registered callbacks still fire (ROADMAP failover item).
+        let jobs_broker: Broker<AsyncJobMsg> = Broker::new(BrokerConfig::default());
+        let async_callbacks = AsyncCallbacks::new();
+        for node in &coordinators {
+            node.clone().enable_async_failover(jobs_broker.clone(), async_callbacks.clone())?;
+        }
+
         // Master + respawn plumbing: the master watches instance locks and
         // requests respawns through a channel the cluster services (it
         // cannot touch cluster state directly from the watch thread).
@@ -536,6 +613,9 @@ impl SimCluster {
             respawn_stop,
             respawn_enabled,
             ingest,
+            jobs_broker,
+            async_callbacks,
+            chaos: Mutex::new(None),
             rr: AtomicUsize::new(0),
             next_exec_id,
         })
@@ -553,53 +633,76 @@ impl SimCluster {
         self.coordinators[i % self.coordinators.len()].clone()
     }
 
+    /// Whether an error is worth retrying on another coordinator:
+    /// timeouts (the paper's coordinator-failure story) and dead /
+    /// cluster-side failures (a crashed coordinator rejects outright).
+    fn retryable(e: &PyramidError) -> bool {
+        matches!(e, PyramidError::Timeout(_) | PyramidError::Cluster(_))
+    }
+
     /// Execute a query on a round-robin coordinator (the paper's upstream
-    /// hashing). Retries once on another coordinator upon timeout —
-    /// the paper's coordinator-failure story.
+    /// hashing). Retries on the remaining coordinators upon timeout or a
+    /// dead coordinator, so service survives any minority of coordinator
+    /// kills.
     pub fn execute(&self, query: &[f32], params: &QueryParams) -> Result<Vec<Neighbor>> {
         let c = self.rr.fetch_add(1, Ordering::Relaxed);
-        match self.coordinator(c).execute(query, params) {
-            Ok(r) => Ok(r),
-            Err(PyramidError::Timeout(_)) => self.coordinator(c + 1).execute(query, params),
-            Err(e) => Err(e),
+        let mut last = None;
+        for i in 0..self.coordinators.len() {
+            match self.coordinator(c + i).execute(query, params) {
+                Ok(r) => return Ok(r),
+                Err(e) if Self::retryable(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
         }
+        Err(last.unwrap_or_else(|| PyramidError::Cluster("no coordinators".into())))
     }
 
     /// Batched [`Self::execute`]: the whole block goes to one round-robin
-    /// coordinator ([`CoordinatorNode::execute_batch`]); on timeout the
-    /// block retries once on the next coordinator, mirroring the
-    /// single-query retry story.
+    /// coordinator ([`CoordinatorNode::execute_batch`]); on timeout or a
+    /// dead coordinator the block retries on the remaining ones.
     pub fn execute_batch(
         &self,
         queries: &[&[f32]],
         params: &QueryParams,
     ) -> Result<Vec<Vec<Neighbor>>> {
         let c = self.rr.fetch_add(1, Ordering::Relaxed);
-        match self.coordinator(c).execute_batch(queries, params) {
-            Ok(r) => Ok(r),
-            Err(PyramidError::Timeout(_)) => self.coordinator(c + 1).execute_batch(queries, params),
-            Err(e) => Err(e),
+        let mut last = None;
+        for i in 0..self.coordinators.len() {
+            match self.coordinator(c + i).execute_batch(queries, params) {
+                Ok(r) => return Ok(r),
+                Err(e) if Self::retryable(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
         }
+        Err(last.unwrap_or_else(|| PyramidError::Cluster("no coordinators".into())))
     }
 
     /// Batched execution with per-query coverage reporting
     /// ([`CoordinatorNode::execute_batch_detailed`]): partition blackout
     /// degrades the affected queries (`coverage() < 1`) instead of
     /// failing the block, so callers can tell "partial answer" from
-    /// "dead cluster".
+    /// "dead cluster". A dead coordinator is skipped like the other
+    /// entry points.
     pub fn execute_batch_detailed(
         &self,
         queries: &[&[f32]],
         params: &QueryParams,
     ) -> Result<Vec<QueryResult>> {
         let c = self.rr.fetch_add(1, Ordering::Relaxed);
-        self.coordinator(c).execute_batch_detailed(queries, params)
+        let mut last = None;
+        for i in 0..self.coordinators.len() {
+            match self.coordinator(c + i).execute_batch_detailed(queries, params) {
+                Ok(r) => return Ok(r),
+                Err(e) if Self::retryable(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| PyramidError::Cluster("no coordinators".into())))
     }
 
     /// Single-query [`Self::execute_batch_detailed`].
     pub fn execute_detailed(&self, query: &[f32], params: &QueryParams) -> Result<QueryResult> {
-        let c = self.rr.fetch_add(1, Ordering::Relaxed);
-        self.coordinator(c).execute_detailed(query, params)
+        Ok(self.execute_batch_detailed(&[query], params)?.remove(0))
     }
 
     /// Insert one vector through a round-robin coordinator (write path;
@@ -714,6 +817,113 @@ impl SimCluster {
             .unwrap_or(0)
     }
 
+    /// Install a deterministic fault plan on every broker of the cluster
+    /// — the query broker, the async-job journal and (when ingesting)
+    /// the update and freeze-gossip brokers — so one seeded decision
+    /// stream governs every message seam. Returns the shared plan; use
+    /// [`crate::chaos::FaultPlan::set_spec`]/`cut_link`/`heal_all` on it
+    /// to drive a schedule. Message fates follow topic class (queues
+    /// take drops/dups/reorders/delays, logs delay-only, the job
+    /// journal is exempt); link cuts apply everywhere.
+    pub fn enable_chaos(&self, seed: u64, spec: FaultSpec) -> Arc<FaultPlan> {
+        let plan = FaultPlan::new(seed, spec);
+        self.broker.set_chaos(Some(plan.clone()));
+        self.jobs_broker.set_chaos(Some(plan.clone()));
+        if let Some(rt) = &self.ingest {
+            rt.gateway.broker().set_chaos(Some(plan.clone()));
+            rt.freeze_broker.set_chaos(Some(plan.clone()));
+        }
+        *self.chaos.lock().unwrap() = Some(plan.clone());
+        plan
+    }
+
+    /// The installed fault plan, if [`Self::enable_chaos`] ran.
+    pub fn chaos_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.chaos.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the cluster-wide injected-fault counters (all zero
+    /// without a plan) — the source for `QueryResult::metrics`
+    /// regression checks and the chaos bench keys.
+    pub fn chaos_metrics(&self) -> ChaosSnapshot {
+        self.chaos_plan().map(|p| p.counters.snapshot()).unwrap_or_default()
+    }
+
+    /// Crash one coordinator (no cleanup): its sync queries fail — the
+    /// round-robin entry points retry on survivors — and its journal
+    /// consumer goes silent, so in-flight async jobs are adopted by a
+    /// surviving coordinator after lease/session expiry.
+    pub fn kill_coordinator(&self, i: usize) {
+        self.coordinators[i % self.coordinators.len()].crash();
+    }
+
+    /// Submit an asynchronous query through a live coordinator; the
+    /// callback fires exactly once even if that coordinator is killed
+    /// after submission (the job is journaled before execution and a
+    /// survivor adopts it).
+    pub fn execute_async<F>(&self, query: Vec<f32>, params: QueryParams, callback: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<Neighbor>>) + Send + 'static,
+    {
+        let c = self.rr.fetch_add(1, Ordering::Relaxed);
+        let node = (0..self.coordinators.len())
+            .map(|i| self.coordinator(c + i))
+            .find(|co| !co.is_dead())
+            .ok_or_else(|| PyramidError::Cluster("no live coordinator".into()))?;
+        node.execute_async(query, params, callback)
+    }
+
+    /// Async jobs completed on behalf of a dead peer, summed across
+    /// coordinators (0 until a coordinator kill forces an adoption).
+    pub fn async_jobs_adopted(&self) -> u64 {
+        self.coordinators
+            .iter()
+            .map(|c| c.metrics.async_jobs_adopted.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Async callbacks still parked in the shared registry (0 once
+    /// every journaled job has completed — the "no callback is ever
+    /// lost" invariant).
+    pub fn async_jobs_pending(&self) -> usize {
+        self.async_callbacks.pending()
+    }
+
+    /// Freeze epochs currently served by the **live** replicas of a
+    /// partition (coordinated-freeze clusters; empty otherwise). The
+    /// tentpole invariant: `max - min <= 1` at all times, unless a
+    /// laggard-timeout waiver fired ([`Self::freeze_laggard_timeouts`]).
+    pub fn freeze_epochs(&self, partition: PartitionId) -> Vec<u64> {
+        let Some(rt) = &self.ingest else { return Vec::new() };
+        let live_ids: Vec<u64> = {
+            let g = self.state.lock().unwrap();
+            g.executors.iter().filter(|e| !e.is_finished()).map(|e| e.id).collect()
+        };
+        let lv = rt.lives.lock().unwrap();
+        lv.iter()
+            .filter(|e| e.partition == partition && live_ids.contains(&e.exec_id))
+            .filter_map(|e| e.freeze.as_ref())
+            .map(|s| s.epoch.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Laggard-timeout waivers across every registered replica (0 means
+    /// the epoch-gap invariant held unconditionally all run).
+    pub fn freeze_laggard_timeouts(&self) -> u64 {
+        self.ingest
+            .as_ref()
+            .map(|rt| {
+                rt.lives
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .filter_map(|e| e.freeze.as_ref())
+                    .map(|s| s.laggard_timeouts.load(Ordering::Relaxed))
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
     /// Kill a machine: all executors on it crash (no cleanup).
     pub fn kill_host(&self, host: usize) {
         self.hosts[host].alive.store(false, Ordering::Relaxed);
@@ -771,6 +981,11 @@ impl SimCluster {
                 self.ingest.as_ref(),
             );
         }
+        // Topology changed wholesale: latencies observed in the faulted
+        // era would keep the coordinators' hedge timers mis-armed.
+        for c in &self.coordinators {
+            c.note_topology_change();
+        }
     }
 
     /// Executor ids of the live replicas currently serving `partition`.
@@ -810,6 +1025,9 @@ impl SimCluster {
                 &self.state,
                 self.ingest.as_ref(),
             );
+        }
+        for c in &self.coordinators {
+            c.note_topology_change();
         }
     }
 
@@ -857,6 +1075,9 @@ impl SimCluster {
             self.registry.clone(),
         );
         self.state.lock().unwrap().executors.push(h);
+        for c in &self.coordinators {
+            c.note_topology_change();
+        }
         eid
     }
 
@@ -1184,6 +1405,63 @@ mod tests {
             assert!(r.is_complete(), "insert {id} query lost coverage");
             assert_eq!(r.neighbors[0].id, *id, "insert {id} vanished after truncation+respawn");
         }
+        cluster.shutdown();
+    }
+
+    /// ISSUE 6 tentpole acceptance (cluster layer): with coordinated
+    /// freezes on, replica epochs of every partition never diverge by
+    /// more than one during sustained ingest, no laggard waiver fires
+    /// on a healthy cluster, and siblings settle on identical epochs
+    /// once quiesced.
+    #[test]
+    fn coordinated_refreeze_keeps_replica_epochs_within_one() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 2),
+            IngestConfig {
+                refreeze_threshold: 40,
+                coordinate_freezes: true,
+                ..IngestConfig::default()
+            },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let extra = SyntheticSpec::deep_like(400, 16, 77).generate();
+        for i in 0..extra.len() {
+            cluster.insert(extra.get(i)).unwrap();
+            if i % 25 == 0 {
+                for p in 0..4u16 {
+                    let es = cluster.freeze_epochs(p);
+                    if let (Some(&lo), Some(&hi)) = (es.iter().min(), es.iter().max()) {
+                        assert!(hi - lo <= 1, "partition {p} epochs diverged mid-run: {es:?}");
+                    }
+                }
+            }
+        }
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)), "ingest never idled");
+        // Every partition that crossed the threshold must compact via
+        // the epoch protocol, and siblings must agree once settled.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            let settled = (0..4u16).all(|p| {
+                let es = cluster.freeze_epochs(p);
+                let needs = cluster.update_log_end(p) >= 40;
+                let agree = es.windows(2).all(|w| w[0] == w[1]);
+                agree && (!needs || es.iter().all(|&e| e > 0))
+            });
+            if settled {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "coordinated freeze never settled: {:?}",
+                (0..4u16).map(|p| cluster.freeze_epochs(p)).collect::<Vec<_>>()
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert_eq!(cluster.freeze_laggard_timeouts(), 0, "healthy cluster must not waive");
+        assert!(cluster.total_refreezes() > 0, "epoch protocol never compacted anything");
         cluster.shutdown();
     }
 

@@ -51,15 +51,16 @@
 //! logs into their live indexes — see the ingest module docs.
 
 use crate::broker::{Broker, Eviction};
+use crate::chaos::{coordinator_endpoint, FaultPlan, EP_BROKER};
 use crate::config::QueryParams;
 use crate::error::{PyramidError, Result};
 use crate::ingest::IngestGateway;
 use crate::meta::Router;
 use crate::runtime::BatchScorer;
 use crate::stats::{QuantileWindow, ThroughputSeries, TokenBucket};
-use crate::types::{merge_topk, Neighbor, PartitionId, QueryResult, UpdateOp, VectorId};
+use crate::types::{merge_topk, Neighbor, PartitionId, QueryMetrics, QueryResult, UpdateOp, VectorId};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -79,6 +80,64 @@ pub fn group_for(p: PartitionId) -> String {
     format!("grp-{p}")
 }
 
+/// Topic of the async-job journal (queue semantics; exempt from chaos
+/// fates — an acknowledged journal write is durable by definition).
+pub const JOBS_TOPIC: &str = "jobs";
+
+/// Consumer group the coordinators form over the job journal. Every
+/// coordinator is a member, so a dead coordinator's journaled jobs are
+/// redelivered to a survivor by the ordinary lease/eviction machinery.
+pub const JOBS_GROUP: &str = "coordinators";
+
+/// An `execute_async` job journaled to the broker (ROADMAP: coordinator
+/// failover for async callbacks). The callback itself cannot cross the
+/// broker — it lives in the cluster-shared [`AsyncCallbacks`] registry,
+/// keyed by `job_id`; whichever coordinator completes the job takes and
+/// fires it.
+#[derive(Clone)]
+pub struct AsyncJobMsg {
+    pub job_id: u64,
+    pub query: Arc<Vec<f32>>,
+    pub params: QueryParams,
+    /// Coordinator that accepted the job (adoption attribution).
+    pub submitted_by: u64,
+}
+
+type AsyncCallback = Box<dyn FnOnce(Result<Vec<Neighbor>>) + Send>;
+
+/// Cluster-shared registry of not-yet-fired `execute_async` callbacks.
+/// `take` is first-wins: a job redelivered after a lease expiry (the
+/// original executor died — or merely stalled — mid-job) can be executed
+/// twice, but its callback fires exactly once.
+#[derive(Default)]
+pub struct AsyncCallbacks {
+    next: AtomicU64,
+    map: Mutex<HashMap<u64, AsyncCallback>>,
+}
+
+impl AsyncCallbacks {
+    pub fn new() -> Arc<Self> {
+        Arc::new(AsyncCallbacks::default())
+    }
+
+    /// Park a callback; returns the job id to journal with.
+    pub fn register(&self, cb: AsyncCallback) -> u64 {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(id, cb);
+        id
+    }
+
+    /// Claim a callback (None if another completer already took it).
+    pub fn take(&self, id: u64) -> Option<AsyncCallback> {
+        self.map.lock().unwrap().remove(&id)
+    }
+
+    /// Callbacks still waiting for a completer.
+    pub fn pending(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
 /// A query-processing request published to a sub-HNSW topic.
 #[derive(Clone)]
 pub struct QueryRequest {
@@ -92,6 +151,10 @@ pub struct QueryRequest {
     pub return_vectors: bool,
     /// Direct reply channel back to the issuing coordinator.
     pub reply: mpsc::Sender<PartialResult>,
+    /// Chaos endpoint of the issuing coordinator: the reply travels a
+    /// bare network connection (the mpsc channel), so the executor
+    /// checks this against the fault plan's link cuts before replying.
+    pub from: u64,
 }
 
 /// An executor's partial answer for one (query, partition).
@@ -128,6 +191,9 @@ pub struct CoordinatorMetrics {
     pub inserts_published: AtomicU64,
     /// Deletes accepted onto the write path.
     pub deletes_published: AtomicU64,
+    /// Journaled async jobs this coordinator completed on behalf of a
+    /// dead (or partitioned-away) peer — the failover path.
+    pub async_jobs_adopted: AtomicU64,
     pub throughput: Mutex<Option<ThroughputSeries>>,
 }
 
@@ -281,6 +347,22 @@ pub struct CoordinatorNode {
     evictions: Mutex<EvictionLog>,
     async_tx: Mutex<Option<mpsc::Sender<AsyncJob>>>,
     async_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Crash flag ([`Self::crash`]): a dead coordinator fails queries
+    /// and stops heartbeating on the job journal, without releasing
+    /// anything gracefully.
+    dead: AtomicBool,
+    /// Job-journal failover runtime; None until
+    /// [`Self::enable_async_failover`].
+    failover: Mutex<Option<FailoverRuntime>>,
+}
+
+/// The job-journal consumer side of a coordinator (see
+/// [`CoordinatorNode::enable_async_failover`]).
+struct FailoverRuntime {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    jobs: Broker<AsyncJobMsg>,
+    callbacks: Arc<AsyncCallbacks>,
 }
 
 impl CoordinatorNode {
@@ -331,12 +413,14 @@ impl CoordinatorNode {
             evictions: Mutex::new(EvictionLog { rx: evict_rx, seq_base: 0, log: VecDeque::new() }),
             async_tx: Mutex::new(None),
             async_handles: Mutex::new(Vec::new()),
+            dead: AtomicBool::new(false),
+            failover: Mutex::new(None),
         });
-        node.start_async_pool();
+        node.clone().start_async_pool();
         node
     }
 
-    fn start_async_pool(self: &Arc<Self>) {
+    fn start_async_pool(self: Arc<Self>) {
         let (tx, rx) = mpsc::channel::<AsyncJob>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
@@ -399,6 +483,82 @@ impl CoordinatorNode {
             Some(b) => b.try_take(Instant::now()),
             None => true,
         }
+    }
+
+    /// Reset the hedge estimator's latency window. Called on topology
+    /// changes (executor respawn, restore, eviction): samples observed
+    /// in a dead straggler's era would otherwise keep the hedge timer
+    /// mis-armed — too hot after a straggler died, too cold after a
+    /// healthy replica did — until the window slid them out organically.
+    pub fn note_topology_change(&self) {
+        self.sub_latency.lock().unwrap().reset();
+    }
+
+    /// Simulate coordinator death (fault injection): queries and new
+    /// async submissions fail, and the job-journal consumer stops
+    /// heartbeating — *without* acking or gracefully releasing anything,
+    /// so in-flight journaled jobs are redelivered to a surviving
+    /// coordinator by lease expiry, exactly as a real process kill would.
+    pub fn crash(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Join the async-job journal (ROADMAP: coordinator failover for
+    /// `execute_async` callbacks). All coordinators of a cluster share
+    /// `jobs` and `callbacks`; once enabled, [`Self::execute_async`]
+    /// journals jobs instead of running them on the local pool, and this
+    /// node's journal consumer completes jobs — its own and, after a
+    /// peer's death, the peer's (counted in `metrics.async_jobs_adopted`).
+    pub fn enable_async_failover(
+        self: Arc<Self>,
+        jobs: Broker<AsyncJobMsg>,
+        callbacks: Arc<AsyncCallbacks>,
+    ) -> Result<()> {
+        jobs.create_topic(JOBS_TOPIC);
+        let consumer =
+            jobs.subscribe_at(JOBS_TOPIC, JOBS_GROUP, self.id, coordinator_endpoint(self.id))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let me = self.clone();
+        let cbs = callbacks.clone();
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("coord-{}-jobs", self.id))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) && !me.dead.load(Ordering::Relaxed) {
+                    let Some(d) = consumer.poll(Duration::from_millis(50)) else { continue };
+                    if stop2.load(Ordering::Relaxed) || me.dead.load(Ordering::Relaxed) {
+                        // Killed between poll and completion: never ack,
+                        // never take the callback — the lease expires and
+                        // a survivor adopts the job.
+                        break;
+                    }
+                    let job = &d.msg;
+                    let res = me.execute(&job.query, &job.params);
+                    if me.dead.load(Ordering::Relaxed) {
+                        break; // killed mid-execute: leave it for a survivor
+                    }
+                    // First completer takes the callback; a redelivered
+                    // job whose callback is gone just acks.
+                    if let Some(cb) = cbs.take(job.job_id) {
+                        if job.submitted_by != me.id {
+                            me.metrics.async_jobs_adopted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        cb(res);
+                    }
+                    consumer.ack(&d);
+                }
+                if stop2.load(Ordering::Relaxed) {
+                    consumer.leave(); // graceful shutdown only; a crash never leaves
+                }
+            })
+            .expect("spawn job-journal consumer");
+        *self.failover.lock().unwrap() =
+            Some(FailoverRuntime { stop, handle: Some(handle), jobs, callbacks });
+        Ok(())
     }
 
     /// Attach the write-path gateway, turning this coordinator into an
@@ -541,10 +701,30 @@ impl CoordinatorNode {
         queries: &[&[f32]],
         params: &QueryParams,
     ) -> Result<Vec<QueryResult>> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(PyramidError::Cluster(format!("coordinator {} is down", self.id)));
+        }
         if queries.is_empty() {
             return Ok(Vec::new());
         }
         let start = Instant::now();
+        // Chaos: a cut coordinator→broker link suppresses every publish
+        // this block makes (fan-out, re-issue, hedge). The pending entry
+        // is still tracked, so the partition surfaces as unanswered in
+        // the coverage report instead of vanishing silently.
+        let chaos_plan = self.broker.chaos();
+        let my_endpoint = coordinator_endpoint(self.id);
+        let publish_cut = |plan: &Option<Arc<FaultPlan>>| {
+            plan.as_ref()
+                .map(|p| {
+                    let cut = p.is_cut(my_endpoint, EP_BROKER);
+                    if cut {
+                        p.counters.publishes_cut.fetch_add(1, Ordering::Relaxed);
+                    }
+                    cut
+                })
+                .unwrap_or(false)
+        };
         let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
             queries.iter().map(|q| self.router.prepare_query(q)).collect();
         let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
@@ -563,6 +743,7 @@ impl CoordinatorNode {
             ef: params.ef,
             return_vectors: want_vectors,
             reply: reply_tx.clone(),
+            from: my_endpoint,
         };
         // Snapshot the eviction cursor before the fan-out: deaths already
         // reaped are reflected in the group assignment the publishes see;
@@ -584,7 +765,9 @@ impl CoordinatorNode {
         for (i, parts_i) in parts.iter().enumerate() {
             let qid = base_qid + i as u64;
             for &p in parts_i {
-                self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                if !publish_cut(&chaos_plan) {
+                    self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                }
                 pending.insert((qid, p), Pending { qi: i, sent_at: Instant::now(), hedged: false });
                 if hedge_delay.is_some() {
                     hedge_queue.push_back((qid, p));
@@ -609,6 +792,12 @@ impl CoordinatorNode {
                 log.drain();
                 log.since(&mut evict_cursor)
             };
+            // A non-empty eviction batch is a topology change: reset the
+            // hedge estimator so the dead member's latency era doesn't
+            // mis-arm the next blocks' timers (satellite fix).
+            if !evs.is_empty() {
+                self.note_topology_change();
+            }
             for ev in evs {
                 let affected: Vec<(u64, PartitionId)> = pending
                     .iter()
@@ -619,12 +808,14 @@ impl CoordinatorNode {
                     let qi = pending[&key].qi;
                     // Best-effort: a failed re-publish leaves the original
                     // lease-expiry path to redeliver.
-                    let _ = self.broker.publish_hedge(
-                        &topic_for(key.1),
-                        &group_for(key.1),
-                        key.0,
-                        mk_req(key.0, key.1, qi),
-                    );
+                    if !publish_cut(&chaos_plan) {
+                        let _ = self.broker.publish_hedge(
+                            &topic_for(key.1),
+                            &group_for(key.1),
+                            key.0,
+                            mk_req(key.0, key.1, qi),
+                        );
+                    }
                     if let Some(st) = pending.get_mut(&key) {
                         st.hedged = true; // the re-issue doubles as the hedge
                     }
@@ -662,12 +853,14 @@ impl CoordinatorNode {
                         self.metrics.hedges_suppressed.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
-                    let _ = self.broker.publish_hedge(
-                        &topic_for(key.1),
-                        &group_for(key.1),
-                        key.0,
-                        mk_req(key.0, key.1, qi),
-                    );
+                    if !publish_cut(&chaos_plan) {
+                        let _ = self.broker.publish_hedge(
+                            &topic_for(key.1),
+                            &group_for(key.1),
+                            key.0,
+                            mk_req(key.0, key.1, qi),
+                        );
+                    }
                     if let Some(st) = pending.get_mut(&key) {
                         st.hedged = true;
                     }
@@ -723,6 +916,16 @@ impl CoordinatorNode {
             }
         }
         drop(reply_tx);
+        // Chaos observability snapshot shared by the block (satellite:
+        // fault counters surfaced through `QueryResult::metrics`).
+        let snap = chaos_plan.as_ref().map(|p| p.counters.snapshot()).unwrap_or_default();
+        let block_metrics = QueryMetrics {
+            messages_dropped: snap.messages_dropped,
+            messages_delayed: snap.messages_delayed,
+            duplicates_injected: snap.duplicates_injected,
+            partitions_active: chaos_plan.as_ref().map(|p| p.active_cuts()).unwrap_or(0),
+            async_jobs_adopted: self.metrics.async_jobs_adopted.load(Ordering::Relaxed),
+        };
         // Per-query merge (Algorithm 4 line 9), same path as `execute`,
         // plus the coverage report.
         let mut out = Vec::with_capacity(queries.len());
@@ -737,6 +940,7 @@ impl CoordinatorNode {
                 neighbors,
                 partitions_total: total,
                 partitions_answered: answered,
+                metrics: block_metrics,
             });
         }
         let done = Instant::now();
@@ -784,11 +988,41 @@ impl CoordinatorNode {
     }
 
     /// Asynchronous execution with a completion callback (Listing 1
-    /// `execute_async`).
-    pub fn execute_async<F>(self: &Arc<Self>, query: Vec<f32>, params: QueryParams, callback: F) -> Result<()>
+    /// `execute_async`). With [`Self::enable_async_failover`] wired, the
+    /// job is journaled to the broker and the callback parked in the
+    /// shared registry, so it survives this coordinator's death: any
+    /// live journal consumer — usually this node, a peer after a kill —
+    /// completes it and fires the callback. Without failover, the legacy
+    /// local worker pool runs it (and a kill loses it — the pre-ISSUE-6
+    /// behavior, kept for broker-less standalone use).
+    pub fn execute_async<F>(
+        self: Arc<Self>,
+        query: Vec<f32>,
+        params: QueryParams,
+        callback: F,
+    ) -> Result<()>
     where
         F: FnOnce(Result<Vec<Neighbor>>) + Send + 'static,
     {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(PyramidError::Cluster(format!("coordinator {} is down", self.id)));
+        }
+        {
+            let fo = self.failover.lock().unwrap();
+            if let Some(rt) = fo.as_ref() {
+                let job_id = rt.callbacks.register(Box::new(callback));
+                let msg = AsyncJobMsg {
+                    job_id,
+                    query: Arc::new(query),
+                    params,
+                    submitted_by: self.id,
+                };
+                // The journal write is the durability point (exempt from
+                // chaos fates and cuts by design — a lost submission is a
+                // client-visible error, not a silent fault).
+                return rt.jobs.publish(JOBS_TOPIC, job_id, msg);
+            }
+        }
         let me = self.clone();
         let job: AsyncJob = Box::new(move || {
             let res = me.execute(&query, &params);
@@ -803,8 +1037,15 @@ impl CoordinatorNode {
             .map_err(|_| PyramidError::Cluster("coordinator async pool stopped".into()))
     }
 
-    /// Shut down the async pool (drains pending jobs).
+    /// Shut down the async pool and the job-journal consumer (drains
+    /// pending local jobs; journaled jobs stay retained for peers).
     pub fn shutdown(&self) {
+        if let Some(rt) = self.failover.lock().unwrap().as_mut() {
+            rt.stop.store(true, Ordering::Relaxed);
+            if let Some(h) = rt.handle.take() {
+                let _ = h.join();
+            }
+        }
         *self.async_tx.lock().unwrap() = None;
         for h in self.async_handles.lock().unwrap().drain(..) {
             let _ = h.join();
@@ -1027,5 +1268,80 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         replier.join().unwrap();
         node.shutdown();
+    }
+
+    /// ISSUE 6 acceptance (coordinator layer): a journaled async job
+    /// whose submitting coordinator is partitioned away and then killed
+    /// is adopted by the surviving coordinator, which fires the callback
+    /// exactly once.
+    #[test]
+    fn async_failover_adopts_jobs_from_crashed_coordinator() {
+        use crate::chaos::FaultSpec;
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        broker.create_topic(&topic_for(0));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let replier = spawn_replier(
+            broker.clone(),
+            0,
+            5,
+            vec![Neighbor::new(1, 0.9)],
+            1,
+            Duration::ZERO,
+            stop.clone(),
+        );
+        // Fast sessions/leases so adoption happens quickly.
+        let jobs: Broker<AsyncJobMsg> = Broker::new(BrokerConfig {
+            session_timeout: Duration::from_millis(100),
+            rebalance_pause: Duration::from_millis(1),
+            rebalance_interval: Duration::from_millis(20),
+            lease: Duration::from_millis(100),
+            ..BrokerConfig::default()
+        });
+        let callbacks = AsyncCallbacks::new();
+        let cfg =
+            CoordinatorConfig { hedge: HedgeConfig::disabled(), ..CoordinatorConfig::default() };
+        let a = CoordinatorNode::new(0, Router::broadcast(1, Metric::L2), broker.clone(), cfg);
+        let b = CoordinatorNode::new(1, Router::broadcast(1, Metric::L2), broker.clone(), cfg);
+        a.clone().enable_async_failover(jobs.clone(), callbacks.clone()).unwrap();
+        b.clone().enable_async_failover(jobs.clone(), callbacks.clone()).unwrap();
+        // Partition the submitter away from the journal *before* it can
+        // poll its own submission (deterministic "mid-execute_async"
+        // kill), then crash it. The journal write itself is exempt from
+        // cuts — it is the durability point.
+        let plan = FaultPlan::new(1, FaultSpec::default());
+        jobs.set_chaos(Some(plan.clone()));
+        plan.cut_link(coordinator_endpoint(0), EP_BROKER);
+        let (done_tx, done_rx) = mpsc::channel();
+        a.clone().execute_async(
+            vec![0.0f32; 8],
+            QueryParams { k: 1, ..QueryParams::default() },
+            move |res| {
+                done_tx.send(res).unwrap();
+            },
+        )
+        .unwrap();
+        a.crash();
+        assert!(a.is_dead());
+        assert!(
+            a.execute(&[0.0f32; 8], &QueryParams::default()).is_err(),
+            "dead coordinator must fail queries"
+        );
+        let res = done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("surviving coordinator never fired the callback");
+        assert_eq!(res.unwrap()[0].id, 1);
+        assert_eq!(
+            b.metrics.async_jobs_adopted.load(Ordering::Relaxed),
+            1,
+            "survivor should count the adoption"
+        );
+        assert_eq!(callbacks.pending(), 0, "callback registry must drain");
+        stop.store(true, Ordering::Relaxed);
+        replier.join().unwrap();
+        a.shutdown();
+        b.shutdown();
     }
 }

@@ -28,8 +28,10 @@
 //! answering queries from its frozen base.
 
 use crate::broker::{Broker, Delivery};
+use crate::chaos::host_endpoint;
 use crate::coordinator::{group_for, topic_for, PartialResult, QueryRequest};
 use crate::hnsw::Hnsw;
+use crate::ingest::freeze::FreezeController;
 use crate::ingest::{LiveIndex, UpdateConsumer};
 use crate::registry::Registry;
 use crate::runtime::{BatchScorer, NativeScorer};
@@ -115,6 +117,12 @@ impl HostControl {
 pub struct IngestWiring {
     pub broker: Broker<UpdateRequest>,
     pub live: Arc<LiveIndex>,
+    /// Epoch-coordinated re-freeze controller. When present the poll
+    /// loop pumps updates *without* independent compaction and ticks
+    /// the controller instead, so this replica only re-freezes through
+    /// the partition's freeze-epoch protocol; None keeps the legacy
+    /// independent re-freeze behavior.
+    pub freeze: Option<Arc<FreezeController>>,
 }
 
 /// Executor identity + wiring.
@@ -238,6 +246,8 @@ fn run(
     // the previous incarnation had absorbed, paper §IV-B for writes).
     let mut updates: Option<UpdateConsumer> =
         spec.ingest.as_ref().map(|w| UpdateConsumer::new(&w.broker, spec.partition, w.live.clone()));
+    let freeze: Option<Arc<FreezeController>> =
+        spec.ingest.as_ref().and_then(|w| w.freeze.clone());
 
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -258,7 +268,17 @@ fn run(
         // freshly published vectors become searchable within one poll
         // cycle, bounded per iteration so serving latency stays flat.
         if let Some(u) = updates.as_mut() {
-            u.pump();
+            match &freeze {
+                // Coordinated mode: apply updates, leave compaction to
+                // the freeze-epoch protocol.
+                Some(f) => {
+                    u.pump_updates();
+                    f.tick();
+                }
+                None => {
+                    u.pump();
+                }
+            }
         }
         let Some(first) = consumer.poll(Duration::from_millis(20)) else {
             continue;
@@ -302,8 +322,24 @@ fn run(
             let extra = elapsed.mul_f64(100.0 / share as f64 - 1.0);
             spin_sleep(extra);
         }
+        // The reply channel is direct mpsc (not brokered), so it is its
+        // own chaos seam: a cut between this host and the issuing
+        // coordinator drops the partial on the floor — the coordinator
+        // sees a missing contribution (partial coverage), exactly like
+        // a severed network path. The request is still acked: the
+        // executor *did* the work; only the answer was lost.
+        let chaos_plan = broker.chaos();
+        let my_endpoint = host_endpoint(spec.host.host);
         for (delivery, local) in batch.iter().zip(&locals) {
             let req = &delivery.msg;
+            if let Some(plan) = chaos_plan.as_ref() {
+                if plan.is_cut(my_endpoint, req.from) {
+                    plan.counters.replies_dropped.fetch_add(1, Ordering::Relaxed);
+                    consumer.ack(delivery);
+                    served.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
             let neighbors: Vec<Neighbor> = if spec.sub.translates_ids() {
                 // Live-index results already carry global ids.
                 local.clone()
@@ -393,6 +429,7 @@ mod tests {
             k: 5,
             ef: 50,
             return_vectors: false,
+            from: crate::chaos::EP_NONE,
             reply,
         }
     }
@@ -483,7 +520,11 @@ mod tests {
             host: HostControl::new(0),
             net_latency: Duration::ZERO,
             batch: DEFAULT_BATCH,
-            ingest: Some(IngestWiring { broker: update_broker.clone(), live: live.clone() }),
+            ingest: Some(IngestWiring {
+                broker: update_broker.clone(),
+                live: live.clone(),
+                freeze: None,
+            }),
         };
         let h = spawn(s, broker.clone(), registry);
 

@@ -1,0 +1,423 @@
+//! Epoch-coordinated re-freeze — cross-replica layout agreement.
+//!
+//! Without coordination every replica of a partition re-freezes
+//! independently when its own delta crosses the threshold, so siblings
+//! briefly serve *different* frozen layouts (same logical contents, but
+//! compaction points drift apart under sustained ingest). This module
+//! closes that gap with a tiny gossip protocol over the broker:
+//!
+//! * Each partition gets a retained-log **freeze topic** (`frz-<p>`,
+//!   [`freeze_topic_for`]) carrying [`FreezeMsg`] proposals. Log
+//!   semantics give every replica the same totally-ordered proposal
+//!   stream — the broker's sequence numbers arbitrate concurrent
+//!   proposals for free.
+//! * Every replica runs a [`FreezeController`] ticked from its
+//!   executor's poll loop. A tick (1) stamps the replica's liveness,
+//!   (2) drains the proposal log — any proposal with a higher epoch
+//!   than ours triggers an immediate local re-freeze and epoch adoption
+//!   (a proposer performs its own freeze by reading its proposal back),
+//!   and (3) when our delta + tombstones cross the threshold *and*
+//!   every live sibling has caught up to our epoch, publishes a
+//!   proposal for `epoch + 1`.
+//!
+//! The step-(3) gate is the invariant: a replica never proposes while a
+//! live sibling lags, so serving layouts **never diverge by more than
+//! one freeze epoch** — a proposal moves the whole replica set from
+//! epoch `e` to `e + 1` before anyone can ask for `e + 2`.
+//!
+//! **Laggard escape hatch:** a replica that keeps ticking (alive) but
+//! never advances (e.g. its broker link is partitioned by a chaos plan,
+//! so it cannot read proposals) would otherwise wedge its healthy
+//! siblings behind an unbounded delta. After
+//! [`crate::ingest::IngestConfig::freeze_laggard_timeout`] of blocked
+//! intent the controller proposes anyway and increments
+//! [`FreezeStatus::laggard_timeouts`] — an explicit, counted waiver of
+//! the epoch-gap invariant rather than a silent stall. Replicas whose
+//! liveness stamp is stale (killed executors) never block: the dead
+//! don't serve queries, so they can't diverge.
+//!
+//! Concurrent proposals are benign: if two siblings both propose
+//! `e + 1`, both messages land in the log; whoever reads the first one
+//! freezes and adopts `e + 1`, and the second message's epoch is no
+//! longer higher, so it is ignored — one freeze per epoch, no
+//! double-compaction.
+
+use crate::broker::{Broker, LogTailer};
+use crate::ingest::LiveIndex;
+use crate::types::PartitionId;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Name of a partition's freeze-gossip topic (retained-log form, like
+/// the update topic `upd-<p>`; the chaos engine treats `frz-*` as a log
+/// class — delay-only fates, never drops or duplicates).
+pub fn freeze_topic_for(p: PartitionId) -> String {
+    format!("frz-{p}")
+}
+
+/// A freeze proposal: "everyone move to `epoch`". Published by the
+/// replica whose delta crossed the threshold while all live siblings
+/// were caught up (or after the laggard timeout).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FreezeMsg {
+    /// Epoch being proposed — always (proposer's epoch) + 1.
+    pub epoch: u64,
+    /// Proposing executor (attribution/debugging only).
+    pub from: u64,
+}
+
+/// Peers consider a sibling **live** while its last tick is at most
+/// this old; staler stamps mean a killed/stalled executor, which never
+/// blocks a proposal (it is not serving queries either).
+pub const PEER_LIVENESS_WINDOW_MS: u64 = 1_000;
+
+/// One replica's shared freeze state: everything its siblings need to
+/// decide whether a proposal is safe. Held behind an `Arc` in the
+/// cluster's live-executor registry so the `peers` closure can read
+/// every sibling without locks.
+#[derive(Debug, Default)]
+pub struct FreezeStatus {
+    /// Freeze epoch this replica currently serves.
+    pub epoch: AtomicU64,
+    /// Milliseconds (since the shared cluster clock) of the last
+    /// controller tick — the liveness stamp.
+    pub last_tick_ms: AtomicU64,
+    /// Times this replica proposed past a live laggard (epoch-gap
+    /// invariant waivers; 0 on a healthy cluster).
+    pub laggard_timeouts: AtomicU64,
+}
+
+/// Per-replica freeze coordinator, ticked from the executor poll loop.
+/// Owns the replica's cursor into the partition's proposal log and the
+/// decision logic described in the module docs.
+pub struct FreezeController {
+    partition: PartitionId,
+    exec_id: u64,
+    broker: Broker<FreezeMsg>,
+    tailer: Mutex<LogTailer<FreezeMsg>>,
+    live: Arc<LiveIndex>,
+    status: Arc<FreezeStatus>,
+    /// Snapshot of every sibling replica's status (self included — a
+    /// replica trivially matches its own epoch and liveness).
+    peers: Box<dyn Fn() -> Vec<Arc<FreezeStatus>> + Send + Sync>,
+    /// Delta rows + tombstones that trigger a proposal (mirrors
+    /// [`crate::ingest::IngestConfig::refreeze_threshold`]).
+    threshold: usize,
+    laggard_timeout: Duration,
+    /// Shared cluster clock base: all liveness stamps are ms since this
+    /// instant, so replicas on different threads compare consistently.
+    clock: Instant,
+    /// Ms timestamp when this replica first wanted to propose but was
+    /// blocked by a live laggard (0 = no blocked intent).
+    want_since_ms: AtomicU64,
+}
+
+impl FreezeController {
+    /// Wire a controller for one replica. Creates the freeze topic
+    /// (idempotent) and starts the proposal tailer at the log head —
+    /// a respawned replica replays the full proposal history and
+    /// catches up to the highest epoch with a single re-freeze.
+    /// `endpoint` is the replica's chaos endpoint (host id), so link
+    /// cuts sever this replica's proposal feed exactly like its query
+    /// traffic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        broker: Broker<FreezeMsg>,
+        partition: PartitionId,
+        exec_id: u64,
+        endpoint: u64,
+        live: Arc<LiveIndex>,
+        peers: Box<dyn Fn() -> Vec<Arc<FreezeStatus>> + Send + Sync>,
+        threshold: usize,
+        laggard_timeout: Duration,
+        clock: Instant,
+    ) -> FreezeController {
+        let topic = freeze_topic_for(partition);
+        broker.create_topic(&topic);
+        let tailer = Mutex::new(broker.log_tailer_at(&topic, 0, endpoint));
+        FreezeController {
+            partition,
+            exec_id,
+            broker,
+            tailer,
+            live,
+            status: Arc::new(FreezeStatus::default()),
+            peers,
+            threshold: threshold.max(1),
+            laggard_timeout,
+            clock,
+            want_since_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// This replica's shared status handle (registered cluster-side so
+    /// siblings' `peers` closures can see it).
+    pub fn status(&self) -> Arc<FreezeStatus> {
+        self.status.clone()
+    }
+
+    /// Freeze epoch this replica currently serves.
+    pub fn epoch(&self) -> u64 {
+        self.status.epoch.load(Ordering::Relaxed)
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.clock.elapsed().as_millis() as u64
+    }
+
+    /// One coordination step (called from the executor poll loop, every
+    /// iteration — cheap when idle). Returns true when this tick
+    /// performed a re-freeze.
+    pub fn tick(&self) -> bool {
+        let now = self.now_ms();
+        self.status.last_tick_ms.store(now, Ordering::Relaxed);
+
+        // Drain the proposal log. Batch to the highest epoch first so a
+        // respawned replica replaying N historical proposals compacts
+        // once, not N times.
+        let mut highest = 0u64;
+        {
+            let mut tailer = self.tailer.lock().unwrap();
+            while let Some((_seq, msg)) = tailer.try_next() {
+                highest = highest.max(msg.epoch);
+            }
+        }
+        let my = self.status.epoch.load(Ordering::Relaxed);
+        let mut froze = false;
+        if highest > my {
+            // Someone (possibly us, reading our own proposal back)
+            // moved the partition forward: compact and adopt. A refused
+            // swap (nothing to compact / all rows tombstoned) still
+            // adopts the epoch — the layouts are equivalent.
+            self.live.refreeze();
+            self.status.epoch.store(highest, Ordering::Relaxed);
+            self.want_since_ms.store(0, Ordering::Relaxed);
+            froze = true;
+        }
+
+        // Propose when our own backlog crossed the threshold.
+        let backlog = self.live.delta_len() + self.live.tombstones_len();
+        if backlog < self.threshold {
+            self.want_since_ms.store(0, Ordering::Relaxed);
+            return froze;
+        }
+        let my = self.status.epoch.load(Ordering::Relaxed);
+        let all_caught_up = (self.peers)().iter().all(|p| {
+            let tick = p.last_tick_ms.load(Ordering::Relaxed);
+            let live = now.saturating_sub(tick) <= PEER_LIVENESS_WINDOW_MS;
+            !live || p.epoch.load(Ordering::Relaxed) >= my
+        });
+        if all_caught_up {
+            self.propose(my + 1);
+            return froze;
+        }
+        // Blocked by a live laggard: arm (or check) the escape hatch.
+        let since = self.want_since_ms.load(Ordering::Relaxed);
+        if since == 0 {
+            // `now` can be 0 in the first ms after cluster start; 1 is
+            // close enough and keeps 0 meaning "no blocked intent".
+            self.want_since_ms.store(now.max(1), Ordering::Relaxed);
+        } else if now.saturating_sub(since) >= self.laggard_timeout.as_millis() as u64 {
+            self.status.laggard_timeouts.fetch_add(1, Ordering::Relaxed);
+            self.propose(my + 1);
+        }
+        froze
+    }
+
+    /// Publish a proposal; the freeze itself happens when we read the
+    /// proposal back (same path as every sibling — one code path, and
+    /// log order arbitrates concurrent proposers).
+    fn propose(&self, epoch: u64) {
+        self.want_since_ms.store(0, Ordering::Relaxed);
+        let _ = self.broker.publish_log(
+            &freeze_topic_for(self.partition),
+            FreezeMsg { epoch, from: self.exec_id },
+        );
+    }
+}
+
+impl std::fmt::Debug for FreezeController {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FreezeController")
+            .field("partition", &self.partition)
+            .field("exec_id", &self.exec_id)
+            .field("epoch", &self.epoch())
+            .field("threshold", &self.threshold)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::chaos::EP_NONE;
+    use crate::dataset::SyntheticSpec;
+    use crate::hnsw::{Hnsw, HnswParams};
+    use crate::ingest::IngestConfig;
+    use crate::metric::Metric;
+    use crate::types::{UpdateOp, UpdateRequest, VectorId};
+
+    fn live_with_delta(seed: u64, delta: usize) -> Arc<LiveIndex> {
+        let data = SyntheticSpec::deep_like(200 + delta, 8, seed).generate();
+        let ids: Vec<VectorId> = (0..200).collect();
+        let base = Hnsw::build(data.subset(&ids), Metric::L2, HnswParams::default()).unwrap();
+        let cfg = IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() };
+        let live = Arc::new(LiveIndex::new(Arc::new(base), Arc::new(ids), cfg));
+        for i in 0..delta {
+            let gid = (200 + i) as u32;
+            live.apply(
+                i as u64,
+                &UpdateRequest {
+                    op: UpdateOp::Insert {
+                        id: gid,
+                        vector: Arc::new(data.get(200 + i).to_vec()),
+                    },
+                    coordinator: 0,
+                },
+            );
+        }
+        live
+    }
+
+    fn controller(
+        broker: &Broker<FreezeMsg>,
+        exec_id: u64,
+        live: Arc<LiveIndex>,
+        peers: Arc<Mutex<Vec<Arc<FreezeStatus>>>>,
+        threshold: usize,
+        laggard_timeout: Duration,
+        clock: Instant,
+    ) -> FreezeController {
+        let peers_fn = Box::new(move || peers.lock().unwrap().clone());
+        FreezeController::new(
+            broker.clone(),
+            0,
+            exec_id,
+            EP_NONE,
+            live,
+            peers_fn,
+            threshold,
+            laggard_timeout,
+            clock,
+        )
+    }
+
+    #[test]
+    fn siblings_converge_to_the_same_epoch_via_one_proposal() {
+        let broker: Broker<FreezeMsg> = Broker::new(BrokerConfig::default());
+        let clock = Instant::now();
+        let peers = Arc::new(Mutex::new(Vec::new()));
+        let a_live = live_with_delta(71, 50);
+        let b_live = live_with_delta(71, 50);
+        let a = controller(&broker, 0, a_live.clone(), peers.clone(), 10, Duration::from_secs(5), clock);
+        let b = controller(&broker, 1, b_live.clone(), peers.clone(), 10, Duration::from_secs(5), clock);
+        peers.lock().unwrap().extend([a.status(), b.status()]);
+        // Both over threshold, both at epoch 0 -> a proposes on its
+        // first tick; each sibling freezes when it reads the proposal.
+        assert!(!a.tick(), "proposing tick publishes but does not freeze yet");
+        assert!(b.tick(), "b must freeze when it reads a's proposal");
+        assert!(a.tick(), "a must freeze when it reads its own proposal back");
+        assert_eq!(a.epoch(), 1);
+        assert_eq!(b.epoch(), 1);
+        assert_eq!(a_live.refreezes(), 1);
+        assert_eq!(b_live.refreezes(), 1);
+        assert_eq!(a_live.delta_len(), 0);
+        assert_eq!(b_live.delta_len(), 0);
+        // A duplicate proposal for an epoch we already serve must not
+        // double-freeze (concurrent-proposer arbitration).
+        broker.publish_log(&freeze_topic_for(0), FreezeMsg { epoch: 1, from: 9 }).unwrap();
+        assert!(!a.tick());
+        assert!(!b.tick());
+        assert_eq!(a_live.refreezes(), 1);
+        assert_eq!(b_live.refreezes(), 1);
+        assert_eq!(a.status().laggard_timeouts.load(Ordering::Relaxed), 0);
+        assert_eq!(b.status().laggard_timeouts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn live_laggard_blocks_until_timeout_waiver() {
+        let broker: Broker<FreezeMsg> = Broker::new(BrokerConfig::default());
+        let clock = Instant::now();
+        let peers = Arc::new(Mutex::new(Vec::new()));
+        let live = live_with_delta(73, 40);
+        let c = controller(&broker, 0, live.clone(), peers.clone(), 10, Duration::from_millis(60), clock);
+        // A fake sibling that keeps ticking but is stuck at... well,
+        // epoch 0 is c's epoch too, so stick it *behind* by advancing c
+        // first: give c epoch 1 via a synthetic proposal.
+        broker.publish_log(&freeze_topic_for(0), FreezeMsg { epoch: 1, from: 9 }).unwrap();
+        assert!(c.tick());
+        assert_eq!(c.epoch(), 1);
+        let laggard = Arc::new(FreezeStatus::default()); // epoch 0
+        peers.lock().unwrap().extend([c.status(), laggard.clone()]);
+        // Refill c's backlog so it wants another freeze.
+        let refill = live_with_delta(79, 40);
+        let c = controller(&broker, 0, refill.clone(), peers.clone(), 10, Duration::from_millis(60), clock);
+        c.status().epoch.store(1, Ordering::Relaxed);
+        {
+            let mut g = peers.lock().unwrap();
+            g.clear();
+            g.extend([c.status(), laggard.clone()]);
+        }
+        let stamp = |s: &FreezeStatus| {
+            s.last_tick_ms.store(clock.elapsed().as_millis() as u64, Ordering::Relaxed)
+        };
+        // While the laggard is live and behind, no proposal lands.
+        stamp(&laggard);
+        c.tick();
+        assert_eq!(broker.log_end(&freeze_topic_for(0)), 1, "proposal must be blocked");
+        // Keep the laggard alive past the timeout: the waiver fires.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while broker.log_end(&freeze_topic_for(0)) == 1 {
+            assert!(Instant::now() < deadline, "laggard waiver never fired");
+            stamp(&laggard);
+            c.tick();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(c.status().laggard_timeouts.load(Ordering::Relaxed), 1);
+        // The waived proposal still freezes c on read-back.
+        assert!(c.tick());
+        assert_eq!(c.epoch(), 2);
+    }
+
+    #[test]
+    fn stale_peer_never_blocks_a_proposal() {
+        let broker: Broker<FreezeMsg> = Broker::new(BrokerConfig::default());
+        // Clock far in the past: "now" is large, so a peer stamped at 0
+        // reads as long-dead.
+        let clock = Instant::now() - Duration::from_secs(30);
+        let peers = Arc::new(Mutex::new(Vec::new()));
+        let live = live_with_delta(83, 30);
+        let c = controller(&broker, 0, live.clone(), peers.clone(), 10, Duration::from_secs(60), clock);
+        let dead = Arc::new(FreezeStatus::default()); // never ticked
+        peers.lock().unwrap().extend([c.status(), dead]);
+        c.tick(); // proposes despite the dead laggard (no timeout wait)
+        assert_eq!(broker.log_end(&freeze_topic_for(0)), 1);
+        assert!(c.tick());
+        assert_eq!(c.epoch(), 1);
+        assert_eq!(c.status().laggard_timeouts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn below_threshold_never_proposes() {
+        let broker: Broker<FreezeMsg> = Broker::new(BrokerConfig::default());
+        let peers = Arc::new(Mutex::new(Vec::new()));
+        let live = live_with_delta(89, 3);
+        let c = controller(
+            &broker,
+            0,
+            live,
+            peers.clone(),
+            100,
+            Duration::from_millis(1),
+            Instant::now(),
+        );
+        peers.lock().unwrap().push(c.status());
+        for _ in 0..5 {
+            assert!(!c.tick());
+        }
+        assert_eq!(broker.log_end(&freeze_topic_for(0)), 0);
+        assert_eq!(c.epoch(), 0);
+    }
+}

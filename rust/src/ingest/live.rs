@@ -382,7 +382,7 @@ impl LiveIndex {
     /// crossed the configured threshold and no build is already in
     /// flight. The executor's poll loop calls this after every update
     /// pump; the build runs on its own thread and swaps atomically.
-    pub fn maybe_refreeze(self: &Arc<Self>) {
+    pub fn maybe_refreeze(self: Arc<Self>) {
         let due = {
             let st = self.state.lock().unwrap();
             !st.freezing

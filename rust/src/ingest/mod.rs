@@ -38,6 +38,7 @@
 //! level draw in the delta graph is seeded by (seed, id), so replicas
 //! replaying the same log build identical graphs.
 
+pub mod freeze;
 mod live;
 
 pub use live::{IngestMetrics, LiveIndex};
@@ -73,6 +74,17 @@ pub struct IngestConfig {
     /// Exact re-rank budget for quantized search (0 = auto, 4·k); only
     /// meaningful with `quantize` (or a quantized base).
     pub refine_k: usize,
+    /// Coordinate re-freezes across replicas through the per-partition
+    /// freeze-gossip topic ([`freeze::FreezeController`]) instead of
+    /// letting each replica compact independently: serving layouts then
+    /// never diverge by more than one freeze epoch. Default **off**
+    /// (independent re-freezes, bit-identical to prior behavior).
+    pub coordinate_freezes: bool,
+    /// How long a coordinated replica waits on a *live* laggard sibling
+    /// before proposing anyway (epoch-gap invariant waiver, counted in
+    /// [`freeze::FreezeStatus::laggard_timeouts`]). Only meaningful
+    /// with `coordinate_freezes`.
+    pub freeze_laggard_timeout: std::time::Duration,
 }
 
 impl Default for IngestConfig {
@@ -82,6 +94,8 @@ impl Default for IngestConfig {
             max_updates_per_poll: 256,
             quantize: false,
             refine_k: 0,
+            coordinate_freezes: false,
+            freeze_laggard_timeout: std::time::Duration::from_secs(10),
         }
     }
 }
@@ -177,8 +191,21 @@ impl UpdateConsumer {
     }
 
     /// Apply up to the per-poll budget of pending updates, then kick the
-    /// background re-freeze check. Returns how many were applied.
+    /// independent background re-freeze check. Returns how many were
+    /// applied. Replicas running **coordinated** freezes call
+    /// [`Self::pump_updates`] instead and leave compaction timing to
+    /// their [`freeze::FreezeController`].
     pub fn pump(&mut self) -> usize {
+        let applied = self.pump_updates();
+        self.live.clone().maybe_refreeze();
+        applied
+    }
+
+    /// Apply up to the per-poll budget of pending updates **without**
+    /// triggering an independent re-freeze — the coordinated-freeze
+    /// pump, where compaction only ever happens through the partition's
+    /// freeze-epoch protocol.
+    pub fn pump_updates(&mut self) -> usize {
         let mut applied = 0usize;
         while applied < self.budget {
             match self.tailer.try_next() {
@@ -189,7 +216,6 @@ impl UpdateConsumer {
                 None => break,
             }
         }
-        self.live.maybe_refreeze();
         applied
     }
 }

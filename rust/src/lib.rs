@@ -36,6 +36,7 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod broker;
 pub mod bruteforce;
+pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -60,6 +61,9 @@ pub mod prelude {
     pub use crate::api::{Coordinator, Executor, GraphConstructor};
     pub use crate::baselines::{DistributedKdForest, KdForest, NaiveIndex};
     pub use crate::bench_harness::{drive_cluster, precision_at_k, BenchRecorder, LatencyRecorder, TablePrinter, Workload};
+    pub use crate::chaos::runner::{harness_index, run_schedule, run_schedule_on, ChaosReport};
+    pub use crate::chaos::schedule::ChaosSpec;
+    pub use crate::chaos::{ChaosSnapshot, FaultPlan, FaultSpec};
     pub use crate::cluster::{ClusterConfig, SimCluster};
     pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams};
     pub use crate::coordinator::{CoordinatorConfig, HedgeConfig};
@@ -70,5 +74,5 @@ pub mod prelude {
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
     pub use crate::quant::{QuantPlane, Sq8Codec};
-    pub use crate::types::{Neighbor, QueryResult, UpdateOp, VectorId};
+    pub use crate::types::{Neighbor, QueryMetrics, QueryResult, UpdateOp, VectorId};
 }

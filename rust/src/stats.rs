@@ -84,6 +84,15 @@ impl QuantileWindow {
         self.filled == 0
     }
 
+    /// Forget every sample. Called on topology changes (executor respawn,
+    /// restore): latencies observed in a dead straggler's era would
+    /// otherwise keep the hedge timer mis-armed until the window slides
+    /// them out organically.
+    pub fn reset(&mut self) {
+        self.next = 0;
+        self.filled = 0;
+    }
+
     /// Nearest-rank quantile over the window, `q` in [0, 1]. None while
     /// the window is empty.
     pub fn quantile(&self, q: f64) -> Option<f64> {
@@ -203,6 +212,20 @@ mod tests {
         assert_eq!(w.len(), 4);
         assert_eq!(w.quantile(1.0), Some(100.0));
         assert_eq!(w.quantile(0.0), Some(2.0));
+    }
+
+    #[test]
+    fn quantile_window_reset_forgets_history() {
+        let mut w = QuantileWindow::new(4);
+        for v in [50.0, 60.0, 70.0] {
+            w.observe(v);
+        }
+        w.reset();
+        assert!(w.is_empty());
+        assert!(w.quantile(0.5).is_none());
+        // Post-reset samples are not polluted by the old era.
+        w.observe(1.0);
+        assert_eq!(w.quantile(1.0), Some(1.0));
     }
 
     #[test]

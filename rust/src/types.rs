@@ -73,6 +73,26 @@ impl PartialOrd for Neighbor {
     }
 }
 
+/// Chaos/fault observability attached to every [`QueryResult`]: a
+/// snapshot of the cluster-wide injected-fault counters at merge time
+/// plus this query's own coverage attribution. All zero on a healthy
+/// cluster with no fault plan installed — the fields exist so the
+/// robustness harness can assert that `coverage()` accounting matches
+/// what the chaos engine actually did to the wire.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryMetrics {
+    /// Messages the fault plan dropped at the publish seam (cumulative).
+    pub messages_dropped: u64,
+    /// Messages the fault plan held back before delivery (cumulative).
+    pub messages_delayed: u64,
+    /// Duplicate deliveries the fault plan injected (cumulative).
+    pub duplicates_injected: u64,
+    /// Network partitions (endpoint link cuts) active at merge time.
+    pub partitions_active: usize,
+    /// Async jobs this coordinator adopted from dead peers (cumulative).
+    pub async_jobs_adopted: u64,
+}
+
 /// A query answer with its coverage report (paper §IV-B failure
 /// recovery): how many of the sub-HNSWs the router selected actually
 /// contributed a partial before the deadline. A healthy cluster always
@@ -86,6 +106,8 @@ pub struct QueryResult {
     pub partitions_total: usize,
     /// Sub-HNSWs whose partial arrived before the deadline.
     pub partitions_answered: usize,
+    /// Fault-injection observability (all zero without a chaos plan).
+    pub metrics: QueryMetrics,
 }
 
 impl QueryResult {
@@ -184,14 +206,28 @@ mod tests {
 
     #[test]
     fn query_result_coverage() {
-        let full = QueryResult { neighbors: vec![], partitions_total: 4, partitions_answered: 4 };
+        let full = QueryResult {
+            neighbors: vec![],
+            partitions_total: 4,
+            partitions_answered: 4,
+            metrics: QueryMetrics::default(),
+        };
         assert_eq!(full.coverage(), 1.0);
         assert!(full.is_complete());
-        let partial =
-            QueryResult { neighbors: vec![], partitions_total: 4, partitions_answered: 3 };
+        let partial = QueryResult {
+            neighbors: vec![],
+            partitions_total: 4,
+            partitions_answered: 3,
+            metrics: QueryMetrics::default(),
+        };
         assert_eq!(partial.coverage(), 0.75);
         assert!(!partial.is_complete());
-        let empty = QueryResult { neighbors: vec![], partitions_total: 0, partitions_answered: 0 };
+        let empty = QueryResult {
+            neighbors: vec![],
+            partitions_total: 0,
+            partitions_answered: 0,
+            metrics: QueryMetrics::default(),
+        };
         assert_eq!(empty.coverage(), 1.0);
         assert!(empty.is_complete());
     }

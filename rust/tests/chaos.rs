@@ -1,0 +1,143 @@
+//! Chaos-engine integration tests: seed-reproducible schedule runs,
+//! the fault-counter observability regression (every `QueryMetrics`
+//! field forced nonzero), and replay of the committed failing-seed
+//! corpus (`rust/tests/chaos_corpus/`). The randomized sweep itself
+//! lives in `examples/chaos_nightly.rs`; anything it catches is
+//! committed here as a corpus line so regressions stay caught.
+
+use pyramid::chaos::runner::{harness_index, run_schedule_on, HARNESS_INDEX_SEED};
+use pyramid::chaos::{coordinator_endpoint, host_endpoint, EP_BROKER};
+use pyramid::prelude::*;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn chaos_topo() -> ClusterTopology {
+    ClusterTopology {
+        workers: 4,
+        replicas: 2,
+        coordinators: 2,
+        net_latency_us: 50,
+        rebalance_ms: 50,
+        executor_batch: 8,
+    }
+}
+
+/// The determinism contract: one seed reproduces one run. Two runs of
+/// the same schedule must produce identical action timelines (and both
+/// must pass the invariants — the runner is also the acceptance
+/// harness).
+#[test]
+fn timeline_is_seed_reproducible() {
+    let idx = harness_index(HARNESS_INDEX_SEED).unwrap();
+    let spec = ChaosSpec::parse("seed=4242 steps=6 step_ms=10 queries=2 writes=4").unwrap();
+    let a = run_schedule_on(&idx, &spec).unwrap();
+    let b = run_schedule_on(&idx, &spec).unwrap();
+    assert_eq!(a.timeline, b.timeline, "same seed must replay the same action timeline");
+    assert_eq!(a.timeline.len(), spec.steps as usize);
+    assert!(a.ok(), "run A violated invariants: {:?}", a.violations);
+    assert!(b.ok(), "run B violated invariants: {:?}", b.violations);
+    assert!(a.queries_run > 0 && a.writes_ok > 0, "schedule drove no traffic");
+}
+
+/// Satellite regression: every fault class the chaos engine injects is
+/// observable — through the cluster-wide snapshot *and* through
+/// `QueryResult::metrics` — with each counter forced nonzero.
+#[test]
+fn fault_counters_surface_through_query_metrics() {
+    let idx = harness_index(11).unwrap();
+    let coord_cfg =
+        CoordinatorConfig { timeout: Duration::from_millis(200), ..CoordinatorConfig::default() };
+    let cluster = SimCluster::start_with(&idx, chaos_topo(), None, coord_cfg).unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let plan = cluster.enable_chaos(
+        7,
+        FaultSpec {
+            drop_prob: 0.10,
+            dup_prob: 0.15,
+            reorder_prob: 0.15,
+            delay_prob: 0.20,
+            delay_min: Duration::from_micros(100),
+            delay_max: Duration::from_micros(500),
+        },
+    );
+
+    // ~160 sub-query publishes: every probabilistic class fires with
+    // overwhelming odds, and the cumulative counters ride on each
+    // result's metrics snapshot.
+    let q: Vec<f32> = (0..16).map(|i| i as f32 * 0.01).collect();
+    let mut last = None;
+    for _ in 0..40 {
+        last = Some(cluster.execute_detailed(&q, &params).unwrap());
+    }
+    let m = last.unwrap().metrics;
+    assert!(m.messages_dropped > 0, "no drop was injected: {m:?}");
+    assert!(m.messages_delayed > 0, "no delay was injected: {m:?}");
+    assert!(m.duplicates_injected > 0, "no duplicate was injected: {m:?}");
+    let snap = cluster.chaos_metrics();
+    assert!(snap.messages_dropped >= m.messages_dropped);
+    assert!(snap.duplicates_injected >= m.duplicates_injected);
+
+    // A link cut is an *active partition* and must be visible.
+    plan.cut_link(host_endpoint(0), EP_BROKER);
+    let r = cluster.execute_detailed(&q, &params).unwrap();
+    assert!(r.metrics.partitions_active >= 1, "active cut not reported: {:?}", r.metrics);
+    plan.heal_all();
+    plan.set_spec(FaultSpec::default());
+
+    // Coordinator failover: cut the doomed coordinator's journal
+    // *consume* seam (the journal publish is exempt — that is the
+    // durability point), submit, kill it. The survivor must adopt the
+    // job, fire the callback, and report the adoption in metrics.
+    plan.cut_link(coordinator_endpoint(0), EP_BROKER);
+    let (tx, rx) = mpsc::channel();
+    cluster
+        .coordinator(0)
+        .execute_async(q.clone(), params, move |res| {
+            let _ = tx.send(res.is_ok());
+        })
+        .unwrap();
+    cluster.kill_coordinator(0);
+    rx.recv_timeout(Duration::from_secs(5))
+        .expect("async callback never fired after coordinator kill");
+    assert!(cluster.async_jobs_adopted() >= 1, "survivor never adopted the journaled job");
+    assert_eq!(cluster.async_jobs_pending(), 0, "callback registry leaked");
+    let r = cluster.execute_detailed(&q, &params).unwrap();
+    assert!(r.metrics.async_jobs_adopted >= 1, "adoption not surfaced: {:?}", r.metrics);
+    cluster.shutdown();
+}
+
+/// Replay every schedule committed to `rust/tests/chaos_corpus/`: a
+/// seed the nightly sweep once flagged must stay green forever.
+#[test]
+fn corpus_schedules_replay_clean() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/chaos_corpus");
+    let mut lines = Vec::new();
+    for entry in std::fs::read_dir(&dir).expect("chaos_corpus directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+            continue;
+        }
+        for line in std::fs::read_to_string(&path).unwrap().lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            lines.push((path.clone(), line.to_string()));
+        }
+    }
+    assert!(!lines.is_empty(), "corpus must hold at least one schedule");
+    let idx = harness_index(HARNESS_INDEX_SEED).unwrap();
+    for (path, line) in lines {
+        let spec = ChaosSpec::parse(&line)
+            .unwrap_or_else(|e| panic!("{}: unparseable corpus line: {e}", path.display()));
+        let report = run_schedule_on(&idx, &spec).unwrap();
+        assert!(
+            report.ok(),
+            "{} seed {} violated invariants: {:?}\ntimeline: {:?}",
+            path.display(),
+            spec.seed,
+            report.violations,
+            report.timeline
+        );
+    }
+}

@@ -7,6 +7,7 @@
 //! shims inside the coordinator.
 
 use pyramid::bench_harness::precision_at_k;
+use pyramid::chaos::{host_endpoint, EP_BROKER};
 use pyramid::coordinator::{CoordinatorConfig, HedgeConfig};
 use pyramid::prelude::*;
 use pyramid::stats::percentile;
@@ -328,6 +329,223 @@ fn recovery_matrix() {
             // restore() heals every cell back to nominal before shutdown
             // (also exercises the API).
             cluster.restore();
+            cluster.shutdown();
+        }
+    }
+}
+
+/// Combined-fault matrix (ISSUE 6 satellite): message-level chaos
+/// composed with process faults, on writable clusters with coordinated
+/// freezes, across both serving paths. Each cell must degrade
+/// gracefully while faulted (answers or reported partial coverage,
+/// bounded latency) and heal completely afterwards.
+#[test]
+fn combined_fault_matrix() {
+    #[derive(Clone, Copy, Debug)]
+    enum ChaosFault {
+        /// Broker partition during gather: one host's broker link cut
+        /// mid-stream; the sibling replicas keep coverage whole.
+        BrokerPartition,
+        /// Duplicate delivery composed with an executor kill (eviction
+        /// re-issue + lease redelivery under at-least-once delivery).
+        DupPlusEviction,
+        /// Coordinator killed with async jobs in flight: every callback
+        /// still fires and sync serving survives via retry.
+        CoordKillAsync,
+        /// Threshold re-freezes racing a partitioned replica: the epoch
+        /// gap invariant holds (or a laggard waiver is on record) and
+        /// the log drains fully after heal.
+        RefreezeDuringPartition,
+    }
+    #[derive(Clone, Copy, Debug)]
+    enum Path {
+        Execute,
+        ExecuteBatch,
+    }
+
+    let (data, queries, idx) = build_index(3_000, 4, 77);
+    let workload = Workload::new(data, queries, Metric::L2, 10);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let coord_cfg =
+        CoordinatorConfig { timeout: Duration::from_millis(600), ..CoordinatorConfig::default() };
+    let ingest_cfg = IngestConfig {
+        refreeze_threshold: 64,
+        coordinate_freezes: true,
+        freeze_laggard_timeout: Duration::from_secs(1),
+        ..IngestConfig::default()
+    };
+
+    let faults = [
+        ChaosFault::BrokerPartition,
+        ChaosFault::DupPlusEviction,
+        ChaosFault::CoordKillAsync,
+        ChaosFault::RefreezeDuringPartition,
+    ];
+    for fault in faults {
+        for path in [Path::Execute, Path::ExecuteBatch] {
+            let cluster =
+                SimCluster::start_ingesting(&idx, topo(4, 2, 100), ingest_cfg, coord_cfg).unwrap();
+            let plan = cluster.enable_chaos(0xC0FFEE, FaultSpec::default());
+            // Healthy warm-up.
+            for qi in 0..10 {
+                cluster.execute(workload.queries.get(qi), &params).unwrap();
+            }
+
+            // Arm the cell's fault combination.
+            let mut async_rx = None;
+            let mut first_insert: Option<(VectorId, Vec<f32>)> = None;
+            match fault {
+                ChaosFault::BrokerPartition => {
+                    plan.cut_link(host_endpoint(0), EP_BROKER);
+                }
+                ChaosFault::DupPlusEviction => {
+                    plan.set_spec(FaultSpec { dup_prob: 0.5, ..FaultSpec::default() });
+                    let replicas = cluster.executors_for_partition(0);
+                    assert!(cluster.kill_executor(replicas[0]));
+                }
+                ChaosFault::CoordKillAsync => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for qi in 0..5 {
+                        let tx = tx.clone();
+                        cluster
+                            .coordinator(0)
+                            .execute_async(
+                                workload.queries.get(qi).to_vec(),
+                                params,
+                                move |r| {
+                                    let _ = tx.send(r.is_ok());
+                                },
+                            )
+                            .unwrap();
+                    }
+                    cluster.kill_coordinator(0);
+                    async_rx = Some(rx);
+                }
+                ChaosFault::RefreezeDuringPartition => {
+                    // Partition host 1 away, then write far past the
+                    // re-freeze threshold: the reachable replicas gossip
+                    // and compact while the cut one lags.
+                    plan.cut_link(host_endpoint(1), EP_BROKER);
+                    for i in 0..100 {
+                        let v: Vec<f32> =
+                            (0..16).map(|d| 5.0 + (i * 16 + d) as f32 * 0.001).collect();
+                        let id = cluster.insert(&v).unwrap();
+                        if i == 0 {
+                            first_insert = Some((id, v));
+                        }
+                    }
+                    // The tentpole invariant, checked *during* the cut:
+                    // live replicas never serve layouts more than one
+                    // epoch apart unless a laggard waiver is on record.
+                    for p in 0..4u16 {
+                        let eps: Vec<u64> = cluster
+                            .freeze_epochs(p)
+                            .into_iter()
+                            .filter(|&e| e > 0)
+                            .collect();
+                        if let (Some(&mx), Some(&mn)) = (eps.iter().max(), eps.iter().min()) {
+                            assert!(
+                                mx - mn <= 1 || cluster.freeze_laggard_timeouts() > 0,
+                                "{fault:?}/{path:?}: epochs diverged without waiver: {eps:?}"
+                            );
+                        }
+                    }
+                }
+            }
+
+            // Faulted serving: every query answers or reports partial
+            // coverage — never an unexplained error, never a hang.
+            let nq = 10usize;
+            let t0 = Instant::now();
+            let results: Vec<QueryResult> = match path {
+                Path::Execute => (0..nq)
+                    .map(|qi| {
+                        cluster
+                            .execute_detailed(workload.queries.get(qi), &params)
+                            .unwrap_or_else(|e| panic!("{fault:?}/{path:?} query {qi}: {e}"))
+                    })
+                    .collect(),
+                Path::ExecuteBatch => {
+                    let views: Vec<&[f32]> = (0..nq).map(|qi| workload.queries.get(qi)).collect();
+                    cluster
+                        .execute_batch_detailed(&views, &params)
+                        .unwrap_or_else(|e| panic!("{fault:?}/{path:?} batch: {e}"))
+                }
+            };
+            assert_eq!(results.len(), nq);
+            let calls = match path {
+                Path::Execute => nq as u32,
+                Path::ExecuteBatch => 1,
+            };
+            assert!(
+                t0.elapsed() < (coord_cfg.timeout + Duration::from_millis(400)) * calls * 2,
+                "{fault:?}/{path:?}: {:?} exceeds the deadline budget (hung gather?)",
+                t0.elapsed()
+            );
+            for (qi, r) in results.iter().enumerate() {
+                assert!(
+                    r.partitions_answered <= r.partitions_total,
+                    "{fault:?}/{path:?} query {qi} overreports coverage ({}/{})",
+                    r.partitions_answered,
+                    r.partitions_total
+                );
+            }
+            if matches!(fault, ChaosFault::DupPlusEviction) {
+                assert!(
+                    cluster.chaos_metrics().duplicates_injected > 0,
+                    "{path:?}: duplicate injection never fired"
+                );
+            }
+            if let Some(rx) = async_rx {
+                // All five callbacks fire exactly once — the journaled
+                // jobs survive the submitting coordinator's death.
+                for i in 0..5 {
+                    rx.recv_timeout(Duration::from_secs(8)).unwrap_or_else(|_| {
+                        panic!("{fault:?}/{path:?}: async callback {i} never fired")
+                    });
+                }
+                assert_eq!(cluster.async_jobs_pending(), 0, "{fault:?}/{path:?}: leaked jobs");
+            }
+
+            // Heal everything and require complete convergence.
+            plan.set_spec(FaultSpec::default());
+            plan.heal_all();
+            cluster.restore();
+            assert!(
+                cluster.wait_ingest_idle(Duration::from_secs(20)),
+                "{fault:?}/{path:?}: update logs never drained after heal"
+            );
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                let r = cluster.execute_detailed(workload.queries.get(0), &params).unwrap();
+                if r.is_complete() {
+                    break;
+                }
+                assert!(
+                    Instant::now() < deadline,
+                    "{fault:?}/{path:?}: full coverage never recovered after heal"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            if matches!(fault, ChaosFault::RefreezeDuringPartition) {
+                // The coordinated freeze round needs a tick or two after
+                // the logs drain; poll rather than racing it.
+                let fz = Instant::now() + Duration::from_secs(5);
+                while cluster.total_refreezes() == 0 {
+                    assert!(
+                        Instant::now() < fz,
+                        "{path:?}: threshold writes never triggered a re-freeze"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                // A written row survives the partition + re-freeze churn.
+                let (id, probe) = first_insert.expect("refreeze cell inserted rows");
+                let r = cluster.execute_detailed(&probe, &params).unwrap();
+                assert!(
+                    r.neighbors.iter().any(|n| n.id == id),
+                    "{path:?}: insert {id} unfindable after partition + re-freeze"
+                );
+            }
             cluster.shutdown();
         }
     }
