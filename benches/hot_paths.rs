@@ -30,6 +30,11 @@
 //!   scoring tier, PR 5: integer-kernel block scoring vs f32, the
 //!   quantized walk + exact refine vs the f32 walk on the same frozen
 //!   graph, and the end-to-end recall cost / memory win.
+//! * `load/p99-static-vs-elastic`, `load/controller-reaction-ms`,
+//!   `load/hot-partition-qps` — the trace-driven load harness, PR 7:
+//!   hot-partition p99 of a static placement over the elasticity
+//!   controller's (higher is better), the overload-to-first-action
+//!   latency, and the served hot-partition QPS under the controller.
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -619,6 +624,75 @@ fn main() {
             "chaos drill: {count} schedules, {violations} violations, \
              recovery p99 {:.0} ms",
             percentile(&recovery, 99.0)
+        );
+    }
+
+    // --- load: trace replay + closed-loop elasticity (ISSUE 7) --------------
+    // One hot-partition trace replayed twice against a throttled home host:
+    // static placement vs the elasticity controller. Wall-clock report
+    // numbers, not ns/op — the trend step watches the ratio.
+    if run("load") {
+        use pyramid::chaos::runner::{harness_index, HARNESS_INDEX_SEED};
+        use pyramid::load::{run_trace, Arrival, ControllerConfig, LoadConfig, TraceSpec};
+        let idx = harness_index(HARNESS_INDEX_SEED).expect("load harness index");
+        let mut spec = TraceSpec::for_seed(7);
+        spec.duration_ms = if smoke { 600 } else { 1_500 };
+        spec.rate = if smoke { 200.0 } else { 400.0 };
+        spec.arrival = Arrival::Poisson;
+        spec.hot_partition = 2;
+        spec.hot_frac = 0.9;
+        let drill = |controller: Option<ControllerConfig>| {
+            let topo = ClusterTopology {
+                workers: 4,
+                replicas: 1,
+                coordinators: 2,
+                net_latency_us: 1_000,
+                rebalance_ms: 50,
+                executor_batch: 4,
+            };
+            let coord_cfg = CoordinatorConfig {
+                timeout: Duration::from_secs(10),
+                hedge: HedgeConfig::disabled(),
+                ..CoordinatorConfig::default()
+            };
+            let cluster =
+                SimCluster::start_with(&idx, topo, None, coord_cfg).expect("start load cluster");
+            cluster.set_cpu_share(2, 5);
+            let cfg = LoadConfig {
+                clients: 24,
+                tick_ms: 20,
+                params: QueryParams { k: 10, branch: 1, ef: 64, meta_ef: 64 },
+                controller,
+            };
+            let report = run_trace(&cluster, &idx, &spec, &cfg).expect("load drill run");
+            cluster.shutdown();
+            report
+        };
+        let static_run = drill(None);
+        let elastic = drill(Some(ControllerConfig {
+            high_depth: 4.0,
+            high_ticks: 2,
+            cooldown_ticks: 5,
+            max_replicas: 3,
+            ..ControllerConfig::default()
+        }));
+        let ratio = static_run.hot_p99_us / elastic.hot_p99_us.max(1.0);
+        rec.record("load/p99-static-vs-elastic", ratio);
+        rec.record(
+            "load/controller-reaction-ms",
+            elastic.reaction_ms.unwrap_or(-1.0),
+        );
+        rec.record(
+            "load/hot-partition-qps",
+            elastic.hot_queries as f64 / (elastic.wall_ms / 1e3).max(1e-9),
+        );
+        println!(
+            "load drill: hot p99 static {:.0} us vs elastic {:.0} us ({ratio:.2}x), \
+             reaction {:.0} ms, {} scale-up(s)",
+            static_run.hot_p99_us,
+            elastic.hot_p99_us,
+            elastic.reaction_ms.unwrap_or(-1.0),
+            elastic.scale_ups
         );
     }
 

@@ -1,0 +1,95 @@
+//! Load drill (ISSUE 7 tentpole): replay a trace against the simulated
+//! cluster, with or without the closed-loop elasticity controller, and
+//! print/export the monitor's report.
+//!
+//!     cargo run --release --example load_drill
+//!     cargo run --release --example load_drill -- \
+//!         --trace "seed=7 rate=400 duration_ms=1500 hot=2 hot_frac=0.9" \
+//!         --elastic true --throttle-host 2 --cpu-share 5 --json out.json
+//!
+//! Flags: `--trace "<key=value ...>"` (the EXPERIMENTS.md §10 grammar),
+//! `--elastic true` (enable the controller), `--throttle-host H` /
+//! `--cpu-share S` (straggler injection on host H at S% CPU),
+//! `--json PATH` (write the full monitor export), `--clients N`.
+
+use pyramid::chaos::runner::{harness_index, HARNESS_INDEX_SEED};
+use pyramid::prelude::*;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args = pyramid::util::cli::Args::from_env();
+    let trace_line =
+        args.get_or("trace", "seed=7 rate=400 duration_ms=1500 hot=2 hot_frac=0.9");
+    let spec = TraceSpec::parse(&trace_line)?;
+    let elastic = args.get_bool("elastic");
+    let throttle_host = args.get("throttle-host").and_then(|s| s.parse::<usize>().ok());
+    let cpu_share = args.get_u64("cpu-share", 5) as u32;
+    let clients = args.get_usize("clients", 16);
+
+    println!("== Pyramid load drill ==");
+    println!("trace:   {spec}");
+    println!("elastic: {elastic}");
+
+    let t_build = Instant::now();
+    let idx = harness_index(HARNESS_INDEX_SEED)?;
+    println!("harness index built in {:?}", t_build.elapsed());
+
+    let topo = ClusterTopology {
+        workers: 4,
+        replicas: 1,
+        coordinators: 2,
+        net_latency_us: 1_000,
+        rebalance_ms: 50,
+        executor_batch: 4,
+    };
+    let coord = CoordinatorConfig {
+        timeout: Duration::from_secs(10),
+        hedge: HedgeConfig::disabled(),
+        ..CoordinatorConfig::default()
+    };
+    let cluster = SimCluster::start_with(&idx, topo, None, coord)?;
+    if let Some(h) = throttle_host {
+        println!("throttling host {h} to {cpu_share}% CPU");
+        cluster.set_cpu_share(h, cpu_share);
+    }
+
+    let cfg = LoadConfig {
+        clients,
+        controller: elastic.then(ControllerConfig::default),
+        ..LoadConfig::default()
+    };
+    let report = run_trace(&cluster, &idx, &spec, &cfg)?;
+    cluster.shutdown();
+
+    println!("\n-- report --");
+    println!("queries:      {} ({:.0} qps over {:.0} ms)", report.queries, report.qps, report.wall_ms);
+    println!("writes:       {} inserts / {} deletes, {} errors", report.inserts, report.deletes, report.errors);
+    println!("latency:      p50 {:.0} us, p99 {:.0} us", report.p50_us, report.p99_us);
+    if let Some(p) = report.hot_partition {
+        println!(
+            "hot p{p}:       {} queries, p99 {:.0} us",
+            report.hot_queries, report.hot_p99_us
+        );
+    }
+    println!("min coverage: {:.3}", report.min_coverage);
+    if elastic {
+        println!(
+            "controller:   {} scale-up(s), {} scale-down(s), reaction {}",
+            report.scale_ups,
+            report.scale_downs,
+            report
+                .reaction_ms
+                .map(|ms| format!("{ms:.0} ms"))
+                .unwrap_or_else(|| "n/a".to_string()),
+        );
+        for (t, e) in &report.events {
+            println!("  [{t:>7.0} ms] {e}");
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(&path, &report.json)?;
+        println!("monitor export written to {path}");
+    }
+    Ok(())
+}

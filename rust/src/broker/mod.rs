@@ -514,6 +514,74 @@ impl<M: Send + Clone + 'static> Broker<M> {
         g.topics.get(topic).map(|t| t.queues.iter().map(VecDeque::len).sum()).unwrap_or(0)
     }
 
+    /// Per-queue-partition depth snapshot (monitoring; the load
+    /// monitor's queue-depth probe). Empty for an unknown topic.
+    pub fn queue_depths(&self, topic: &str) -> Vec<usize> {
+        let g = self.inner.0.lock().unwrap();
+        g.topics
+            .get(topic)
+            .map(|t| t.queues.iter().map(VecDeque::len).collect())
+            .unwrap_or_default()
+    }
+
+    /// Leased-but-unacked messages across all consumer groups of a topic
+    /// — work that left the queues but has not completed. Backlog +
+    /// inflight is the topic's total outstanding load.
+    pub fn inflight(&self, topic: &str) -> usize {
+        let g = self.inner.0.lock().unwrap();
+        g.topics
+            .get(topic)
+            .map(|t| t.groups.values().map(|gs| gs.inflight.len()).sum())
+            .unwrap_or(0)
+    }
+
+    /// Publish onto the **shortest** queue partition currently owned by a
+    /// live member of `group`, instead of the key-hash placement of
+    /// [`Self::publish`] — the coordinator's overload steering: while a
+    /// replica set is hot, new sub-queries land wherever the backlog is
+    /// thinnest rather than piling behind one slow owner. Falls back to
+    /// the key-hash queue when the group is unknown or has no live
+    /// assigned member (pre-rebalance window). Chaos fates apply exactly
+    /// as for `publish`.
+    pub fn publish_balanced(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
+        let fate = self
+            .chaos()
+            .map(|plan| plan.fate_for_publish(topic))
+            .unwrap_or(MsgFate::Deliver);
+        let mut g = self.inner.0.lock().unwrap();
+        let p = self.cfg.partitions_per_topic;
+        let t = g
+            .topics
+            .get_mut(topic)
+            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let fallback = (key % p as u64) as usize;
+        let target_q = match t.groups.get(group) {
+            Some(gs) => {
+                let mut best: Option<(usize, usize)> = None; // (backlog, queue)
+                for (q, owner) in gs.assignment.iter().enumerate() {
+                    if let Some(o) = owner {
+                        if gs.members.contains_key(o) {
+                            let len = t.queues[q].len();
+                            if best.map(|(bl, _)| len < bl).unwrap_or(true) {
+                                best = Some((len, q));
+                            }
+                        }
+                    }
+                }
+                best.map(|(_, q)| q).unwrap_or(fallback)
+            }
+            None => fallback,
+        };
+        let id = t.next_msg;
+        t.next_msg += 1;
+        t.published += 1;
+        t.store.insert(id, msg);
+        Self::enqueue_with_fate(t, target_q, id, fate);
+        drop(g);
+        self.inner.1.notify_all();
+        Ok(())
+    }
+
     /// Messages ever published to a topic.
     pub fn published(&self, topic: &str) -> u64 {
         let g = self.inner.0.lock().unwrap();
@@ -786,6 +854,44 @@ mod tests {
         let b: Broker<u32> = Broker::new(fast_cfg());
         assert!(b.publish("nope", 0, 1).is_err());
         assert!(b.subscribe("nope", "g", 1).is_err());
+        assert!(b.publish_balanced("nope", "g", 0, 1).is_err());
+    }
+
+    /// ISSUE 7 (queue-depth probes): `queue_depths` exposes per-queue
+    /// backlog, `inflight` counts leased-unacked work, and
+    /// `publish_balanced` steers onto the shortest live-owned queue
+    /// instead of the key hash.
+    #[test]
+    fn depth_probes_and_balanced_publish() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        assert_eq!(b.queue_depths("nope"), Vec::<usize>::new());
+        assert_eq!(b.inflight("t"), 0);
+        // Pile 6 messages onto queue 0 via the key hash (keys ≡ 0 mod 4).
+        for _ in 0..6 {
+            b.publish("t", 0, 7).unwrap();
+        }
+        let depths = b.queue_depths("t");
+        assert_eq!(depths.len(), 4);
+        assert_eq!(depths[0], 6);
+        assert_eq!(depths.iter().sum::<usize>(), b.backlog("t"));
+        // One member owns all queues; balanced publish with a key that
+        // hashes to the loaded queue 0 must pick an empty queue instead.
+        let c = b.subscribe("t", "g", 1).unwrap();
+        b.publish_balanced("t", "g", 0, 9).unwrap();
+        let depths = b.queue_depths("t");
+        assert_eq!(depths[0], 6, "balanced publish must avoid the deep queue");
+        assert_eq!(depths.iter().sum::<usize>(), 7);
+        // A polled-but-unacked delivery shows up as inflight, not backlog.
+        let d = c.poll(Duration::from_millis(300)).expect("delivery");
+        assert_eq!(b.inflight("t"), 1);
+        c.ack(&d);
+        assert_eq!(b.inflight("t"), 0);
+        // Unknown group falls back to the key-hash queue.
+        let before = b.queue_depths("t");
+        b.publish_balanced("t", "ghost", 1, 11).unwrap();
+        let after = b.queue_depths("t");
+        assert_eq!(after[1], before[1] + 1, "unknown group must fall back to key-hash queue");
     }
 
     #[test]

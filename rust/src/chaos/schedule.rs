@@ -71,22 +71,25 @@ impl ChaosSpec {
             let (key, val) = tok
                 .split_once('=')
                 .ok_or_else(|| PyramidError::Config(format!("chaos schedule: bad token {tok:?}")))?;
-            let bad = |_| PyramidError::Config(format!("chaos schedule: bad value {tok:?}"));
+            // `|_| bad()` rather than a shared `|_| ...` closure: the
+            // arms parse u64, u32 and f64, whose error types a single
+            // closure parameter could not unify.
+            let bad = || PyramidError::Config(format!("chaos schedule: bad value {tok:?}"));
             match key {
-                "seed" => spec.seed = val.parse().map_err(bad)?,
-                "steps" => spec.steps = val.parse().map_err(bad)?,
-                "step_ms" => spec.step_ms = val.parse().map_err(bad)?,
-                "queries" => spec.queries_per_step = val.parse().map_err(bad)?,
-                "writes" => spec.writes_per_step = val.parse().map_err(bad)?,
-                "drop" => spec.faults.drop_prob = val.parse().map_err(bad)?,
-                "dup" => spec.faults.dup_prob = val.parse().map_err(bad)?,
-                "reorder" => spec.faults.reorder_prob = val.parse().map_err(bad)?,
-                "delay" => spec.faults.delay_prob = val.parse().map_err(bad)?,
+                "seed" => spec.seed = val.parse().map_err(|_| bad())?,
+                "steps" => spec.steps = val.parse().map_err(|_| bad())?,
+                "step_ms" => spec.step_ms = val.parse().map_err(|_| bad())?,
+                "queries" => spec.queries_per_step = val.parse().map_err(|_| bad())?,
+                "writes" => spec.writes_per_step = val.parse().map_err(|_| bad())?,
+                "drop" => spec.faults.drop_prob = val.parse().map_err(|_| bad())?,
+                "dup" => spec.faults.dup_prob = val.parse().map_err(|_| bad())?,
+                "reorder" => spec.faults.reorder_prob = val.parse().map_err(|_| bad())?,
+                "delay" => spec.faults.delay_prob = val.parse().map_err(|_| bad())?,
                 "delay_min_us" => {
-                    spec.faults.delay_min = Duration::from_micros(val.parse().map_err(bad)?)
+                    spec.faults.delay_min = Duration::from_micros(val.parse().map_err(|_| bad())?)
                 }
                 "delay_max_us" => {
-                    spec.faults.delay_max = Duration::from_micros(val.parse().map_err(bad)?)
+                    spec.faults.delay_max = Duration::from_micros(val.parse().map_err(|_| bad())?)
                 }
                 _ => {
                     return Err(PyramidError::Config(format!(

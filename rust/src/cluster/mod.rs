@@ -20,6 +20,13 @@
 //! restarts (off = a killed replica *stays* dead, for blackout drills),
 //! and [`SimCluster::restore`] heals everything back to nominal.
 //!
+//! Elasticity knobs ([`crate::load`]'s controller drives these):
+//! [`SimCluster::scale_partition`] grows/shrinks a partition's replica
+//! set with elastic executors, [`SimCluster::queue_depth`] exposes the
+//! partition's broker backlog, and [`SimCluster::set_route_weight`]
+//! steers a fraction of its sub-queries onto the shortest live replica
+//! queue instead of the key-hash default.
+//!
 //! [`SimCluster::start_ingesting`] deploys the **writable** variant:
 //! coordinators accept `insert`/`delete`, every executor replica serves
 //! a [`LiveIndex`] (frozen base + delta + tombstones) and tails its
@@ -1081,6 +1088,118 @@ impl SimCluster {
         eid
     }
 
+    /// Scale a partition's replica set to exactly `target` live replicas —
+    /// the elasticity-controller primitive ([`crate::load`]).
+    ///
+    /// Scaling **up** spawns elastic executors (ids past the construction
+    /// roles) on the alive hosts currently carrying the fewest live
+    /// executors, spreading added load. Scaling **down** stops only
+    /// elastic replicas — construction roles are the Master's to respawn
+    /// and are never stopped here, so `target` is clamped to at least the
+    /// construction replica count (and at least 1). Removal is graceful
+    /// ([`crate::executor::ExecutorHandle::stop`]): the replica leaves its
+    /// consumer group and releases its lock, so no re-issue storm follows.
+    ///
+    /// Returns the live executor ids serving the partition afterwards.
+    pub fn scale_partition(&self, partition: PartitionId, target: usize) -> Result<Vec<u64>> {
+        if partition as usize >= self.subs.len() {
+            return Err(PyramidError::Cluster(format!(
+                "scale_partition: partition {partition} out of range ({} partitions)",
+                self.subs.len()
+            )));
+        }
+        let floor = self
+            .roles
+            .iter()
+            .filter(|r| r.partition == partition)
+            .count()
+            .max(1);
+        let target = target.max(floor);
+        let mut live = self.executors_for_partition(partition);
+        while live.len() < target {
+            let host = self.least_loaded_host().ok_or_else(|| {
+                PyramidError::Cluster("scale_partition: no alive host to place a replica on".into())
+            })?;
+            self.add_executor(partition, host);
+            live = self.executors_for_partition(partition);
+        }
+        if live.len() > target {
+            let construction = self.roles.len() as u64;
+            // Shed newest elastic replicas first; construction ids stay.
+            let mut doomed: Vec<u64> = live
+                .iter()
+                .copied()
+                .filter(|&id| id >= construction)
+                .collect();
+            doomed.sort_unstable_by(|a, b| b.cmp(a));
+            doomed.truncate(live.len() - target);
+            for id in doomed {
+                // Drain the handle under the lock, stop it outside: stop()
+                // joins the executor thread, which never takes this lock.
+                let handle = {
+                    let mut g = self.state.lock().unwrap();
+                    let pos = g.executors.iter().position(|e| e.id == id);
+                    pos.map(|i| g.executors.swap_remove(i))
+                };
+                if let Some(h) = handle {
+                    h.stop();
+                }
+            }
+            for c in &self.coordinators {
+                c.note_topology_change();
+            }
+            live = self.executors_for_partition(partition);
+        }
+        Ok(live)
+    }
+
+    /// The alive host carrying the fewest live executors (ties: lowest
+    /// host index) — where `scale_partition` places the next replica.
+    fn least_loaded_host(&self) -> Option<usize> {
+        let g = self.state.lock().unwrap();
+        let mut best: Option<(usize, usize)> = None; // (load, host)
+        for h in &self.hosts {
+            if !h.alive.load(Ordering::Relaxed) {
+                continue;
+            }
+            let load = g
+                .executors
+                .iter()
+                .filter(|e| e.host.host == h.host && !e.is_finished())
+                .count();
+            if best.map(|(l, _)| load < l).unwrap_or(true) {
+                best = Some((load, h.host));
+            }
+        }
+        best.map(|(_, h)| h)
+    }
+
+    /// Undelivered sub-queries queued on a partition's topic right now —
+    /// the backlog signal the elasticity controller keys off.
+    pub fn queue_depth(&self, partition: PartitionId) -> usize {
+        self.broker.backlog(&topic_for(partition))
+    }
+
+    /// Per-queue depths of a partition's topic (one slot per broker
+    /// queue); finer-grained than [`Self::queue_depth`].
+    pub fn queue_depths(&self, partition: PartitionId) -> Vec<usize> {
+        self.broker.queue_depths(&topic_for(partition))
+    }
+
+    /// Set a partition's routing weight on every coordinator: the percent
+    /// of sub-queries that keep legacy key-hash placement (100 = all,
+    /// the default; see [`CoordinatorNode::set_route_weight`]).
+    pub fn set_route_weight(&self, partition: PartitionId, weight: u32) {
+        for c in &self.coordinators {
+            c.set_route_weight(partition, weight);
+        }
+    }
+
+    /// The first coordinator's current routing weight for a partition.
+    pub fn route_weight(&self, partition: PartitionId) -> u32 {
+        self.coordinators.first().map(|c| c.route_weight(partition)).unwrap_or(100)
+    }
+
     /// Graceful shutdown: stop coordinators, master, respawner, executors.
     pub fn shutdown(mut self) {
         for c in &self.coordinators {
@@ -1474,6 +1593,45 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(cluster.live_executors(), before + 1);
         // Still serves correctly.
+        let params = QueryParams::default();
+        assert!(cluster.execute(queries.get(0), &params).is_ok());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn scale_partition_up_and_down_clamps_at_construction_floor() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 1)).unwrap();
+        assert_eq!(cluster.executors_for_partition(0).len(), 1);
+
+        // Up to 3 replicas: two elastic executors appear.
+        let live = cluster.scale_partition(0, 3).unwrap();
+        assert_eq!(live.len(), 3);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(cluster.executors_for_partition(0).len(), 3);
+
+        // Scaling up is idempotent at the target.
+        assert_eq!(cluster.scale_partition(0, 3).unwrap().len(), 3);
+
+        // Down to 1: only the elastic replicas are shed (graceful stop),
+        // the construction role survives.
+        let live = cluster.scale_partition(0, 1).unwrap();
+        assert_eq!(live, cluster.executors_for_partition(0));
+        assert_eq!(live.len(), 1);
+        assert!(live[0] < 4, "construction replica must survive, got {live:?}");
+
+        // Target 0 clamps to the construction floor, never below.
+        assert_eq!(cluster.scale_partition(0, 0).unwrap().len(), 1);
+
+        // Out-of-range partition is a config-shaped cluster error.
+        assert!(cluster.scale_partition(99, 2).is_err());
+
+        // Cluster still serves after churn; weights forward to coordinators.
+        assert_eq!(cluster.route_weight(0), 100);
+        cluster.set_route_weight(0, 40);
+        assert_eq!(cluster.route_weight(0), 40);
+        cluster.set_route_weight(0, 100);
+        assert_eq!(cluster.route_weight(0), 100);
         let params = QueryParams::default();
         assert!(cluster.execute(queries.get(0), &params).is_ok());
         cluster.shutdown();

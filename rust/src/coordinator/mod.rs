@@ -40,6 +40,13 @@
 //!   duplicate publish volume with a token bucket; a sustained
 //!   straggler suppresses timers past the budget instead of doubling
 //!   every slow sub-query (`metrics.hedges_suppressed`).
+//! * **Routing weights** — [`CoordinatorNode::set_route_weight`] steers
+//!   a fraction of a partition's sub-queries onto the shortest live
+//!   replica queue ([`crate::broker::Broker::publish_balanced`]) instead
+//!   of the key-hash placement. The load-elasticity controller
+//!   ([`crate::load`]) lowers a hot partition's weight to route around
+//!   overloaded replicas; at the default weight (100) the publish path
+//!   is bit-identical to the legacy key-hash fan-out.
 //!
 //! ## Write path (streaming ingestion, [`crate::ingest`])
 //!
@@ -339,6 +346,11 @@ pub struct CoordinatorNode {
     scorer: Option<Arc<dyn BatchScorer>>,
     /// Recent sub-query completion latencies (µs) feeding the hedge timer.
     sub_latency: Mutex<QuantileWindow>,
+    /// Per-partition routing weights (percent of sub-queries that keep
+    /// the legacy key-hash placement; the rest go to the shortest live
+    /// replica queue). Partitions absent from the map are at 100 —
+    /// the map empty means the publish path is exactly the legacy one.
+    route_weights: Mutex<HashMap<PartitionId, u32>>,
     /// Hedge-publish budget (None = uncapped; see
     /// [`HedgeConfig::max_hedges_per_sec`]).
     hedge_budget: Mutex<Option<TokenBucket>>,
@@ -405,6 +417,7 @@ impl CoordinatorNode {
             metrics: Arc::new(CoordinatorMetrics::default()),
             scorer,
             sub_latency: Mutex::new(QuantileWindow::new(HedgeConfig::WINDOW)),
+            route_weights: Mutex::new(HashMap::new()),
             hedge_budget: Mutex::new((cfg.hedge.max_hedges_per_sec > 0.0).then(|| {
                 let rate = cfg.hedge.max_hedges_per_sec;
                 TokenBucket::new(rate, rate)
@@ -483,6 +496,29 @@ impl CoordinatorNode {
             Some(b) => b.try_take(Instant::now()),
             None => true,
         }
+    }
+
+    /// Set a partition's routing weight: the percentage (0..=100) of its
+    /// sub-queries that keep the legacy key-hash queue placement; the
+    /// remainder are published onto the shortest queue owned by a live
+    /// replica ([`crate::broker::Broker::publish_balanced`]). The split
+    /// is deterministic in the query id (`qid % 100 < weight`), not
+    /// random, so a given qid always takes the same path at a given
+    /// weight. Setting 100 removes the override entirely — the fan-out
+    /// is then bit-identical to a coordinator that never had one.
+    pub fn set_route_weight(&self, partition: PartitionId, weight: u32) {
+        let w = weight.min(100);
+        let mut g = self.route_weights.lock().unwrap();
+        if w >= 100 {
+            g.remove(&partition);
+        } else {
+            g.insert(partition, w);
+        }
+    }
+
+    /// The current routing weight for a partition (100 = legacy hash).
+    pub fn route_weight(&self, partition: PartitionId) -> u32 {
+        self.route_weights.lock().unwrap().get(&partition).copied().unwrap_or(100)
     }
 
     /// Reset the hedge estimator's latency window. Called on topology
@@ -754,6 +790,13 @@ impl CoordinatorNode {
             log.end()
         };
         let hedge_delay = self.current_hedge_delay();
+        // Routing weights: snapshot once per block. `None` (the common
+        // case — an empty map) means the fan-out below is exactly the
+        // legacy key-hash publish, byte for byte.
+        let route_weights = {
+            let g = self.route_weights.lock().unwrap();
+            if g.is_empty() { None } else { Some(g.clone()) }
+        };
         // Fan the whole block out before gathering anything: every
         // executor sees as deep a backlog as possible per drain.
         // `hedge_queue` mirrors the fan-out order; since the hedge delay
@@ -766,7 +809,20 @@ impl CoordinatorNode {
             let qid = base_qid + i as u64;
             for &p in parts_i {
                 if !publish_cut(&chaos_plan) {
-                    self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                    let w = route_weights
+                        .as_ref()
+                        .and_then(|m| m.get(&p).copied())
+                        .unwrap_or(100);
+                    if w >= 100 || (qid % 100) < w as u64 {
+                        self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                    } else {
+                        self.broker.publish_balanced(
+                            &topic_for(p),
+                            &group_for(p),
+                            qid,
+                            mk_req(qid, p, i),
+                        )?;
+                    }
                 }
                 pending.insert((qid, p), Pending { qi: i, sent_at: Instant::now(), hedged: false });
                 if hedge_delay.is_some() {

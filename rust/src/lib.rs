@@ -46,6 +46,7 @@ pub mod executor;
 pub mod hnsw;
 pub mod ingest;
 pub mod kmeans;
+pub mod load;
 pub mod meta;
 pub mod metric;
 pub mod partition;
@@ -71,6 +72,7 @@ pub mod prelude {
     pub use crate::error::{PyramidError, Result};
     pub use crate::hnsw::{Hnsw, HnswParams, NestedHnsw};
     pub use crate::ingest::{IngestConfig, IngestGateway, LiveIndex};
+    pub use crate::load::{run_trace, ControllerConfig, LoadConfig, LoadReport, TraceSpec};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
     pub use crate::quant::{QuantPlane, Sq8Codec};

@@ -1,0 +1,192 @@
+//! Closed-loop elasticity controller: the policy loop that turns the
+//! monitor's queue-depth signal into replica-set and routing changes.
+//!
+//! Each tick, per partition, the controller reads the latest sampled
+//! broker backlog from the [`Monitor`](super::Monitor), normalizes it
+//! per live replica, and compares against two thresholds with
+//! **hysteresis**: scale-up needs `high_ticks` consecutive ticks above
+//! `high_depth`, scale-down needs `low_ticks` consecutive ticks below
+//! `low_depth`, and every action starts a `cooldown_ticks` refractory
+//! window — three independent anti-flap guards, because a controller
+//! that oscillates is worse than no controller (DIMS's dynamic
+//! balancing motivates the loop; the hysteresis is standard control
+//! practice).
+//!
+//! Actions go through the cluster's elasticity knobs:
+//! [`SimCluster::scale_partition`] to grow/shrink the replica set, and
+//! (with [`ControllerConfig::reroute`]) [`SimCluster::set_route_weight`]
+//! to send the hot partition's sub-queries to the shortest live replica
+//! queue while scaled out — without it a key-hash split keeps feeding
+//! the overloaded replica half the traffic. Weight restores to 100
+//! (bit-identical legacy routing) when the partition scales back to its
+//! construction replica count.
+
+use std::time::Instant;
+
+use crate::cluster::SimCluster;
+use crate::types::PartitionId;
+
+use super::Monitor;
+
+/// Elasticity policy knobs. The defaults favor fast reaction and slow
+/// release: overloads hurt immediately, idle elastic replicas only cost
+/// memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Per-replica backlog at/above which a tick counts as overloaded.
+    pub high_depth: f64,
+    /// Per-replica backlog at/below which a tick counts as idle.
+    pub low_depth: f64,
+    /// Consecutive overloaded ticks required before scaling up.
+    pub high_ticks: u32,
+    /// Consecutive idle ticks required before scaling down.
+    pub low_ticks: u32,
+    /// Ticks after any action during which the partition holds still.
+    pub cooldown_ticks: u32,
+    /// Replica ceiling per partition (construction replicas included).
+    pub max_replicas: usize,
+    /// Also steer the scaled-out partition's sub-queries onto the
+    /// shortest live replica queue (route weight 0) while elastic
+    /// replicas are serving.
+    pub reroute: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            high_depth: 4.0,
+            low_depth: 0.5,
+            high_ticks: 2,
+            low_ticks: 12,
+            cooldown_ticks: 4,
+            max_replicas: 4,
+            reroute: true,
+        }
+    }
+}
+
+/// Per-partition hysteresis state.
+#[derive(Debug, Clone, Copy, Default)]
+struct PartState {
+    hot_streak: u32,
+    cold_streak: u32,
+    cooldown: u32,
+}
+
+/// The policy loop. Owns no thread: the driver calls [`Self::tick`] on
+/// its sampling cadence, so controller decisions are serialized with
+/// the monitor samples they read.
+pub struct ElasticityController {
+    cfg: ControllerConfig,
+    /// Construction replica count per partition — the scale-down floor
+    /// and the "routing back to legacy" trigger.
+    baseline: Vec<usize>,
+    state: Vec<PartState>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    first_overload_ms: Option<f64>,
+    first_action_ms: Option<f64>,
+}
+
+impl ElasticityController {
+    /// A controller over `cluster`'s partitions, capturing the current
+    /// replica counts as the scale-down floor.
+    pub fn new(cfg: ControllerConfig, cluster: &SimCluster, partitions: usize) -> Self {
+        let baseline = (0..partitions)
+            .map(|p| cluster.executors_for_partition(p as PartitionId).len().max(1))
+            .collect();
+        ElasticityController {
+            cfg,
+            baseline,
+            state: vec![PartState::default(); partitions],
+            scale_ups: 0,
+            scale_downs: 0,
+            first_overload_ms: None,
+            first_action_ms: None,
+        }
+    }
+
+    /// One policy iteration at `now_ms` (driver-clock milliseconds):
+    /// read the monitor's latest depth samples, update hysteresis
+    /// streaks, and act on any partition whose streak and cooldown
+    /// allow it. Actions are logged into the monitor's event timeline.
+    pub fn tick(&mut self, now_ms: f64, at: Instant, cluster: &SimCluster, monitor: &mut Monitor) {
+        for p in 0..self.state.len() {
+            let pid = p as PartitionId;
+            let replicas = cluster.executors_for_partition(pid).len().max(1);
+            let per_replica = monitor.last_depth(pid) / replicas as f64;
+            let st = &mut self.state[p];
+            if st.cooldown > 0 {
+                st.cooldown -= 1;
+            }
+            if per_replica >= self.cfg.high_depth {
+                st.hot_streak += 1;
+                st.cold_streak = 0;
+                if self.first_overload_ms.is_none() {
+                    self.first_overload_ms = Some(now_ms);
+                }
+            } else if per_replica <= self.cfg.low_depth {
+                st.cold_streak += 1;
+                st.hot_streak = 0;
+            } else {
+                st.hot_streak = 0;
+                st.cold_streak = 0;
+            }
+            if st.cooldown > 0 {
+                continue;
+            }
+            if st.hot_streak >= self.cfg.high_ticks && replicas < self.cfg.max_replicas {
+                if cluster.scale_partition(pid, replicas + 1).is_ok() {
+                    self.scale_ups += 1;
+                    if self.first_action_ms.is_none() {
+                        self.first_action_ms = Some(now_ms);
+                    }
+                    if self.cfg.reroute {
+                        cluster.set_route_weight(pid, 0);
+                    }
+                    monitor.note_event(
+                        at,
+                        format!(
+                            "scale-up p{pid} -> {} replicas (depth/replica {per_replica:.1})",
+                            replicas + 1
+                        ),
+                    );
+                    st.hot_streak = 0;
+                    st.cooldown = self.cfg.cooldown_ticks;
+                }
+            } else if st.cold_streak >= self.cfg.low_ticks && replicas > self.baseline[p] {
+                if let Ok(live) = cluster.scale_partition(pid, replicas - 1) {
+                    self.scale_downs += 1;
+                    if live.len() <= self.baseline[p] {
+                        // Back at the construction set: restore the
+                        // exact legacy key-hash routing path.
+                        cluster.set_route_weight(pid, 100);
+                    }
+                    monitor.note_event(at, format!("scale-down p{pid} -> {} replicas", live.len()));
+                    st.cold_streak = 0;
+                    st.cooldown = self.cfg.cooldown_ticks;
+                }
+            }
+        }
+    }
+
+    /// Milliseconds from the first overloaded tick to the first
+    /// scale-up — the controller-reaction bench metric. None if the
+    /// trace never overloaded (or the controller never acted).
+    pub fn reaction_ms(&self) -> Option<f64> {
+        Some(self.first_action_ms? - self.first_overload_ms?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ControllerConfig::default();
+        assert!(c.high_depth > c.low_depth);
+        assert!(c.low_ticks > c.high_ticks, "release must be slower than reaction");
+        assert!(c.max_replicas >= 2);
+    }
+}

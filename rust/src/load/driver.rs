@@ -1,0 +1,333 @@
+//! Trace driver: replay a [`TraceSpec`] against a running
+//! [`SimCluster`] at its scheduled (open-loop) arrival times.
+//!
+//! The driver pre-generates everything the spec determines — arrival
+//! times, op kinds, partition targets, query/insert vectors — before
+//! touching the cluster, so runtime outcomes can never skew the
+//! workload (same discipline as [`crate::chaos::runner`]). A dispatcher
+//! thread releases each job at its scheduled offset to a pool of
+//! client workers; on every `tick_ms` boundary it samples per-partition
+//! queue depth and replica count into the [`Monitor`] and, when
+//! configured, runs one [`ElasticityController`] policy iteration.
+//!
+//! **Latency is charged from the scheduled arrival**, not from when a
+//! client thread picked the job up — client-side queueing counts
+//! against the system (no coordinated omission), which is what makes
+//! the static-vs-elastic p99 comparison honest under overload.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::SimCluster;
+use crate::config::QueryParams;
+use crate::error::{PyramidError, Result};
+use crate::meta::{PyramidIndex, Router};
+use crate::types::{PartitionId, VectorId};
+use crate::util::rng::Rng;
+
+use super::controller::{ControllerConfig, ElasticityController};
+use super::trace::{OpKind, TraceSpec, MAX_EVENTS};
+use super::Monitor;
+
+/// Sub-seed for the query/insert vector pool.
+const POOL_STREAM: u64 = 0x10AD_9001_10AD_9001;
+/// Sub-seed for per-event partition targeting and pool picks.
+const TARGET_STREAM: u64 = 0x10AD_7A26_10AD_7A26;
+
+/// How the driver replays a trace.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadConfig {
+    /// Client worker threads issuing requests.
+    pub clients: usize,
+    /// Sampling / controller cadence, milliseconds.
+    pub tick_ms: u64,
+    /// Query parameters for every trace query.
+    pub params: QueryParams,
+    /// Elasticity policy; None replays against the static placement
+    /// (bit-identical legacy routing, no scaling).
+    pub controller: Option<ControllerConfig>,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            clients: 16,
+            tick_ms: 25,
+            params: QueryParams::default(),
+            controller: None,
+        }
+    }
+}
+
+/// Outcome of one trace replay.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub spec: TraceSpec,
+    pub queries: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub errors: u64,
+    /// Wall clock of the whole replay, milliseconds.
+    pub wall_ms: f64,
+    /// Answered queries per second of wall clock.
+    pub qps: f64,
+    /// Open-loop latency quantiles, microseconds (NaN with no queries).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// The trace's hot partition (explicit `hot=` or top Zipf rank).
+    pub hot_partition: Option<PartitionId>,
+    /// Hot partition's p99 / query count (NaN / 0 without one).
+    pub hot_p99_us: f64,
+    pub hot_queries: u64,
+    /// Minimum coverage across every answered query.
+    pub min_coverage: f64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// First overload tick → first scale-up, milliseconds.
+    pub reaction_ms: Option<f64>,
+    /// Timestamped controller/driver events.
+    pub events: Vec<(f64, String)>,
+    /// Full monitor export (pretty JSON) for trending/plotting.
+    pub json: String,
+}
+
+/// One pre-generated trace event.
+struct Job {
+    at_ms: f64,
+    op: OpKind,
+    /// Primary partition this event targets (attribution key).
+    partition: PartitionId,
+    vector: Arc<Vec<f32>>,
+}
+
+/// Replay `spec` against `cluster`. The index is only used for its
+/// router (partition targeting) and dimensionality — the cluster serves
+/// every request.
+pub fn run_trace(
+    cluster: &SimCluster,
+    index: &PyramidIndex,
+    spec: &TraceSpec,
+    cfg: &LoadConfig,
+) -> Result<LoadReport> {
+    spec.validate()?;
+    let router = Router::from_index(index);
+    let partitions = router.partitions();
+    let dim = router.dim().ok_or_else(|| {
+        PyramidError::Config("load driver needs a routed (non-broadcast) cluster".into())
+    })?;
+
+    // --- pre-generate the workload (seeded; no cluster interaction) ---
+    let pools = build_pools(spec, &router, partitions, dim);
+    let arrivals = spec.arrivals();
+    let truncated = arrivals.len() >= MAX_EVENTS;
+    let ops = spec.ops(arrivals.len());
+    let weights = spec.partition_weights(partitions);
+    let mut target_rng = Rng::seed_from_u64(spec.seed ^ TARGET_STREAM);
+    let jobs: Vec<Job> = arrivals
+        .iter()
+        .zip(&ops)
+        .map(|(&at_ms, &op)| {
+            let p = target_rng.weighted(&weights) as PartitionId;
+            let pool = &pools[p as usize];
+            let vector = pool[target_rng.below(pool.len())].clone();
+            match op {
+                OpKind::Query => Job { at_ms, op, partition: p, vector },
+                // Writes go onto a far shelf so they never perturb
+                // query answers (same convention as the chaos runner).
+                _ => {
+                    let shifted: Vec<f32> = vector.iter().map(|v| v + 5.0).collect();
+                    Job { at_ms, op, partition: p, vector: Arc::new(shifted) }
+                }
+            }
+        })
+        .collect();
+    let total_jobs = jobs.len();
+
+    // --- replay ---
+    let run_start = Instant::now();
+    let window = Duration::from_millis(cfg.tick_ms.max(1) * 4);
+    let monitor = Mutex::new(Monitor::new(partitions, window, run_start));
+    if truncated {
+        monitor
+            .lock()
+            .unwrap()
+            .note_event(run_start, format!("trace truncated at {MAX_EVENTS} events"));
+    }
+    let mut controller = cfg
+        .controller
+        .map(|c| ElasticityController::new(c, cluster, partitions));
+    let inserted: Mutex<Vec<VectorId>> = Mutex::new(Vec::new());
+    let done = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<Job>();
+    let rx = Arc::new(Mutex::new(rx));
+    let params = cfg.params;
+
+    std::thread::scope(|s| {
+        for _ in 0..cfg.clients.max(1) {
+            let rx = rx.clone();
+            let monitor = &monitor;
+            let inserted = &inserted;
+            let done = &done;
+            s.spawn(move || loop {
+                let job = { rx.lock().unwrap().recv() };
+                let Ok(job) = job else { break };
+                run_job(cluster, &params, run_start, &job, monitor, inserted);
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+
+        // Dispatcher (this thread): release jobs on schedule, tick the
+        // sampler/controller between releases and while draining.
+        let tick = Duration::from_millis(cfg.tick_ms.max(1));
+        let mut next_tick = run_start + tick;
+        let mut do_tick = |at: Instant| {
+            let now_ms = at.saturating_duration_since(run_start).as_secs_f64() * 1_000.0;
+            let mut m = monitor.lock().unwrap();
+            for p in 0..partitions {
+                let pid = p as PartitionId;
+                m.sample_depth(at, pid, cluster.queue_depth(pid) as f64);
+                m.sample_replicas(at, pid, cluster.executors_for_partition(pid).len() as f64);
+            }
+            if let Some(c) = controller.as_mut() {
+                c.tick(now_ms, at, cluster, &mut m);
+            }
+        };
+        for job in jobs {
+            let due = run_start + Duration::from_secs_f64(job.at_ms / 1_000.0);
+            while next_tick < due {
+                sleep_until(next_tick);
+                do_tick(next_tick);
+                next_tick += tick;
+            }
+            sleep_until(due);
+            if tx.send(job).is_err() {
+                break;
+            }
+        }
+        drop(tx);
+        // Drain: keep sampling until every job is answered (bounded —
+        // an overloaded static run finishes late but finite; the
+        // coordinator deadline caps each straggler).
+        let drain_deadline = Instant::now() + Duration::from_secs(30);
+        while done.load(Ordering::Relaxed) < total_jobs && Instant::now() < drain_deadline {
+            sleep_until(next_tick);
+            do_tick(next_tick);
+            next_tick += tick;
+        }
+    });
+
+    let wall_ms = run_start.elapsed().as_secs_f64() * 1_000.0;
+    let m = monitor.into_inner().unwrap();
+    let hot = spec.hot_for(partitions);
+    Ok(LoadReport {
+        spec: *spec,
+        queries: m.queries,
+        inserts: m.inserts,
+        deletes: m.deletes,
+        errors: m.errors,
+        wall_ms,
+        qps: m.queries as f64 / (wall_ms / 1_000.0).max(1e-9),
+        p50_us: m.latency_percentile(50.0),
+        p99_us: m.latency_percentile(99.0),
+        hot_partition: hot,
+        hot_p99_us: hot.map(|p| m.partition_latency_percentile(p, 99.0)).unwrap_or(f64::NAN),
+        hot_queries: hot.map(|p| m.partition_queries(p)).unwrap_or(0),
+        min_coverage: m.min_coverage(),
+        scale_ups: controller.as_ref().map(|c| c.scale_ups).unwrap_or(0),
+        scale_downs: controller.as_ref().map(|c| c.scale_downs).unwrap_or(0),
+        reaction_ms: controller.as_ref().and_then(|c| c.reaction_ms()),
+        events: m.events().to_vec(),
+        json: m.to_json().pretty(),
+    })
+}
+
+/// Execute one job against the cluster and record the outcome.
+fn run_job(
+    cluster: &SimCluster,
+    params: &QueryParams,
+    run_start: Instant,
+    job: &Job,
+    monitor: &Mutex<Monitor>,
+    inserted: &Mutex<Vec<VectorId>>,
+) {
+    match job.op {
+        OpKind::Query => {
+            let r = cluster.execute_detailed(&job.vector, params);
+            let now = Instant::now();
+            let lat_us = (now.saturating_duration_since(run_start).as_secs_f64() * 1e6
+                - job.at_ms * 1e3)
+                .max(0.0);
+            let mut m = monitor.lock().unwrap();
+            match r {
+                Ok(qr) => m.record_query(now, job.partition, lat_us, qr.coverage()),
+                Err(_) => m.record_error(),
+            }
+        }
+        OpKind::Insert => match cluster.insert(&job.vector) {
+            Ok(id) => {
+                inserted.lock().unwrap().push(id);
+                monitor.lock().unwrap().record_write(Instant::now(), false);
+            }
+            Err(_) => monitor.lock().unwrap().record_error(),
+        },
+        OpKind::Delete => {
+            // Delete the most recent surviving insert; a delete with
+            // nothing inserted yet is a no-op, not an error.
+            let id = inserted.lock().unwrap().pop();
+            if let Some(id) = id {
+                match cluster.delete(id) {
+                    Ok(()) => monitor.lock().unwrap().record_write(Instant::now(), true),
+                    Err(_) => monitor.lock().unwrap().record_error(),
+                }
+            }
+        }
+    }
+}
+
+/// Build per-partition query pools: seeded unit-cube candidates routed
+/// through the meta-HNSW (branch 1) and bucketed by their primary
+/// partition, so "target partition p" means "a query that genuinely
+/// routes to p". Partitions the sampler never hits fall back to the
+/// global pool (they cannot be hot-spotted, but stay queryable).
+fn build_pools(
+    spec: &TraceSpec,
+    router: &Router,
+    partitions: usize,
+    dim: usize,
+) -> Vec<Vec<Arc<Vec<f32>>>> {
+    let mut rng = Rng::seed_from_u64(spec.seed ^ POOL_STREAM);
+    let mut pools: Vec<Vec<Arc<Vec<f32>>>> = vec![Vec::new(); partitions];
+    let mut all: Vec<Arc<Vec<f32>>> = Vec::new();
+    const PER_PARTITION: usize = 32;
+    const MAX_TRIES: usize = 4_096;
+    for _ in 0..MAX_TRIES {
+        let v: Vec<f32> = (0..dim).map(|_| rng.f32_range(0.0, 1.0)).collect();
+        let prepared = router.prepare_query(&v);
+        let routed = router.route(&prepared, 1, 64);
+        let v = Arc::new(v);
+        all.push(v.clone());
+        if let Some(&p) = routed.first() {
+            let pool = &mut pools[p as usize];
+            if pool.len() < PER_PARTITION {
+                pool.push(v);
+            }
+        }
+        if pools.iter().all(|p| p.len() >= PER_PARTITION) {
+            break;
+        }
+    }
+    for pool in pools.iter_mut() {
+        if pool.is_empty() {
+            pool.extend(all.iter().take(PER_PARTITION).cloned());
+        }
+    }
+    pools
+}
+
+fn sleep_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}

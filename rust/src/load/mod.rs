@@ -1,0 +1,36 @@
+//! Trace-driven load harness with closed-loop elasticity
+//! (EXPERIMENTS.md §10).
+//!
+//! The paper's headline claims are throughput under heavy traffic; this
+//! module supplies the missing scenario engine. Three pieces:
+//!
+//! * [`TraceSpec`] — a seeded, one-line workload grammar (open-loop
+//!   constant/Poisson/diurnal/burst arrivals, Zipf-skewed and
+//!   hot-spotted partition targeting, mixed query/insert/delete), with
+//!   `parse`/`Display` round-tripping exactly like the chaos schedule
+//!   grammar.
+//! * [`run_trace`] — the driver: replays a trace against a
+//!   [`SimCluster`](crate::cluster::SimCluster) at the scheduled
+//!   arrival times, charging latency from the *scheduled* arrival (no
+//!   coordinated omission), while sampling per-partition QPS, latency
+//!   quantiles, queue depth and replica count into a [`Monitor`].
+//! * [`ElasticityController`] — the closed loop: a hysteresis policy
+//!   over the monitor's queue-depth signal that scales hot partitions'
+//!   replica sets ([`SimCluster::scale_partition`](crate::cluster::SimCluster::scale_partition))
+//!   and steers their traffic to the shortest live replica queue
+//!   ([`SimCluster::set_route_weight`](crate::cluster::SimCluster::set_route_weight)).
+//!
+//! Invariant: with [`LoadConfig::controller`] set to `None`, a replay
+//! exercises exactly the pre-elasticity serving path — no routing
+//! weights, no scaling, bit-identical fan-out (pinned by
+//! `rust/tests/load.rs`).
+
+mod controller;
+mod driver;
+mod monitor;
+mod trace;
+
+pub use controller::{ControllerConfig, ElasticityController};
+pub use driver::{run_trace, LoadConfig, LoadReport};
+pub use monitor::Monitor;
+pub use trace::{Arrival, OpKind, TraceSpec, MAX_EVENTS};

@@ -1,0 +1,296 @@
+//! Load monitor: the per-partition time-series store the driver samples
+//! into and the elasticity controller reads from.
+//!
+//! One [`Monitor`] owns, per partition: a QPS series
+//! ([`crate::stats::ThroughputSeries`]), the full latency sample set
+//! (quantiles via [`crate::stats::percentile`] — exact, not sketched),
+//! a queue-depth gauge and a replica-count gauge (both
+//! [`crate::stats::GaugeSeries`]). Plus run-wide counters, the minimum
+//! observed coverage, and a timestamped event log (scale-ups, reroutes).
+//! Methods take `&mut self`; the driver serializes access behind one
+//! `Mutex`, which is also the natural consistency boundary for the
+//! controller's read-decide-act tick.
+//!
+//! [`Monitor::to_json`] exports everything through
+//! [`crate::util::json::Json`] for bench trending (`load/*` keys) and
+//! offline plotting.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::{percentile, GaugeSeries, ThroughputSeries};
+use crate::types::PartitionId;
+use crate::util::json::Json;
+
+/// Per-partition slice of the monitor.
+struct PartitionStats {
+    qps: ThroughputSeries,
+    /// Every query latency attributed to this partition, microseconds.
+    latencies: Vec<f64>,
+    depth: GaugeSeries,
+    replicas: GaugeSeries,
+    /// Most recent depth sample — what the controller's tick reads.
+    last_depth: f64,
+    /// Most recent replica-count sample.
+    last_replicas: f64,
+}
+
+impl PartitionStats {
+    fn new(window: Duration) -> Self {
+        PartitionStats {
+            qps: ThroughputSeries::new(window),
+            latencies: Vec::new(),
+            depth: GaugeSeries::new(window),
+            replicas: GaugeSeries::new(window),
+            last_depth: 0.0,
+            last_replicas: 0.0,
+        }
+    }
+}
+
+/// Run-wide and per-partition observability for one trace replay.
+pub struct Monitor {
+    start: Instant,
+    parts: Vec<PartitionStats>,
+    qps: ThroughputSeries,
+    all_latencies: Vec<f64>,
+    pub queries: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub errors: u64,
+    min_coverage: f64,
+    /// Timestamped controller/driver events: (ms since start, message).
+    events: Vec<(f64, String)>,
+}
+
+impl Monitor {
+    /// A monitor over `partitions` partitions, bucketing series at
+    /// `window` granularity, with time zero at `start`.
+    pub fn new(partitions: usize, window: Duration, start: Instant) -> Self {
+        Monitor {
+            start,
+            parts: (0..partitions).map(|_| PartitionStats::new(window)).collect(),
+            qps: ThroughputSeries::new(window),
+            all_latencies: Vec::new(),
+            queries: 0,
+            inserts: 0,
+            deletes: 0,
+            errors: 0,
+            min_coverage: 1.0,
+            events: Vec::new(),
+        }
+    }
+
+    fn ms_since_start(&self, at: Instant) -> f64 {
+        at.saturating_duration_since(self.start).as_secs_f64() * 1_000.0
+    }
+
+    /// Record one answered query: attributed to its primary (first
+    /// routed) partition, with the open-loop latency (measured from the
+    /// *scheduled* arrival) and its coverage report.
+    pub fn record_query(
+        &mut self,
+        at: Instant,
+        primary: PartitionId,
+        latency_us: f64,
+        coverage: f64,
+    ) {
+        self.queries += 1;
+        self.qps.record(at);
+        self.all_latencies.push(latency_us);
+        if coverage < self.min_coverage {
+            self.min_coverage = coverage;
+        }
+        if let Some(p) = self.parts.get_mut(primary as usize) {
+            p.qps.record(at);
+            p.latencies.push(latency_us);
+        }
+    }
+
+    /// Record one accepted write.
+    pub fn record_write(&mut self, at: Instant, delete: bool) {
+        self.qps.record(at);
+        if delete {
+            self.deletes += 1;
+        } else {
+            self.inserts += 1;
+        }
+    }
+
+    /// Record a failed operation (rejected/timed-out).
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Sample a partition's broker queue depth.
+    pub fn sample_depth(&mut self, at: Instant, partition: PartitionId, depth: f64) {
+        if let Some(p) = self.parts.get_mut(partition as usize) {
+            p.depth.observe(at, depth);
+            p.last_depth = depth;
+        }
+    }
+
+    /// Sample a partition's live replica count.
+    pub fn sample_replicas(&mut self, at: Instant, partition: PartitionId, n: f64) {
+        if let Some(p) = self.parts.get_mut(partition as usize) {
+            p.replicas.observe(at, n);
+            p.last_replicas = n;
+        }
+    }
+
+    /// The most recent queue-depth sample for a partition (0.0 before
+    /// the first sample) — the controller's primary pressure signal.
+    pub fn last_depth(&self, partition: PartitionId) -> f64 {
+        self.parts.get(partition as usize).map(|p| p.last_depth).unwrap_or(0.0)
+    }
+
+    /// The most recent replica-count sample for a partition.
+    pub fn last_replicas(&self, partition: PartitionId) -> f64 {
+        self.parts.get(partition as usize).map(|p| p.last_replicas).unwrap_or(0.0)
+    }
+
+    /// Append a timestamped event (controller action, driver milestone).
+    pub fn note_event(&mut self, at: Instant, msg: impl Into<String>) {
+        let t = self.ms_since_start(at);
+        self.events.push((t, msg.into()));
+    }
+
+    /// Overall latency percentile (microseconds); NaN before any query.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(&self.all_latencies, p)
+    }
+
+    /// Latency percentile for one partition's queries; NaN if none.
+    pub fn partition_latency_percentile(&self, partition: PartitionId, p: f64) -> f64 {
+        self.parts
+            .get(partition as usize)
+            .map(|s| percentile(&s.latencies, p))
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Queries attributed to a partition.
+    pub fn partition_queries(&self, partition: PartitionId) -> u64 {
+        self.parts.get(partition as usize).map(|p| p.qps.total()).unwrap_or(0)
+    }
+
+    /// Minimum coverage observed across every answered query.
+    pub fn min_coverage(&self) -> f64 {
+        self.min_coverage
+    }
+
+    pub fn events(&self) -> &[(f64, String)] {
+        &self.events
+    }
+
+    /// Export the full run as JSON: counters, overall quantiles, the
+    /// event log, and per-partition series (QPS, mean/max queue depth,
+    /// replica count) — the bench-trending payload.
+    pub fn to_json(&self) -> Json {
+        let series = |s: &[(f64, f64)]| {
+            Json::Arr(
+                s.iter()
+                    .map(|&(t, v)| Json::Arr(vec![Json::num(t), Json::num(v)]))
+                    .collect(),
+            )
+        };
+        let parts: Vec<Json> = self
+            .parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                Json::obj(vec![
+                    ("partition", Json::num(i as f64)),
+                    ("queries", Json::num(p.qps.total() as f64)),
+                    ("p50_us", Json::num(nan_to_null(percentile(&p.latencies, 50.0)))),
+                    ("p99_us", Json::num(nan_to_null(percentile(&p.latencies, 99.0)))),
+                    ("qps_series", series(&p.qps.series())),
+                    ("depth_mean_series", series(&p.depth.series())),
+                    ("depth_max_series", series(&p.depth.max_series())),
+                    ("replica_series", series(&p.replicas.series())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("queries", Json::num(self.queries as f64)),
+            ("inserts", Json::num(self.inserts as f64)),
+            ("deletes", Json::num(self.deletes as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("min_coverage", Json::num(self.min_coverage)),
+            ("p50_us", Json::num(nan_to_null(self.latency_percentile(50.0)))),
+            ("p99_us", Json::num(nan_to_null(self.latency_percentile(99.0)))),
+            ("qps_series", series(&self.qps.series())),
+            ("partitions", Json::Arr(parts)),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|(t, m)| Json::Arr(vec![Json::num(*t), Json::str(m.clone())]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// JSON has no NaN; an empty-sample quantile serializes as -1.
+fn nan_to_null(v: f64) -> f64 {
+    if v.is_nan() {
+        -1.0
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_counters_and_coverage_floor() {
+        let t0 = Instant::now();
+        let mut m = Monitor::new(2, Duration::from_millis(100), t0);
+        m.record_query(t0 + Duration::from_millis(10), 0, 500.0, 1.0);
+        m.record_query(t0 + Duration::from_millis(20), 0, 1_500.0, 1.0);
+        m.record_query(t0 + Duration::from_millis(30), 1, 100.0, 0.5);
+        m.record_write(t0 + Duration::from_millis(40), false);
+        m.record_error();
+        assert_eq!(m.queries, 3);
+        assert_eq!(m.inserts, 1);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.partition_queries(0), 2);
+        assert_eq!(m.partition_queries(1), 1);
+        assert!((m.min_coverage() - 0.5).abs() < 1e-12);
+        assert!(m.partition_latency_percentile(0, 99.0) >= 500.0);
+        // Out-of-range partition ids are ignored, not a panic.
+        m.record_query(t0, 99, 1.0, 1.0);
+        assert_eq!(m.partition_queries(99), 0);
+    }
+
+    #[test]
+    fn depth_samples_feed_last_depth_and_series() {
+        let t0 = Instant::now();
+        let mut m = Monitor::new(1, Duration::from_millis(50), t0);
+        assert_eq!(m.last_depth(0), 0.0);
+        m.sample_depth(t0 + Duration::from_millis(10), 0, 4.0);
+        m.sample_depth(t0 + Duration::from_millis(20), 0, 8.0);
+        m.sample_replicas(t0 + Duration::from_millis(20), 0, 2.0);
+        assert_eq!(m.last_depth(0), 8.0);
+        assert_eq!(m.last_replicas(0), 2.0);
+    }
+
+    #[test]
+    fn json_export_parses_and_carries_keys() {
+        let t0 = Instant::now();
+        let mut m = Monitor::new(2, Duration::from_millis(100), t0);
+        m.record_query(t0 + Duration::from_millis(5), 1, 750.0, 1.0);
+        m.note_event(t0 + Duration::from_millis(6), "scale-up p1");
+        let text = m.to_json().pretty();
+        let back = Json::parse(&text).expect("monitor JSON must parse");
+        assert_eq!(back.get("queries").and_then(Json::as_usize), Some(1));
+        assert_eq!(back.get("partitions").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert_eq!(back.get("events").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        // Empty-partition quantiles export as -1, never NaN.
+        let p0 = &back.get("partitions").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(p0.get("p99_us").and_then(Json::as_f64), Some(-1.0));
+    }
+}

@@ -1,0 +1,506 @@
+//! Trace grammar (EXPERIMENTS.md §10): seeded open-loop workload specs.
+//!
+//! A trace is one line of whitespace-separated `key=value` pairs — the
+//! same diffable, greppable convention as the chaos schedule grammar
+//! ([`crate::chaos::schedule::ChaosSpec`]):
+//!
+//! ```text
+//! seed=7 duration_ms=2000 rate=500 arrival=poisson \
+//!     period_ms=1000 amp=0.6 burst_every_ms=500 burst_len_ms=100 burst_x=8 \
+//!     zipf=0 hot=-1 hot_frac=0 query=1 insert=0 delete=0
+//! ```
+//!
+//! Every key has a default, so `seed=7` alone is a valid trace; unknown
+//! keys are an error. The seed drives *every* derived stream — arrival
+//! times, op kinds, partition targets — through distinct XOR'd
+//! sub-seeds, so one u64 reproduces the whole workload and no stream
+//! can alias another.
+//!
+//! Arrivals are **open-loop**: the event times are fixed up front by the
+//! spec, never by how fast the system answered (the driver measures
+//! latency from the *scheduled* arrival, so client-side queueing is
+//! charged to the system — no coordinated omission).
+
+use crate::error::{PyramidError, Result};
+use crate::types::PartitionId;
+use crate::util::rng::Rng;
+
+/// Sub-seed for the arrival-time stream (distinct from every other
+/// stream so they never alias; see [`crate::chaos::runner`] for the
+/// same convention on the chaos side).
+const ARRIVAL_STREAM: u64 = 0x10AD_A221_10AD_A221;
+/// Sub-seed for the op-kind (query/insert/delete) stream.
+const OP_STREAM: u64 = 0x10AD_0050_10AD_0050;
+/// Sub-seed for the Zipf rank permutation over partitions.
+const RANK_STREAM: u64 = 0x10AD_2A2A_10AD_2A2A;
+
+/// Arrival process shape: how event times are laid out over the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Evenly spaced at exactly `rate` events/sec.
+    Constant,
+    /// Homogeneous Poisson at `rate` events/sec.
+    Poisson,
+    /// Non-homogeneous Poisson, rate modulated by a sinusoid:
+    /// `rate * (1 + amp * sin(2π t / period_ms))` — a compressed
+    /// day/night cycle.
+    Diurnal,
+    /// Poisson at `rate`, multiplied by `burst_x` inside periodic burst
+    /// windows (`burst_len_ms` out of every `burst_every_ms`).
+    Burst,
+}
+
+impl Arrival {
+    fn key(self) -> &'static str {
+        match self {
+            Arrival::Constant => "constant",
+            Arrival::Poisson => "poisson",
+            Arrival::Diurnal => "diurnal",
+            Arrival::Burst => "burst",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Arrival> {
+        match s {
+            "constant" => Some(Arrival::Constant),
+            "poisson" => Some(Arrival::Poisson),
+            "diurnal" => Some(Arrival::Diurnal),
+            "burst" => Some(Arrival::Burst),
+            _ => None,
+        }
+    }
+}
+
+/// What one trace event does to the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Query,
+    Insert,
+    Delete,
+}
+
+/// A complete, self-contained workload trace. One seed reproduces the
+/// entire event stream; `parse` is the exact inverse of `Display`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    pub seed: u64,
+    /// Trace length, milliseconds of wall clock.
+    pub duration_ms: u64,
+    /// Mean event rate, events per second.
+    pub rate: f64,
+    pub arrival: Arrival,
+    /// Sinusoid period for [`Arrival::Diurnal`], milliseconds.
+    pub period_ms: u64,
+    /// Sinusoid amplitude for [`Arrival::Diurnal`] (0..=1).
+    pub amplitude: f64,
+    /// Burst cadence for [`Arrival::Burst`], milliseconds.
+    pub burst_every_ms: u64,
+    /// Burst window length, milliseconds (≤ `burst_every_ms`).
+    pub burst_len_ms: u64,
+    /// Rate multiplier inside a burst window.
+    pub burst_x: f64,
+    /// Zipf skew exponent for partition popularity (0 = uniform).
+    pub zipf: f64,
+    /// Explicit hot partition (-1 = none; overrides nothing, *adds*
+    /// `hot_frac` of traffic on top of the Zipf/uniform base).
+    pub hot_partition: i64,
+    /// Fraction of events redirected to the hot partition (0..=1).
+    pub hot_frac: f64,
+    /// Op mix weights (need not sum to 1; normalized at use).
+    pub query_frac: f64,
+    pub insert_frac: f64,
+    pub delete_frac: f64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            seed: 1,
+            duration_ms: 2_000,
+            rate: 500.0,
+            arrival: Arrival::Poisson,
+            period_ms: 1_000,
+            amplitude: 0.6,
+            burst_every_ms: 500,
+            burst_len_ms: 100,
+            burst_x: 8.0,
+            zipf: 0.0,
+            hot_partition: -1,
+            hot_frac: 0.0,
+            query_frac: 1.0,
+            insert_frac: 0.0,
+            delete_frac: 0.0,
+        }
+    }
+}
+
+/// Hard cap on generated events, so a typo'd `rate=1e9` cannot OOM the
+/// harness. Hitting it truncates the trace (the driver logs the cap).
+pub const MAX_EVENTS: usize = 1_000_000;
+
+impl TraceSpec {
+    /// The default trace shape at a given seed.
+    pub fn for_seed(seed: u64) -> Self {
+        TraceSpec { seed, ..TraceSpec::default() }
+    }
+
+    /// Parse the `key=value` grammar. Inverse of [`std::fmt::Display`].
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut spec = TraceSpec::default();
+        for tok in s.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| PyramidError::Config(format!("trace: bad token {tok:?}")))?;
+            // `|_| bad()` rather than a shared `|_| ...` closure: the
+            // arms parse u64, i64 and f64, whose error types a single
+            // closure parameter could not unify.
+            let bad = || PyramidError::Config(format!("trace: bad value {tok:?}"));
+            match key {
+                "seed" => spec.seed = val.parse().map_err(|_| bad())?,
+                "duration_ms" => spec.duration_ms = val.parse().map_err(|_| bad())?,
+                "rate" => spec.rate = val.parse().map_err(|_| bad())?,
+                "arrival" => {
+                    spec.arrival = Arrival::parse(val).ok_or_else(|| {
+                        PyramidError::Config(format!("trace: bad arrival {val:?}"))
+                    })?
+                }
+                "period_ms" => spec.period_ms = val.parse().map_err(|_| bad())?,
+                "amp" => spec.amplitude = val.parse().map_err(|_| bad())?,
+                "burst_every_ms" => spec.burst_every_ms = val.parse().map_err(|_| bad())?,
+                "burst_len_ms" => spec.burst_len_ms = val.parse().map_err(|_| bad())?,
+                "burst_x" => spec.burst_x = val.parse().map_err(|_| bad())?,
+                "zipf" => spec.zipf = val.parse().map_err(|_| bad())?,
+                "hot" => spec.hot_partition = val.parse().map_err(|_| bad())?,
+                "hot_frac" => spec.hot_frac = val.parse().map_err(|_| bad())?,
+                "query" => spec.query_frac = val.parse().map_err(|_| bad())?,
+                "insert" => spec.insert_frac = val.parse().map_err(|_| bad())?,
+                "delete" => spec.delete_frac = val.parse().map_err(|_| bad())?,
+                _ => return Err(PyramidError::Config(format!("trace: unknown key {key:?}"))),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Cross-field sanity (also run by [`Self::parse`]).
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(PyramidError::Config(m));
+        if self.rate <= 0.0 || !self.rate.is_finite() {
+            return err(format!("trace: rate must be positive, got {}", self.rate));
+        }
+        if self.query_frac < 0.0 || self.insert_frac < 0.0 || self.delete_frac < 0.0 {
+            return err("trace: op fractions must be non-negative".into());
+        }
+        if self.query_frac + self.insert_frac + self.delete_frac <= 0.0 {
+            return err("trace: op fractions sum to zero — empty workload".into());
+        }
+        if !(0.0..=1.0).contains(&self.hot_frac) {
+            return err(format!("trace: hot_frac must be in [0,1], got {}", self.hot_frac));
+        }
+        if self.period_ms == 0 || self.burst_every_ms == 0 {
+            return err("trace: period_ms/burst_every_ms must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate (events/sec) at offset `t_ms` into the trace.
+    fn rate_at(&self, t_ms: f64) -> f64 {
+        match self.arrival {
+            Arrival::Constant | Arrival::Poisson => self.rate,
+            Arrival::Diurnal => {
+                let phase = std::f64::consts::TAU * t_ms / self.period_ms as f64;
+                // Clamp so an amplitude > 1 can slow the night to a
+                // trickle but never stop (or reverse) time.
+                (self.rate * (1.0 + self.amplitude * phase.sin())).max(self.rate * 0.01)
+            }
+            Arrival::Burst => {
+                let in_burst = (t_ms as u64) % self.burst_every_ms < self.burst_len_ms;
+                if in_burst {
+                    self.rate * self.burst_x
+                } else {
+                    self.rate
+                }
+            }
+        }
+    }
+
+    /// The event arrival times, milliseconds from trace start, strictly
+    /// increasing within `[0, duration_ms)`. Constant spacing for
+    /// [`Arrival::Constant`]; otherwise a (non-)homogeneous Poisson
+    /// process stepped at the instantaneous rate. Capped at
+    /// [`MAX_EVENTS`].
+    pub fn arrivals(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let end = self.duration_ms as f64;
+        match self.arrival {
+            Arrival::Constant => {
+                let step = 1_000.0 / self.rate;
+                let mut t = 0.0;
+                while t < end && out.len() < MAX_EVENTS {
+                    out.push(t);
+                    t += step;
+                }
+            }
+            _ => {
+                let mut rng = Rng::seed_from_u64(self.seed ^ ARRIVAL_STREAM);
+                let mut t = 0.0;
+                loop {
+                    // Exponential gap at the rate in force *now* — a
+                    // step-wise thinning-free approximation that is exact
+                    // for Poisson and faithful at these modulation speeds.
+                    let gap_ms = rng.exponential() / self.rate_at(t) * 1_000.0;
+                    t += gap_ms;
+                    if t >= end || out.len() >= MAX_EVENTS {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// The op kind of each of `n` events (weighted by the op fractions,
+    /// seeded independently of the arrival times).
+    pub fn ops(&self, n: usize) -> Vec<OpKind> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ OP_STREAM);
+        let w = [self.query_frac, self.insert_frac, self.delete_frac];
+        (0..n)
+            .map(|_| match rng.weighted(&w) {
+                0 => OpKind::Query,
+                1 => OpKind::Insert,
+                _ => OpKind::Delete,
+            })
+            .collect()
+    }
+
+    /// Per-partition targeting weights (normalized to sum 1): Zipf
+    /// `1/(rank+1)^zipf` over a seeded rank permutation, then `hot_frac`
+    /// of the total mass moved onto the explicit hot partition (if set).
+    /// `zipf=0, hot=-1` is exactly uniform.
+    pub fn partition_weights(&self, partitions: usize) -> Vec<f64> {
+        assert!(partitions > 0, "partition_weights needs >= 1 partition");
+        let mut ranks: Vec<usize> = (0..partitions).collect();
+        if self.zipf > 0.0 {
+            // Which partition is popular is itself seeded, so two traces
+            // at different seeds skew different partitions.
+            Rng::seed_from_u64(self.seed ^ RANK_STREAM).shuffle(&mut ranks);
+        }
+        let mut w = vec![0.0f64; partitions];
+        for (rank, &p) in ranks.iter().enumerate() {
+            w[p] = 1.0 / ((rank + 1) as f64).powf(self.zipf);
+        }
+        let total: f64 = w.iter().sum();
+        for x in w.iter_mut() {
+            *x /= total;
+        }
+        if self.hot_frac > 0.0 && (0..partitions as i64).contains(&self.hot_partition) {
+            for x in w.iter_mut() {
+                *x *= 1.0 - self.hot_frac;
+            }
+            w[self.hot_partition as usize] += self.hot_frac;
+        }
+        w
+    }
+
+    /// The partition each trace treats as "the hot one" for reporting:
+    /// the explicit `hot=` override, else the heaviest Zipf rank, else
+    /// None (uniform trace).
+    pub fn hot_for(&self, partitions: usize) -> Option<PartitionId> {
+        if partitions == 0 {
+            return None;
+        }
+        if self.hot_frac > 0.0 && (0..partitions as i64).contains(&self.hot_partition) {
+            return Some(self.hot_partition as PartitionId);
+        }
+        if self.zipf > 0.0 {
+            let w = self.partition_weights(partitions);
+            let (p, _) = w
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            return Some(p as PartitionId);
+        }
+        None
+    }
+}
+
+impl std::fmt::Display for TraceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} duration_ms={} rate={} arrival={} period_ms={} amp={} \
+             burst_every_ms={} burst_len_ms={} burst_x={} zipf={} hot={} hot_frac={} \
+             query={} insert={} delete={}",
+            self.seed,
+            self.duration_ms,
+            self.rate,
+            self.arrival.key(),
+            self.period_ms,
+            self.amplitude,
+            self.burst_every_ms,
+            self.burst_len_ms,
+            self.burst_x,
+            self.zipf,
+            self.hot_partition,
+            self.hot_frac,
+            self.query_frac,
+            self.insert_frac,
+            self.delete_frac,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let spec = TraceSpec {
+            seed: 1337,
+            duration_ms: 750,
+            rate: 123.5,
+            arrival: Arrival::Diurnal,
+            period_ms: 400,
+            amplitude: 0.25,
+            burst_every_ms: 300,
+            burst_len_ms: 60,
+            burst_x: 4.5,
+            zipf: 1.1,
+            hot_partition: 2,
+            hot_frac: 0.75,
+            query_frac: 0.8,
+            insert_frac: 0.15,
+            delete_frac: 0.05,
+        };
+        let line = spec.to_string();
+        assert_eq!(TraceSpec::parse(&line).unwrap(), spec);
+    }
+
+    #[test]
+    fn partial_line_fills_defaults() {
+        let spec = TraceSpec::parse("seed=99").unwrap();
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.rate, TraceSpec::default().rate);
+        assert_eq!(spec.arrival, Arrival::Poisson);
+    }
+
+    #[test]
+    fn unknown_key_and_bad_values_rejected() {
+        assert!(TraceSpec::parse("seed=1 sneed=2").is_err());
+        assert!(TraceSpec::parse("seed").is_err());
+        assert!(TraceSpec::parse("rate=abc").is_err());
+        assert!(TraceSpec::parse("arrival=weekly").is_err());
+        assert!(TraceSpec::parse("rate=0").is_err());
+        assert!(TraceSpec::parse("hot_frac=1.5").is_err());
+        assert!(TraceSpec::parse("query=0 insert=0 delete=0").is_err());
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_monotone_and_bounded() {
+        let spec = TraceSpec { duration_ms: 1_000, rate: 800.0, ..TraceSpec::for_seed(5) };
+        let a = spec.arrivals();
+        let b = spec.arrivals();
+        assert_eq!(a, b, "same seed must reproduce the same arrival times");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[0] < w[1], "arrival times must be strictly increasing");
+        }
+        assert!(*a.last().unwrap() < 1_000.0);
+        // Poisson count concentrates near rate * duration.
+        let expect = 800.0;
+        assert!(
+            (a.len() as f64) > expect * 0.7 && (a.len() as f64) < expect * 1.3,
+            "got {} events, expected ~{expect}",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn constant_arrivals_are_evenly_spaced() {
+        let spec = TraceSpec {
+            arrival: Arrival::Constant,
+            rate: 100.0,
+            duration_ms: 500,
+            ..TraceSpec::default()
+        };
+        let a = spec.arrivals();
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!((w[1] - w[0] - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn burst_windows_are_denser_than_baseline() {
+        let spec = TraceSpec {
+            arrival: Arrival::Burst,
+            rate: 200.0,
+            burst_every_ms: 200,
+            burst_len_ms: 50,
+            burst_x: 10.0,
+            duration_ms: 2_000,
+            ..TraceSpec::for_seed(8)
+        };
+        let a = spec.arrivals();
+        let in_burst =
+            a.iter().filter(|&&t| (t as u64) % spec.burst_every_ms < spec.burst_len_ms).count();
+        let outside = a.len() - in_burst;
+        // Burst windows are 1/4 of the time but 10x the rate: the
+        // per-ms density inside must dominate clearly.
+        let d_in = in_burst as f64 / 500.0;
+        let d_out = outside as f64 / 1_500.0;
+        assert!(d_in > d_out * 4.0, "burst density {d_in} vs baseline {d_out}");
+    }
+
+    #[test]
+    fn diurnal_peak_is_denser_than_trough() {
+        let spec = TraceSpec {
+            arrival: Arrival::Diurnal,
+            rate: 500.0,
+            period_ms: 1_000,
+            amplitude: 0.9,
+            duration_ms: 4_000,
+            ..TraceSpec::for_seed(9)
+        };
+        let a = spec.arrivals();
+        // First half of each period is the sinusoid's positive lobe.
+        let peak = a.iter().filter(|&&t| (t as u64) % 1_000 < 500).count();
+        let trough = a.len() - peak;
+        assert!(peak as f64 > trough as f64 * 1.5, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn ops_respect_mix() {
+        let spec = TraceSpec {
+            query_frac: 0.5,
+            insert_frac: 0.5,
+            delete_frac: 0.0,
+            ..TraceSpec::for_seed(3)
+        };
+        let ops = spec.ops(10_000);
+        let q = ops.iter().filter(|o| **o == OpKind::Query).count();
+        assert!(ops.iter().all(|o| *o != OpKind::Delete));
+        assert!((4_000..6_000).contains(&q), "query count {q}");
+        assert_eq!(ops, spec.ops(10_000), "op stream must be reproducible");
+    }
+
+    #[test]
+    fn partition_weights_hot_override_dominates() {
+        let spec = TraceSpec { hot_partition: 2, hot_frac: 0.9, ..TraceSpec::for_seed(4) };
+        let w = spec.partition_weights(4);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(w[2] > 0.9, "hot partition weight {}", w[2]);
+        assert_eq!(spec.hot_for(4), Some(2));
+        // Uniform trace has no hot partition to report.
+        assert_eq!(TraceSpec::default().hot_for(4), None);
+        // Zipf skew concentrates mass on the top rank.
+        let zipf = TraceSpec { zipf: 1.5, ..TraceSpec::for_seed(4) };
+        let zw = zipf.partition_weights(8);
+        let hot = zipf.hot_for(8).unwrap() as usize;
+        let max = zw.iter().cloned().fold(0.0, f64::max);
+        assert!(zw[hot] >= max - 1e-12);
+    }
+}

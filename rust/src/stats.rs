@@ -1,5 +1,6 @@
 //! Small statistics helpers: percentiles, online means, fixed-window
-//! throughput series (used by the bench harness and the figure drivers).
+//! throughput and gauge series (used by the bench harness, the figure
+//! drivers and the [`crate::load`] monitor).
 
 /// Percentile of a sample (nearest-rank on a sorted copy). `p` in [0, 100].
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
@@ -155,11 +156,25 @@ impl ThroughputSeries {
     }
 
     pub fn record(&mut self, at: std::time::Instant) {
-        let idx = (at.duration_since(self.start).as_secs_f64() / self.window.as_secs_f64()) as usize;
+        self.record_n(at, 1);
+    }
+
+    /// Record `n` completions at once (a batch landing together). A
+    /// sample stamped before `start` saturates into bucket 0 instead of
+    /// panicking, so the emitted series stays monotone in time even if a
+    /// caller's clock reads race the series construction.
+    pub fn record_n(&mut self, at: std::time::Instant, n: u64) {
+        let dt = at.saturating_duration_since(self.start).as_secs_f64();
+        let idx = (dt / self.window.as_secs_f64()) as usize;
         if idx >= self.buckets.len() {
             self.buckets.resize(idx + 1, 0);
         }
-        self.buckets[idx] += 1;
+        self.buckets[idx] += n;
+    }
+
+    /// Total operations recorded across all buckets.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
     }
 
     /// (window start seconds, queries/sec) series.
@@ -170,6 +185,68 @@ impl ThroughputSeries {
             .enumerate()
             .map(|(i, &c)| (i as f64 * w, c as f64 / w))
             .collect()
+    }
+}
+
+/// Sampled-value companion to [`ThroughputSeries`]: observations bucketed
+/// into fixed windows, reported as per-window mean and max. The load
+/// monitor tracks queue depth and live-replica count through this — a
+/// *level* (how deep is the backlog right now), where ThroughputSeries
+/// tracks a *flow* (how many ops completed).
+#[derive(Debug)]
+pub struct GaugeSeries {
+    window: std::time::Duration,
+    start: std::time::Instant,
+    /// Per window: (sum, count, max).
+    buckets: Vec<(f64, u64, f64)>,
+}
+
+impl GaugeSeries {
+    pub fn new(window: std::time::Duration) -> Self {
+        GaugeSeries { window, start: std::time::Instant::now(), buckets: Vec::new() }
+    }
+
+    pub fn observe(&mut self, at: std::time::Instant, v: f64) {
+        let dt = at.saturating_duration_since(self.start).as_secs_f64();
+        let idx = (dt / self.window.as_secs_f64()) as usize;
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, (0.0, 0, f64::NEG_INFINITY));
+        }
+        let b = &mut self.buckets[idx];
+        b.0 += v;
+        b.1 += 1;
+        b.2 = b.2.max(v);
+    }
+
+    /// (window start seconds, mean value) for every window that received
+    /// at least one observation; empty windows are skipped, so the time
+    /// column is strictly increasing but not necessarily contiguous.
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        let w = self.window.as_secs_f64();
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.1 > 0)
+            .map(|(i, b)| (i as f64 * w, b.0 / b.1 as f64))
+            .collect()
+    }
+
+    /// (window start seconds, max value) per sampled window.
+    pub fn max_series(&self) -> Vec<(f64, f64)> {
+        let w = self.window.as_secs_f64();
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.1 > 0)
+            .map(|(i, b)| (i as f64 * w, b.2))
+            .collect()
+    }
+
+    /// Largest value ever observed (None before the first observation).
+    pub fn peak(&self) -> Option<f64> {
+        self.buckets.iter().filter(|b| b.1 > 0).map(|b| b.2).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
     }
 }
 
@@ -269,5 +346,115 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert!((s[0].1 - 20.0).abs() < 1e-9); // 2 ops / 0.1 s
         assert!((s[1].1 - 10.0).abs() < 1e-9);
+    }
+
+    // --- monitor-substrate edge cases (ISSUE 7 satellite): the load
+    // controller trusts these types, so their corners are pinned here. ---
+
+    #[test]
+    fn throughput_series_empty_window_reports_nothing() {
+        let t = ThroughputSeries::new(std::time::Duration::from_millis(100));
+        assert!(t.series().is_empty());
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn throughput_series_pre_start_sample_saturates_into_first_bucket() {
+        // A sample stamped before the series' start (clock read raced the
+        // construction) must land in bucket 0, not panic or skew: the
+        // emitted time column stays monotone from 0.
+        let mut t = ThroughputSeries::new(std::time::Duration::from_millis(100));
+        let base = t.start;
+        t.record(base.checked_sub(std::time::Duration::from_millis(50)).unwrap_or(base));
+        t.record(base + std::time::Duration::from_millis(10));
+        let s = t.series();
+        assert_eq!(s.len(), 1);
+        assert!((s[0].1 - 20.0).abs() < 1e-9); // both in bucket 0
+        assert_eq!(t.total(), 2);
+    }
+
+    #[test]
+    fn throughput_series_record_n_matches_repeated_record() {
+        let mut a = ThroughputSeries::new(std::time::Duration::from_millis(50));
+        let mut b = ThroughputSeries::new(std::time::Duration::from_millis(50));
+        let (ba, bb) = (a.start, b.start);
+        for _ in 0..5 {
+            a.record(ba + std::time::Duration::from_millis(10));
+        }
+        b.record_n(bb + std::time::Duration::from_millis(10), 5);
+        assert_eq!(a.series(), b.series());
+        assert_eq!(a.total(), b.total());
+    }
+
+    #[test]
+    fn throughput_series_time_column_is_strictly_monotone() {
+        let mut t = ThroughputSeries::new(std::time::Duration::from_millis(20));
+        let base = t.start;
+        for ms in [5u64, 30, 30, 90, 91, 200] {
+            t.record(base + std::time::Duration::from_millis(ms));
+        }
+        let s = t.series();
+        for w in s.windows(2) {
+            assert!(w[1].0 > w[0].0, "time column not monotone: {s:?}");
+        }
+        assert_eq!(t.total(), 6);
+    }
+
+    #[test]
+    fn quantile_window_single_sample_answers_every_quantile() {
+        let mut w = QuantileWindow::new(8);
+        w.observe(42.0);
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(w.quantile(q), Some(42.0), "q={q}");
+        }
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn quantile_window_zero_capacity_clamps_to_one() {
+        // A zero-cap window would divide by zero on observe; the
+        // constructor clamps to 1 (a degenerate last-sample window).
+        let mut w = QuantileWindow::new(0);
+        w.observe(1.0);
+        w.observe(2.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.quantile(0.5), Some(2.0));
+    }
+
+    #[test]
+    fn quantile_window_reset_models_topology_change() {
+        // The straggler era fills the window with slow samples; a
+        // topology change (replica scaled in/out) resets it so the next
+        // era's estimate is not poisoned by the old one.
+        let mut w = QuantileWindow::new(16);
+        for _ in 0..16 {
+            w.observe(50_000.0); // 50ms straggler era
+        }
+        assert_eq!(w.quantile(0.95), Some(50_000.0));
+        w.reset(); // scale event
+        w.observe(800.0); // healthy era
+        assert_eq!(w.quantile(0.95), Some(800.0), "old era leaked through reset");
+    }
+
+    #[test]
+    fn gauge_series_means_maxes_and_skips_empty_windows() {
+        let mut g = GaugeSeries::new(std::time::Duration::from_millis(100));
+        let base = g.start;
+        assert!(g.series().is_empty());
+        assert!(g.peak().is_none());
+        g.observe(base + std::time::Duration::from_millis(10), 4.0);
+        g.observe(base + std::time::Duration::from_millis(20), 8.0);
+        // Window 1 (100..200ms) receives nothing; window 2 gets one.
+        g.observe(base + std::time::Duration::from_millis(250), 3.0);
+        let s = g.series();
+        assert_eq!(s.len(), 2, "empty window must be skipped: {s:?}");
+        assert!((s[0].1 - 6.0).abs() < 1e-9);
+        assert!((s[1].1 - 3.0).abs() < 1e-9);
+        let m = g.max_series();
+        assert!((m[0].1 - 8.0).abs() < 1e-9);
+        assert_eq!(g.peak(), Some(8.0));
+        for w in s.windows(2) {
+            assert!(w[1].0 > w[0].0, "gauge time column not monotone");
+        }
     }
 }

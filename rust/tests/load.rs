@@ -1,0 +1,204 @@
+//! Load-harness acceptance matrix (ISSUE 7):
+//!
+//! * under a seeded hot-partition trace with a throttled home host, the
+//!   elasticity controller holds the hot partition's p99 within a bound
+//!   the static placement provably misses (asserted margin);
+//! * the fault-free runs never drop coverage below 100%;
+//! * with elasticity disabled, a trace replay leaves the cluster
+//!   bit-identical to the pre-elasticity serving path: no topology
+//!   change, no routing weights, and answers (score bits included)
+//!   equal to an untouched cluster's.
+
+use pyramid::load::Arrival;
+use pyramid::prelude::*;
+use std::time::Duration;
+
+/// The chaos harness index: 2 400 x 16-d synthetic, 4 sub-HNSWs.
+fn index() -> PyramidIndex {
+    harness_index(7).unwrap()
+}
+
+/// 4 workers, 1 replica per partition (replica r=0 of partition p homes
+/// on host p — throttling host p throttles exactly partition p), and a
+/// 1 ms simulated network hop per poll batch so a CPU throttle has a
+/// deterministic floor to stretch.
+fn topo() -> ClusterTopology {
+    ClusterTopology {
+        workers: 4,
+        replicas: 1,
+        coordinators: 2,
+        net_latency_us: 1_000,
+        rebalance_ms: 50,
+        executor_batch: 4,
+    }
+}
+
+/// Hedging off and a generous deadline: the measurement must isolate
+/// the elasticity controller, and a queued-but-not-dropped query must
+/// still be answered (coverage 1.0) however late the static run is.
+fn coord_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        timeout: Duration::from_secs(10),
+        hedge: HedgeConfig::disabled(),
+        ..CoordinatorConfig::default()
+    }
+}
+
+const HOT: u16 = 2;
+
+fn hot_trace() -> TraceSpec {
+    let mut spec = TraceSpec::for_seed(7);
+    spec.duration_ms = 1_500;
+    spec.rate = 400.0;
+    spec.arrival = Arrival::Poisson;
+    spec.hot_partition = HOT as i64;
+    spec.hot_frac = 0.9;
+    spec
+}
+
+fn load_cfg(controller: Option<ControllerConfig>) -> LoadConfig {
+    LoadConfig {
+        clients: 24,
+        tick_ms: 20,
+        // branch=1 so each query fans to exactly its routed partition:
+        // hot-partition attribution is then exact, and the same
+        // meta_ef is used for pool bucketing and serving.
+        params: QueryParams { k: 10, branch: 1, ef: 64, meta_ef: 64 },
+        controller,
+    }
+}
+
+fn run(spec: &TraceSpec, controller: Option<ControllerConfig>) -> LoadReport {
+    let idx = index();
+    let cluster = SimCluster::start_with(&idx, topo(), None, coord_cfg()).unwrap();
+    // Throttle the hot partition's home host to 5% CPU: every poll
+    // batch there takes 20x as long — the paper's straggler tool.
+    cluster.set_cpu_share(HOT as usize, 5);
+    let report = run_trace(&cluster, &idx, spec, &load_cfg(controller)).unwrap();
+    cluster.shutdown();
+    report
+}
+
+#[test]
+fn controller_holds_hot_partition_p99_where_static_misses() {
+    let spec = hot_trace();
+    let static_run = run(&spec, None);
+    let elastic = run(
+        &spec,
+        Some(ControllerConfig {
+            high_depth: 4.0,
+            high_ticks: 2,
+            low_ticks: 12,
+            cooldown_ticks: 5,
+            max_replicas: 3,
+            reroute: true,
+            ..ControllerConfig::default()
+        }),
+    );
+
+    // Both runs are fault-free: every query answered, full coverage,
+    // no errors — overload shows up as latency, never as data loss.
+    assert_eq!(static_run.errors, 0, "static run had errors");
+    assert_eq!(elastic.errors, 0, "elastic run had errors");
+    assert_eq!(static_run.min_coverage, 1.0, "static run dropped coverage");
+    assert_eq!(elastic.min_coverage, 1.0, "elastic run dropped coverage");
+    assert!(static_run.queries > 300, "static run answered {}", static_run.queries);
+    assert!(elastic.queries > 300, "elastic run answered {}", elastic.queries);
+    assert_eq!(static_run.hot_partition, Some(HOT));
+
+    // The controller must have actually closed the loop.
+    assert!(elastic.scale_ups >= 1, "controller never scaled up: {:?}", elastic.events);
+    assert!(elastic.reaction_ms.is_some(), "no overload->action reaction measured");
+    // ...without flapping: a 1.5s trace admits a handful of actions.
+    assert!(
+        elastic.scale_ups + elastic.scale_downs <= 8,
+        "controller flapped: {} ups / {} downs",
+        elastic.scale_ups,
+        elastic.scale_downs
+    );
+
+    // The headline bound: a second replica + shortest-queue routing
+    // must cut the hot partition's open-loop p99 to well under the
+    // static placement's (which grows with the unserved backlog).
+    assert!(
+        elastic.hot_p99_us < static_run.hot_p99_us * 0.7,
+        "elastic hot p99 {:.0}us not within 0.7x of static {:.0}us",
+        elastic.hot_p99_us,
+        static_run.hot_p99_us
+    );
+    assert!(
+        elastic.p99_us < static_run.p99_us,
+        "elastic overall p99 {:.0}us >= static {:.0}us",
+        elastic.p99_us,
+        static_run.p99_us
+    );
+}
+
+#[test]
+fn elasticity_disabled_is_bit_identical_to_legacy_serving() {
+    let idx = index();
+    let driven = SimCluster::start_with(&idx, topo(), None, coord_cfg()).unwrap();
+    let pristine = SimCluster::start_with(&idx, topo(), None, coord_cfg()).unwrap();
+
+    let before = driven.live_executors();
+    let mut spec = TraceSpec::for_seed(11);
+    spec.duration_ms = 400;
+    spec.rate = 200.0;
+    let report = run_trace(&driven, &idx, &spec, &load_cfg(None)).unwrap();
+    assert!(report.queries > 0);
+    assert_eq!(report.scale_ups, 0);
+    assert_eq!(report.min_coverage, 1.0);
+
+    // No topology change, no routing override left behind.
+    assert_eq!(driven.live_executors(), before, "static replay changed the replica set");
+    for p in 0..4u16 {
+        assert_eq!(driven.route_weight(p), 100, "partition {p} has a routing override");
+    }
+
+    // The driven cluster answers exactly like one that never saw load —
+    // same ids, same score bits: the legacy path was untouched.
+    let queries = SyntheticSpec::deep_like(2_400, 16, 7).queries(16);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    for qi in 0..queries.len() {
+        let a = driven.execute(queries.get(qi), &params).unwrap();
+        let b = pristine.execute(queries.get(qi), &params).unwrap();
+        assert_eq!(
+            a.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {qi}: ids diverge from pristine cluster"
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.score.to_bits(), y.score.to_bits(), "query {qi} score bits diverge");
+        }
+    }
+    driven.shutdown();
+    pristine.shutdown();
+}
+
+#[test]
+fn report_json_parses_and_trace_roundtrips() {
+    let mut spec = TraceSpec::for_seed(3);
+    spec.duration_ms = 300;
+    spec.rate = 150.0;
+    spec.zipf = 1.2;
+    assert_eq!(TraceSpec::parse(&spec.to_string()).unwrap(), spec);
+
+    let idx = index();
+    let cluster = SimCluster::start_with(&idx, topo(), None, coord_cfg()).unwrap();
+    let report = run_trace(&cluster, &idx, &spec, &load_cfg(None)).unwrap();
+    cluster.shutdown();
+
+    assert!(report.queries > 0);
+    assert!(report.hot_partition.is_some(), "zipf trace must report a hot partition");
+    let j = pyramid::util::json::Json::parse(&report.json).expect("report JSON must parse");
+    assert_eq!(
+        j.get("queries").and_then(pyramid::util::json::Json::as_usize),
+        Some(report.queries as usize)
+    );
+    assert_eq!(
+        j.get("partitions")
+            .and_then(pyramid::util::json::Json::as_arr)
+            .map(|a| a.len()),
+        Some(4)
+    );
+}
