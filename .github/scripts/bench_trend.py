@@ -8,7 +8,9 @@ writes. For ns/op entries a higher fresh value is a regression; entries
 whose name contains "speedup" or "-ratio" are ratios where *lower* is
 the regression direction (this covers the sq8 tier's
 "metric/sq8-speedup", "hnsw/sq8-walk-speedup ef=*" and
-"e2e/sq8-memory-ratio" keys). Entries whose name contains
+"e2e/sq8-memory-ratio" keys, plus the transport plane's
+"net/hedge-win-ratio"; the "net/*-gather-p99 ms" keys ride the plain
+higher-is-worse rule). Entries whose name contains
 "recall-delta" are absolute recall gaps (f32 minus quantized recall@10,
 already in [0, 1]-ish units): relative thresholds are meaningless near
 zero, so they regress when the gap *widens* by more than

@@ -107,7 +107,15 @@ fn index_cfg(m: usize, w: usize, n: usize) -> IndexConfig {
 
 fn topo(ctx: &Ctx, workers: usize, replicas: usize) -> ClusterTopology {
     let _ = ctx;
-    ClusterTopology { workers, replicas, coordinators: 2, net_latency_us: 20, rebalance_ms: 200, executor_batch: 8 }
+    ClusterTopology {
+        workers,
+        replicas,
+        coordinators: 2,
+        net_latency_us: 20,
+        rebalance_ms: 200,
+        executor_batch: 8,
+        ..ClusterTopology::default()
+    }
 }
 
 /// Fig 3: MIPS result distribution over item-norm percentiles.

@@ -35,6 +35,11 @@
 //!   hot-partition p99 of a static placement over the elasticity
 //!   controller's (higher is better), the overload-to-first-action
 //!   latency, and the served hot-partition QPS under the controller.
+//! * `net/same-rack-gather-p99 ms`, `net/cross-rack-gather-p99 ms`,
+//!   `net/hedge-win-ratio` — the transport plane, PR 8: gather tail on a
+//!   fat-tree fabric with every host rack-local vs one host per rack,
+//!   and the hedged-over-unhedged p99 win when each partition's replicas
+//!   sit at asymmetric distances (higher is better).
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -363,6 +368,7 @@ fn main() {
                 net_latency_us: 500,
                 rebalance_ms: 100,
                 executor_batch: 8,
+                ..ClusterTopology::default()
             };
             let coord_cfg = CoordinatorConfig { hedge, ..CoordinatorConfig::default() };
             let cluster =
@@ -420,6 +426,7 @@ fn main() {
             net_latency_us: 0,
             rebalance_ms: 100,
             executor_batch: 8,
+            ..ClusterTopology::default()
         };
         let cluster = SimCluster::start_ingesting(
             &idx,
@@ -649,6 +656,7 @@ fn main() {
                 net_latency_us: 1_000,
                 rebalance_ms: 50,
                 executor_batch: 4,
+                ..ClusterTopology::default()
             };
             let coord_cfg = CoordinatorConfig {
                 timeout: Duration::from_secs(10),
@@ -693,6 +701,76 @@ fn main() {
             elastic.hot_p99_us,
             elastic.reaction_ms.unwrap_or(-1.0),
             elastic.scale_ups
+        );
+    }
+
+    // --- net: transport plane (ISSUE 8) -------------------------------------
+    // The fat-tree fabric priced onto the broker seams. Report numbers
+    // for the trend step: rack-local vs cross-rack gather p99 on
+    // otherwise-identical clusters (the locality premium), and the hedge
+    // win when each partition's two replicas sit at asymmetric distances
+    // from the fabric root.
+    if run("net") {
+        use pyramid::net::NetSpec;
+        let n = if smoke { 2_000 } else { 4_000 };
+        let data = SyntheticSpec::deep_like(n, 16, 29).generate();
+        let queries = SyntheticSpec::deep_like(n, 16, 29).queries(32);
+        let cfg =
+            IndexConfig { sample: n / 4, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).expect("build net bench index");
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        let rounds = if smoke { 1 } else { 2 };
+        let fat = NetSpec::FatTree { hop_us: 1_500, gbps: 10, oversub: 4 };
+        let gather_p99 = |hosts_per_rack: usize, replicas: usize, hedge: HedgeConfig| {
+            let topo = ClusterTopology {
+                workers: 4,
+                replicas,
+                coordinators: 2,
+                net_latency_us: 0,
+                rebalance_ms: 100,
+                executor_batch: 8,
+                hosts_per_rack,
+                net: fat,
+            };
+            let coord_cfg = CoordinatorConfig { hedge, ..CoordinatorConfig::default() };
+            let cluster =
+                SimCluster::start_with(&idx, topo, None, coord_cfg).expect("start net cluster");
+            // Warm-up settles assignments and arms the hedge window on the
+            // fabric's real latencies.
+            for qi in 0..queries.len() {
+                let _ = cluster.execute(queries.get(qi), &params);
+            }
+            let mut ms = Vec::new();
+            for _ in 0..rounds {
+                for qi in 0..queries.len() {
+                    let t0 = Instant::now();
+                    let _ = cluster.execute(queries.get(qi), &params);
+                    ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            let hedges: u64 = cluster
+                .coordinators()
+                .iter()
+                .map(|c| c.metrics.hedges_fired.load(std::sync::atomic::Ordering::Relaxed))
+                .sum();
+            cluster.shutdown();
+            (percentile(&ms, 99.0), hedges)
+        };
+        let (local, _) = gather_p99(0, 1, HedgeConfig::disabled());
+        let (cross, _) = gather_p99(1, 1, HedgeConfig::disabled());
+        rec.record("net/same-rack-gather-p99 ms", local);
+        rec.record("net/cross-rack-gather-p99 ms", cross);
+        println!("net fabric: gather p99 rack-local {local:.2} ms vs cross-rack {cross:.2} ms");
+        // Hedge win under asymmetric replica distance: hosts_per_rack = 2
+        // leaves one replica of each partition near the fabric root and
+        // one across the spine; hedged re-dispatch should cut the tail.
+        let (unhedged, _) = gather_p99(2, 2, HedgeConfig::disabled());
+        let (hedged, fired) = gather_p99(2, 2, HedgeConfig::default());
+        let win = unhedged / hedged.max(1e-9);
+        rec.record("net/hedge-win-ratio", win);
+        println!(
+            "net fabric: asymmetric p99 unhedged {unhedged:.2} ms vs hedged {hedged:.2} ms \
+             ({win:.2}x, {fired} hedges)"
         );
     }
 

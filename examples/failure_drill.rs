@@ -39,6 +39,7 @@ fn main() -> Result<()> {
         net_latency_us: 20,
         rebalance_ms: 150,
         executor_batch: 8,
+        ..ClusterTopology::default()
     };
     let cluster = SimCluster::start(&index, topo)?;
     let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };

@@ -41,6 +41,7 @@ fn main() -> Result<()> {
         net_latency_us: 1_000,
         rebalance_ms: 50,
         executor_batch: 4,
+        ..ClusterTopology::default()
     };
     let coord = CoordinatorConfig {
         timeout: Duration::from_secs(10),

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         net_latency_us: args.get_u64("net-latency-us", 50),
         rebalance_ms: 200,
         executor_batch: args.get_usize("executor-batch", 8),
+        ..ClusterTopology::default()
     };
     let scorer: Option<Arc<dyn BatchScorer>> = if use_pjrt {
         let dir = default_artifacts_dir()

@@ -46,6 +46,7 @@ fn main() -> Result<()> {
         net_latency_us: 20,
         rebalance_ms: 150,
         executor_batch: 8,
+        ..ClusterTopology::default()
     };
     // Default IngestConfig: the re-freeze threshold (512) is small enough
     // that sustained ingest exercises background compaction for real.

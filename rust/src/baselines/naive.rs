@@ -146,7 +146,15 @@ mod tests {
         let idx = NaiveIndex::build(&ds, Metric::L2, 3, HnswParams::default(), 0).unwrap();
         let cluster = idx
             .serve(
-                ClusterTopology { workers: 3, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100, executor_batch: 4 },
+                ClusterTopology {
+                    workers: 3,
+                    replicas: 1,
+                    coordinators: 1,
+                    net_latency_us: 0,
+                    rebalance_ms: 100,
+                    executor_batch: 4,
+                    ..ClusterTopology::default()
+                },
                 None,
             )
             .unwrap();

@@ -4,7 +4,17 @@
 //! experiments exercise exactly these:
 //!
 //! * **topics with partitioned queues** — one topic per sub-HNSW, messages
-//!   spread over `partitions_per_topic` internal queues by key;
+//!   spread over `partitions_per_topic` internal queues by key; topics are
+//!   independently locked (one `Mutex` + `Condvar` per topic behind an
+//!   `RwLock` map), so traffic on one sub-HNSW never contends with
+//!   another's;
+//! * **bounded queues with backpressure** — every queue partition holds at
+//!   most [`BrokerConfig::queue_capacity`] messages; a publish into a full
+//!   queue either blocks until space frees (up to
+//!   [`BrokerConfig::publish_deadline`]) or fails fast with
+//!   [`PyramidError::Backpressure`], per [`BackpressurePolicy`]. Lease
+//!   requeues and chaos duplicates are exempt: a message the broker
+//!   *accepted* is never dropped by the bound;
 //! * **consumer groups** — executors serving the same sub-HNSW join one
 //!   group; every queue partition is owned by exactly one live member;
 //! * **rebalancing** — membership changes (join/leave/session expiry) and
@@ -19,6 +29,17 @@
 //!   coordinator's gather loop can re-issue sub-queries that were queued
 //!   behind a dead consumer immediately instead of waiting out the block
 //!   deadline (paper §IV-B failure recovery at the query layer);
+//! * **network cost** — an installed [`crate::net::NetModel`]
+//!   ([`Broker::set_net`]) prices every delivery by serialized size and
+//!   endpoint pair ([`Broker::bind_endpoint`] maps queue owners to
+//!   network endpoints); the cost lands in the message's visibility
+//!   instant, the same seam chaos delays use, so both compose
+//!   deterministically. No model installed (the `Ideal` default) skips
+//!   the accounting entirely — bit-identical to free delivery;
+//! * **virtual clock** — all broker timing (heartbeats, sessions, leases,
+//!   rebalance pauses, delivery delays) reads [`crate::net::SimClock`];
+//!   [`Broker::advance_clock`] jumps it forward so tests exercise lease
+//!   expiry and session eviction without wall-clock sleeps;
 //! * **fault injection** — an installed [`crate::chaos::FaultPlan`]
 //!   ([`Broker::set_chaos`]) decides a per-message fate at the publish
 //!   seam (drop / duplicate / reorder / delay) and severs endpoint links
@@ -28,11 +49,26 @@
 //!   rejoins through the normal expiry/rejoin path once healed.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::chaos::{FaultPlan, MsgFate, EP_BROKER, EP_NONE};
 use crate::error::{PyramidError, Result};
+use crate::net::{NetModel, SimClock, WireSize};
+
+/// What a `publish*` does when the target queue partition is at
+/// [`BrokerConfig::queue_capacity`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Wait for the consumer side to drain, up to
+    /// [`BrokerConfig::publish_deadline`]; only then surface
+    /// [`PyramidError::Backpressure`].
+    Block,
+    /// Fail immediately with [`PyramidError::Backpressure`] — the caller
+    /// owns the retry (hedging / re-issue machinery).
+    Fail,
+}
 
 /// Broker tuning knobs.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +82,14 @@ pub struct BrokerConfig {
     pub rebalance_interval: Duration,
     /// Lease time for in-flight (polled but unacked) messages.
     pub lease: Duration,
+    /// Per-queue-partition bound. Publishes into a full queue hit
+    /// [`BrokerConfig::backpressure`]; lease requeues and chaos
+    /// duplicates are exempt (accepted writes are never dropped).
+    pub queue_capacity: usize,
+    /// How long a [`BackpressurePolicy::Block`] publish waits at a full
+    /// queue before giving up with [`PyramidError::Backpressure`].
+    pub publish_deadline: Duration,
+    pub backpressure: BackpressurePolicy,
 }
 
 impl Default for BrokerConfig {
@@ -56,8 +100,34 @@ impl Default for BrokerConfig {
             rebalance_pause: Duration::from_millis(30),
             rebalance_interval: Duration::from_millis(200),
             lease: Duration::from_millis(500),
+            queue_capacity: 4096,
+            publish_deadline: Duration::from_secs(1),
+            backpressure: BackpressurePolicy::Block,
         }
     }
+}
+
+/// Backpressure / network-cost counters, shared by all clones of a
+/// broker. Snapshot via [`Broker::metrics`].
+#[derive(Default)]
+struct BrokerCounters {
+    /// Publishes that waited at a full queue at least once (Block policy).
+    publishes_blocked: AtomicU64,
+    /// Publishes rejected with [`PyramidError::Backpressure`].
+    backpressure_failures: AtomicU64,
+    /// Deliveries priced by the installed net model (nonzero cost).
+    net_messages_costed: AtomicU64,
+    /// Total network delay injected, in microseconds.
+    net_delay_us: AtomicU64,
+}
+
+/// Point-in-time view of a broker's transport counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BrokerMetrics {
+    pub publishes_blocked: u64,
+    pub backpressure_failures: u64,
+    pub net_messages_costed: u64,
+    pub net_delay_us: u64,
 }
 
 struct InFlight {
@@ -79,6 +149,9 @@ struct GroupState {
     /// Leased messages awaiting ack, keyed by lease id.
     inflight: HashMap<u64, InFlight>,
     next_lease: u64,
+    /// member id -> network endpoint ([`Broker::bind_endpoint`]); lets
+    /// the net model price a publish by the rack of the queue's owner.
+    net_eps: HashMap<u64, u64>,
 }
 
 struct TopicState<M> {
@@ -91,13 +164,16 @@ struct TopicState<M> {
     /// First retained sequence of the topic's log form (see
     /// [`Broker::publish_log`]); raised by [`Broker::truncate_log`].
     log_start: u64,
-    /// Chaos-delayed messages: invisible to consumers/tailers until the
-    /// recorded instant (empty unless a fault plan injects delays).
+    /// Delayed messages (chaos faults and/or network cost): invisible to
+    /// consumers/tailers until the recorded instant.
     visible_at: HashMap<u64, Instant>,
 }
 
-struct Shared<M> {
-    topics: HashMap<String, TopicState<M>>,
+/// One topic's independently-locked state: publishers, consumers and
+/// tailers of *this* topic contend here and nowhere else.
+struct Topic<M> {
+    state: Mutex<TopicState<M>>,
+    cv: Condvar,
 }
 
 /// A consumer eviction observed by the broker: `member` of `group` on
@@ -110,36 +186,64 @@ pub struct Eviction {
     pub member: u64,
 }
 
+/// How a publish picks its queue partition.
+enum Route<'a> {
+    /// Key-hash placement ([`Broker::publish`]).
+    Key,
+    /// Emptiest queue owned by a different live member than the key's
+    /// owner ([`Broker::publish_hedge`]).
+    Hedge(&'a str),
+    /// Shortest queue owned by any live member
+    /// ([`Broker::publish_balanced`]).
+    Balanced(&'a str),
+}
+
 /// The broker handle (cheap to clone; all clones share state).
 pub struct Broker<M> {
     cfg: BrokerConfig,
-    inner: Arc<(Mutex<Shared<M>>, Condvar)>,
-    /// Eviction-event subscribers. Kept outside the main state mutex so
-    /// notification never contends with the publish/poll hot path; lock
-    /// order is always main-then-watchers, never the reverse.
+    /// Topic map: read-locked on every hot-path access (publish / poll
+    /// grab the topic `Arc` and drop the map lock immediately),
+    /// write-locked only by [`Broker::create_topic`].
+    topics: Arc<RwLock<HashMap<String, Arc<Topic<M>>>>>,
+    /// Eviction-event subscribers. Kept outside the topic state mutexes
+    /// so notification never contends with the publish/poll hot path;
+    /// lock order is always topic-state-then-watchers, never the reverse.
     evict_watchers: Arc<Mutex<Vec<mpsc::Sender<Eviction>>>>,
     /// Installed fault plan (None in production; see [`Broker::set_chaos`]).
     chaos: Arc<Mutex<Option<Arc<FaultPlan>>>>,
+    /// Installed network cost model (None = ideal free delivery; see
+    /// [`Broker::set_net`]).
+    net: Arc<Mutex<Option<Arc<dyn NetModel>>>>,
+    /// Virtual clock behind every timing decision (zero skew — i.e. real
+    /// time — unless [`Broker::advance_clock`] is driven).
+    clock: SimClock,
+    counters: Arc<BrokerCounters>,
 }
 
 impl<M> Clone for Broker<M> {
     fn clone(&self) -> Self {
         Broker {
             cfg: self.cfg,
-            inner: self.inner.clone(),
+            topics: self.topics.clone(),
             evict_watchers: self.evict_watchers.clone(),
             chaos: self.chaos.clone(),
+            net: self.net.clone(),
+            clock: self.clock.clone(),
+            counters: self.counters.clone(),
         }
     }
 }
 
-impl<M: Send + Clone + 'static> Broker<M> {
+impl<M: Send + Clone + WireSize + 'static> Broker<M> {
     pub fn new(cfg: BrokerConfig) -> Self {
         Broker {
             cfg,
-            inner: Arc::new((Mutex::new(Shared { topics: HashMap::new() }), Condvar::new())),
+            topics: Arc::new(RwLock::new(HashMap::new())),
             evict_watchers: Arc::new(Mutex::new(Vec::new())),
             chaos: Arc::new(Mutex::new(None)),
+            net: Arc::new(Mutex::new(None)),
+            clock: SimClock::new(),
+            counters: Arc::new(BrokerCounters::default()),
         }
     }
 
@@ -150,12 +254,56 @@ impl<M: Send + Clone + 'static> Broker<M> {
         *self.chaos.lock().unwrap() = plan;
         // Wake pollers so an endpoint whose link was just cut or healed
         // re-evaluates promptly.
-        self.inner.1.notify_all();
+        self.notify_all_topics();
     }
 
     /// The currently-installed fault plan, if any.
     pub fn chaos(&self) -> Option<Arc<FaultPlan>> {
         self.chaos.lock().unwrap().clone()
+    }
+
+    /// Install (or clear) the network cost model. `None` — the `Ideal`
+    /// default — skips all delay/size accounting and is bit-identical to
+    /// free delivery.
+    pub fn set_net(&self, model: Option<Arc<dyn NetModel>>) {
+        *self.net.lock().unwrap() = model;
+        self.notify_all_topics();
+    }
+
+    /// The currently-installed network model, if any.
+    pub fn net(&self) -> Option<Arc<dyn NetModel>> {
+        self.net.lock().unwrap().clone()
+    }
+
+    /// The broker's virtual clock (shared by all clones).
+    pub fn clock(&self) -> SimClock {
+        self.clock.clone()
+    }
+
+    /// Jump the virtual clock forward: leases age, sessions expire,
+    /// rebalance pauses and delivery delays elapse — deterministically,
+    /// without sleeping. Test/simulation hook; production never calls it,
+    /// so the clock stays at real time.
+    pub fn advance_clock(&self, d: Duration) {
+        self.clock.advance(d);
+        self.notify_all_topics();
+    }
+
+    /// Transport counters (backpressure + network cost) snapshot.
+    pub fn metrics(&self) -> BrokerMetrics {
+        BrokerMetrics {
+            publishes_blocked: self.counters.publishes_blocked.load(Ordering::Relaxed),
+            backpressure_failures: self.counters.backpressure_failures.load(Ordering::Relaxed),
+            net_messages_costed: self.counters.net_messages_costed.load(Ordering::Relaxed),
+            net_delay_us: self.counters.net_delay_us.load(Ordering::Relaxed),
+        }
+    }
+
+    fn notify_all_topics(&self) {
+        let topics = self.topics.read().unwrap();
+        for tp in topics.values() {
+            tp.cv.notify_all();
+        }
     }
 
     /// Subscribe to consumer-eviction events (any topic, any group).
@@ -172,28 +320,116 @@ impl<M: Send + Clone + 'static> Broker<M> {
 
     /// Create a topic (idempotent).
     pub fn create_topic(&self, name: &str) {
-        let mut g = self.inner.0.lock().unwrap();
+        let mut topics = self.topics.write().unwrap();
         let p = self.cfg.partitions_per_topic;
-        g.topics.entry(name.to_string()).or_insert_with(|| TopicState {
-            queues: (0..p).map(|_| VecDeque::new()).collect(),
-            store: HashMap::new(),
-            next_msg: 0,
-            groups: HashMap::new(),
-            published: 0,
-            log_start: 0,
-            visible_at: HashMap::new(),
+        topics.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(Topic {
+                state: Mutex::new(TopicState {
+                    queues: (0..p).map(|_| VecDeque::new()).collect(),
+                    store: HashMap::new(),
+                    next_msg: 0,
+                    groups: HashMap::new(),
+                    published: 0,
+                    log_start: 0,
+                    visible_at: HashMap::new(),
+                }),
+                cv: Condvar::new(),
+            })
         });
     }
 
-    /// Enqueue a freshly-stored message id under its chaos fate. `Drop`
-    /// already counted by the plan; the message is unstored and silently
-    /// lost (the at-least-once machinery never saw it — exactly a lost
-    /// datagram).
-    fn enqueue_with_fate(t: &mut TopicState<M>, q: usize, id: u64, fate: MsgFate) {
+    /// The topic's shard, or None if it was never created.
+    fn topic(&self, name: &str) -> Option<Arc<Topic<M>>> {
+        self.topics.read().unwrap().get(name).cloned()
+    }
+
+    fn topic_or_err(&self, name: &str) -> Result<Arc<Topic<M>>> {
+        self.topic(name).ok_or_else(|| PyramidError::Broker(format!("no topic {name}")))
+    }
+
+    /// Queue partition a route resolves to, given current assignments and
+    /// backlogs. Deterministic: scans use strict `<`, so among equal
+    /// backlogs the lowest-indexed queue always wins.
+    fn route_queue(t: &TopicState<M>, route: &Route<'_>, key: u64, p: usize) -> usize {
+        let fallback = (key % p as u64) as usize;
+        match route {
+            Route::Key => fallback,
+            Route::Hedge(group) => match t.groups.get(*group) {
+                Some(gs) => {
+                    let primary_owner = gs.assignment.get(fallback).copied().flatten();
+                    // Emptiest queue partition owned by a different live member.
+                    let mut best: Option<(usize, usize)> = None; // (backlog, queue)
+                    for (q, owner) in gs.assignment.iter().enumerate() {
+                        if let Some(o) = owner {
+                            if Some(*o) != primary_owner && gs.members.contains_key(o) {
+                                let len = t.queues[q].len();
+                                if best.map(|(bl, _)| len < bl).unwrap_or(true) {
+                                    best = Some((len, q));
+                                }
+                            }
+                        }
+                    }
+                    best.map(|(_, q)| q).unwrap_or((fallback + 1) % p)
+                }
+                None => (fallback + 1) % p,
+            },
+            Route::Balanced(group) => match t.groups.get(*group) {
+                Some(gs) => {
+                    let mut best: Option<(usize, usize)> = None; // (backlog, queue)
+                    for (q, owner) in gs.assignment.iter().enumerate() {
+                        if let Some(o) = owner {
+                            if gs.members.contains_key(o) {
+                                let len = t.queues[q].len();
+                                if best.map(|(bl, _)| len < bl).unwrap_or(true) {
+                                    best = Some((len, q));
+                                }
+                            }
+                        }
+                    }
+                    best.map(|(_, q)| q).unwrap_or(fallback)
+                }
+                None => fallback,
+            },
+        }
+    }
+
+    /// Network endpoint a queue partition delivers to: the first (by
+    /// group name) assigned owner that bound one. `EP_NONE` — the
+    /// client/gateway attach — otherwise. Only consulted when a net model
+    /// is installed.
+    fn dest_endpoint(t: &TopicState<M>, q: usize) -> u64 {
+        let mut names: Vec<&String> = t.groups.keys().collect();
+        names.sort_unstable();
+        for name in names {
+            let gs = &t.groups[name];
+            if let Some(Some(owner)) = gs.assignment.get(q) {
+                if let Some(&ep) = gs.net_eps.get(owner) {
+                    return ep;
+                }
+            }
+        }
+        EP_NONE
+    }
+
+    /// Enqueue a freshly-stored message id under its chaos fate, folding
+    /// `net_delay` (the priced network cost) into its visibility instant.
+    /// `Drop` already counted by the plan; the message is unstored and
+    /// silently lost (the at-least-once machinery never saw it — exactly
+    /// a lost datagram).
+    fn enqueue_with_fate(
+        clock: &SimClock,
+        t: &mut TopicState<M>,
+        q: usize,
+        id: u64,
+        fate: MsgFate,
+        net_delay: Duration,
+    ) {
+        let mut delay = net_delay;
         match fate {
             MsgFate::Deliver => t.queues[q].push_back(id),
             MsgFate::Drop => {
                 t.store.remove(&id);
+                return;
             }
             MsgFate::Duplicate => {
                 t.queues[q].push_back(id);
@@ -201,32 +437,86 @@ impl<M: Send + Clone + 'static> Broker<M> {
             }
             MsgFate::Reorder => t.queues[q].push_front(id),
             MsgFate::Delay(d) => {
-                t.visible_at.insert(id, Instant::now() + d);
+                delay += d;
                 t.queues[q].push_back(id);
             }
         }
+        if !delay.is_zero() {
+            t.visible_at.insert(id, clock.now() + delay);
+        }
     }
 
-    /// Publish a message; `key` picks the queue partition.
-    pub fn publish(&self, topic: &str, key: u64, msg: M) -> Result<()> {
+    /// Shared publish path: chaos fate, bounded-queue admission, network
+    /// pricing, enqueue. The chaos decision is drawn *before* any lock so
+    /// the plan's seeded stream consumes one decision per publish in
+    /// call order, exactly as before the per-topic sharding.
+    fn publish_routed(&self, topic: &str, route: Route<'_>, key: u64, msg: M) -> Result<()> {
         let fate = self
             .chaos()
             .map(|plan| plan.fate_for_publish(topic))
             .unwrap_or(MsgFate::Deliver);
-        let mut g = self.inner.0.lock().unwrap();
+        let net = self.net();
+        let bytes = msg.wire_bytes();
+        let tp = self.topic_or_err(topic)?;
         let p = self.cfg.partitions_per_topic;
-        let t = g
-            .topics
-            .get_mut(topic)
-            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let mut t = tp.state.lock().unwrap();
+        // Admission: the target queue must be under capacity. Block
+        // re-routes on every wake (the shortest queue may have changed);
+        // the deadline is wall-clock so a blocked publisher always
+        // regains control.
+        let give_up = Instant::now() + self.cfg.publish_deadline;
+        let mut counted_block = false;
+        let target_q = loop {
+            let q = Self::route_queue(&t, &route, key, p);
+            if t.queues[q].len() < self.cfg.queue_capacity {
+                break q;
+            }
+            if self.cfg.backpressure == BackpressurePolicy::Fail {
+                self.counters.backpressure_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(PyramidError::Backpressure(topic.to_string()));
+            }
+            if !counted_block {
+                self.counters.publishes_blocked.fetch_add(1, Ordering::Relaxed);
+                counted_block = true;
+            }
+            let now = Instant::now();
+            if now >= give_up {
+                self.counters.backpressure_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(PyramidError::Backpressure(topic.to_string()));
+            }
+            let (nt, _) = tp
+                .cv
+                .wait_timeout(t, (give_up - now).min(Duration::from_millis(20)))
+                .unwrap();
+            t = nt;
+        };
+        let net_delay = match &net {
+            Some(model) => {
+                let dst = Self::dest_endpoint(&t, target_q);
+                let d = model.delay(EP_NONE, dst, bytes, self.clock.now());
+                if !d.is_zero() {
+                    self.counters.net_messages_costed.fetch_add(1, Ordering::Relaxed);
+                    self.counters
+                        .net_delay_us
+                        .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+                }
+                d
+            }
+            None => Duration::ZERO,
+        };
         let id = t.next_msg;
         t.next_msg += 1;
         t.published += 1;
         t.store.insert(id, msg);
-        Self::enqueue_with_fate(t, (key % p as u64) as usize, id, fate);
-        drop(g);
-        self.inner.1.notify_all();
+        Self::enqueue_with_fate(&self.clock, &mut t, target_q, id, fate, net_delay);
+        drop(t);
+        tp.cv.notify_all();
         Ok(())
+    }
+
+    /// Publish a message; `key` picks the queue partition.
+    pub fn publish(&self, topic: &str, key: u64, msg: M) -> Result<()> {
+        self.publish_routed(topic, Route::Key, key, msg)
     }
 
     /// Publish a duplicate of an in-flight message onto a queue partition
@@ -238,44 +528,20 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// the group has no second live member; the message is then served by
     /// whoever owns that queue after the next rebalance.
     pub fn publish_hedge(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
-        let fate = self
-            .chaos()
-            .map(|plan| plan.fate_for_publish(topic))
-            .unwrap_or(MsgFate::Deliver);
-        let mut g = self.inner.0.lock().unwrap();
-        let p = self.cfg.partitions_per_topic;
-        let t = g
-            .topics
-            .get_mut(topic)
-            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
-        let primary_q = (key % p as u64) as usize;
-        let target_q = match t.groups.get(group) {
-            Some(gs) => {
-                let primary_owner = gs.assignment.get(primary_q).copied().flatten();
-                // Emptiest queue partition owned by a different live member.
-                let mut best: Option<(usize, usize)> = None; // (backlog, queue)
-                for (q, owner) in gs.assignment.iter().enumerate() {
-                    if let Some(o) = owner {
-                        if Some(*o) != primary_owner && gs.members.contains_key(o) {
-                            let len = t.queues[q].len();
-                            if best.map(|(bl, _)| len < bl).unwrap_or(true) {
-                                best = Some((len, q));
-                            }
-                        }
-                    }
-                }
-                best.map(|(_, q)| q).unwrap_or((primary_q + 1) % p)
-            }
-            None => (primary_q + 1) % p,
-        };
-        let id = t.next_msg;
-        t.next_msg += 1;
-        t.published += 1;
-        t.store.insert(id, msg);
-        Self::enqueue_with_fate(t, target_q, id, fate);
-        drop(g);
-        self.inner.1.notify_all();
-        Ok(())
+        self.publish_routed(topic, Route::Hedge(group), key, msg)
+    }
+
+    /// Publish onto the **shortest** queue partition currently owned by a
+    /// live member of `group`, instead of the key-hash placement of
+    /// [`Self::publish`] — the coordinator's overload steering: while a
+    /// replica set is hot, new sub-queries land wherever the backlog is
+    /// thinnest rather than piling behind one slow owner. Ties break
+    /// deterministically to the lowest-indexed queue. Falls back to the
+    /// key-hash queue when the group is unknown or has no live assigned
+    /// member (pre-rebalance window). Chaos fates apply exactly as for
+    /// `publish`.
+    pub fn publish_balanced(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
+        self.publish_routed(topic, Route::Balanced(group), key, msg)
     }
 
     /// The group member that currently owns the queue partition `key`
@@ -283,8 +549,8 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// would be served by. None if the topic/group is unknown or the
     /// queue partition is unassigned.
     pub fn owner_of(&self, topic: &str, group: &str, key: u64) -> Option<u64> {
-        let g = self.inner.0.lock().unwrap();
-        let t = g.topics.get(topic)?;
+        let tp = self.topic(topic)?;
+        let t = tp.state.lock().unwrap();
         let gs = t.groups.get(group)?;
         let q = (key % self.cfg.partitions_per_topic as u64) as usize;
         gs.assignment.get(q).copied().flatten()
@@ -310,27 +576,27 @@ impl<M: Send + Clone + 'static> Broker<M> {
         member: u64,
         endpoint: u64,
     ) -> Result<Consumer<M>> {
-        let mut g = self.inner.0.lock().unwrap();
+        let tp = self.topic_or_err(topic)?;
         let p = self.cfg.partitions_per_topic;
-        let t = g
-            .topics
-            .get_mut(topic)
-            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let now = self.clock.now();
+        let mut t = tp.state.lock().unwrap();
         let gs = t.groups.entry(group.to_string()).or_insert_with(|| GroupState {
             members: HashMap::new(),
             assignment: vec![None; p],
-            paused_until: Instant::now(),
+            paused_until: now,
             epoch: 0,
-            last_lag_rebalance: Instant::now(),
+            last_lag_rebalance: now,
             inflight: HashMap::new(),
             next_lease: 0,
+            net_eps: HashMap::new(),
         });
-        gs.members.insert(member, Instant::now());
-        Self::rebalance(gs, self.cfg.rebalance_pause);
-        drop(g);
-        self.inner.1.notify_all();
+        gs.members.insert(member, now);
+        Self::rebalance(gs, self.cfg.rebalance_pause, now);
+        drop(t);
+        tp.cv.notify_all();
         Ok(Consumer {
             broker: self.clone(),
+            topic_ref: tp,
             topic: topic.to_string(),
             group: group.to_string(),
             member,
@@ -338,21 +604,38 @@ impl<M: Send + Clone + 'static> Broker<M> {
         })
     }
 
+    /// Register the **network** endpoint serving (`topic`, `group`,
+    /// `member`): publishes routed to a queue partition owned by this
+    /// member are priced by the installed [`crate::net::NetModel`]
+    /// toward this endpoint (rack placement, bandwidth). Orthogonal to
+    /// the *chaos* endpoint of [`Self::subscribe_at`] — binding never
+    /// changes link-cut semantics. Call after `subscribe`; a bind for an
+    /// unknown topic/group is a no-op.
+    pub fn bind_endpoint(&self, topic: &str, group: &str, member: u64, net_ep: u64) {
+        if let Some(tp) = self.topic(topic) {
+            let mut t = tp.state.lock().unwrap();
+            if let Some(gs) = t.groups.get_mut(group) {
+                gs.net_eps.insert(member, net_ep);
+            }
+        }
+    }
+
     /// Recompute the partition assignment round-robin over live members
     /// and pause the group briefly (the visible cost of a full rebalance).
-    fn rebalance(gs: &mut GroupState, pause: Duration) {
+    fn rebalance(gs: &mut GroupState, pause: Duration, now: Instant) {
         let mut members: Vec<u64> = gs.members.keys().copied().collect();
         members.sort_unstable();
         for (i, slot) in gs.assignment.iter_mut().enumerate() {
             *slot = if members.is_empty() { None } else { Some(members[i % members.len()]) };
         }
         gs.epoch += 1;
-        gs.paused_until = Instant::now() + pause;
+        gs.paused_until = now + pause;
     }
 
     /// Evict members whose sessions expired; requeue their expired leases.
     /// Returns the evicted member ids so the caller can notify eviction
-    /// watchers once the topic borrow is released.
+    /// watchers once the topic borrow is released. Requeues bypass the
+    /// queue bound: an accepted message is never dropped for capacity.
     fn reap(cfg: &BrokerConfig, t: &mut TopicState<M>, group: &str, now: Instant) -> Vec<u64> {
         let Some(gs) = t.groups.get_mut(group) else { return Vec::new() };
         let expired: Vec<u64> = gs
@@ -365,7 +648,7 @@ impl<M: Send + Clone + 'static> Broker<M> {
             for m in &expired {
                 gs.members.remove(m);
             }
-            Self::rebalance(gs, cfg.rebalance_pause);
+            Self::rebalance(gs, cfg.rebalance_pause, now);
         }
         // Expire stale leases back onto their queues (at-least-once).
         let mut back: Vec<(usize, u64)> = Vec::new();
@@ -433,29 +716,37 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// where *every* replica of a partition must see *every* update in
     /// order, and a respawned replica replays from scratch.
     ///
-    /// A topic must be fed through either `publish` (queue semantics) or
-    /// `publish_log` (log semantics), never both: the two share the
-    /// message-id counter, and queue consumption deletes acked messages,
-    /// which would punch holes in the log.
+    /// Retained logs are unbounded: the queue capacity / backpressure
+    /// machinery does not apply (durability beats admission control for
+    /// the write path; compaction is [`Self::truncate_log`]'s job). An
+    /// installed net model still prices each record by serialized size —
+    /// the replication-stream cost — as a rack-local (gateway → broker)
+    /// transfer.
     pub fn publish_log(&self, topic: &str, msg: M) -> Result<u64> {
         // Logs carry sequence-numbered state, so delivery *delay* is the
         // only fault a plan may inject here (see
         // [`crate::chaos::FaultPlan::delay_for_log`]).
-        let delay = self.chaos().and_then(|plan| plan.delay_for_log(topic));
-        let mut g = self.inner.0.lock().unwrap();
-        let t = g
-            .topics
-            .get_mut(topic)
-            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
+        let chaos_delay = self.chaos().and_then(|plan| plan.delay_for_log(topic));
+        let net_delay = self.net().map(|model| {
+            let d = model.delay(EP_NONE, EP_BROKER, msg.wire_bytes(), self.clock.now());
+            if !d.is_zero() {
+                self.counters.net_messages_costed.fetch_add(1, Ordering::Relaxed);
+                self.counters.net_delay_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+            }
+            d
+        });
+        let tp = self.topic_or_err(topic)?;
+        let mut t = tp.state.lock().unwrap();
         let seq = t.next_msg;
         t.next_msg += 1;
         t.published += 1;
         t.store.insert(seq, msg);
-        if let Some(d) = delay {
-            t.visible_at.insert(seq, Instant::now() + d);
+        let delay = chaos_delay.unwrap_or(Duration::ZERO) + net_delay.unwrap_or(Duration::ZERO);
+        if !delay.is_zero() {
+            t.visible_at.insert(seq, self.clock.now() + delay);
         }
-        drop(g);
-        self.inner.1.notify_all();
+        drop(t);
+        tp.cv.notify_all();
         Ok(seq)
     }
 
@@ -463,16 +754,14 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// unknown or empty topic) — what a fully caught-up tailer's cursor
     /// reads.
     pub fn log_end(&self, topic: &str) -> u64 {
-        let g = self.inner.0.lock().unwrap();
-        g.topics.get(topic).map(|t| t.next_msg).unwrap_or(0)
+        self.topic(topic).map(|tp| tp.state.lock().unwrap().next_msg).unwrap_or(0)
     }
 
     /// First retained sequence of a topic's log (0 until a
     /// [`Self::truncate_log`] raises it) — the observable effect of the
     /// cluster's low-water-mark compaction.
     pub fn log_start(&self, topic: &str) -> u64 {
-        let g = self.inner.0.lock().unwrap();
-        g.topics.get(topic).map(|t| t.log_start).unwrap_or(0)
+        self.topic(topic).map(|tp| tp.state.lock().unwrap().log_start).unwrap_or(0)
     }
 
     /// A cursor-based reader over a topic's retained log, starting at
@@ -495,8 +784,8 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// whose cursor falls inside the dropped range skip forward to the
     /// first retained sequence.
     pub fn truncate_log(&self, topic: &str, below: u64) {
-        let mut g = self.inner.0.lock().unwrap();
-        if let Some(t) = g.topics.get_mut(topic) {
+        if let Some(tp) = self.topic(topic) {
+            let mut t = tp.state.lock().unwrap();
             let below = below.min(t.next_msg);
             if below > t.log_start {
                 for seq in t.log_start..below {
@@ -510,17 +799,16 @@ impl<M: Send + Clone + 'static> Broker<M> {
 
     /// Queue depth across partitions (monitoring).
     pub fn backlog(&self, topic: &str) -> usize {
-        let g = self.inner.0.lock().unwrap();
-        g.topics.get(topic).map(|t| t.queues.iter().map(VecDeque::len).sum()).unwrap_or(0)
+        self.topic(topic)
+            .map(|tp| tp.state.lock().unwrap().queues.iter().map(VecDeque::len).sum())
+            .unwrap_or(0)
     }
 
     /// Per-queue-partition depth snapshot (monitoring; the load
     /// monitor's queue-depth probe). Empty for an unknown topic.
     pub fn queue_depths(&self, topic: &str) -> Vec<usize> {
-        let g = self.inner.0.lock().unwrap();
-        g.topics
-            .get(topic)
-            .map(|t| t.queues.iter().map(VecDeque::len).collect())
+        self.topic(topic)
+            .map(|tp| tp.state.lock().unwrap().queues.iter().map(VecDeque::len).collect())
             .unwrap_or_default()
     }
 
@@ -528,64 +816,14 @@ impl<M: Send + Clone + 'static> Broker<M> {
     /// — work that left the queues but has not completed. Backlog +
     /// inflight is the topic's total outstanding load.
     pub fn inflight(&self, topic: &str) -> usize {
-        let g = self.inner.0.lock().unwrap();
-        g.topics
-            .get(topic)
-            .map(|t| t.groups.values().map(|gs| gs.inflight.len()).sum())
+        self.topic(topic)
+            .map(|tp| tp.state.lock().unwrap().groups.values().map(|gs| gs.inflight.len()).sum())
             .unwrap_or(0)
-    }
-
-    /// Publish onto the **shortest** queue partition currently owned by a
-    /// live member of `group`, instead of the key-hash placement of
-    /// [`Self::publish`] — the coordinator's overload steering: while a
-    /// replica set is hot, new sub-queries land wherever the backlog is
-    /// thinnest rather than piling behind one slow owner. Falls back to
-    /// the key-hash queue when the group is unknown or has no live
-    /// assigned member (pre-rebalance window). Chaos fates apply exactly
-    /// as for `publish`.
-    pub fn publish_balanced(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
-        let fate = self
-            .chaos()
-            .map(|plan| plan.fate_for_publish(topic))
-            .unwrap_or(MsgFate::Deliver);
-        let mut g = self.inner.0.lock().unwrap();
-        let p = self.cfg.partitions_per_topic;
-        let t = g
-            .topics
-            .get_mut(topic)
-            .ok_or_else(|| PyramidError::Broker(format!("no topic {topic}")))?;
-        let fallback = (key % p as u64) as usize;
-        let target_q = match t.groups.get(group) {
-            Some(gs) => {
-                let mut best: Option<(usize, usize)> = None; // (backlog, queue)
-                for (q, owner) in gs.assignment.iter().enumerate() {
-                    if let Some(o) = owner {
-                        if gs.members.contains_key(o) {
-                            let len = t.queues[q].len();
-                            if best.map(|(bl, _)| len < bl).unwrap_or(true) {
-                                best = Some((len, q));
-                            }
-                        }
-                    }
-                }
-                best.map(|(_, q)| q).unwrap_or(fallback)
-            }
-            None => fallback,
-        };
-        let id = t.next_msg;
-        t.next_msg += 1;
-        t.published += 1;
-        t.store.insert(id, msg);
-        Self::enqueue_with_fate(t, target_q, id, fate);
-        drop(g);
-        self.inner.1.notify_all();
-        Ok(())
     }
 
     /// Messages ever published to a topic.
     pub fn published(&self, topic: &str) -> u64 {
-        let g = self.inner.0.lock().unwrap();
-        g.topics.get(topic).map(|t| t.published).unwrap_or(0)
+        self.topic(topic).map(|tp| tp.state.lock().unwrap().published).unwrap_or(0)
     }
 }
 
@@ -601,7 +839,7 @@ pub struct LogTailer<M> {
     endpoint: u64,
 }
 
-impl<M: Send + Clone + 'static> LogTailer<M> {
+impl<M: Send + Clone + WireSize + 'static> LogTailer<M> {
     /// Next sequence this tailer will read.
     pub fn cursor(&self) -> u64 {
         self.cursor
@@ -621,13 +859,14 @@ impl<M: Send + Clone + 'static> LogTailer<M> {
         if self.link_cut() {
             return None;
         }
-        let g = self.broker.inner.0.lock().unwrap();
-        let t = g.topics.get(&self.topic)?;
+        let tp = self.broker.topic(&self.topic)?;
+        let t = tp.state.lock().unwrap();
         if self.cursor < t.log_start {
             self.cursor = t.log_start;
         }
-        if t.visible_at.get(&self.cursor).map(|&at| at > Instant::now()).unwrap_or(false) {
-            return None; // chaos-delayed: not yet visible
+        let now = self.broker.clock.now();
+        if t.visible_at.get(&self.cursor).map(|&at| at > now).unwrap_or(false) {
+            return None; // delayed (chaos or network): not yet visible
         }
         let msg = t.store.get(&self.cursor)?.clone();
         let seq = self.cursor;
@@ -638,35 +877,40 @@ impl<M: Send + Clone + 'static> LogTailer<M> {
     /// Blocking read: wait up to `timeout` for the next log entry.
     pub fn next_timeout(&mut self, timeout: Duration) -> Option<(u64, M)> {
         let deadline = Instant::now() + timeout;
-        let (lock, cv) = (&self.broker.inner.0, &self.broker.inner.1);
-        let mut g = lock.lock().unwrap();
         loop {
-            if !self.link_cut() {
-                if let Some(t) = g.topics.get(&self.topic) {
-                    if self.cursor < t.log_start {
-                        self.cursor = t.log_start;
+            let Some(tp) = self.broker.topic(&self.topic) else {
+                // Topic not created yet: re-check shortly.
+                if Instant::now() >= deadline {
+                    return None;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            };
+            let mut g = tp.state.lock().unwrap();
+            loop {
+                if !self.link_cut() {
+                    if self.cursor < g.log_start {
+                        self.cursor = g.log_start;
                     }
-                    let visible = !t
-                        .visible_at
-                        .get(&self.cursor)
-                        .map(|&at| at > Instant::now())
-                        .unwrap_or(false);
+                    let vnow = self.broker.clock.now();
+                    let visible =
+                        !g.visible_at.get(&self.cursor).map(|&at| at > vnow).unwrap_or(false);
                     if visible {
-                        if let Some(msg) = t.store.get(&self.cursor) {
+                        if let Some(msg) = g.store.get(&self.cursor) {
                             let out = (self.cursor, msg.clone());
                             self.cursor += 1;
                             return Some(out);
                         }
                     }
                 }
+                let now = Instant::now();
+                if now >= deadline {
+                    return None;
+                }
+                let (ng, _) =
+                    tp.cv.wait_timeout(g, (deadline - now).min(Duration::from_millis(20))).unwrap();
+                g = ng;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (ng, _) =
-                cv.wait_timeout(g, (deadline - now).min(Duration::from_millis(20))).unwrap();
-            g = ng;
         }
     }
 }
@@ -674,6 +918,9 @@ impl<M: Send + Clone + 'static> LogTailer<M> {
 /// A group member's pollable handle.
 pub struct Consumer<M> {
     broker: Broker<M>,
+    /// The topic's shard, grabbed at subscribe time (topics are never
+    /// deleted) so polls skip the topic-map read lock entirely.
+    topic_ref: Arc<Topic<M>>,
     topic: String,
     group: String,
     member: u64,
@@ -688,20 +935,24 @@ pub struct Delivery<M> {
     pub lease: u64,
 }
 
-impl<M: Send + Clone + 'static> Consumer<M> {
+impl<M: Send + Clone + WireSize + 'static> Consumer<M> {
     pub fn member_id(&self) -> u64 {
         self.member
     }
 
     /// Pull one message from this member's assigned partitions, waiting up
     /// to `timeout`. Returns None on timeout. Also serves as the heartbeat.
+    ///
+    /// The poll deadline is wall-clock; every *state* timestamp
+    /// (heartbeats, leases, pauses, visibility) reads the virtual clock,
+    /// so [`Broker::advance_clock`] ages them deterministically.
     pub fn poll(&self, timeout: Duration) -> Option<Delivery<M>> {
         let deadline = Instant::now() + timeout;
-        let (lock, cv) = (&self.broker.inner.0, &self.broker.inner.1);
-        let mut g = lock.lock().unwrap();
+        let tp = &self.topic_ref;
+        let mut g = tp.state.lock().unwrap();
         loop {
-            let now = Instant::now();
             let cfg = self.broker.cfg;
+            let vnow = self.broker.clock.now();
             // A cut broker link suppresses the whole poll body — no
             // heartbeat (so the session expires and the group evicts us,
             // as for a dead process) and no delivery. The normal
@@ -711,30 +962,19 @@ impl<M: Send + Clone + 'static> Consumer<M> {
                 .chaos()
                 .map(|plan| plan.is_cut(self.endpoint, EP_BROKER))
                 .unwrap_or(false);
-            if link_cut {
-                let now = Instant::now();
-                if now >= deadline {
-                    return None;
-                }
-                let (ng, _) = cv
-                    .wait_timeout(g, (deadline - now).min(Duration::from_millis(20)))
-                    .unwrap();
-                g = ng;
-                continue;
-            }
-            if let Some(t) = g.topics.get_mut(&self.topic) {
+            if !link_cut {
                 // Heartbeat + housekeeping.
-                if let Some(gs) = t.groups.get_mut(&self.group) {
+                if let Some(gs) = g.groups.get_mut(&self.group) {
                     if let Some(hb) = gs.members.get_mut(&self.member) {
-                        *hb = now;
+                        *hb = vnow;
                     } else {
                         // We were evicted (e.g. after a long stall): rejoin.
-                        gs.members.insert(self.member, now);
-                        Broker::<M>::rebalance(gs, cfg.rebalance_pause);
+                        gs.members.insert(self.member, vnow);
+                        Broker::<M>::rebalance(gs, cfg.rebalance_pause, vnow);
                     }
                 }
-                let evicted = Broker::<M>::reap(&cfg, t, &self.group, now);
-                Broker::<M>::lag_rebalance(&cfg, t, &self.group, now);
+                let evicted = Broker::<M>::reap(&cfg, &mut g, &self.group, vnow);
+                Broker::<M>::lag_rebalance(&cfg, &mut g, &self.group, vnow);
                 if !evicted.is_empty() {
                     let mut ws = self.broker.evict_watchers.lock().unwrap();
                     for &m in &evicted {
@@ -746,8 +986,8 @@ impl<M: Send + Clone + 'static> Consumer<M> {
                         ws.retain(|tx| tx.send(ev.clone()).is_ok());
                     }
                 }
-                let gs = t.groups.get_mut(&self.group).expect("group exists");
-                if now >= gs.paused_until {
+                let gs = g.groups.get_mut(&self.group).expect("group exists");
+                if vnow >= gs.paused_until {
                     // Scan this member's partitions for a message.
                     let mine: Vec<usize> = gs
                         .assignment
@@ -757,26 +997,33 @@ impl<M: Send + Clone + 'static> Consumer<M> {
                         .map(|(p, _)| p)
                         .collect();
                     for p in mine {
-                        while let Some(&mid) = t.queues[p].front() {
-                            // Chaos-delayed head of line: leave it (and
-                            // everything behind it — per-link ordering)
-                            // queued until its visibility instant.
-                            if t.visible_at.get(&mid).map(|&at| at > now).unwrap_or(false) {
+                        while let Some(&mid) = g.queues[p].front() {
+                            // Delayed head of line (chaos fault or network
+                            // cost): leave it — and everything behind it,
+                            // per-link ordering — queued until its
+                            // visibility instant.
+                            if g.visible_at.get(&mid).map(|&at| at > vnow).unwrap_or(false) {
                                 break;
                             }
-                            t.queues[p].pop_front();
-                            t.visible_at.remove(&mid);
+                            g.queues[p].pop_front();
+                            g.visible_at.remove(&mid);
                             // An injected duplicate whose first copy was
                             // already acked leaves a ghost queue entry
                             // with no stored message: skip it.
-                            let Some(msg) = t.store.get(&mid).cloned() else {
+                            let Some(msg) = g.store.get(&mid).cloned() else {
                                 continue;
                             };
-                            let gs = t.groups.get_mut(&self.group).unwrap();
+                            let gs = g.groups.get_mut(&self.group).unwrap();
                             let lease = gs.next_lease;
                             gs.next_lease += 1;
-                            gs.inflight
-                                .insert(lease, InFlight { msg_id: mid, partition: p, deadline: now + cfg.lease });
+                            gs.inflight.insert(
+                                lease,
+                                InFlight { msg_id: mid, partition: p, deadline: vnow + cfg.lease },
+                            );
+                            drop(g);
+                            // A pop freed queue space: wake publishers
+                            // blocked on the bound.
+                            tp.cv.notify_all();
                             return Some(Delivery { msg, lease });
                         }
                     }
@@ -786,37 +1033,33 @@ impl<M: Send + Clone + 'static> Consumer<M> {
             if now >= deadline {
                 return None;
             }
-            let (ng, _) = cv
-                .wait_timeout(g, (deadline - now).min(Duration::from_millis(20)))
-                .unwrap();
+            let (ng, _) =
+                tp.cv.wait_timeout(g, (deadline - now).min(Duration::from_millis(20))).unwrap();
             g = ng;
         }
     }
 
     /// Acknowledge a delivery: the message is done and dropped.
     pub fn ack(&self, delivery: &Delivery<M>) {
-        let mut g = self.broker.inner.0.lock().unwrap();
-        if let Some(t) = g.topics.get_mut(&self.topic) {
-            let mut mid = None;
-            if let Some(gs) = t.groups.get_mut(&self.group) {
-                if let Some(inf) = gs.inflight.remove(&delivery.lease) {
-                    mid = Some(inf.msg_id);
-                }
+        let mut g = self.topic_ref.state.lock().unwrap();
+        let mut mid = None;
+        if let Some(gs) = g.groups.get_mut(&self.group) {
+            if let Some(inf) = gs.inflight.remove(&delivery.lease) {
+                mid = Some(inf.msg_id);
             }
-            if let Some(mid) = mid {
-                t.store.remove(&mid);
-            }
+        }
+        if let Some(mid) = mid {
+            g.store.remove(&mid);
         }
     }
 
     /// Leave the group gracefully (triggers a rebalance).
     pub fn leave(self) {
-        let mut g = self.broker.inner.0.lock().unwrap();
-        if let Some(t) = g.topics.get_mut(&self.topic) {
-            if let Some(gs) = t.groups.get_mut(&self.group) {
-                gs.members.remove(&self.member);
-                Broker::<M>::rebalance(gs, self.broker.cfg.rebalance_pause);
-            }
+        let now = self.broker.clock.now();
+        let mut g = self.topic_ref.state.lock().unwrap();
+        if let Some(gs) = g.groups.get_mut(&self.group) {
+            gs.members.remove(&self.member);
+            Broker::<M>::rebalance(gs, self.broker.cfg.rebalance_pause, now);
         }
     }
 }
@@ -832,6 +1075,9 @@ mod tests {
             rebalance_pause: Duration::from_millis(1),
             rebalance_interval: Duration::from_millis(20),
             lease: Duration::from_millis(80),
+            queue_capacity: 4096,
+            publish_deadline: Duration::from_millis(500),
+            backpressure: BackpressurePolicy::Block,
         }
     }
 
@@ -894,6 +1140,26 @@ mod tests {
         assert_eq!(after[1], before[1] + 1, "unknown group must fall back to key-hash queue");
     }
 
+    /// ISSUE 8 satellite: `publish_balanced` tie-breaking is pinned —
+    /// among equally-short live-owned queues the lowest-indexed queue
+    /// wins, every time, regardless of the key.
+    #[test]
+    fn balanced_tie_break_is_deterministic() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let _c = b.subscribe("t", "g", 1).unwrap();
+        // All 4 queues empty and owned by member 1; key 3 hashes to queue
+        // 3, but the tie must break to queue 0.
+        b.publish_balanced("t", "g", 3, 10).unwrap();
+        assert_eq!(b.queue_depths("t"), vec![1, 0, 0, 0]);
+        // Successive publishes fill lowest-indexed shortest queues in
+        // order, then wrap.
+        for _ in 0..4 {
+            b.publish_balanced("t", "g", 3, 11).unwrap();
+        }
+        assert_eq!(b.queue_depths("t"), vec![2, 1, 1, 1]);
+    }
+
     #[test]
     fn group_splits_partitions() {
         let b: Broker<u64> = Broker::new(fast_cfg());
@@ -903,7 +1169,7 @@ mod tests {
         for k in 0..40u64 {
             b.publish("t", k, k).unwrap();
         }
-        std::thread::sleep(Duration::from_millis(3));
+        b.advance_clock(Duration::from_millis(3)); // age out the rebalance pause
         let mut got1 = 0;
         let mut got2 = 0;
         for _ in 0..40 {
@@ -928,7 +1194,7 @@ mod tests {
         b.publish("t", 0, "once".into()).unwrap();
         let d = c.poll(Duration::from_millis(100)).expect("first delivery");
         drop(d); // never acked
-        std::thread::sleep(Duration::from_millis(100)); // > lease
+        b.advance_clock(Duration::from_millis(100)); // > lease, no sleep
         let d2 = c.poll(Duration::from_millis(300)).expect("redelivery");
         assert_eq!(d2.msg, "once");
         c.ack(&d2);
@@ -943,7 +1209,7 @@ mod tests {
         // c2 stops polling entirely (crash). After session_timeout its
         // partitions move to c1.
         drop(c2);
-        std::thread::sleep(Duration::from_millis(120));
+        b.advance_clock(Duration::from_millis(120)); // > session_timeout
         for k in 0..16u64 {
             b.publish("t", k, k).unwrap();
         }
@@ -991,7 +1257,7 @@ mod tests {
         // c2 crashes (stops polling); c1's polls drive the reap that
         // evicts it after session_timeout.
         drop(c2);
-        std::thread::sleep(Duration::from_millis(120));
+        b.advance_clock(Duration::from_millis(120)); // > session_timeout
         let deadline = Instant::now() + Duration::from_millis(800);
         let mut seen = None;
         while seen.is_none() && Instant::now() < deadline {
@@ -1010,7 +1276,7 @@ mod tests {
         b.create_topic("t");
         let c1 = b.subscribe("t", "g", 1).unwrap();
         let _c2 = b.subscribe("t", "g", 2).unwrap();
-        std::thread::sleep(Duration::from_millis(3)); // rebalance pause
+        b.advance_clock(Duration::from_millis(3)); // rebalance pause
         let key = 0u64;
         let primary = b.owner_of("t", "g", key).expect("assigned");
         b.publish_hedge("t", "g", key, 7).unwrap();
@@ -1110,7 +1376,7 @@ mod tests {
         for k in 0..60u64 {
             b.publish("t", k, k).unwrap();
         }
-        std::thread::sleep(Duration::from_millis(10));
+        b.advance_clock(Duration::from_millis(10)); // age past rebalance_interval
         // The fast member alone should eventually drain everything via lag
         // rebalance — the slow member never gets evicted here.
         let mut got = 0;
@@ -1122,6 +1388,196 @@ mod tests {
             }
         }
         assert_eq!(got, 60, "lag rebalance failed to offload");
+    }
+
+    /// ISSUE 8: `Fail` policy surfaces `Backpressure` the moment the
+    /// routed queue is at capacity; draining reopens admission and no
+    /// accepted message is lost.
+    #[test]
+    fn backpressure_fail_policy_surfaces_error() {
+        let mut cfg = fast_cfg();
+        cfg.queue_capacity = 2;
+        cfg.backpressure = BackpressurePolicy::Fail;
+        let b: Broker<u64> = Broker::new(cfg);
+        b.create_topic("t");
+        b.publish("t", 0, 1).unwrap();
+        b.publish("t", 0, 2).unwrap();
+        let err = b.publish("t", 0, 3).unwrap_err();
+        assert!(matches!(err, PyramidError::Backpressure(ref t) if t == "t"), "{err}");
+        assert_eq!(b.metrics().backpressure_failures, 1);
+        // Other queues are unaffected by queue 0 being full.
+        b.publish("t", 1, 4).unwrap();
+        // Draining queue 0 reopens admission; both accepted messages were
+        // delivered (nothing dropped by the bound).
+        let c = b.subscribe("t", "g", 1).unwrap();
+        let d1 = c.poll(Duration::from_millis(300)).expect("first");
+        c.ack(&d1);
+        b.publish("t", 0, 5).unwrap();
+        let mut seen = vec![d1.msg];
+        while let Some(d) = c.poll(Duration::from_millis(100)) {
+            seen.push(d.msg);
+            c.ack(&d);
+            if seen.len() == 4 {
+                break;
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2, 4, 5]);
+    }
+
+    /// ISSUE 8: `Block` policy parks the publisher until the consumer
+    /// drains, then delivers everything — backpressure without loss.
+    #[test]
+    fn backpressure_block_policy_delivers_after_drain() {
+        let mut cfg = fast_cfg();
+        cfg.queue_capacity = 2;
+        cfg.publish_deadline = Duration::from_secs(5);
+        let b: Broker<u64> = Broker::new(cfg);
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        b.publish("t", 0, 1).unwrap();
+        b.publish("t", 0, 2).unwrap();
+        let b2 = b.clone();
+        let publisher = std::thread::spawn(move || b2.publish("t", 0, 3));
+        // Consumer drains; the parked publish completes.
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while seen.len() < 3 && Instant::now() < deadline {
+            if let Some(d) = c.poll(Duration::from_millis(50)) {
+                seen.push(d.msg);
+                c.ack(&d);
+            }
+        }
+        publisher.join().unwrap().expect("blocked publish succeeds after drain");
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert!(b.metrics().publishes_blocked >= 1);
+        assert_eq!(b.metrics().backpressure_failures, 0);
+    }
+
+    /// ISSUE 8: a `Block` publish that never gets space gives up with
+    /// `Backpressure` at the publish deadline instead of hanging.
+    #[test]
+    fn backpressure_block_times_out_at_deadline() {
+        let mut cfg = fast_cfg();
+        cfg.queue_capacity = 1;
+        cfg.publish_deadline = Duration::from_millis(40);
+        let b: Broker<u64> = Broker::new(cfg);
+        b.create_topic("t");
+        b.publish("t", 0, 1).unwrap();
+        let start = Instant::now();
+        let err = b.publish("t", 0, 2).unwrap_err();
+        assert!(matches!(err, PyramidError::Backpressure(_)), "{err}");
+        assert!(start.elapsed() >= Duration::from_millis(40));
+        let m = b.metrics();
+        assert_eq!((m.publishes_blocked, m.backpressure_failures), (1, 1));
+    }
+
+    /// ISSUE 8 satellite: balanced steering composes with chaos link
+    /// cuts (traffic lands on the surviving member's queues) and with the
+    /// bounded-queue backpressure path — accepted writes all survive.
+    #[test]
+    fn balanced_composes_with_cut_and_backpressure() {
+        let mut cfg = fast_cfg();
+        cfg.queue_capacity = 2;
+        cfg.backpressure = BackpressurePolicy::Fail;
+        cfg.session_timeout = Duration::from_millis(40);
+        let b: Broker<u64> = Broker::new(cfg);
+        b.create_topic("sub-0");
+        let live = b.subscribe_at("sub-0", "g", 1, 10).unwrap();
+        let _cut = b.subscribe_at("sub-0", "g", 2, 11).unwrap();
+        let plan = FaultPlan::new(1, FaultSpec::default());
+        b.set_chaos(Some(plan.clone()));
+        plan.cut_link(11, EP_BROKER);
+        // Age past the session and let the live member's poll reap the
+        // cut one; afterwards it owns all 4 queues.
+        b.advance_clock(Duration::from_millis(60));
+        let deadline = Instant::now() + Duration::from_millis(1000);
+        while b.owner_of("sub-0", "g", 1) != Some(1) && Instant::now() < deadline {
+            let _ = live.poll(Duration::from_millis(5));
+        }
+        for q in 0..4u64 {
+            assert_eq!(b.owner_of("sub-0", "g", q), Some(1), "survivor owns queue {q}");
+        }
+        b.advance_clock(Duration::from_millis(3)); // rebalance pause
+        // 8 balanced publishes fill all 4 live-owned queues to capacity 2;
+        // the 9th hits backpressure.
+        for v in 0..8u64 {
+            b.publish_balanced("sub-0", "g", 0, v).unwrap();
+        }
+        assert_eq!(b.queue_depths("sub-0"), vec![2, 2, 2, 2]);
+        let err = b.publish_balanced("sub-0", "g", 0, 99).unwrap_err();
+        assert!(matches!(err, PyramidError::Backpressure(_)), "{err}");
+        assert!(b.metrics().backpressure_failures >= 1);
+        // Every accepted write drains through the survivor — none lost.
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while seen.len() < 8 && Instant::now() < deadline {
+            if let Some(d) = live.poll(Duration::from_millis(20)) {
+                seen.push(d.msg);
+                live.ack(&d);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    /// ISSUE 8: an installed net model defers visibility by its priced
+    /// delay — and the virtual clock elapses that delay deterministically.
+    #[test]
+    fn net_model_defers_delivery_and_advance_clock_elapses_it() {
+        use crate::net::UniformNet;
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        // Member 1 serves from host 2; without a binding the destination
+        // is EP_NONE — the gateway itself — and delivery is free.
+        b.bind_endpoint("t", "g", 1, 2);
+        b.set_net(Some(Arc::new(UniformNet {
+            latency: Duration::from_millis(100),
+            gbps: 10,
+        })));
+        b.publish("t", 0, 5).unwrap();
+        assert!(c.poll(Duration::from_millis(10)).is_none(), "in flight: invisible");
+        b.advance_clock(Duration::from_millis(120));
+        let d = c.poll(Duration::from_millis(300)).expect("visible after the link latency");
+        assert_eq!(d.msg, 5);
+        c.ack(&d);
+        let m = b.metrics();
+        assert_eq!(m.net_messages_costed, 1);
+        assert!(m.net_delay_us >= 100_000);
+        // Clearing the model restores free delivery.
+        b.set_net(None);
+        b.publish("t", 0, 6).unwrap();
+        let d = c.poll(Duration::from_millis(300)).expect("ideal again");
+        c.ack(&d);
+    }
+
+    /// ISSUE 8: `bind_endpoint` maps a queue's owner to a host endpoint,
+    /// so a FatTree model prices the publish by the destination rack.
+    #[test]
+    fn bind_endpoint_prices_by_destination_rack() {
+        use crate::net::FatTreeNet;
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c = b.subscribe("t", "g", 1).unwrap();
+        // Member 1 serves from host 3; one host per rack, 20ms per hop:
+        // gateway (rack 0) -> host 3 (rack 3) is cross-rack = 4 hops.
+        b.bind_endpoint("t", "g", 1, 3);
+        b.set_net(Some(Arc::new(FatTreeNet::new(
+            1,
+            Duration::from_millis(20),
+            10,
+            1,
+        ))));
+        b.publish("t", 0, 9).unwrap();
+        assert!(c.poll(Duration::from_millis(10)).is_none(), "crossing the spine");
+        b.advance_clock(Duration::from_millis(100)); // > 4 * 20ms
+        let d = c.poll(Duration::from_millis(300)).expect("delivered across racks");
+        assert_eq!(d.msg, 9);
+        c.ack(&d);
+        assert_eq!(b.metrics().net_messages_costed, 1);
+        assert!(b.metrics().net_delay_us >= 80_000);
     }
 
     use crate::chaos::{FaultPlan, FaultSpec, EP_BROKER};

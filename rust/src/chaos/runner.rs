@@ -153,6 +153,10 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
         net_latency_us: 50,
         rebalance_ms: 50,
         executor_batch: 8,
+        // Pinned to the ideal transport: corpus replays are bit-identical
+        // schedules, so the harness must not pick up PYRAMID_NET overrides.
+        hosts_per_rack: 0,
+        net: crate::net::NetSpec::Ideal,
     };
     let ingest_cfg = IngestConfig {
         refreeze_threshold: 32,

@@ -458,6 +458,15 @@ impl SimCluster {
         for p in 0..w {
             broker.create_topic(&topic_for(p as PartitionId));
         }
+        // Transport plane: one net model (resolved once — `Auto` reads
+        // the PYRAMID_NET env var here) prices every broker seam. None =
+        // ideal free delivery, bit-identical to the pre-transport broker.
+        let net_model = topo.net.build(topo.hosts_per_rack);
+        broker.set_net(net_model.clone());
+        if let Some(rt) = &ingest {
+            rt.gateway.broker().set_net(net_model.clone());
+            rt.freeze_broker.set_net(net_model.clone());
+        }
         let registry = Registry::new(RegistryConfig::default());
         let hosts: Vec<Arc<HostControl>> = (0..topo.workers).map(HostControl::new).collect();
 
@@ -515,6 +524,7 @@ impl SimCluster {
         // coordinator's in-flight jobs are adopted by a survivor and the
         // registered callbacks still fire (ROADMAP failover item).
         let jobs_broker: Broker<AsyncJobMsg> = Broker::new(BrokerConfig::default());
+        jobs_broker.set_net(net_model.clone());
         let async_callbacks = AsyncCallbacks::new();
         for node in &coordinators {
             node.clone().enable_async_failover(jobs_broker.clone(), async_callbacks.clone())?;
@@ -847,6 +857,13 @@ impl SimCluster {
     /// The installed fault plan, if [`Self::enable_chaos`] ran.
     pub fn chaos_plan(&self) -> Option<Arc<FaultPlan>> {
         self.chaos.lock().unwrap().clone()
+    }
+
+    /// Transport counters of the query broker — backpressure events and
+    /// network cost charged by the installed [`crate::net::NetModel`]
+    /// (all zero under the ideal default).
+    pub fn transport_metrics(&self) -> crate::broker::BrokerMetrics {
+        self.broker.metrics()
     }
 
     /// Snapshot of the cluster-wide injected-fault counters (all zero
@@ -1255,6 +1272,7 @@ mod tests {
             net_latency_us: 0,
             rebalance_ms: 50,
             executor_batch: 4,
+            ..ClusterTopology::default()
         }
     }
 

@@ -9,6 +9,7 @@ use crate::dataset::{SyntheticKind, SyntheticSpec};
 use crate::error::{PyramidError, Result};
 use crate::hnsw::HnswParams;
 use crate::metric::Metric;
+use crate::net::NetSpec;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -296,6 +297,14 @@ pub struct ClusterTopology {
     pub rebalance_ms: u64,
     /// Max requests an executor drains and answers per poll batch.
     pub executor_batch: usize,
+    /// Host→rack placement for topology-aware network models: host `h`
+    /// lives in rack `h / hosts_per_rack`. 0 = one big rack (every
+    /// transfer is rack-local).
+    pub hosts_per_rack: usize,
+    /// Network cost model for all cluster brokers. The default
+    /// [`NetSpec::Auto`] resolves through the `PYRAMID_NET` env var (the
+    /// CI matrix toggle) and falls back to ideal free delivery.
+    pub net: NetSpec,
 }
 
 impl Default for ClusterTopology {
@@ -307,11 +316,56 @@ impl Default for ClusterTopology {
             net_latency_us: 50,
             rebalance_ms: 200,
             executor_batch: crate::executor::DEFAULT_BATCH,
+            hosts_per_rack: 0,
+            net: NetSpec::Auto,
         }
     }
 }
 
 impl ClusterTopology {
+    fn net_to_json(&self) -> Json {
+        match self.net {
+            NetSpec::Auto | NetSpec::Ideal => Json::str(self.net.kind()),
+            NetSpec::Uniform { latency_us, gbps } => Json::obj(vec![
+                ("kind", Json::str("uniform")),
+                ("latency_us", Json::num(latency_us as f64)),
+                ("gbps", Json::num(gbps as f64)),
+            ]),
+            NetSpec::FatTree { hop_us, gbps, oversub } => Json::obj(vec![
+                ("kind", Json::str("fat_tree")),
+                ("hop_us", Json::num(hop_us as f64)),
+                ("gbps", Json::num(gbps as f64)),
+                ("oversub", Json::num(oversub as f64)),
+            ]),
+        }
+    }
+
+    fn net_from_json(j: &Json) -> Option<NetSpec> {
+        if let Some(kind) = j.as_str() {
+            return match kind {
+                "auto" => Some(NetSpec::Auto),
+                "ideal" => Some(NetSpec::Ideal),
+                "uniform" => Some(NetSpec::ENV_UNIFORM),
+                "fat_tree" | "fattree" => Some(NetSpec::ENV_FAT_TREE),
+                _ => None,
+            };
+        }
+        match j.get("kind").and_then(Json::as_str)? {
+            "uniform" => Some(NetSpec::Uniform {
+                latency_us: j.get("latency_us").and_then(Json::as_f64).unwrap_or(200.0) as u64,
+                gbps: j.get("gbps").and_then(Json::as_f64).unwrap_or(10.0) as u64,
+            }),
+            "fat_tree" | "fattree" => Some(NetSpec::FatTree {
+                hop_us: j.get("hop_us").and_then(Json::as_f64).unwrap_or(100.0) as u64,
+                gbps: j.get("gbps").and_then(Json::as_f64).unwrap_or(10.0) as u64,
+                oversub: j.get("oversub").and_then(Json::as_f64).unwrap_or(4.0) as u32,
+            }),
+            "auto" => Some(NetSpec::Auto),
+            "ideal" => Some(NetSpec::Ideal),
+            _ => None,
+        }
+    }
+
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("workers", Json::num(self.workers as f64)),
@@ -320,6 +374,8 @@ impl ClusterTopology {
             ("net_latency_us", Json::num(self.net_latency_us as f64)),
             ("rebalance_ms", Json::num(self.rebalance_ms as f64)),
             ("executor_batch", Json::num(self.executor_batch as f64)),
+            ("hosts_per_rack", Json::num(self.hosts_per_rack as f64)),
+            ("net", self.net_to_json()),
         ])
     }
 
@@ -342,6 +398,12 @@ impl ClusterTopology {
         }
         if let Some(v) = j.get("executor_batch").and_then(Json::as_usize) {
             c.executor_batch = v.max(1);
+        }
+        if let Some(v) = j.get("hosts_per_rack").and_then(Json::as_usize) {
+            c.hosts_per_rack = v;
+        }
+        if let Some(v) = j.get("net").and_then(Self::net_from_json) {
+            c.net = v;
         }
         c
     }
@@ -484,6 +546,32 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.index.refine_k = 0;
         bad.validate().unwrap();
+    }
+
+    #[test]
+    fn transport_fields_roundtrip_and_default_auto() {
+        let mut c = PyramidConfig::example();
+        assert_eq!(c.cluster.net, NetSpec::Auto, "net model must default to Auto");
+        assert_eq!(c.cluster.hosts_per_rack, 0, "one big rack by default");
+        // Parameterized variants round-trip exactly.
+        c.cluster.hosts_per_rack = 4;
+        c.cluster.net = NetSpec::FatTree { hop_us: 250, gbps: 40, oversub: 8 };
+        let back = PyramidConfig::from_json_text(&c.to_json_text()).unwrap();
+        assert_eq!(back.cluster.hosts_per_rack, 4);
+        assert_eq!(back.cluster.net, c.cluster.net);
+        c.cluster.net = NetSpec::Uniform { latency_us: 75, gbps: 25 };
+        let back = PyramidConfig::from_json_text(&c.to_json_text()).unwrap();
+        assert_eq!(back.cluster.net, c.cluster.net);
+        // Bare kind strings parse to the env-default parameterizations.
+        let text = r#"{
+            "dataset": {"source": "synthetic", "kind": "tiny_like", "n": 1000, "d": 32},
+            "cluster": {"workers": 4, "hosts_per_rack": 2, "net": "fat_tree"}
+        }"#;
+        let c = PyramidConfig::from_json_text(text).unwrap();
+        assert_eq!(c.cluster.net, NetSpec::ENV_FAT_TREE);
+        assert_eq!(c.cluster.hosts_per_rack, 2);
+        let ideal = PyramidConfig::from_json_text(&text.replace("fat_tree", "ideal")).unwrap();
+        assert_eq!(ideal.cluster.net, NetSpec::Ideal);
     }
 
     #[test]

@@ -63,6 +63,7 @@ use crate::config::QueryParams;
 use crate::error::{PyramidError, Result};
 use crate::ingest::IngestGateway;
 use crate::meta::Router;
+use crate::net::WireSize;
 use crate::runtime::BatchScorer;
 use crate::stats::{QuantileWindow, ThroughputSeries, TokenBucket};
 use crate::types::{merge_topk, Neighbor, PartitionId, QueryMetrics, QueryResult, UpdateOp, VectorId};
@@ -108,6 +109,13 @@ pub struct AsyncJobMsg {
     pub params: QueryParams,
     /// Coordinator that accepted the job (adoption attribution).
     pub submitted_by: u64,
+}
+
+impl WireSize for AsyncJobMsg {
+    /// job_id + submitted_by + packed query params + the query vector.
+    fn wire_bytes(&self) -> usize {
+        8 + 8 + 24 + self.query.len() * 4
+    }
 }
 
 type AsyncCallback = Box<dyn FnOnce(Result<Vec<Neighbor>>) + Send>;
@@ -164,6 +172,15 @@ pub struct QueryRequest {
     pub from: u64,
 }
 
+impl WireSize for QueryRequest {
+    /// Header (qid, partition, k, ef, flags, origin endpoint) + the query
+    /// vector. The reply sender stands in for an open connection and
+    /// carries no payload.
+    fn wire_bytes(&self) -> usize {
+        8 + 2 + 8 + 8 + 1 + 8 + self.query.len() * 4
+    }
+}
+
 /// An executor's partial answer for one (query, partition).
 #[derive(Clone)]
 pub struct PartialResult {
@@ -174,6 +191,16 @@ pub struct PartialResult {
     /// `return_vectors` was requested).
     pub vectors: Option<Arc<Vec<f32>>>,
     pub executor: u64,
+}
+
+impl WireSize for PartialResult {
+    /// Header + (id, score) pairs + the optional raw candidate vectors —
+    /// the reply-path cost the executor charges the net model per batch.
+    fn wire_bytes(&self) -> usize {
+        8 + 2 + 8
+            + self.neighbors.len() * 8
+            + self.vectors.as_ref().map(|v| v.len() * 4).unwrap_or(0)
+    }
 }
 
 /// Latency + outcome counters, shared with the harnesses.
@@ -813,15 +840,24 @@ impl CoordinatorNode {
                         .as_ref()
                         .and_then(|m| m.get(&p).copied())
                         .unwrap_or(100);
-                    if w >= 100 || (qid % 100) < w as u64 {
-                        self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))?;
+                    let published = if w >= 100 || (qid % 100) < w as u64 {
+                        self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))
                     } else {
                         self.broker.publish_balanced(
                             &topic_for(p),
                             &group_for(p),
                             qid,
                             mk_req(qid, p, i),
-                        )?;
+                        )
+                    };
+                    match published {
+                        Ok(()) => {}
+                        // A replica queue at capacity is congestion, not
+                        // failure: keep the pending entry and let the
+                        // hedge / eviction re-issue machinery recover the
+                        // sub-query (or the deadline degrade coverage).
+                        Err(PyramidError::Backpressure(_)) => {}
+                        Err(e) => return Err(e),
                     }
                 }
                 pending.insert((qid, p), Pending { qi: i, sent_at: Instant::now(), hedged: false });

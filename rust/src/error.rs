@@ -17,6 +17,10 @@ pub enum PyramidError {
     Cluster(String),
     Timeout(std::time::Duration),
     Serde(String),
+    /// A bounded broker queue stayed at capacity past the publish
+    /// deadline (or the `Fail` policy hit a full queue); the message was
+    /// **not** accepted. Carries the topic.
+    Backpressure(String),
 }
 
 impl std::fmt::Display for PyramidError {
@@ -34,6 +38,7 @@ impl std::fmt::Display for PyramidError {
             PyramidError::Cluster(m) => write!(f, "cluster error: {m}"),
             PyramidError::Timeout(d) => write!(f, "query timed out after {d:?}"),
             PyramidError::Serde(m) => write!(f, "serde error: {m}"),
+            PyramidError::Backpressure(t) => write!(f, "backpressure: queue full on topic {t}"),
         }
     }
 }

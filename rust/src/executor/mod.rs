@@ -33,6 +33,7 @@ use crate::coordinator::{group_for, topic_for, PartialResult, QueryRequest};
 use crate::hnsw::Hnsw;
 use crate::ingest::freeze::FreezeController;
 use crate::ingest::{LiveIndex, UpdateConsumer};
+use crate::net::WireSize;
 use crate::registry::Registry;
 use crate::runtime::{BatchScorer, NativeScorer};
 use crate::types::{BatchQuery, Neighbor, PartitionId, UpdateRequest, VectorId};
@@ -239,6 +240,11 @@ fn run(
         Ok(c) => c,
         Err(_) => return ExitReason::Stopped,
     };
+    // Net registration: sub-queries routed to this member's queues are
+    // priced toward this host's rack by the installed network model.
+    // Deliberately separate from the *chaos* endpoint (the plain
+    // `subscribe` above): binding never changes link-cut semantics.
+    broker.bind_endpoint(&topic, &group, spec.id, host_endpoint(spec.host.host));
     let batch_cap = spec.batch.max(1);
     let mut batch: Vec<Delivery<QueryRequest>> = Vec::with_capacity(batch_cap);
     // Update pump: tails the partition's update log from this replica's
@@ -329,6 +335,8 @@ fn run(
         // a severed network path. The request is still acked: the
         // executor *did* the work; only the answer was lost.
         let chaos_plan = broker.chaos();
+        let net_model = broker.net();
+        let clock = broker.clock();
         let my_endpoint = host_endpoint(spec.host.host);
         for (delivery, local) in batch.iter().zip(&locals) {
             let req = &delivery.msg;
@@ -356,13 +364,25 @@ fn run(
             } else {
                 None
             };
-            let _ = req.reply.send(PartialResult {
+            let partial = PartialResult {
                 qid: req.qid,
                 partition: req.partition,
                 neighbors,
                 vectors,
                 executor: spec.id,
-            });
+            };
+            // Reply-path network cost: the partial travels host -> issuing
+            // coordinator, priced by serialized size. Paid inline (the
+            // reply channel has no visibility seam to defer on), so a
+            // cross-rack answer genuinely arrives later than a rack-local
+            // one.
+            if let Some(model) = net_model.as_ref() {
+                let d = model.delay(my_endpoint, req.from, partial.wire_bytes(), clock.now());
+                if !d.is_zero() {
+                    spin_sleep(d);
+                }
+            }
+            let _ = req.reply.send(partial);
             consumer.ack(delivery);
             served.fetch_add(1, Ordering::Relaxed);
         }

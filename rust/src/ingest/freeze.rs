@@ -67,6 +67,13 @@ pub struct FreezeMsg {
     pub from: u64,
 }
 
+impl crate::net::WireSize for FreezeMsg {
+    /// Epoch + proposer id.
+    fn wire_bytes(&self) -> usize {
+        16
+    }
+}
+
 /// Peers consider a sibling **live** while its last tick is at most
 /// this old; staler stamps mean a killed/stalled executor, which never
 /// blocks a proposal (it is not serving queries either).

@@ -49,6 +49,7 @@ pub mod kmeans;
 pub mod load;
 pub mod meta;
 pub mod metric;
+pub mod net;
 pub mod partition;
 pub mod quant;
 pub mod registry;
@@ -75,6 +76,7 @@ pub mod prelude {
     pub use crate::load::{run_trace, ControllerConfig, LoadConfig, LoadReport, TraceSpec};
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
+    pub use crate::net::{FatTreeNet, IdealNet, NetModel, NetSpec, SimClock, UniformNet, WireSize};
     pub use crate::quant::{QuantPlane, Sq8Codec};
     pub use crate::types::{Neighbor, QueryMetrics, QueryResult, UpdateOp, VectorId};
 }

@@ -1,0 +1,395 @@
+//! Network cost model — the transport plane (DESIGN.md; ROADMAP #5).
+//!
+//! Everything above the [`crate::broker::Broker`] seam is transport-
+//! agnostic: a [`NetModel`] prices every delivery (per-link latency +
+//! bandwidth cost between endpoints, with serialized-size accounting via
+//! [`WireSize`]) and the broker folds that price into a message's
+//! visibility instant — the same mechanism seeded
+//! [`crate::chaos::FaultPlan`] delays use, so network cost and injected
+//! faults compose deterministically at one seam.
+//!
+//! Three models ship:
+//!
+//! * [`IdealNet`] — free, instantaneous delivery: the pre-transport-plane
+//!   behavior, bit-identical by construction (the broker short-circuits
+//!   all accounting when no model is installed);
+//! * [`UniformNet`] — flat latency plus serialization at a flat bandwidth
+//!   for every endpoint pair;
+//! * [`FatTreeNet`] — hosts → racks → spine: rack-local transfers pay two
+//!   hops at full bandwidth, cross-rack transfers pay four hops, an
+//!   oversubscription factor, and FIFO queuing on the shared per-rack-pair
+//!   spine link, so concurrent cross-rack fanout self-congests the way a
+//!   real Clos fabric does.
+//!
+//! Endpoint ids reuse the chaos id space ([`crate::chaos`]): ids below
+//! 2^32 are hosts (`host_endpoint`), everything else — coordinators, the
+//! broker itself, `EP_NONE` — attaches at rack 0 (the client/gateway
+//! rack). Host→rack placement is `host / hosts_per_rack` from
+//! [`crate::config::ClusterTopology::hosts_per_rack`].
+//!
+//! [`SimClock`] is the virtual clock behind all broker timing: real time
+//! plus a monotonically-growing skew, so tests advance leases, sessions
+//! and delivery delays deterministically instead of sleeping
+//! ([`crate::broker::Broker::advance_clock`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Endpoint ids at or above this are not hosts (coordinators, broker,
+/// `EP_NONE`); they attach at rack 0. Mirrors
+/// `crate::chaos::coordinator_endpoint`'s `1 << 32` tag.
+const HOST_EP_LIMIT: u64 = 1 << 32;
+
+/// A virtual clock: real monotonic time plus an atomic skew that only
+/// ever grows. With zero skew (the default, and the only state production
+/// code ever sees) `now()` is exactly `Instant::now()` — advancing is a
+/// test/simulation hook that jumps leases, session timeouts and delivery
+/// delays forward without sleeping.
+#[derive(Clone, Default)]
+pub struct SimClock {
+    skew_ns: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    /// Current virtual time. Monotone: skew only grows.
+    pub fn now(&self) -> Instant {
+        Instant::now() + Duration::from_nanos(self.skew_ns.load(Ordering::Relaxed))
+    }
+
+    /// Jump the clock forward by `d` (affects every clone).
+    pub fn advance(&self, d: Duration) {
+        self.skew_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Total skew applied so far.
+    pub fn skew(&self) -> Duration {
+        Duration::from_nanos(self.skew_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Serialized size of a message on the wire, in bytes. The broker charges
+/// the installed [`NetModel`] per delivery using this — sub-queries,
+/// partials and log records all price by their real payload, not a flat
+/// per-message constant.
+pub trait WireSize {
+    fn wire_bytes(&self) -> usize;
+}
+
+impl WireSize for u32 {
+    fn wire_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl WireSize for u64 {
+    fn wire_bytes(&self) -> usize {
+        8
+    }
+}
+
+impl WireSize for String {
+    fn wire_bytes(&self) -> usize {
+        8 + self.len()
+    }
+}
+
+impl WireSize for () {
+    fn wire_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// A pluggable network cost model: the one-way delivery cost of `bytes`
+/// from endpoint `src` to endpoint `dst` at virtual time `now`. Stateful
+/// models (per-link queuing) update their internal link occupancy as a
+/// side effect, so concurrent transfers over a shared link serialize.
+pub trait NetModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn delay(&self, src: u64, dst: u64, bytes: usize, now: Instant) -> Duration;
+}
+
+/// Serialization time of `bytes` at `gbps` gigabit/s.
+fn xmit(bytes: usize, gbps: u64) -> Duration {
+    Duration::from_nanos(bytes as u64 * 8 / gbps.max(1))
+}
+
+/// Free, instantaneous delivery — the null model. The broker treats "no
+/// model installed" identically (and skips the accounting entirely), so
+/// `Ideal` is bit-identical to the pre-transport-plane behavior.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct IdealNet;
+
+impl NetModel for IdealNet {
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn delay(&self, _src: u64, _dst: u64, _bytes: usize, _now: Instant) -> Duration {
+        Duration::ZERO
+    }
+}
+
+/// Flat latency + flat bandwidth between every distinct endpoint pair.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformNet {
+    pub latency: Duration,
+    pub gbps: u64,
+}
+
+impl NetModel for UniformNet {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn delay(&self, src: u64, dst: u64, bytes: usize, _now: Instant) -> Duration {
+        if src == dst {
+            return Duration::ZERO;
+        }
+        self.latency + xmit(bytes, self.gbps)
+    }
+}
+
+/// Two-tier Clos fabric: hosts attach to top-of-rack switches, racks
+/// attach to a spine. Rack-local transfers pay `2 * hop` propagation plus
+/// serialization at full bandwidth; cross-rack transfers pay `4 * hop`,
+/// serialization inflated by the `oversub` factor, and FIFO queuing on
+/// the shared spine link for that rack pair — concurrent cross-rack
+/// fanout congests, rack-local traffic never does.
+pub struct FatTreeNet {
+    /// Hosts per rack (normalized ≥ 1; `usize::MAX` = everything rack 0).
+    hosts_per_rack: usize,
+    /// One-way propagation per switch hop.
+    hop: Duration,
+    pub gbps: u64,
+    /// Cross-rack bandwidth divisor (spine oversubscription).
+    oversub: u32,
+    /// Per spine link (unordered rack pair): when it next frees up.
+    busy: Mutex<HashMap<(usize, usize), Instant>>,
+}
+
+impl FatTreeNet {
+    /// `hosts_per_rack == 0` means every host shares rack 0.
+    pub fn new(hosts_per_rack: usize, hop: Duration, gbps: u64, oversub: u32) -> Self {
+        FatTreeNet {
+            hosts_per_rack: if hosts_per_rack == 0 { usize::MAX } else { hosts_per_rack },
+            hop,
+            gbps,
+            oversub: oversub.max(1),
+            busy: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Rack of an endpoint: hosts map by `host / hosts_per_rack`;
+    /// non-host endpoints (coordinators, broker, `EP_NONE`) attach at
+    /// rack 0, the client/gateway rack.
+    pub fn rack_of(&self, ep: u64) -> usize {
+        if ep < HOST_EP_LIMIT {
+            (ep as usize) / self.hosts_per_rack
+        } else {
+            0
+        }
+    }
+}
+
+impl NetModel for FatTreeNet {
+    fn name(&self) -> &'static str {
+        "fat_tree"
+    }
+
+    fn delay(&self, src: u64, dst: u64, bytes: usize, now: Instant) -> Duration {
+        if src == dst {
+            return Duration::ZERO;
+        }
+        let (ra, rb) = (self.rack_of(src), self.rack_of(dst));
+        let wire = xmit(bytes, self.gbps);
+        if ra == rb {
+            return self.hop * 2 + wire;
+        }
+        // Cross-rack: queue on the shared spine link for this rack pair.
+        let ser = wire * self.oversub;
+        let key = (ra.min(rb), ra.max(rb));
+        let mut busy = self.busy.lock().unwrap();
+        let start = busy.get(&key).copied().unwrap_or(now).max(now);
+        let done = start + ser;
+        busy.insert(key, done);
+        self.hop * 4 + (done - now)
+    }
+}
+
+/// Which network model a cluster runs under. `Copy` on purpose:
+/// [`crate::config::ClusterTopology`] is `Copy` and carries one of these,
+/// so parameterized variants hold plain numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetSpec {
+    /// Resolve from the `PYRAMID_NET` env var at cluster start (`ideal`,
+    /// `uniform`, `fat_tree`); [`NetSpec::Ideal`] when unset. This is the
+    /// CI matrix toggle — tests that pin exact behavior use an explicit
+    /// variant instead.
+    #[default]
+    Auto,
+    /// Free delivery (the default resolution; bit-identical to the
+    /// pre-transport-plane broker).
+    Ideal,
+    /// Flat `latency_us` + serialization at `gbps` for every pair.
+    Uniform { latency_us: u64, gbps: u64 },
+    /// Hosts→racks→spine with per-hop latency `hop_us`, edge bandwidth
+    /// `gbps`, and spine oversubscription `oversub`.
+    FatTree { hop_us: u64, gbps: u64, oversub: u32 },
+}
+
+impl NetSpec {
+    /// Env-resolution defaults for `PYRAMID_NET=uniform`.
+    pub const ENV_UNIFORM: NetSpec = NetSpec::Uniform { latency_us: 200, gbps: 10 };
+    /// Env-resolution defaults for `PYRAMID_NET=fat_tree`.
+    pub const ENV_FAT_TREE: NetSpec = NetSpec::FatTree { hop_us: 100, gbps: 10, oversub: 4 };
+
+    /// Collapse [`NetSpec::Auto`] through the `PYRAMID_NET` env var;
+    /// explicit variants pass through untouched (a pinned test beats the
+    /// CI matrix toggle).
+    pub fn resolve(self) -> NetSpec {
+        match self {
+            NetSpec::Auto => match std::env::var("PYRAMID_NET").ok().as_deref() {
+                Some("uniform") => NetSpec::ENV_UNIFORM,
+                Some("fat_tree") | Some("fattree") => NetSpec::ENV_FAT_TREE,
+                _ => NetSpec::Ideal,
+            },
+            other => other,
+        }
+    }
+
+    /// Build the model for a cluster whose racks hold `hosts_per_rack`
+    /// hosts. `None` means ideal: the broker skips accounting entirely.
+    pub fn build(self, hosts_per_rack: usize) -> Option<Arc<dyn NetModel>> {
+        match self.resolve() {
+            NetSpec::Auto | NetSpec::Ideal => None,
+            NetSpec::Uniform { latency_us, gbps } => {
+                Some(Arc::new(UniformNet { latency: Duration::from_micros(latency_us), gbps }))
+            }
+            NetSpec::FatTree { hop_us, gbps, oversub } => Some(Arc::new(FatTreeNet::new(
+                hosts_per_rack,
+                Duration::from_micros(hop_us),
+                gbps,
+                oversub,
+            ))),
+        }
+    }
+
+    /// Stable kind tag (config JSON round-trips on this).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            NetSpec::Auto => "auto",
+            NetSpec::Ideal => "ideal",
+            NetSpec::Uniform { .. } => "uniform",
+            NetSpec::FatTree { .. } => "fat_tree",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_monotonically() {
+        let clock = SimClock::new();
+        let before = clock.now();
+        clock.advance(Duration::from_millis(250));
+        let after = clock.now();
+        assert!(after >= before + Duration::from_millis(250));
+        assert_eq!(clock.skew(), Duration::from_millis(250));
+        // Clones share the skew.
+        let other = clock.clone();
+        other.advance(Duration::from_millis(50));
+        assert_eq!(clock.skew(), Duration::from_millis(300));
+    }
+
+    #[test]
+    fn wire_sizes_track_payload() {
+        assert_eq!(7u32.wire_bytes(), 4);
+        assert_eq!(7u64.wire_bytes(), 8);
+        assert_eq!(String::from("abcd").wire_bytes(), 12);
+        assert_eq!(().wire_bytes(), 0);
+    }
+
+    #[test]
+    fn ideal_is_free() {
+        let now = Instant::now();
+        assert_eq!(IdealNet.delay(0, 1, 1 << 20, now), Duration::ZERO);
+    }
+
+    #[test]
+    fn uniform_charges_latency_plus_bandwidth() {
+        let net = UniformNet { latency: Duration::from_micros(100), gbps: 8 };
+        let now = Instant::now();
+        // 1000 bytes at 8 gbps = 1000 ns of serialization.
+        assert_eq!(net.delay(0, 1, 1000, now), Duration::from_nanos(100_000 + 1000));
+        // Self-delivery is free; everything else pays the same price.
+        assert_eq!(net.delay(3, 3, 1000, now), Duration::ZERO);
+        assert_eq!(net.delay(0, 1, 0, now), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn fat_tree_rack_mapping() {
+        let net = FatTreeNet::new(2, Duration::from_micros(10), 10, 4);
+        assert_eq!(net.rack_of(0), 0);
+        assert_eq!(net.rack_of(1), 0);
+        assert_eq!(net.rack_of(2), 1);
+        assert_eq!(net.rack_of(5), 2);
+        // Non-host endpoints (coordinators, EP_NONE) attach at rack 0.
+        assert_eq!(net.rack_of((1 << 32) | 7), 0);
+        assert_eq!(net.rack_of(u64::MAX), 0);
+        // hosts_per_rack = 0: one big rack.
+        let flat = FatTreeNet::new(0, Duration::from_micros(10), 10, 4);
+        assert_eq!(flat.rack_of(0), 0);
+        assert_eq!(flat.rack_of(999), 0);
+    }
+
+    #[test]
+    fn fat_tree_cross_rack_costs_more_than_same_rack() {
+        let net = FatTreeNet::new(2, Duration::from_micros(100), 10, 4);
+        let now = Instant::now();
+        let local = net.delay(0, 1, 1000, now); // same rack
+        let remote = net.delay(0, 2, 1000, now); // rack 0 -> rack 1
+        // 2 hops + 800ns vs 4 hops + 4*800ns.
+        assert_eq!(local, Duration::from_nanos(200_000 + 800));
+        assert_eq!(remote, Duration::from_nanos(400_000 + 3200));
+        assert!(remote > local);
+    }
+
+    #[test]
+    fn fat_tree_spine_link_queues_concurrent_transfers() {
+        let net = FatTreeNet::new(1, Duration::from_micros(10), 1, 1);
+        let now = Instant::now();
+        // 1 gbps, 10_000 bytes => 80 us serialization per transfer.
+        let first = net.delay(0, 1, 10_000, now);
+        let second = net.delay(0, 1, 10_000, now);
+        assert_eq!(first, Duration::from_micros(40 + 80));
+        // The second transfer waits for the first to clear the link.
+        assert_eq!(second, Duration::from_micros(40 + 160));
+        // A different rack pair uses its own link: no queuing.
+        let other = net.delay(0, 2, 10_000, now);
+        assert_eq!(other, Duration::from_micros(40 + 80));
+    }
+
+    #[test]
+    fn spec_resolution_and_build() {
+        // Explicit variants are never overridden by the env.
+        assert_eq!(NetSpec::Ideal.resolve(), NetSpec::Ideal);
+        assert_eq!(NetSpec::ENV_FAT_TREE.resolve(), NetSpec::ENV_FAT_TREE);
+        assert!(NetSpec::Ideal.build(4).is_none(), "ideal installs no model");
+        let uni = NetSpec::Uniform { latency_us: 50, gbps: 10 }.build(4).expect("model");
+        assert_eq!(uni.name(), "uniform");
+        let ft = NetSpec::ENV_FAT_TREE.build(4).expect("model");
+        assert_eq!(ft.name(), "fat_tree");
+        // Auto resolves to *some* concrete variant (env-dependent).
+        assert_ne!(NetSpec::Auto.resolve(), NetSpec::Auto);
+        assert_eq!(NetSpec::Auto.kind(), "auto");
+        assert_eq!(NetSpec::ENV_UNIFORM.kind(), "uniform");
+    }
+}

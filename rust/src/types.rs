@@ -35,6 +35,18 @@ pub struct UpdateRequest {
     pub coordinator: u64,
 }
 
+impl crate::net::WireSize for UpdateRequest {
+    /// Op tag + id + coordinator, plus the full vector for inserts — the
+    /// replication-stream cost of a write, per log record.
+    fn wire_bytes(&self) -> usize {
+        let op = match &self.op {
+            UpdateOp::Insert { vector, .. } => 1 + 4 + vector.len() * 4,
+            UpdateOp::Delete { .. } => 1 + 4,
+        };
+        op + 8
+    }
+}
+
 /// A scored search hit. Scores follow the paper's convention: **larger is
 /// more similar** (Euclidean uses negative squared distance).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -19,6 +19,10 @@ fn chaos_topo() -> ClusterTopology {
         net_latency_us: 50,
         rebalance_ms: 50,
         executor_batch: 8,
+        // Explicitly ideal: chaos replays are bit-identity pins, so the
+        // fat-tree CI leg (PYRAMID_NET) must not re-price these runs.
+        hosts_per_rack: 0,
+        net: NetSpec::Ideal,
     }
 }
 

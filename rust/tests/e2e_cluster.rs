@@ -29,7 +29,15 @@ fn constructor_to_cluster_via_disk() {
     let loaded = PyramidIndex::load(dir.path()).unwrap();
     let cluster = SimCluster::start(
         &loaded,
-        ClusterTopology { workers: 6, replicas: 1, coordinators: 2, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 },
+        ClusterTopology {
+            workers: 6,
+            replicas: 1,
+            coordinators: 2,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+            ..ClusterTopology::default()
+        },
     )
     .unwrap();
     // The workload must come from the same dataset config the index saw.
@@ -59,7 +67,15 @@ fn execute_batch_matches_per_query_execute() {
     let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
     let cluster = SimCluster::start(
         &idx,
-        ClusterTopology { workers: 6, replicas: 1, coordinators: 2, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 },
+        ClusterTopology {
+            workers: 6,
+            replicas: 1,
+            coordinators: 2,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+            ..ClusterTopology::default()
+        },
     )
     .unwrap();
     let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
@@ -100,7 +116,15 @@ fn mips_cluster_with_replication() {
     let workload = Workload::new(data, queries, Metric::Ip, 10);
     let cluster = SimCluster::start(
         &idx,
-        ClusterTopology { workers: 6, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 },
+        ClusterTopology {
+            workers: 6,
+            replicas: 1,
+            coordinators: 1,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+            ..ClusterTopology::default()
+        },
     )
     .unwrap();
     // branch=1: replication should still deliver decent precision, and
@@ -129,7 +153,15 @@ fn pjrt_rerank_serving_matches_plain_serving() {
     let queries = spec.queries(20);
     let cfg = IndexConfig { sample: 1_000, meta_size: 32, partitions: 4, ..Default::default() };
     let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
-    let topo = ClusterTopology { workers: 4, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 };
+    let topo = ClusterTopology {
+        workers: 4,
+        replicas: 1,
+        coordinators: 1,
+        net_latency_us: 0,
+        rebalance_ms: 100,
+        executor_batch: 8,
+        ..ClusterTopology::default()
+    };
     let plain = SimCluster::start(&idx, topo).unwrap();
     // Artifacts can be present on a build without the `pjrt` feature; the
     // stub engine fails to spawn and the test skips rather than panics.
@@ -167,7 +199,15 @@ fn cluster_survives_coordinator_timeout_retry() {
     let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
     let cluster = SimCluster::start(
         &idx,
-        ClusterTopology { workers: 3, replicas: 1, coordinators: 1, net_latency_us: 0, rebalance_ms: 100, executor_batch: 8 },
+        ClusterTopology {
+            workers: 3,
+            replicas: 1,
+            coordinators: 1,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+            ..ClusterTopology::default()
+        },
     )
     .unwrap();
     let params = QueryParams { k: 5, branch: 3, ef: 50, meta_ef: 50 };

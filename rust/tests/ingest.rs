@@ -178,6 +178,7 @@ fn ingesting_cluster(
         net_latency_us: 0,
         rebalance_ms: 100,
         executor_batch: 8,
+        ..ClusterTopology::default()
     };
     let cluster = SimCluster::start_ingesting(
         &idx,

@@ -30,6 +30,7 @@ fn topo() -> ClusterTopology {
         net_latency_us: 1_000,
         rebalance_ms: 50,
         executor_batch: 4,
+        ..ClusterTopology::default()
     }
 }
 

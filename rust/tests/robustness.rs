@@ -36,6 +36,7 @@ fn topo(workers: usize, replicas: usize, net_latency_us: u64) -> ClusterTopology
         net_latency_us,
         rebalance_ms: 100,
         executor_batch: 8,
+        ..ClusterTopology::default()
     }
 }
 

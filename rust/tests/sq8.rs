@@ -134,6 +134,7 @@ fn sq8_cluster_matches_local_quantized_index() {
         net_latency_us: 0,
         rebalance_ms: 50,
         executor_batch: 4,
+        ..ClusterTopology::default()
     };
     let cluster = SimCluster::start(&idx, topo).unwrap();
     let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
@@ -175,6 +176,7 @@ fn sq8_live_ingest_cluster_end_to_end() {
         net_latency_us: 0,
         rebalance_ms: 50,
         executor_batch: 4,
+        ..ClusterTopology::default()
     };
     let icfg = IngestConfig { refreeze_threshold: usize::MAX, quantize: true, ..Default::default() };
     let cluster =
