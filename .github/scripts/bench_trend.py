@@ -15,9 +15,14 @@ higher-is-worse rule). Entries whose name contains
 already in [0, 1]-ish units): relative thresholds are meaningless near
 zero, so they regress when the gap *widens* by more than
 RECALL_DELTA_THRESHOLD — the same 2% bound the sq8 acceptance tests
-pin. Anything worse than its threshold emits a GitHub ::warning::
-annotation. This script never fails the job — shared runners are too
-noisy to gate on; the annotations are the trend signal.
+pin. Entries whose name contains "-overhead-pct" (the telemetry plane's
+"obs/trace-overhead-pct" and "obs/walk-hook-overhead-pct") are already
+percentages near zero and follow the same absolute rule: they regress
+when the overhead widens by more than OVERHEAD_PCT_THRESHOLD percentage
+points — the ISSUE 9 "< 2% when on" acceptance bound. Anything worse
+than its threshold emits a GitHub ::warning:: annotation. This script
+never fails the job — shared runners are too noisy to gate on; the
+annotations are the trend signal.
 """
 
 import json
@@ -25,6 +30,7 @@ import sys
 
 THRESHOLD = 0.25
 RECALL_DELTA_THRESHOLD = 0.02
+OVERHEAD_PCT_THRESHOLD = 2.0
 
 
 def main(fresh_path, baseline_path):
@@ -52,13 +58,27 @@ def main(fresh_path, baseline_path):
         ref = base.get(name)
         val = fresh[name]
         is_recall_delta = "recall-delta" in name
+        is_overhead_pct = "-overhead-pct" in name
         if not isinstance(ref, (int, float)) or isinstance(ref, bool):
             continue
-        if ref <= 0 and not is_recall_delta:
+        if ref <= 0 and not (is_recall_delta or is_overhead_pct):
             continue
         if not isinstance(val, (int, float)) or isinstance(val, bool):
             continue
         compared += 1
+        if is_overhead_pct:
+            # Already a percentage hovering near zero (telemetry overhead
+            # when attached); regression = widening by more than the
+            # absolute percentage-point bound, never a relative delta.
+            widened = val - ref
+            if widened > OVERHEAD_PCT_THRESHOLD:
+                regressions += 1
+                print(
+                    f"::warning file={baseline_path}::bench regression: {name} "
+                    f"{ref:+.2f}% -> {val:+.2f}% overhead "
+                    f"(widened by {widened:+.2f}pp absolute)"
+                )
+            continue
         if is_recall_delta:
             # Absolute gap in recall units; regression = the gap widening
             # past the acceptance bound, regardless of the tiny baseline.

@@ -40,6 +40,13 @@
 //!   fat-tree fabric with every host rack-local vs one host per rack,
 //!   and the hedged-over-unhedged p99 win when each partition's replicas
 //!   sit at asymmetric distances (higher is better).
+//! * `obs/trace-overhead-pct`, `obs/scrape-us`,
+//!   `obs/walk-hook-overhead-pct` — the telemetry plane, PR 9: end-to-end
+//!   query cost with the plane attached vs detached, the cost of one
+//!   snapshot-consistent registry scrape, and the profiled vs unprofiled
+//!   walk on the same frozen graph. The `-pct` keys regress on an
+//!   absolute +2pp widening (percentage points, like the recall deltas —
+//!   relative thresholds are meaningless near zero).
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -731,6 +738,7 @@ fn main() {
                 executor_batch: 8,
                 hosts_per_rack,
                 net: fat,
+                ..ClusterTopology::default()
             };
             let coord_cfg = CoordinatorConfig { hedge, ..CoordinatorConfig::default() };
             let cluster =
@@ -772,6 +780,117 @@ fn main() {
             "net fabric: asymmetric p99 unhedged {unhedged:.2} ms vs hedged {hedged:.2} ms \
              ({win:.2}x, {fired} hedges)"
         );
+    }
+
+    // --- obs: telemetry plane (ISSUE 9) --------------------------------------
+    // Overhead-when-on, recorded in percentage points: identical cluster +
+    // workload with the plane attached (`ObsSpec::On`) vs detached
+    // (`ObsSpec::Off`), and the profiled vs unprofiled bottom-layer walk
+    // on the same frozen graph. `obs/scrape-us` prices one
+    // snapshot-consistent scrape of a populated registry — the cost a
+    // monitoring poll imposes on the serving path's coherence lock.
+    if run("obs") {
+        use pyramid::obs::{MetricsRegistry, ObsSpec};
+        let n = if smoke { 2_000 } else { 4_000 };
+        let data = SyntheticSpec::deep_like(n, 16, 61).generate();
+        let queries = SyntheticSpec::deep_like(n, 16, 61).queries(64);
+        let cfg =
+            IndexConfig { sample: n / 4, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).expect("build obs bench index");
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        let rounds = if smoke { 2 } else { 4 };
+        let measure = |obs: ObsSpec| -> f64 {
+            let topo = ClusterTopology {
+                workers: 4,
+                replicas: 1,
+                coordinators: 2,
+                net_latency_us: 0,
+                rebalance_ms: 100,
+                executor_batch: 8,
+                obs,
+                ..ClusterTopology::default()
+            };
+            let coord_cfg = CoordinatorConfig {
+                hedge: HedgeConfig::disabled(),
+                ..CoordinatorConfig::default()
+            };
+            let cluster =
+                SimCluster::start_with(&idx, topo, None, coord_cfg).expect("start obs cluster");
+            for qi in 0..queries.len() {
+                let _ = cluster.execute(queries.get(qi), &params);
+            }
+            let mut us = Vec::new();
+            for _ in 0..rounds {
+                for qi in 0..queries.len() {
+                    let t0 = Instant::now();
+                    let _ = cluster.execute(queries.get(qi), &params);
+                    us.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+            cluster.shutdown();
+            percentile(&us, 50.0)
+        };
+        let detached = measure(ObsSpec::Off);
+        let attached = measure(ObsSpec::On);
+        let trace_pct = (attached - detached) / detached.max(1e-9) * 100.0;
+        rec.record("obs/trace-overhead-pct", trace_pct);
+        println!(
+            "obs drill: query p50 detached {detached:.0} us vs attached {attached:.0} us \
+             ({trace_pct:+.2}%)"
+        );
+
+        // Scrape cost on a registry shaped like a live cluster's: a few
+        // labelled counter series plus a populated latency histogram.
+        let reg = MetricsRegistry::new();
+        for p in 0..16u32 {
+            reg.counter(&format!("bench_partials{{partition=\"{p}\"}}")).add(u64::from(p) + 1);
+        }
+        let h = reg.histogram("bench_latency_us");
+        for i in 0..4096 {
+            h.observe(100.0 + (i % 997) as f64);
+        }
+        let scrape_ns = bench(&mut rec, "obs/scrape 17 series", &mut || {
+            std::hint::black_box(reg.scrape());
+            1
+        });
+        rec.record("obs/scrape-us", scrape_ns / 1e3);
+
+        // Walk hooks: the ProfileProbe instantiation vs the NoProbe one,
+        // identical batch on the same frozen graph (results are pinned
+        // bit-identical by the hnsw tests; this records the price).
+        let wn = if smoke { 10_000 } else { 50_000 };
+        let wdata = SyntheticSpec::deep_like(wn, 96, 3).generate();
+        let wqueries = SyntheticSpec::deep_like(wn, 96, 3).queries(256);
+        let wh = Hnsw::build(wdata, Metric::L2, HnswParams::default()).unwrap();
+        let mut qi = 0usize;
+        let plain_ns = bench(&mut rec, &format!("hnsw/walk-unprofiled n={wn} ef=100"), &mut || {
+            let batch: Vec<BatchQuery<'_>> = (0..8)
+                .map(|j| BatchQuery {
+                    query: wqueries.get((qi + j) % wqueries.len()),
+                    k: 10,
+                    ef: 100,
+                })
+                .collect();
+            std::hint::black_box(wh.search_batch(&batch, &NativeScorer));
+            qi += 8;
+            8
+        });
+        let mut qj = 0usize;
+        let prof_ns = bench(&mut rec, &format!("hnsw/walk-profiled n={wn} ef=100"), &mut || {
+            let batch: Vec<BatchQuery<'_>> = (0..8)
+                .map(|j| BatchQuery {
+                    query: wqueries.get((qj + j) % wqueries.len()),
+                    k: 10,
+                    ef: 100,
+                })
+                .collect();
+            std::hint::black_box(wh.search_batch_profiled(&batch, &NativeScorer));
+            qj += 8;
+            8
+        });
+        let walk_pct = (prof_ns - plain_ns) / plain_ns.max(1e-9) * 100.0;
+        rec.record("obs/walk-hook-overhead-pct", walk_pct);
+        println!("  -> walk-hook overhead vs unprofiled walk: {walk_pct:+.2}%");
     }
 
     if emit_json {

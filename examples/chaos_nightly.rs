@@ -53,6 +53,15 @@ fn main() -> Result<()> {
             for t in &report.timeline {
                 eprintln!("  {t}");
             }
+            if let Some(json) = &report.worst_trace_json {
+                // Post-mortem for the tail query of the failing run; the
+                // chaos-nightly job uploads this as a CI artifact.
+                let path = format!("chaos_worst_trace_seed{}.jsonl", spec.seed);
+                match std::fs::write(&path, json) {
+                    Ok(()) => eprintln!("worst-query trace written to {path}"),
+                    Err(e) => eprintln!("could not write worst-query trace: {e}"),
+                }
+            }
             minimize(&idx, &spec);
             eprintln!(
                 "\n{} violation(s) at seed {} after {} clean schedule(s).",

@@ -10,7 +10,8 @@
 //! Flags: `--trace "<key=value ...>"` (the EXPERIMENTS.md §10 grammar),
 //! `--elastic true` (enable the controller), `--throttle-host H` /
 //! `--cpu-share S` (straggler injection on host H at S% CPU),
-//! `--json PATH` (write the full monitor export), `--clients N`.
+//! `--json PATH` (write the full monitor export), `--clients N`,
+//! `--trace-json PATH` (dump the worst-p99 query's TraceTree as JSON lines).
 
 use pyramid::chaos::runner::{harness_index, HARNESS_INDEX_SEED};
 use pyramid::prelude::*;
@@ -60,6 +61,7 @@ fn main() -> Result<()> {
         ..LoadConfig::default()
     };
     let report = run_trace(&cluster, &idx, &spec, &cfg)?;
+    let worst = cluster.worst_trace();
     cluster.shutdown();
 
     println!("\n-- report --");
@@ -85,6 +87,19 @@ fn main() -> Result<()> {
         );
         for (t, e) in &report.events {
             println!("  [{t:>7.0} ms] {e}");
+        }
+    }
+
+    if let Some((us, tree)) = &worst {
+        println!(
+            "worst query:  {:.1} ms end-to-end, {} spans (trace {})",
+            *us as f64 / 1_000.0,
+            tree.spans.len(),
+            tree.trace.0
+        );
+        if let Some(path) = args.get("trace-json") {
+            std::fs::write(&path, tree.to_json_lines())?;
+            println!("worst-query trace written to {path}");
         }
     }
 

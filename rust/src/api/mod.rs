@@ -115,6 +115,14 @@ impl Coordinator {
         self.node.clone().execute_async(query, para, callback)
     }
 
+    /// Attach a telemetry plane ([`crate::obs::Obs`]): queries mint
+    /// traces and the coordinator's counters land in the plane's
+    /// [`crate::obs::MetricsRegistry`]. Standalone deployments share one
+    /// bundle across their coordinators the same way [`SimCluster`] does.
+    pub fn enable_obs(&self, obs: Arc<crate::obs::Obs>) {
+        self.node.enable_obs(obs);
+    }
+
     /// Attach the streaming-ingest write gateway (see
     /// [`crate::ingest`]); afterwards [`Self::insert`]/[`Self::delete`]
     /// accept writes. Coordinators of one deployment must share the
@@ -187,6 +195,7 @@ impl Executor {
                 net_latency: std::time::Duration::ZERO,
                 batch: crate::executor::DEFAULT_BATCH,
                 ingest: None,
+                obs: None,
             },
             self.brokers.clone(),
             self.registry.clone(),
@@ -224,6 +233,7 @@ impl Executor {
                     live: live.clone(),
                     freeze: None,
                 }),
+                obs: None,
             },
             self.brokers.clone(),
             self.registry.clone(),

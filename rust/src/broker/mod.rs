@@ -130,6 +130,21 @@ pub struct BrokerMetrics {
     pub net_delay_us: u64,
 }
 
+/// What one publish cost, split by cause — the telemetry plane's
+/// publish-span tags ([`crate::obs`]): the message becomes visible to its
+/// consumer at `publish + chaos_delay + net_delay` (the `visible_at`
+/// seam), unless the fault plan dropped it outright.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PublishReceipt {
+    /// Fault-plan hold-back ([`MsgFate::Delay`]).
+    pub chaos_delay: Duration,
+    /// Network cost priced by the installed [`NetModel`].
+    pub net_delay: Duration,
+    /// The fault plan dropped the message (a lost datagram — no replica
+    /// will ever see it).
+    pub dropped: bool,
+}
+
 struct InFlight {
     msg_id: u64,
     partition: usize,
@@ -450,11 +465,13 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
     /// pricing, enqueue. The chaos decision is drawn *before* any lock so
     /// the plan's seeded stream consumes one decision per publish in
     /// call order, exactly as before the per-topic sharding.
-    fn publish_routed(&self, topic: &str, route: Route<'_>, key: u64, msg: M) -> Result<()> {
+    fn publish_routed(&self, topic: &str, route: Route<'_>, key: u64, msg: M) -> Result<PublishReceipt> {
         let fate = self
             .chaos()
             .map(|plan| plan.fate_for_publish(topic))
             .unwrap_or(MsgFate::Deliver);
+        let chaos_delay = if let MsgFate::Delay(d) = fate { d } else { Duration::ZERO };
+        let dropped = matches!(fate, MsgFate::Drop);
         let net = self.net();
         let bytes = msg.wire_bytes();
         let tp = self.topic_or_err(topic)?;
@@ -511,11 +528,18 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
         Self::enqueue_with_fate(&self.clock, &mut t, target_q, id, fate, net_delay);
         drop(t);
         tp.cv.notify_all();
-        Ok(())
+        Ok(PublishReceipt { chaos_delay, net_delay, dropped })
     }
 
     /// Publish a message; `key` picks the queue partition.
     pub fn publish(&self, topic: &str, key: u64, msg: M) -> Result<()> {
+        self.publish_routed(topic, Route::Key, key, msg).map(|_| ())
+    }
+
+    /// [`Self::publish`] returning the [`PublishReceipt`] — the traced
+    /// coordinator path. Same code, same chaos-stream consumption, same
+    /// admission behavior; only the receipt is surfaced.
+    pub fn publish_observed(&self, topic: &str, key: u64, msg: M) -> Result<PublishReceipt> {
         self.publish_routed(topic, Route::Key, key, msg)
     }
 
@@ -528,6 +552,17 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
     /// the group has no second live member; the message is then served by
     /// whoever owns that queue after the next rebalance.
     pub fn publish_hedge(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
+        self.publish_routed(topic, Route::Hedge(group), key, msg).map(|_| ())
+    }
+
+    /// [`Self::publish_hedge`] returning the [`PublishReceipt`].
+    pub fn publish_hedge_observed(
+        &self,
+        topic: &str,
+        group: &str,
+        key: u64,
+        msg: M,
+    ) -> Result<PublishReceipt> {
         self.publish_routed(topic, Route::Hedge(group), key, msg)
     }
 
@@ -541,6 +576,17 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
     /// member (pre-rebalance window). Chaos fates apply exactly as for
     /// `publish`.
     pub fn publish_balanced(&self, topic: &str, group: &str, key: u64, msg: M) -> Result<()> {
+        self.publish_routed(topic, Route::Balanced(group), key, msg).map(|_| ())
+    }
+
+    /// [`Self::publish_balanced`] returning the [`PublishReceipt`].
+    pub fn publish_balanced_observed(
+        &self,
+        topic: &str,
+        group: &str,
+        key: u64,
+        msg: M,
+    ) -> Result<PublishReceipt> {
         self.publish_routed(topic, Route::Balanced(group), key, msg)
     }
 

@@ -77,6 +77,13 @@ pub struct ChaosReport {
     pub async_submitted: u64,
     pub async_fired: u64,
     pub refreezes: u64,
+    /// Post-mortem artifact: the run's worst-latency query trace as JSON
+    /// lines (first line `{"worst_latency_us":...}`, then one span per
+    /// line — see [`crate::obs::TraceTree::to_json_lines`]). The chaos CI
+    /// leg writes this to disk when a violation fails the job, so the
+    /// tail query of the failing seed ships with the report. `None` when
+    /// the telemetry plane is detached or no query completed.
+    pub worst_trace_json: Option<String>,
 }
 
 impl ChaosReport {
@@ -157,6 +164,10 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
         // schedules, so the harness must not pick up PYRAMID_NET overrides.
         hosts_per_rack: 0,
         net: crate::net::NetSpec::Ideal,
+        // Auto (not pinned On): tracing is passive and never reschedules,
+        // so the obs-off CI leg may detach it; `worst_trace_json` is then
+        // `None`, which every consumer already tolerates.
+        obs: crate::obs::ObsSpec::Auto,
     };
     let ingest_cfg = IngestConfig {
         refreeze_threshold: 32,
@@ -398,6 +409,9 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
 
     let counters = cluster.chaos_metrics();
     let refreezes = cluster.total_refreezes();
+    let worst_trace_json = cluster
+        .worst_trace()
+        .map(|(us, tree)| format!("{{\"worst_latency_us\":{us}}}\n{}", tree.to_json_lines()));
     cluster.shutdown();
     Ok(ChaosReport {
         spec: *spec,
@@ -411,5 +425,6 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
         async_submitted,
         async_fired,
         refreezes,
+        worst_trace_json,
     })
 }

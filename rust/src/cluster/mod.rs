@@ -46,6 +46,7 @@ use crate::hnsw::Hnsw;
 use crate::ingest::freeze::{FreezeController, FreezeMsg, FreezeStatus};
 use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::{PyramidIndex, Router};
+use crate::obs::{MetricsRegistry, Obs, Scrape, TraceId, TraceTree};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
 use crate::runtime::BatchScorer;
 use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, UpdateSeq, VectorId};
@@ -247,6 +248,7 @@ fn build_spec(
     host: Arc<HostControl>,
     topo: &ClusterTopology,
     ingest: Option<&Arc<IngestRuntime>>,
+    obs: Option<&Arc<Obs>>,
 ) -> ExecutorSpec {
     let (sub, wiring) = match ingest {
         Some(rt) => {
@@ -265,6 +267,7 @@ fn build_spec(
         net_latency: Duration::from_micros(topo.net_latency_us),
         batch: topo.executor_batch.max(1),
         ingest: wiring,
+        obs: obs.cloned(),
     }
 }
 
@@ -284,9 +287,10 @@ fn respawn_role(
     registry: &Registry,
     state: &Mutex<ClusterState>,
     ingest: Option<&Arc<IngestRuntime>>,
+    obs: Option<&Arc<Obs>>,
 ) {
     let h = executor::spawn(
-        build_spec(role, subs, host, topo, ingest),
+        build_spec(role, subs, host, topo, ingest, obs),
         broker.clone(),
         registry.clone(),
     );
@@ -318,6 +322,9 @@ pub struct SimCluster {
     async_callbacks: Arc<AsyncCallbacks>,
     /// Installed fault plan, if any ([`Self::enable_chaos`]).
     chaos: Mutex<Option<Arc<FaultPlan>>>,
+    /// Telemetry plane shared by every coordinator and executor; None
+    /// when detached ([`crate::obs::ObsSpec`] resolved off).
+    obs: Option<Arc<Obs>>,
     rr: AtomicUsize,
     next_exec_id: Arc<AtomicU64>,
 }
@@ -468,6 +475,41 @@ impl SimCluster {
             rt.freeze_broker.set_net(net_model.clone());
         }
         let registry = Registry::new(RegistryConfig::default());
+        // Telemetry plane: resolved once (`Auto` reads the PYRAMID_OBS
+        // env var here, default on). None detaches every instrumented
+        // seam — queries, walks and replies run their pre-existing code
+        // paths, bit-identical to the un-instrumented system.
+        let obs = if topo.obs.resolve() { Some(Obs::new()) } else { None };
+        if let Some(o) = &obs {
+            // Absorb the legacy surfaces as scrape sources, so
+            // `observe()` is one coherent snapshot of everything.
+            let b = broker.clone();
+            o.registry.register_source(
+                "broker_transport",
+                Box::new(move |out| {
+                    let m = b.metrics();
+                    out.push(("broker_publishes_blocked".into(), m.publishes_blocked as f64));
+                    out.push((
+                        "broker_backpressure_failures".into(),
+                        m.backpressure_failures as f64,
+                    ));
+                    out.push(("broker_net_messages_costed".into(), m.net_messages_costed as f64));
+                    out.push(("broker_net_delay_us_total".into(), m.net_delay_us as f64));
+                }),
+            );
+            let b = broker.clone();
+            o.registry.register_source(
+                "broker_queues",
+                Box::new(move |out| {
+                    for p in 0..w {
+                        out.push((
+                            format!("broker_queue_depth{{partition=\"{p}\"}}"),
+                            b.backlog(&topic_for(p as PartitionId)) as f64,
+                        ));
+                    }
+                }),
+            );
+        }
         let hosts: Vec<Arc<HostControl>> = (0..topo.workers).map(HostControl::new).collect();
 
         // Replica placement: replica r of partition p on host
@@ -492,7 +534,14 @@ impl SimCluster {
         let mut executors = Vec::with_capacity(roles.len());
         for role in &roles {
             executors.push(executor::spawn(
-                build_spec(role, &subs, hosts[role.home_host].clone(), &topo, ingest.as_ref()),
+                build_spec(
+                    role,
+                    &subs,
+                    hosts[role.home_host].clone(),
+                    &topo,
+                    ingest.as_ref(),
+                    obs.as_ref(),
+                ),
                 broker.clone(),
                 registry.clone(),
             ));
@@ -515,6 +564,9 @@ impl SimCluster {
             };
             if let Some(rt) = &ingest {
                 node.enable_ingest(rt.gateway.clone());
+            }
+            if let Some(o) = &obs {
+                node.enable_obs(o.clone());
             }
             coordinators.push(node);
         }
@@ -557,6 +609,7 @@ impl SimCluster {
             let stop = respawn_stop.clone();
             let enabled = respawn_enabled.clone();
             let ingest = ingest.clone();
+            let obs = obs.clone();
             std::thread::Builder::new()
                 .name("cluster-respawner".into())
                 .spawn(move || {
@@ -584,6 +637,7 @@ impl SimCluster {
                             &registry,
                             &state,
                             ingest.as_ref(),
+                            obs.as_ref(),
                         );
                     };
                     // Requests arriving while the gate is off are parked
@@ -633,6 +687,7 @@ impl SimCluster {
             jobs_broker,
             async_callbacks,
             chaos: Mutex::new(None),
+            obs,
             rr: AtomicUsize::new(0),
             next_exec_id,
         })
@@ -851,6 +906,21 @@ impl SimCluster {
             rt.freeze_broker.set_chaos(Some(plan.clone()));
         }
         *self.chaos.lock().unwrap() = Some(plan.clone());
+        if let Some(o) = &self.obs {
+            let p = plan.clone();
+            o.registry.register_source(
+                "chaos",
+                Box::new(move |out| {
+                    let s = p.counters.snapshot();
+                    out.push(("chaos_messages_dropped".into(), s.messages_dropped as f64));
+                    out.push(("chaos_messages_delayed".into(), s.messages_delayed as f64));
+                    out.push(("chaos_duplicates_injected".into(), s.duplicates_injected as f64));
+                    out.push(("chaos_messages_reordered".into(), s.messages_reordered as f64));
+                    out.push(("chaos_replies_dropped".into(), s.replies_dropped as f64));
+                    out.push(("chaos_publishes_cut".into(), s.publishes_cut as f64));
+                }),
+            );
+        }
         plan
     }
 
@@ -871,6 +941,47 @@ impl SimCluster {
     /// regression checks and the chaos bench keys.
     pub fn chaos_metrics(&self) -> ChaosSnapshot {
         self.chaos_plan().map(|p| p.counters.snapshot()).unwrap_or_default()
+    }
+
+    /// The cluster's telemetry bundle — tracer + metrics registry —
+    /// shared by every coordinator and executor. `None` when the plane is
+    /// detached (`PYRAMID_OBS=off` / [`crate::obs::ObsSpec::Off`]).
+    pub fn obs(&self) -> Option<Arc<Obs>> {
+        self.obs.clone()
+    }
+
+    /// One snapshot-consistent scrape of every metrics surface: the
+    /// native registry (coordinator + executor counters and histograms)
+    /// plus the absorbed legacy sources (broker transport counters,
+    /// per-partition queue depths, chaos counters once
+    /// [`Self::enable_chaos`] ran, and the load monitor while a drill is
+    /// driving). Empty when the plane is detached.
+    pub fn observe(&self) -> Scrape {
+        match &self.obs {
+            Some(o) => o.registry.scrape(),
+            None => MetricsRegistry::new().scrape(),
+        }
+    }
+
+    /// Prometheus-style text exposition of [`Self::observe`].
+    pub fn scrape_text(&self) -> String {
+        self.observe().to_prometheus()
+    }
+
+    /// Assemble the span tree of a completed query from its
+    /// [`QueryResult`]`::trace` id. `None` when the plane is detached or
+    /// the trace's spans were all evicted from the ring buffers (old
+    /// queries under sustained load — use [`Self::worst_trace`] for the
+    /// pinned tail exemplar, which survives eviction).
+    pub fn trace_tree(&self, trace: u64) -> Option<TraceTree> {
+        self.obs.as_ref().and_then(|o| o.tracer.tree(TraceId(trace)))
+    }
+
+    /// The worst-latency query trace observed so far, pinned at merge
+    /// time: `(latency_us, tree)`. The post-mortem artifact the load
+    /// drill and the chaos runner dump as JSON lines.
+    pub fn worst_trace(&self) -> Option<(u64, TraceTree)> {
+        self.obs.as_ref().and_then(|o| o.tracer.worst())
     }
 
     /// Crash one coordinator (no cleanup): its sync queries fail — the
@@ -1003,6 +1114,7 @@ impl SimCluster {
                 &self.registry,
                 &self.state,
                 self.ingest.as_ref(),
+                self.obs.as_ref(),
             );
         }
         // Topology changed wholesale: latencies observed in the faulted
@@ -1048,6 +1160,7 @@ impl SimCluster {
                 &self.registry,
                 &self.state,
                 self.ingest.as_ref(),
+                self.obs.as_ref(),
             );
         }
         for c in &self.coordinators {
@@ -1094,7 +1207,14 @@ impl SimCluster {
         let eid = self.next_exec_id.fetch_add(1, Ordering::Relaxed);
         let role = Role { exec_id: eid, partition, home_host: host };
         let h = executor::spawn(
-            build_spec(&role, &self.subs, self.hosts[host].clone(), &self.topo, self.ingest.as_ref()),
+            build_spec(
+                &role,
+                &self.subs,
+                self.hosts[host].clone(),
+                &self.topo,
+                self.ingest.as_ref(),
+                self.obs.as_ref(),
+            ),
             self.broker.clone(),
             self.registry.clone(),
         );

@@ -10,6 +10,7 @@ use crate::error::{PyramidError, Result};
 use crate::hnsw::HnswParams;
 use crate::metric::Metric;
 use crate::net::NetSpec;
+use crate::obs::ObsSpec;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -305,6 +306,11 @@ pub struct ClusterTopology {
     /// [`NetSpec::Auto`] resolves through the `PYRAMID_NET` env var (the
     /// CI matrix toggle) and falls back to ideal free delivery.
     pub net: NetSpec,
+    /// Telemetry plane (per-query tracing + metrics registry). The
+    /// default [`ObsSpec::Auto`] resolves through the `PYRAMID_OBS` env
+    /// var and falls back to **on**; `Off` detaches it (bit-identical to
+    /// the un-instrumented system — the `obs-off` CI leg).
+    pub obs: ObsSpec,
 }
 
 impl Default for ClusterTopology {
@@ -318,6 +324,7 @@ impl Default for ClusterTopology {
             executor_batch: crate::executor::DEFAULT_BATCH,
             hosts_per_rack: 0,
             net: NetSpec::Auto,
+            obs: ObsSpec::Auto,
         }
     }
 }
@@ -376,6 +383,7 @@ impl ClusterTopology {
             ("executor_batch", Json::num(self.executor_batch as f64)),
             ("hosts_per_rack", Json::num(self.hosts_per_rack as f64)),
             ("net", self.net_to_json()),
+            ("obs", Json::str(self.obs.kind())),
         ])
     }
 
@@ -404,6 +412,9 @@ impl ClusterTopology {
         }
         if let Some(v) = j.get("net").and_then(Self::net_from_json) {
             c.net = v;
+        }
+        if let Some(v) = j.get("obs").and_then(Json::as_str).and_then(ObsSpec::from_kind) {
+            c.obs = v;
         }
         c
     }
@@ -572,6 +583,23 @@ mod tests {
         assert_eq!(c.cluster.hosts_per_rack, 2);
         let ideal = PyramidConfig::from_json_text(&text.replace("fat_tree", "ideal")).unwrap();
         assert_eq!(ideal.cluster.net, NetSpec::Ideal);
+    }
+
+    #[test]
+    fn obs_field_roundtrips_and_defaults_auto() {
+        let mut c = PyramidConfig::example();
+        assert_eq!(c.cluster.obs, ObsSpec::Auto, "telemetry must default to Auto");
+        for spec in [ObsSpec::On, ObsSpec::Off, ObsSpec::Auto] {
+            c.cluster.obs = spec;
+            let back = PyramidConfig::from_json_text(&c.to_json_text()).unwrap();
+            assert_eq!(back.cluster.obs, spec);
+        }
+        // Absent key falls back to the default, unknown kinds are ignored.
+        let text = r#"{
+            "dataset": {"source": "synthetic", "kind": "tiny_like", "n": 1000, "d": 32},
+            "cluster": {"workers": 4, "obs": "bogus"}
+        }"#;
+        assert_eq!(PyramidConfig::from_json_text(text).unwrap().cluster.obs, ObsSpec::Auto);
     }
 
     #[test]

@@ -64,6 +64,8 @@ use crate::error::{PyramidError, Result};
 use crate::ingest::IngestGateway;
 use crate::meta::Router;
 use crate::net::WireSize;
+use crate::obs::trace::{stage, SpanCtx, SpanGuard, SpanId, TraceId, CTX_WIRE_BYTES, NO_PARENT};
+use crate::obs::Obs;
 use crate::runtime::BatchScorer;
 use crate::stats::{QuantileWindow, ThroughputSeries, TokenBucket};
 use crate::types::{merge_topk, Neighbor, PartitionId, QueryMetrics, QueryResult, UpdateOp, VectorId};
@@ -170,14 +172,25 @@ pub struct QueryRequest {
     /// bare network connection (the mpsc channel), so the executor
     /// checks this against the fault plan's link cuts before replying.
     pub from: u64,
+    /// Telemetry context (trace id + parent span + send time); `None`
+    /// when the coordinator runs detached, and on hedge / eviction
+    /// re-issues it carries the re-issue span as the parent so the
+    /// executor's spans attribute to the arm that actually served them.
+    pub trace: Option<SpanCtx>,
 }
 
 impl WireSize for QueryRequest {
     /// Header (qid, partition, k, ef, flags, origin endpoint) + the query
-    /// vector. The reply sender stands in for an open connection and
-    /// carries no payload.
+    /// vector + the trace context when one rides along. The reply sender
+    /// stands in for an open connection and carries no payload.
     fn wire_bytes(&self) -> usize {
-        8 + 2 + 8 + 8 + 1 + 8 + self.query.len() * 4
+        8 + 2
+            + 8
+            + 8
+            + 1
+            + 8
+            + self.query.len() * 4
+            + if self.trace.is_some() { CTX_WIRE_BYTES } else { 0 }
     }
 }
 
@@ -191,15 +204,21 @@ pub struct PartialResult {
     /// `return_vectors` was requested).
     pub vectors: Option<Arc<Vec<f32>>>,
     pub executor: u64,
+    /// Telemetry echo: (trace id, executor `exec` span id) when the
+    /// request carried a context, so the coordinator parents the
+    /// partial's win/lose span under the exec span that produced it.
+    pub trace: Option<(u64, u64)>,
 }
 
 impl WireSize for PartialResult {
     /// Header + (id, score) pairs + the optional raw candidate vectors —
-    /// the reply-path cost the executor charges the net model per batch.
+    /// the reply-path cost the executor charges the net model per batch —
+    /// plus the 16-byte trace echo when one rides along.
     fn wire_bytes(&self) -> usize {
         8 + 2 + 8
             + self.neighbors.len() * 8
             + self.vectors.as_ref().map(|v| v.len() * 4).unwrap_or(0)
+            + if self.trace.is_some() { 16 } else { 0 }
     }
 }
 
@@ -383,6 +402,9 @@ pub struct CoordinatorNode {
     hedge_budget: Mutex<Option<TokenBucket>>,
     /// Write-path gateway; None until ingestion is enabled.
     ingest: Mutex<Option<IngestGateway>>,
+    /// Telemetry plane ([`Self::enable_obs`]); None = fully detached,
+    /// every instrumented branch below takes its legacy path.
+    obs: Mutex<Option<Arc<Obs>>>,
     evictions: Mutex<EvictionLog>,
     async_tx: Mutex<Option<mpsc::Sender<AsyncJob>>>,
     async_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -450,6 +472,7 @@ impl CoordinatorNode {
                 TokenBucket::new(rate, rate)
             })),
             ingest: Mutex::new(None),
+            obs: Mutex::new(None),
             evictions: Mutex::new(EvictionLog { rx: evict_rx, seq_base: 0, log: VecDeque::new() }),
             async_tx: Mutex::new(None),
             async_handles: Mutex::new(Vec::new()),
@@ -624,6 +647,20 @@ impl CoordinatorNode {
         Ok(())
     }
 
+    /// Attach the cluster telemetry plane. Every query executed after
+    /// this mints a [`TraceId`], records the stage spans (route, publish,
+    /// gather, merge, hedge/re-issue arms, partial win/lose) and carries
+    /// a [`SpanCtx`] inside each [`QueryRequest`] so executor spans land
+    /// in the same tree.
+    pub fn enable_obs(&self, obs: Arc<Obs>) {
+        *self.obs.lock().unwrap() = Some(obs);
+    }
+
+    /// The attached telemetry plane, if any.
+    pub fn obs(&self) -> Option<Arc<Obs>> {
+        self.obs.lock().unwrap().clone()
+    }
+
     /// Attach the write-path gateway, turning this coordinator into an
     /// ingestion endpoint ([`Self::insert`] / [`Self::delete`]). All
     /// coordinators of a cluster share one gateway (clones share the id
@@ -788,17 +825,47 @@ impl CoordinatorNode {
                 })
                 .unwrap_or(false)
         };
+        // Telemetry: when the plane is attached, mint one trace per query
+        // of the block and open its root span at `start`. Every
+        // instrumented branch below is gated on `obs`, so a detached
+        // coordinator runs the exact legacy path.
+        let obs = self.obs.lock().unwrap().clone();
+        let mut root_guards: Vec<SpanGuard> = Vec::new();
+        let mut tids: Vec<(TraceId, SpanId)> = Vec::new();
+        if let Some(o) = &obs {
+            let start_us = o.tracer.us_of(start);
+            for _ in 0..queries.len() {
+                let tr = o.tracer.new_trace();
+                let mut g = o.tracer.span_at(tr, NO_PARENT, stage::QUERY, start_us);
+                g.node(self.id);
+                tids.push((tr, g.id()));
+                root_guards.push(g);
+            }
+        }
         let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
             queries.iter().map(|q| self.router.prepare_query(q)).collect();
         let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
+        let route_start = obs.as_ref().map(|o| o.tracer.now_us());
         let parts = self.router.route_batch(&views, params.branch, params.meta_ef);
+        if let (Some(o), Some(rs)) = (&obs, route_start) {
+            // One batched meta-HNSW walk serves the whole block: each
+            // query gets a route span over the shared interval, tagged
+            // with its own fan-out.
+            let end = o.tracer.now_us();
+            for (i, (tr, root)) in tids.iter().enumerate() {
+                let mut g = o.tracer.span_at(*tr, *root, stage::ROUTE, rs);
+                g.tag("fanout", parts[i].len() as f64);
+                g.tag("branch", params.branch as f64);
+                g.finish_at(end);
+            }
+        }
         let n = queries.len() as u64;
         let base_qid = self.next_qid.fetch_add(n, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel::<PartialResult>();
         let want_vectors = self.scorer.is_some();
         let query_arcs: Vec<Arc<Vec<f32>>> =
             prepared.into_iter().map(|q| Arc::new(q.into_owned())).collect();
-        let mk_req = |qid: u64, p: PartitionId, qi: usize| QueryRequest {
+        let mk_req = |qid: u64, p: PartitionId, qi: usize, trace: Option<SpanCtx>| QueryRequest {
             qid,
             partition: p,
             query: query_arcs[qi].clone(),
@@ -807,6 +874,43 @@ impl CoordinatorNode {
             return_vectors: want_vectors,
             reply: reply_tx.clone(),
             from: my_endpoint,
+            trace,
+        };
+        // Shared hedge/re-issue publish: records the arm span (when the
+        // plane is attached) whose id parents the duplicate's trace
+        // context, so the second arm's executor spans attribute to it
+        // rather than to the original publish.
+        let hedge_publish = |key: (u64, PartitionId), qi: usize, arm: &'static str| {
+            let arm_span = obs.as_ref().map(|o| {
+                let s = o.tracer.now_us();
+                let mut g = o.tracer.span_at(tids[qi].0, tids[qi].1, arm, s);
+                g.partition(key.1);
+                (g, s)
+            });
+            let ctx = match (&obs, &arm_span) {
+                (Some(o), Some((g, s))) => Some(SpanCtx {
+                    trace: tids[qi].0,
+                    parent: g.id(),
+                    sent_us: *s,
+                    tracer: o.tracer.clone(),
+                }),
+                _ => None,
+            };
+            let published = self.broker.publish_hedge_observed(
+                &topic_for(key.1),
+                &group_for(key.1),
+                key.0,
+                mk_req(key.0, key.1, qi, ctx),
+            );
+            // Best-effort either way; a failed re-publish leaves the
+            // original lease-expiry path to redeliver (and discards the
+            // open arm span).
+            if let (Some((mut g, s)), Ok(receipt)) = (arm_span, &published) {
+                let delay_us =
+                    (receipt.chaos_delay.as_micros() + receipt.net_delay.as_micros()) as u64;
+                g.tag("net_delay_us", receipt.net_delay.as_micros() as f64);
+                g.finish_at(s + delay_us);
+            }
         };
         // Snapshot the eviction cursor before the fan-out: deaths already
         // reaped are reflected in the group assignment the publishes see;
@@ -840,22 +944,53 @@ impl CoordinatorNode {
                         .as_ref()
                         .and_then(|m| m.get(&p).copied())
                         .unwrap_or(100);
+                    // Publish span: opened before the publish so its id
+                    // can ride in the message's trace context; closed at
+                    // the receipt's priced visibility instant, with the
+                    // chaos / network delay split tagged out.
+                    let pub_span = obs.as_ref().map(|o| {
+                        let s = o.tracer.now_us();
+                        let mut g = o.tracer.span_at(tids[i].0, tids[i].1, stage::PUBLISH, s);
+                        g.partition(p);
+                        (g, s)
+                    });
+                    let ctx = match (&obs, &pub_span) {
+                        (Some(o), Some((g, s))) => Some(SpanCtx {
+                            trace: tids[i].0,
+                            parent: g.id(),
+                            sent_us: *s,
+                            tracer: o.tracer.clone(),
+                        }),
+                        _ => None,
+                    };
                     let published = if w >= 100 || (qid % 100) < w as u64 {
-                        self.broker.publish(&topic_for(p), qid, mk_req(qid, p, i))
+                        self.broker.publish_observed(&topic_for(p), qid, mk_req(qid, p, i, ctx))
                     } else {
-                        self.broker.publish_balanced(
+                        self.broker.publish_balanced_observed(
                             &topic_for(p),
                             &group_for(p),
                             qid,
-                            mk_req(qid, p, i),
+                            mk_req(qid, p, i, ctx),
                         )
                     };
                     match published {
-                        Ok(()) => {}
+                        Ok(receipt) => {
+                            if let Some((mut g, s)) = pub_span {
+                                let chaos_us = receipt.chaos_delay.as_micros() as u64;
+                                let net_us = receipt.net_delay.as_micros() as u64;
+                                g.tag("chaos_delay_us", chaos_us as f64);
+                                g.tag("net_delay_us", net_us as f64);
+                                if receipt.dropped {
+                                    g.tag("dropped", 1.0);
+                                }
+                                g.finish_at(s + chaos_us + net_us);
+                            }
+                        }
                         // A replica queue at capacity is congestion, not
                         // failure: keep the pending entry and let the
                         // hedge / eviction re-issue machinery recover the
                         // sub-query (or the deadline degrade coverage).
+                        // The open publish span, if any, is discarded.
                         Err(PyramidError::Backpressure(_)) => {}
                         Err(e) => return Err(e),
                     }
@@ -871,6 +1006,12 @@ impl CoordinatorNode {
         // is a deduplicated hedge/retry loser.
         let deadline = start + self.cfg.timeout;
         let mut got: Vec<Vec<PartialResult>> = (0..queries.len()).map(|_| Vec::new()).collect();
+        // Per-query gather bookkeeping for the telemetry plane: a query's
+        // gather span closes at its last partial (or the loop's exit when
+        // it never completed).
+        let gather_start_us = obs.as_ref().map(|o| o.tracer.now_us()).unwrap_or(0);
+        let mut awaiting: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let mut gather_end_us: Vec<u64> = vec![0; queries.len()];
         while !pending.is_empty() {
             let now = Instant::now();
             if now >= deadline {
@@ -898,15 +1039,8 @@ impl CoordinatorNode {
                     .collect();
                 for key in affected {
                     let qi = pending[&key].qi;
-                    // Best-effort: a failed re-publish leaves the original
-                    // lease-expiry path to redeliver.
                     if !publish_cut(&chaos_plan) {
-                        let _ = self.broker.publish_hedge(
-                            &topic_for(key.1),
-                            &group_for(key.1),
-                            key.0,
-                            mk_req(key.0, key.1, qi),
-                        );
+                        hedge_publish(key, qi, stage::REISSUE);
                     }
                     if let Some(st) = pending.get_mut(&key) {
                         st.hedged = true; // the re-issue doubles as the hedge
@@ -939,6 +1073,17 @@ impl CoordinatorNode {
                     // lease redelivery / rebalancing — only the duplicate
                     // is skipped).
                     if !self.take_hedge_token() {
+                        if let Some(o) = &obs {
+                            let now_us = o.tracer.now_us();
+                            let mut g = o.tracer.span_at(
+                                tids[qi].0,
+                                tids[qi].1,
+                                stage::HEDGE_SUPPRESS,
+                                now_us,
+                            );
+                            g.partition(key.1);
+                            g.finish_at(now_us);
+                        }
                         if let Some(st) = pending.get_mut(&key) {
                             st.hedged = true; // resolved: will not re-arm
                         }
@@ -946,12 +1091,7 @@ impl CoordinatorNode {
                         continue;
                     }
                     if !publish_cut(&chaos_plan) {
-                        let _ = self.broker.publish_hedge(
-                            &topic_for(key.1),
-                            &group_for(key.1),
-                            key.0,
-                            mk_req(key.0, key.1, qi),
-                        );
+                        hedge_publish(key, qi, stage::HEDGE_FIRE);
                     }
                     if let Some(st) = pending.get_mut(&key) {
                         st.hedged = true;
@@ -990,12 +1130,68 @@ impl CoordinatorNode {
                                 // samples can drift it up, bounded by max.
                                 let us = st.sent_at.elapsed().as_secs_f64() * 1e6;
                                 self.sub_latency.lock().unwrap().observe(us);
-                                got[(pr.qid - base_qid) as usize].push(pr);
+                                let qi = (pr.qid - base_qid) as usize;
+                                awaiting[qi] = awaiting[qi].saturating_sub(1);
+                                if let Some(o) = &obs {
+                                    let now_us = o.tracer.now_us();
+                                    // Winning replica: span covers send →
+                                    // arrival, parented under the exec
+                                    // span the executor echoed back.
+                                    let parent = pr
+                                        .trace
+                                        .map(|(_, sid)| SpanId(sid))
+                                        .unwrap_or(tids[qi].1);
+                                    let mut g = o.tracer.span_at(
+                                        tids[qi].0,
+                                        parent,
+                                        stage::PARTIAL_WIN,
+                                        o.tracer.us_of(st.sent_at),
+                                    );
+                                    g.partition(pr.partition);
+                                    g.node(pr.executor);
+                                    if st.hedged {
+                                        g.tag("hedged", 1.0);
+                                    }
+                                    g.finish_at(now_us);
+                                    if awaiting[qi] == 0 {
+                                        gather_end_us[qi] = now_us;
+                                    }
+                                    // Coherent pair: a concurrent scrape
+                                    // never sees the per-partition series
+                                    // and the global roll-up disagree.
+                                    let reg = &o.registry;
+                                    reg.coherent(|| {
+                                        reg.counter(&format!(
+                                            "coordinator_partials_answered{{partition=\"{}\"}}",
+                                            pr.partition
+                                        ))
+                                        .inc();
+                                        reg.counter("coordinator_partials_answered_global").inc();
+                                    });
+                                }
+                                got[qi].push(pr);
                             }
                             None => {
                                 // Hedge/retry loser for an already-answered
                                 // sub-query: drop it so the merge never
                                 // sees the same partition twice.
+                                if let Some(o) = &obs {
+                                    let qi = (pr.qid - base_qid) as usize;
+                                    let now_us = o.tracer.now_us();
+                                    let parent = pr
+                                        .trace
+                                        .map(|(_, sid)| SpanId(sid))
+                                        .unwrap_or(tids[qi].1);
+                                    let mut g = o.tracer.span_at(
+                                        tids[qi].0,
+                                        parent,
+                                        stage::PARTIAL_LOSE,
+                                        now_us,
+                                    );
+                                    g.partition(pr.partition);
+                                    g.node(pr.executor);
+                                    g.finish_at(now_us);
+                                }
                                 self.metrics.duplicates_dropped.fetch_add(1, Ordering::Relaxed);
                             }
                         }
@@ -1008,6 +1204,19 @@ impl CoordinatorNode {
             }
         }
         drop(reply_tx);
+        if let Some(o) = &obs {
+            let loop_end = o.tracer.now_us();
+            for (i, (tr, root)) in tids.iter().enumerate() {
+                let end = if awaiting[i] == 0 && gather_end_us[i] > 0 {
+                    gather_end_us[i]
+                } else {
+                    loop_end
+                };
+                let mut g = o.tracer.span_at(*tr, *root, stage::GATHER, gather_start_us);
+                g.tag("pending_at_close", awaiting[i] as f64);
+                g.finish_at(end);
+            }
+        }
         // Chaos observability snapshot shared by the block (satellite:
         // fault counters surfaced through `QueryResult::metrics`).
         let snap = chaos_plan.as_ref().map(|p| p.counters.snapshot()).unwrap_or_default();
@@ -1027,16 +1236,39 @@ impl CoordinatorNode {
             if answered < total {
                 self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
             }
+            let merge_span = obs.as_ref().map(|o| {
+                let mut g = o.tracer.span(tids[i].0, tids[i].1, stage::MERGE);
+                g.tag("partials", answered as f64);
+                g
+            });
             let neighbors = self.merge(&query_arcs[i], partials, params.k)?;
+            if let Some(g) = merge_span {
+                g.finish();
+            }
             out.push(QueryResult {
                 neighbors,
                 partitions_total: total,
                 partitions_answered: answered,
                 metrics: block_metrics,
+                trace: tids.get(i).map(|(t, _)| t.0),
             });
         }
         let done = Instant::now();
         let batch_us = done.duration_since(start).as_secs_f64() * 1e6;
+        if let Some(o) = &obs {
+            // Close the roots, feed the latency histogram, and offer each
+            // query as the run's worst-latency post-mortem candidate.
+            let done_us = o.tracer.us_of(done);
+            let lat = o.registry.histogram("coordinator_query_latency_us");
+            for (i, mut g) in root_guards.into_iter().enumerate() {
+                g.tag("k", params.k as f64);
+                g.tag("partitions", parts[i].len() as f64);
+                g.finish_at(done_us);
+                o.tracer.pin_if_worst(tids[i].0, batch_us as u64);
+                lat.observe(batch_us);
+            }
+            o.registry.counter("coordinator_queries_completed").add(n);
+        }
         self.metrics.completed.fetch_add(n, Ordering::Relaxed);
         {
             // Each query in the block experienced the block's wall time.
@@ -1189,6 +1421,7 @@ mod tests {
                         neighbors: neighbors.clone(),
                         vectors: None,
                         executor: member + echo * 1000,
+                        trace: None,
                     });
                 }
                 consumer.ack(&d);

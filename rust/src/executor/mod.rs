@@ -30,7 +30,9 @@
 use crate::broker::{Broker, Delivery};
 use crate::chaos::host_endpoint;
 use crate::coordinator::{group_for, topic_for, PartialResult, QueryRequest};
-use crate::hnsw::Hnsw;
+use crate::hnsw::{Hnsw, WalkProfile};
+use crate::obs::trace::{stage, SpanGuard, BACKGROUND, NO_PARENT};
+use crate::obs::Obs;
 use crate::ingest::freeze::FreezeController;
 use crate::ingest::{LiveIndex, UpdateConsumer};
 use crate::net::WireSize;
@@ -61,6 +63,19 @@ pub trait SubIndex: Send + Sync {
         queries.iter().map(|q| self.search_local(q.query, q.k, q.ef)).collect()
     }
 
+    /// [`Self::search_batch`] plus one [`WalkProfile`] per query — the
+    /// traced-executor path. The default returns zeroed profiles (a
+    /// backend without walk hooks still answers correctly; only its walk
+    /// tags are empty); HNSW overrides with the instrumented walk, which
+    /// is bit-identical in results.
+    fn search_batch_profiled(
+        &self,
+        queries: &[BatchQuery<'_>],
+        scorer: &dyn BatchScorer,
+    ) -> (Vec<Vec<Neighbor>>, Vec<WalkProfile>) {
+        (self.search_batch(queries, scorer), vec![WalkProfile::default(); queries.len()])
+    }
+
     /// Append the vector behind an id [`Self::search_local`] returned to
     /// `out` (the `return_vectors` path). By-copy rather than by-borrow
     /// so backends whose storage swaps under queries (the live ingest
@@ -85,6 +100,14 @@ impl SubIndex for Hnsw {
 
     fn search_batch(&self, queries: &[BatchQuery<'_>], scorer: &dyn BatchScorer) -> Vec<Vec<Neighbor>> {
         Hnsw::search_batch(self, queries, scorer)
+    }
+
+    fn search_batch_profiled(
+        &self,
+        queries: &[BatchQuery<'_>],
+        scorer: &dyn BatchScorer,
+    ) -> (Vec<Vec<Neighbor>>, Vec<WalkProfile>) {
+        Hnsw::search_batch_profiled(self, queries, scorer)
     }
 
     fn push_vector(&self, local_id: u32, out: &mut Vec<f32>) {
@@ -140,6 +163,11 @@ pub struct ExecutorSpec {
     pub batch: usize,
     /// Streaming-ingest wiring; None serves a read-only index.
     pub ingest: Option<IngestWiring>,
+    /// Telemetry plane handle: lets the loop record background spans
+    /// (log pump, freeze ticks) and walk counters even between traced
+    /// queries. None = detached (the per-request trace context inside a
+    /// [`QueryRequest`] still works without it).
+    pub obs: Option<Arc<Obs>>,
 }
 
 /// Handle to a running executor thread.
@@ -254,6 +282,15 @@ fn run(
         spec.ingest.as_ref().map(|w| UpdateConsumer::new(&w.broker, spec.partition, w.live.clone()));
     let freeze: Option<Arc<FreezeController>> =
         spec.ingest.as_ref().and_then(|w| w.freeze.clone());
+    // Walk counters, resolved once (lock-free increments thereafter).
+    let walk_counters = spec.obs.as_ref().map(|o| {
+        (
+            o.registry.counter("executor_walk_hops"),
+            o.registry.counter("executor_dist_evals_f32"),
+            o.registry.counter("executor_dist_evals_sq8"),
+            o.registry.counter("executor_refine_reranks"),
+        )
+    });
 
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -274,15 +311,40 @@ fn run(
         // freshly published vectors become searchable within one poll
         // cycle, bounded per iteration so serving latency stays flat.
         if let Some(u) = updates.as_mut() {
-            match &freeze {
+            let pump_t0 = Instant::now();
+            let (applied, froze) = match &freeze {
                 // Coordinated mode: apply updates, leave compaction to
                 // the freeze-epoch protocol.
-                Some(f) => {
-                    u.pump_updates();
-                    f.tick();
+                Some(f) => (u.pump_updates(), f.tick()),
+                None => (u.pump(), false),
+            };
+            // Background spans (trace 0): only ticks that did work are
+            // recorded, so an idle pump costs nothing in the rings.
+            if let Some(o) = &spec.obs {
+                if applied > 0 {
+                    let mut g = o.tracer.span_at(
+                        BACKGROUND,
+                        NO_PARENT,
+                        stage::LOG_PUMP,
+                        o.tracer.us_of(pump_t0),
+                    );
+                    g.partition(spec.partition);
+                    g.node(spec.id);
+                    g.tag("applied", applied as f64);
+                    g.finish();
+                    o.registry.counter("executor_updates_applied").add(applied as u64);
                 }
-                None => {
-                    u.pump();
+                if froze {
+                    let mut g = o.tracer.span_at(
+                        BACKGROUND,
+                        NO_PARENT,
+                        stage::FREEZE,
+                        o.tracer.us_of(pump_t0),
+                    );
+                    g.partition(spec.partition);
+                    g.node(spec.id);
+                    g.finish();
+                    o.registry.counter("executor_freezes").inc();
                 }
             }
         }
@@ -306,20 +368,78 @@ fn run(
             return ExitReason::HostDied;
         }
         let t0 = Instant::now();
+        // Telemetry: one exec span per traced request, opened at dequeue
+        // (the whole drained batch dequeues together) and tagged with the
+        // queue wait against the publish timestamp in its context. An
+        // untraced batch allocates a vector of Nones and nothing else.
+        let mut exec_spans: Vec<Option<SpanGuard>> = batch
+            .iter()
+            .map(|d| {
+                d.msg.trace.as_ref().map(|ctx| {
+                    let mut g = ctx.child(stage::EXEC);
+                    g.partition(d.msg.partition);
+                    g.node(spec.id);
+                    g.tag("wait_us", ctx.tracer.now_us().saturating_sub(ctx.sent_us) as f64);
+                    g
+                })
+            })
+            .collect();
+        let traced = exec_spans.iter().any(|g| g.is_some());
         // Simulated network receive latency, paid once per poll batch
         // (a batched fetch is one wire exchange).
         if !spec.net_latency.is_zero() {
             spin_sleep(spec.net_latency);
         }
         // The actual searches (Algorithm 4 line 7): one batched
-        // bottom-layer pass over every drained query.
-        let locals = {
+        // bottom-layer pass over every drained query. Traced batches run
+        // the profiled instantiation of the same walk (bit-identical
+        // results, counting hooks attached).
+        let walk_t0 = Instant::now();
+        let (locals, profiles) = {
             let queries: Vec<BatchQuery<'_>> = batch
                 .iter()
                 .map(|d| BatchQuery { query: d.msg.query.as_slice(), k: d.msg.k, ef: d.msg.ef })
                 .collect();
-            spec.sub.search_batch(&queries, &NativeScorer)
+            if traced {
+                let (r, p) = spec.sub.search_batch_profiled(&queries, &NativeScorer);
+                (r, Some(p))
+            } else {
+                (spec.sub.search_batch(&queries, &NativeScorer), None)
+            }
         };
+        if let Some(profs) = &profiles {
+            let walk_t1 = Instant::now();
+            for (i, d) in batch.iter().enumerate() {
+                let (Some(ctx), Some(g)) = (&d.msg.trace, &exec_spans[i]) else { continue };
+                let p = profs.get(i).copied().unwrap_or_default();
+                let mut w = ctx.tracer.span_at(
+                    ctx.trace,
+                    g.id(),
+                    stage::WALK,
+                    ctx.tracer.us_of(walk_t0),
+                );
+                w.partition(d.msg.partition);
+                w.node(spec.id);
+                w.tag("hops_bottom", p.hops_bottom() as f64);
+                w.tag("hops_upper", p.hops_upper() as f64);
+                w.tag("dist_f32", p.dist_evals_f32 as f64);
+                w.tag("dist_sq8", p.dist_evals_sq8 as f64);
+                w.tag("visited", p.visited as f64);
+                w.tag("refine", p.refine_reranks as f64);
+                w.tag("batch_n", batch.len() as f64);
+                w.finish_at(ctx.tracer.us_of(walk_t1));
+            }
+            if let Some((hops, f32s, sq8s, refines)) = &walk_counters {
+                let mut agg = WalkProfile::default();
+                for p in profs {
+                    agg.merge(p);
+                }
+                hops.add(agg.hops_total());
+                f32s.add(agg.dist_evals_f32);
+                sq8s.add(agg.dist_evals_sq8);
+                refines.add(agg.refine_reranks);
+            }
+        }
         // Straggler injection: a host at cpu_share% takes (100/share)x as
         // long per batch; stretch the elapsed service time accordingly.
         let share = spec.host.cpu_share.load(Ordering::Relaxed).clamp(1, 100);
@@ -338,11 +458,17 @@ fn run(
         let net_model = broker.net();
         let clock = broker.clock();
         let my_endpoint = host_endpoint(spec.host.host);
-        for (delivery, local) in batch.iter().zip(&locals) {
+        for (i, (delivery, local)) in batch.iter().zip(&locals).enumerate() {
             let req = &delivery.msg;
+            let exec_span = exec_spans[i].take();
             if let Some(plan) = chaos_plan.as_ref() {
                 if plan.is_cut(my_endpoint, req.from) {
                     plan.counters.replies_dropped.fetch_add(1, Ordering::Relaxed);
+                    if let Some(mut g) = exec_span {
+                        // The work happened; only the answer was lost.
+                        g.tag("reply_cut", 1.0);
+                        g.finish();
+                    }
                     consumer.ack(delivery);
                     served.fetch_add(1, Ordering::Relaxed);
                     continue;
@@ -370,6 +496,13 @@ fn run(
                 neighbors,
                 vectors,
                 executor: spec.id,
+                // Echo (trace id, exec span id) so the coordinator can
+                // parent the partial's win/lose span under this exec.
+                trace: req
+                    .trace
+                    .as_ref()
+                    .zip(exec_span.as_ref())
+                    .map(|(ctx, g)| (ctx.trace.0, g.id().0)),
             };
             // Reply-path network cost: the partial travels host -> issuing
             // coordinator, priced by serialized size. Paid inline (the
@@ -385,6 +518,9 @@ fn run(
             let _ = req.reply.send(partial);
             consumer.ack(delivery);
             served.fetch_add(1, Ordering::Relaxed);
+            if let Some(g) = exec_span {
+                g.finish(); // dequeue → reply handed off
+            }
         }
     }
 }
@@ -438,6 +574,7 @@ mod tests {
             net_latency: Duration::ZERO,
             batch: DEFAULT_BATCH,
             ingest: None,
+            obs: None,
         }
     }
 
@@ -451,6 +588,7 @@ mod tests {
             return_vectors: false,
             from: crate::chaos::EP_NONE,
             reply,
+            trace: None,
         }
     }
 
@@ -545,6 +683,7 @@ mod tests {
                 live: live.clone(),
                 freeze: None,
             }),
+            obs: None,
         };
         let h = spawn(s, broker.clone(), registry);
 

@@ -44,7 +44,7 @@ mod build;
 mod search;
 mod serialize;
 
-pub use search::SearchStats;
+pub use search::{NoProbe, ProfileProbe, SearchStats, WalkProbe, WalkProfile, PROFILED_LAYERS};
 
 use crate::dataset::Dataset;
 use crate::error::{PyramidError, Result};
@@ -421,6 +421,21 @@ impl Hnsw {
         match &self.quant {
             Some(p) => search::search_batch_sq8(self, p, queries, scorer),
             None => search::search_batch(self, queries, scorer),
+        }
+    }
+
+    /// [`Self::search_batch`] plus one [`WalkProfile`] per query — the
+    /// traced executor path (telemetry plane, [`crate::obs`]). Results
+    /// are bit-identical to [`Self::search_batch`]: the profiled walk is
+    /// the same monomorphized loop with counting hooks attached.
+    pub fn search_batch_profiled(
+        &self,
+        queries: &[BatchQuery<'_>],
+        scorer: &dyn BatchScorer,
+    ) -> (Vec<Vec<Neighbor>>, Vec<WalkProfile>) {
+        match &self.quant {
+            Some(p) => search::search_batch_sq8_profiled(self, p, queries, scorer),
+            None => search::search_batch_profiled(self, queries, scorer),
         }
     }
 

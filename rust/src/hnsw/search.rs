@@ -45,6 +45,122 @@ pub struct SearchStats {
     pub hops: u64,
 }
 
+/// Layers individually tracked by [`WalkProfile::hops_per_layer`];
+/// everything higher folds into the top slot (HNSW graphs here rarely
+/// exceed 6 layers).
+pub const PROFILED_LAYERS: usize = 8;
+
+/// Walk-level profile of one query, charged to its trace span by the
+/// executor (telemetry plane, `crate::obs`): where the walk spent its
+/// work, split by layer and scoring tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalkProfile {
+    /// Vertex expansions per layer (`[0]` = bottom / beam layer).
+    pub hops_per_layer: [u64; PROFILED_LAYERS],
+    /// Exact f32 kernel evaluations (includes the SQ8 refine re-rank).
+    pub dist_evals_f32: u64,
+    /// Quantized int8 kernel evaluations.
+    pub dist_evals_sq8: u64,
+    /// Visited-set marks — the occupancy this query stamped.
+    pub visited: u64,
+    /// Beam entries exactly re-scored by the SQ8 refine step.
+    pub refine_reranks: u64,
+}
+
+impl WalkProfile {
+    pub fn hops_total(&self) -> u64 {
+        self.hops_per_layer.iter().sum()
+    }
+
+    pub fn hops_bottom(&self) -> u64 {
+        self.hops_per_layer[0]
+    }
+
+    pub fn hops_upper(&self) -> u64 {
+        self.hops_total() - self.hops_bottom()
+    }
+
+    pub fn merge(&mut self, o: &WalkProfile) {
+        for (a, b) in self.hops_per_layer.iter_mut().zip(o.hops_per_layer.iter()) {
+            *a += b;
+        }
+        self.dist_evals_f32 += o.dist_evals_f32;
+        self.dist_evals_sq8 += o.dist_evals_sq8;
+        self.visited += o.visited;
+        self.refine_reranks += o.refine_reranks;
+    }
+}
+
+/// Instrumentation seam of the walk, monomorphized alongside
+/// [`GraphView`] and [`WalkScorer`]. The serving default is [`NoProbe`]
+/// — a zero-sized type whose hooks are empty `#[inline(always)]` bodies,
+/// so the detached instantiation **is** the pre-existing walk, bit for
+/// bit and instruction for instruction. [`ProfileProbe`] is the attached
+/// form (executor requests carrying a trace context).
+pub trait WalkProbe {
+    fn hop(&mut self, level: usize);
+    fn evals(&mut self, n: u64, quantized: bool);
+    fn visited(&mut self, n: u64);
+    fn refine(&mut self, n: u64);
+    /// Batch paths call this after each query so per-query profiles can
+    /// be split out of a shared walk context.
+    fn end_query(&mut self);
+}
+
+/// The detached probe: all hooks compile to nothing.
+pub struct NoProbe;
+
+impl WalkProbe for NoProbe {
+    #[inline(always)]
+    fn hop(&mut self, _level: usize) {}
+    #[inline(always)]
+    fn evals(&mut self, _n: u64, _quantized: bool) {}
+    #[inline(always)]
+    fn visited(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn refine(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn end_query(&mut self) {}
+}
+
+/// The attached probe: accumulates a [`WalkProfile`] per query.
+#[derive(Debug, Default)]
+pub struct ProfileProbe {
+    cur: WalkProfile,
+    /// One finished profile per query, in batch order.
+    pub per_query: Vec<WalkProfile>,
+}
+
+impl WalkProbe for ProfileProbe {
+    #[inline]
+    fn hop(&mut self, level: usize) {
+        self.cur.hops_per_layer[level.min(PROFILED_LAYERS - 1)] += 1;
+    }
+
+    #[inline]
+    fn evals(&mut self, n: u64, quantized: bool) {
+        if quantized {
+            self.cur.dist_evals_sq8 += n;
+        } else {
+            self.cur.dist_evals_f32 += n;
+        }
+    }
+
+    #[inline]
+    fn visited(&mut self, n: u64) {
+        self.cur.visited += n;
+    }
+
+    #[inline]
+    fn refine(&mut self, n: u64) {
+        self.cur.refine_reranks += n;
+    }
+
+    fn end_query(&mut self) {
+        self.per_query.push(std::mem::take(&mut self.cur));
+    }
+}
+
 /// Read-only view of a multi-layer proximity graph: everything the walk
 /// needs, implemented by both graph representations.
 pub(crate) trait GraphView {
@@ -208,6 +324,10 @@ fn prefetch_row(row: &[f32]) {
 /// against the current query. Monomorphized into the walk alongside
 /// [`GraphView`] — no dynamic dispatch on the hot path.
 pub(crate) trait WalkScorer {
+    /// Whether evaluations run the quantized kernels — the profile's
+    /// f32-vs-SQ8 split ([`WalkProfile`]), a monomorphization constant so
+    /// the probe branch folds away.
+    const QUANTIZED: bool;
     /// Score one vertex (entry seeding + the per-edge baseline path).
     fn score_one(&self, v: u32) -> f32;
     /// Score a gathered id block in one kernel-dispatched pass.
@@ -225,6 +345,8 @@ pub(crate) struct ExactWalk<'a> {
 }
 
 impl WalkScorer for ExactWalk<'_> {
+    const QUANTIZED: bool = false;
+
     #[inline]
     fn score_one(&self, v: u32) -> f32 {
         self.metric.score(self.query, self.data.get(v as usize))
@@ -249,6 +371,8 @@ pub(crate) struct Sq8Walk<'a> {
 }
 
 impl WalkScorer for Sq8Walk<'_> {
+    const QUANTIZED: bool = true;
+
     #[inline]
     fn score_one(&self, v: u32) -> f32 {
         self.view.score(self.metric, &self.q, v as usize)
@@ -279,7 +403,7 @@ type ResultHeap = BinaryHeap<std::cmp::Reverse<Neighbor>>;
 /// as the measured baseline. Scores are bit-identical either way, so
 /// both instantiations return identical results.
 #[allow(clippy::too_many_arguments)]
-fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
+fn search_level<G: GraphView, S: WalkScorer, P: WalkProbe, const BLOCK: bool>(
     g: &G,
     scorer: &S,
     level: usize,
@@ -289,12 +413,15 @@ fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
     scratch: &mut Vec<u32>,
     scores: &mut Vec<f32>,
     stats: &mut SearchStats,
+    probe: &mut P,
 ) -> Vec<Neighbor> {
     let mut cand: BinaryHeap<Neighbor> = BinaryHeap::new(); // max-heap C
     let mut res: ResultHeap = BinaryHeap::new(); // min-heap W
     visited.next_epoch();
     for &e in entries {
-        visited.visit(e.id);
+        if visited.visit(e.id) {
+            probe.visited(1);
+        }
         cand.push(e);
         res.push(std::cmp::Reverse(e));
     }
@@ -308,6 +435,7 @@ fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
             break;
         }
         stats.hops += 1;
+        probe.hop(level);
         // Gather-then-score: marking + prefetching every unvisited
         // neighbor before the first distance evaluation gives each row's
         // cache miss the whole preceding scoring burst to resolve.
@@ -319,6 +447,8 @@ fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
             }
         }
         stats.dist_evals += scratch.len() as u64;
+        probe.visited(scratch.len() as u64);
+        probe.evals(scratch.len() as u64, S::QUANTIZED);
         if BLOCK {
             // One kernel pass over the whole neighbor block: dispatched
             // once, per-query invariants hoisted inside the scorer; the
@@ -345,7 +475,7 @@ fn search_level<G: GraphView, S: WalkScorer, const BLOCK: bool>(
 /// whole bottom-layer beam (up to `max(ef, k)` results, best first) so
 /// batched callers can re-rank it; plain `search` truncates to `k`.
 #[allow(clippy::too_many_arguments)]
-fn search_beam<G: GraphView, S: WalkScorer, const BLOCK: bool>(
+fn search_beam<G: GraphView, S: WalkScorer, P: WalkProbe, const BLOCK: bool>(
     g: &G,
     scorer: &S,
     k: usize,
@@ -354,23 +484,27 @@ fn search_beam<G: GraphView, S: WalkScorer, const BLOCK: bool>(
     scratch: &mut Vec<u32>,
     scores: &mut Vec<f32>,
     stats: &mut SearchStats,
+    probe: &mut P,
 ) -> Vec<Neighbor> {
     let entry = g.entry_point();
     let entry_score = scorer.score_one(entry);
     stats.dist_evals += 1;
+    probe.evals(1, S::QUANTIZED);
     let mut eps = vec![Neighbor::new(entry, entry_score)];
     // Greedy descent through the upper layers (factor 1).
     for t in (1..=g.max_layer()).rev() {
-        let found =
-            search_level::<G, S, BLOCK>(g, scorer, t, &eps, 1, visited, scratch, scores, stats);
+        let found = search_level::<G, S, P, BLOCK>(
+            g, scorer, t, &eps, 1, visited, scratch, scores, stats, probe,
+        );
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
         }
     }
     // Beam search on the bottom layer with factor max(ef, k).
     let factor = ef.max(k).max(1);
-    let mut found =
-        search_level::<G, S, BLOCK>(g, scorer, 0, &eps, factor, visited, scratch, scores, stats);
+    let mut found = search_level::<G, S, P, BLOCK>(
+        g, scorer, 0, &eps, factor, visited, scratch, scores, stats, probe,
+    );
     // Score-desc with id tiebreak: the same total order `merge_topk` uses,
     // so sequential and batched paths agree even on exact score ties.
     found.sort_unstable_by(|a, b| {
@@ -395,8 +529,8 @@ pub(crate) fn search<G: GraphView>(
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::with_capacity(64);
-    let mut found = search_beam::<G, _, true>(
-        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    let mut found = search_beam::<G, _, _, true>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats, &mut NoProbe,
     );
     g.visited_pool().put(visited);
     found.truncate(k);
@@ -420,8 +554,8 @@ pub(crate) fn search_per_edge<G: GraphView>(
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::new(); // untouched on the per-edge path
-    let mut found = search_beam::<G, _, false>(
-        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    let mut found = search_beam::<G, _, _, false>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats, &mut NoProbe,
     );
     g.visited_pool().put(visited);
     found.truncate(k);
@@ -431,7 +565,8 @@ pub(crate) fn search_per_edge<G: GraphView>(
 /// Exact re-rank of the best `take` beam entries with the f32 kernels:
 /// the refine step every SQ8 search ends with. Returns the exact-scored
 /// top-k in `merge_topk`'s total order.
-fn refine_beam<G: GraphView>(
+#[allow(clippy::too_many_arguments)]
+fn refine_beam<G: GraphView, P: WalkProbe>(
     g: &G,
     query: &[f32],
     beam: &[Neighbor],
@@ -439,11 +574,14 @@ fn refine_beam<G: GraphView>(
     k: usize,
     scores: &mut Vec<f32>,
     stats: &mut SearchStats,
+    probe: &mut P,
 ) -> Vec<Neighbor> {
     let take = take.min(beam.len());
     let data = g.dataset();
     g.metric().score_rows(query, beam[..take].iter().map(|n| data.get(n.id as usize)), scores);
     stats.dist_evals += take as u64;
+    probe.evals(take as u64, false);
+    probe.refine(take as u64);
     let exact: Vec<Neighbor> =
         beam[..take].iter().zip(scores.iter()).map(|(n, &s)| Neighbor::new(n.id, s)).collect();
     merge_topk(exact, k)
@@ -467,11 +605,13 @@ pub(crate) fn search_sq8<G: GraphView>(
     let mut visited = g.visited_pool().take();
     let mut scratch = Vec::with_capacity(64);
     let mut scores = Vec::with_capacity(64);
-    let beam = search_beam::<G, _, true>(
-        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+    let beam = search_beam::<G, _, _, true>(
+        g, &scorer, k, ef, &mut visited, &mut scratch, &mut scores, &mut stats, &mut NoProbe,
     );
     g.visited_pool().put(visited);
-    let found = refine_beam(g, query, &beam, refine_k.max(k), k, &mut scores, &mut stats);
+    let found = refine_beam(
+        g, query, &beam, refine_k.max(k), k, &mut scores, &mut stats, &mut NoProbe,
+    );
     (found, stats)
 }
 
@@ -495,6 +635,28 @@ pub(crate) fn search_batch<G: GraphView>(
     queries: &[BatchQuery<'_>],
     scorer: &dyn BatchScorer,
 ) -> Vec<Vec<Neighbor>> {
+    search_batch_probed(g, queries, scorer, &mut NoProbe)
+}
+
+/// [`search_batch`] with a per-query [`WalkProfile`] attached (the traced
+/// executor path). Results are bit-identical to [`search_batch`]: the
+/// probe hooks observe, never steer.
+pub(crate) fn search_batch_profiled<G: GraphView>(
+    g: &G,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+) -> (Vec<Vec<Neighbor>>, Vec<WalkProfile>) {
+    let mut probe = ProfileProbe::default();
+    let out = search_batch_probed(g, queries, scorer, &mut probe);
+    (out, probe.per_query)
+}
+
+fn search_batch_probed<G: GraphView, P: WalkProbe>(
+    g: &G,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+    probe: &mut P,
+) -> Vec<Vec<Neighbor>> {
     let metric = g.metric();
     let identity = scorer.rerank_is_identity(metric);
     let mut stats = SearchStats::default();
@@ -507,12 +669,13 @@ pub(crate) fn search_batch<G: GraphView>(
     let mut out = Vec::with_capacity(queries.len());
     for bq in queries {
         let walk = ExactWalk { metric, data, query: bq.query };
-        let mut beam = search_beam::<G, _, true>(
-            g, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        let mut beam = search_beam::<G, _, P, true>(
+            g, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats, probe,
         );
         if identity {
             beam.truncate(bq.k);
             out.push(beam);
+            probe.end_query();
             continue;
         }
         // Gather the beam's vectors into one contiguous block and let the
@@ -532,6 +695,7 @@ pub(crate) fn search_batch<G: GraphView>(
                 out.push(beam);
             }
         }
+        probe.end_query();
     }
     g.visited_pool().put(visited);
     out
@@ -553,6 +717,29 @@ pub(crate) fn search_batch_sq8(
     queries: &[BatchQuery<'_>],
     scorer: &dyn BatchScorer,
 ) -> Vec<Vec<Neighbor>> {
+    search_batch_sq8_probed(h, plane, queries, scorer, &mut NoProbe)
+}
+
+/// [`search_batch_sq8`] with per-query [`WalkProfile`]s (traced executor
+/// path); results bit-identical to the unprofiled form.
+pub(crate) fn search_batch_sq8_profiled(
+    h: &Hnsw,
+    plane: &QuantPlane,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+) -> (Vec<Vec<Neighbor>>, Vec<WalkProfile>) {
+    let mut probe = ProfileProbe::default();
+    let out = search_batch_sq8_probed(h, plane, queries, scorer, &mut probe);
+    (out, probe.per_query)
+}
+
+fn search_batch_sq8_probed<P: WalkProbe>(
+    h: &Hnsw,
+    plane: &QuantPlane,
+    queries: &[BatchQuery<'_>],
+    scorer: &dyn BatchScorer,
+    probe: &mut P,
+) -> Vec<Vec<Neighbor>> {
     let metric = h.metric();
     let view = plane.view();
     let mut stats = SearchStats::default();
@@ -566,8 +753,8 @@ pub(crate) fn search_batch_sq8(
     for bq in queries {
         let q = view.codec.prepare_query(bq.query);
         let walk = Sq8Walk { metric, view, q };
-        let beam = search_beam::<Hnsw, _, true>(
-            h, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+        let beam = search_beam::<Hnsw, _, P, true>(
+            h, &walk, bq.k, bq.ef, &mut visited, &mut scratch, &mut scores, &mut stats, probe,
         );
         let take = plane.refine_for(bq.k).min(beam.len());
         block.clear();
@@ -577,11 +764,20 @@ pub(crate) fn search_batch_sq8(
             block.extend_from_slice(data.get(n.id as usize));
         }
         match scorer.rerank(metric, bq.query, &block, &ids, bq.k) {
-            Ok(top) => out.push(top),
+            Ok(top) => {
+                // The backend's block re-rank is the refine step: charge
+                // it to the profile exactly like the native fallback.
+                probe.evals(take as u64, false);
+                probe.refine(take as u64);
+                out.push(top);
+            }
             Err(_) => {
-                out.push(refine_beam(h, bq.query, &beam, take, bq.k, &mut scores, &mut stats));
+                out.push(refine_beam(
+                    h, bq.query, &beam, take, bq.k, &mut scores, &mut stats, probe,
+                ));
             }
         }
+        probe.end_query();
     }
     h.visited_pool().put(visited);
     out
@@ -606,8 +802,9 @@ pub(crate) fn search_for_insert(
     let max_layer = g.max_layer();
     // Greedy descent above the insertion level.
     for t in ((target_level + 1)..=max_layer).rev() {
-        let found = search_level::<NestedHnsw, _, true>(
+        let found = search_level::<NestedHnsw, _, _, true>(
             g, &scorer, t, &eps, 1, &mut visited, &mut scratch, &mut scores, &mut stats,
+            &mut NoProbe,
         );
         if let Some(best) = found.into_iter().max() {
             eps = vec![best];
@@ -617,8 +814,9 @@ pub(crate) fn search_for_insert(
     // per-layer candidate sets.
     let mut per_layer = Vec::new();
     for t in (0..=target_level.min(max_layer)).rev() {
-        let found = search_level::<NestedHnsw, _, true>(
+        let found = search_level::<NestedHnsw, _, _, true>(
             g, &scorer, t, &eps, ef, &mut visited, &mut scratch, &mut scores, &mut stats,
+            &mut NoProbe,
         );
         eps = found.clone();
         per_layer.push(found);

@@ -50,6 +50,7 @@ pub mod load;
 pub mod meta;
 pub mod metric;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod quant;
 pub mod registry;
@@ -77,6 +78,7 @@ pub mod prelude {
     pub use crate::meta::{PyramidIndex, Router};
     pub use crate::metric::Metric;
     pub use crate::net::{FatTreeNet, IdealNet, NetModel, NetSpec, SimClock, UniformNet, WireSize};
+    pub use crate::obs::{MetricsRegistry, Obs, ObsSpec, Scrape, TraceId, TraceTree, Tracer};
     pub use crate::quant::{QuantPlane, Sq8Codec};
     pub use crate::types::{Neighbor, QueryMetrics, QueryResult, UpdateOp, VectorId};
 }

@@ -147,7 +147,17 @@ pub fn run_trace(
     // --- replay ---
     let run_start = Instant::now();
     let window = Duration::from_millis(cfg.tick_ms.max(1) * 4);
-    let monitor = Mutex::new(Monitor::new(partitions, window, run_start));
+    let monitor = Arc::new(Mutex::new(Monitor::new(partitions, window, run_start)));
+    // While the drill runs, the monitor is a live scrape source: a
+    // concurrent `cluster.observe()` sees the driver-side view (open-loop
+    // latency, errors, pressure signals) next to the serving counters.
+    if let Some(o) = cluster.obs() {
+        let m = monitor.clone();
+        o.registry.register_source(
+            "load_monitor",
+            Box::new(move |out| m.lock().unwrap().scrape_into(out)),
+        );
+    }
     if truncated {
         monitor
             .lock()
@@ -218,7 +228,15 @@ pub fn run_trace(
     });
 
     let wall_ms = run_start.elapsed().as_secs_f64() * 1_000.0;
-    let m = monitor.into_inner().unwrap();
+    // Drop the scrape source before unwrapping the monitor: unregister
+    // frees the registry's Arc clone, leaving ours as the last one.
+    if let Some(o) = cluster.obs() {
+        o.registry.unregister_source("load_monitor");
+    }
+    let m = Arc::try_unwrap(monitor)
+        .unwrap_or_else(|_| unreachable!("load_monitor source unregistered above"))
+        .into_inner()
+        .unwrap();
     let hot = spec.hot_for(partitions);
     Ok(LoadReport {
         spec: *spec,

@@ -2,14 +2,16 @@
 //! into and the elasticity controller reads from.
 //!
 //! One [`Monitor`] owns, per partition: a QPS series
-//! ([`crate::stats::ThroughputSeries`]), the full latency sample set
-//! (quantiles via [`crate::stats::percentile`] — exact, not sketched),
-//! a queue-depth gauge and a replica-count gauge (both
+//! ([`crate::stats::ThroughputSeries`]), a latency histogram
+//! ([`crate::obs::Histogram`] — the registry's log buckets, so a monitor
+//! "p99" is the same estimator as a scrape's `_p99`, ±4.4%), a
+//! queue-depth gauge and a replica-count gauge (both
 //! [`crate::stats::GaugeSeries`]). Plus run-wide counters, the minimum
 //! observed coverage, and a timestamped event log (scale-ups, reroutes).
 //! Methods take `&mut self`; the driver serializes access behind one
 //! `Mutex`, which is also the natural consistency boundary for the
-//! controller's read-decide-act tick.
+//! controller's read-decide-act tick. [`Monitor::scrape_into`] re-exports
+//! the headline numbers as a registry scrape source while a drill runs.
 //!
 //! [`Monitor::to_json`] exports everything through
 //! [`crate::util::json::Json`] for bench trending (`load/*` keys) and
@@ -17,15 +19,17 @@
 
 use std::time::{Duration, Instant};
 
-use crate::stats::{percentile, GaugeSeries, ThroughputSeries};
+use crate::obs::Histogram;
+use crate::stats::{GaugeSeries, ThroughputSeries};
 use crate::types::PartitionId;
 use crate::util::json::Json;
 
 /// Per-partition slice of the monitor.
 struct PartitionStats {
     qps: ThroughputSeries,
-    /// Every query latency attributed to this partition, microseconds.
-    latencies: Vec<f64>,
+    /// Query latencies attributed to this partition, microseconds
+    /// (registry log buckets — constant memory under any load).
+    latencies: Histogram,
     depth: GaugeSeries,
     replicas: GaugeSeries,
     /// Most recent depth sample — what the controller's tick reads.
@@ -38,7 +42,7 @@ impl PartitionStats {
     fn new(window: Duration) -> Self {
         PartitionStats {
             qps: ThroughputSeries::new(window),
-            latencies: Vec::new(),
+            latencies: Histogram::new(),
             depth: GaugeSeries::new(window),
             replicas: GaugeSeries::new(window),
             last_depth: 0.0,
@@ -52,7 +56,7 @@ pub struct Monitor {
     start: Instant,
     parts: Vec<PartitionStats>,
     qps: ThroughputSeries,
-    all_latencies: Vec<f64>,
+    all_latencies: Histogram,
     pub queries: u64,
     pub inserts: u64,
     pub deletes: u64,
@@ -70,7 +74,7 @@ impl Monitor {
             start,
             parts: (0..partitions).map(|_| PartitionStats::new(window)).collect(),
             qps: ThroughputSeries::new(window),
-            all_latencies: Vec::new(),
+            all_latencies: Histogram::new(),
             queries: 0,
             inserts: 0,
             deletes: 0,
@@ -96,13 +100,13 @@ impl Monitor {
     ) {
         self.queries += 1;
         self.qps.record(at);
-        self.all_latencies.push(latency_us);
+        self.all_latencies.observe(latency_us);
         if coverage < self.min_coverage {
             self.min_coverage = coverage;
         }
         if let Some(p) = self.parts.get_mut(primary as usize) {
             p.qps.record(at);
-            p.latencies.push(latency_us);
+            p.latencies.observe(latency_us);
         }
     }
 
@@ -154,16 +158,17 @@ impl Monitor {
         self.events.push((t, msg.into()));
     }
 
-    /// Overall latency percentile (microseconds); NaN before any query.
+    /// Overall latency percentile (microseconds, registry bucket
+    /// estimate); NaN before any query.
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        percentile(&self.all_latencies, p)
+        self.all_latencies.quantile(p / 100.0).unwrap_or(f64::NAN)
     }
 
     /// Latency percentile for one partition's queries; NaN if none.
     pub fn partition_latency_percentile(&self, partition: PartitionId, p: f64) -> f64 {
         self.parts
             .get(partition as usize)
-            .map(|s| percentile(&s.latencies, p))
+            .and_then(|s| s.latencies.quantile(p / 100.0))
             .unwrap_or(f64::NAN)
     }
 
@@ -179,6 +184,30 @@ impl Monitor {
 
     pub fn events(&self) -> &[(f64, String)] {
         &self.events
+    }
+
+    /// Push the monitor's headline numbers into a registry scrape — the
+    /// load surface the driver registers with
+    /// [`crate::obs::MetricsRegistry::register_source`] for the duration
+    /// of a drill, so `SimCluster::observe()` sees the open-loop view
+    /// (driver-side latency, errors, controller pressure signals) next to
+    /// the serving-side counters.
+    pub fn scrape_into(&self, out: &mut Vec<(String, f64)>) {
+        out.push(("load_queries_total".into(), self.queries as f64));
+        out.push(("load_inserts_total".into(), self.inserts as f64));
+        out.push(("load_deletes_total".into(), self.deletes as f64));
+        out.push(("load_errors_total".into(), self.errors as f64));
+        out.push(("load_min_coverage".into(), self.min_coverage));
+        if let Some(p) = self.all_latencies.quantile(0.50) {
+            out.push(("load_latency_p50_us".into(), p));
+        }
+        if let Some(p) = self.all_latencies.quantile(0.99) {
+            out.push(("load_latency_p99_us".into(), p));
+        }
+        for (i, p) in self.parts.iter().enumerate() {
+            out.push((format!("load_queue_depth{{partition=\"{i}\"}}"), p.last_depth));
+            out.push((format!("load_replicas{{partition=\"{i}\"}}"), p.last_replicas));
+        }
     }
 
     /// Export the full run as JSON: counters, overall quantiles, the
@@ -200,8 +229,8 @@ impl Monitor {
                 Json::obj(vec![
                     ("partition", Json::num(i as f64)),
                     ("queries", Json::num(p.qps.total() as f64)),
-                    ("p50_us", Json::num(nan_to_null(percentile(&p.latencies, 50.0)))),
-                    ("p99_us", Json::num(nan_to_null(percentile(&p.latencies, 99.0)))),
+                    ("p50_us", Json::num(nan_to_null(p.latencies.quantile(0.50).unwrap_or(f64::NAN)))),
+                    ("p99_us", Json::num(nan_to_null(p.latencies.quantile(0.99).unwrap_or(f64::NAN)))),
                     ("qps_series", series(&p.qps.series())),
                     ("depth_mean_series", series(&p.depth.series())),
                     ("depth_max_series", series(&p.depth.max_series())),
@@ -276,6 +305,23 @@ mod tests {
         m.sample_replicas(t0 + Duration::from_millis(20), 0, 2.0);
         assert_eq!(m.last_depth(0), 8.0);
         assert_eq!(m.last_replicas(0), 2.0);
+    }
+
+    #[test]
+    fn scrape_into_exports_headline_keys() {
+        let t0 = Instant::now();
+        let mut m = Monitor::new(2, Duration::from_millis(100), t0);
+        m.record_query(t0 + Duration::from_millis(5), 1, 750.0, 1.0);
+        m.sample_depth(t0 + Duration::from_millis(6), 1, 3.0);
+        let mut out = Vec::new();
+        m.scrape_into(&mut out);
+        let get = |k: &str| out.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("load_queries_total"), Some(1.0));
+        assert_eq!(get("load_errors_total"), Some(0.0));
+        let p99 = get("load_latency_p99_us").expect("p99 after one query");
+        assert!((700.0..800.0).contains(&p99), "bucketed p99={p99} of a 750µs sample");
+        assert_eq!(get("load_queue_depth{partition=\"1\"}"), Some(3.0));
+        assert_eq!(get("load_queue_depth{partition=\"0\"}"), Some(0.0));
     }
 
     #[test]

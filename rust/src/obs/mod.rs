@@ -1,0 +1,104 @@
+//! Unified telemetry plane: per-query distributed tracing
+//! ([`trace::Tracer`]), the central [`registry::MetricsRegistry`], and
+//! the walk-profiling hooks' export surface.
+//!
+//! One [`Obs`] bundle is created per [`crate::cluster::SimCluster`] (when
+//! observability resolves on — see [`ObsSpec`]) and handed to every
+//! coordinator and executor. When it is absent, every instrumented seam
+//! takes its pre-existing code path: no trace context is minted, no span
+//! is recorded, the walk runs its `NoProbe` instantiation — bit-identical
+//! to the un-instrumented system, pinned by `rust/tests/obs.rs` and the
+//! `PYRAMID_OBS=off` CI leg.
+//!
+//! See ARCHITECTURE.md §Observability plane for the span seam diagram.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, Scrape};
+pub use trace::{Span, SpanCtx, SpanGuard, SpanId, TraceId, TraceTree, Tracer};
+
+use registry::thread_shard;
+use std::sync::Arc;
+
+/// Environment variable controlling the default: `PYRAMID_OBS=off` (or
+/// `0` / `false`) detaches the telemetry plane; anything else — including
+/// unset — leaves it on. Mirrors `PYRAMID_NET` / `PYRAMID_FORCE_SCALAR`.
+pub const ENV_OBS: &str = "PYRAMID_OBS";
+
+/// Cluster-level observability knob (a [`crate::config::ClusterTopology`]
+/// field, like `net`): explicit `On`/`Off` win; `Auto` defers to
+/// [`ENV_OBS`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObsSpec {
+    /// Resolve from the `PYRAMID_OBS` environment variable (default on).
+    #[default]
+    Auto,
+    On,
+    Off,
+}
+
+impl ObsSpec {
+    /// Whether the telemetry plane should be attached.
+    pub fn resolve(self) -> bool {
+        match self {
+            ObsSpec::On => true,
+            ObsSpec::Off => false,
+            ObsSpec::Auto => !matches!(
+                std::env::var(ENV_OBS).ok().as_deref(),
+                Some("off") | Some("0") | Some("false")
+            ),
+        }
+    }
+
+    /// Spec name for config JSON round-trips.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ObsSpec::Auto => "auto",
+            ObsSpec::On => "on",
+            ObsSpec::Off => "off",
+        }
+    }
+
+    pub fn from_kind(kind: &str) -> Option<ObsSpec> {
+        match kind {
+            "auto" => Some(ObsSpec::Auto),
+            "on" => Some(ObsSpec::On),
+            "off" => Some(ObsSpec::Off),
+            _ => None,
+        }
+    }
+}
+
+/// The per-cluster telemetry bundle: one tracer + one registry, shared by
+/// every coordinator and executor of a `SimCluster`.
+#[derive(Debug, Default)]
+pub struct Obs {
+    pub tracer: Arc<Tracer>,
+    pub registry: Arc<MetricsRegistry>,
+}
+
+impl Obs {
+    pub fn new() -> Arc<Obs> {
+        Arc::new(Obs { tracer: Arc::new(Tracer::new()), registry: Arc::new(MetricsRegistry::new()) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_explicit_wins_over_env() {
+        assert!(ObsSpec::On.resolve());
+        assert!(!ObsSpec::Off.resolve());
+    }
+
+    #[test]
+    fn spec_kind_round_trips() {
+        for s in [ObsSpec::Auto, ObsSpec::On, ObsSpec::Off] {
+            assert_eq!(ObsSpec::from_kind(s.kind()), Some(s));
+        }
+        assert_eq!(ObsSpec::from_kind("bogus"), None);
+    }
+}

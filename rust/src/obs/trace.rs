@@ -1,0 +1,532 @@
+//! The trace plane: per-query distributed tracing.
+//!
+//! A [`TraceId`] is minted at the coordinator front door
+//! ([`crate::coordinator::CoordinatorNode::execute_batch_detailed`]) — one
+//! per query, not per batch — and a [`SpanCtx`] rides inside every
+//! [`crate::coordinator::QueryRequest`] (and its hedge / eviction
+//! re-issues) so the executor can attach its own spans to the right
+//! parent. Spans are recorded **lock-cheaply**: the [`Tracer`] keeps a
+//! small array of mutex-guarded ring buffers and a thread lands on its
+//! own shard, so the common case is an uncontended lock around a
+//! `VecDeque` push. Assembly into a [`TraceTree`] only happens when
+//! somebody asks (tests, the worst-query post-mortem dump) and scans all
+//! shards.
+//!
+//! Stage names are the [`stage`] constants; the seam diagram lives in
+//! ARCHITECTURE.md §Observability plane.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Identifies one end-to-end query (or one background activity).
+/// Sequential from 1; `0` is reserved for background spans that belong
+/// to no query (ingest pump, freeze ticks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+/// Identifies one span within the tracer. `SpanId(0)` as a parent means
+/// "root of its trace".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpanId(pub u64);
+
+/// Background trace for spans with no owning query.
+pub const BACKGROUND: TraceId = TraceId(0);
+
+/// Root marker for `Span::parent`.
+pub const NO_PARENT: SpanId = SpanId(0);
+
+/// Wire cost of a serialized trace context: trace id + parent span id +
+/// send timestamp, 8 bytes each. The `Arc<Tracer>` handle itself is
+/// process-local plumbing (like the reply `Sender`) and costs nothing on
+/// the wire.
+pub const CTX_WIRE_BYTES: usize = 24;
+
+/// Canonical stage names, one per instrumented seam.
+pub mod stage {
+    /// Root: one query, fan-out to merge (coordinator wall time).
+    pub const QUERY: &str = "query";
+    /// Meta-HNSW routing walk (batched; same interval for the block).
+    pub const ROUTE: &str = "route";
+    /// Broker publish → `visible_at`: queue admission plus the priced
+    /// chaos + network delays (split out as tags).
+    pub const PUBLISH: &str = "publish";
+    /// Executor dequeue → reply send for one sub-query.
+    pub const EXEC: &str = "exec";
+    /// The sub-HNSW walk inside [`EXEC`]; carries the walk-profile tags.
+    pub const WALK: &str = "walk";
+    /// Coordinator gather loop: fan-out end → last partial / deadline.
+    pub const GATHER: &str = "gather";
+    /// Per-query merge of partials into the global top-k.
+    pub const MERGE: &str = "merge";
+    /// A hedge duplicate was published to a second replica.
+    pub const HEDGE_FIRE: &str = "hedge-fire";
+    /// A due hedge was withheld by the token-bucket budget.
+    pub const HEDGE_SUPPRESS: &str = "hedge-suppress";
+    /// Eviction-driven re-issue of an in-flight sub-query.
+    pub const REISSUE: &str = "reissue";
+    /// First partial for a (query, partition) — the winning replica.
+    /// Duration spans publish → arrival.
+    pub const PARTIAL_WIN: &str = "partial-win";
+    /// A late duplicate partial (hedge loser / chaos dup), deduplicated.
+    pub const PARTIAL_LOSE: &str = "partial-lose";
+    /// Executor-side update-log pump that applied at least one update.
+    pub const LOG_PUMP: &str = "log-pump";
+    /// Executor-side freeze-controller tick that performed work.
+    pub const FREEZE: &str = "freeze";
+}
+
+/// One recorded span. Times are microseconds since the tracer's epoch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub trace: TraceId,
+    pub id: SpanId,
+    pub parent: SpanId,
+    pub stage: &'static str,
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Partition the span is attributed to, or -1.
+    pub partition: i64,
+    /// Executor / coordinator id the span ran on, or -1.
+    pub node: i64,
+    /// Numeric annotations (delay splits, walk-profile counters, ...).
+    pub tags: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    pub fn tag(&self, key: &str) -> Option<f64> {
+        self.tags.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+
+    fn to_json(&self) -> Json {
+        let tags = self
+            .tags
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::num(*v)))
+            .collect::<std::collections::BTreeMap<_, _>>();
+        Json::obj(vec![
+            ("trace", Json::num(self.trace.0 as f64)),
+            ("span", Json::num(self.id.0 as f64)),
+            ("parent", Json::num(self.parent.0 as f64)),
+            ("stage", Json::str(self.stage)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.duration_us() as f64)),
+            ("partition", Json::num(self.partition as f64)),
+            ("node", Json::num(self.node as f64)),
+            ("tags", Json::Obj(tags)),
+        ])
+    }
+}
+
+/// Number of ring-buffer shards. A thread hashes to one shard, so with a
+/// handful of executor threads contention is rare.
+const SHARDS: usize = 16;
+
+/// Per-shard ring capacity: old spans are evicted once a shard fills, so
+/// a long soak keeps the most recent traces and the pinned worst query.
+const RING_CAP: usize = 4096;
+
+struct Shard {
+    ring: Mutex<VecDeque<Span>>,
+}
+
+/// The span collector. Cheap to share (`Arc`); all recording goes through
+/// sharded ring buffers, ids come from shared atomic counters.
+pub struct Tracer {
+    epoch: Instant,
+    shards: Vec<Shard>,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    dropped: AtomicU64,
+    /// Worst-latency query seen so far, pinned with a full copy of its
+    /// spans so ring eviction cannot dismember the post-mortem artifact.
+    worst: Mutex<Option<(TraceId, u64, Vec<Span>)>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            shards: (0..SHARDS).map(|_| Shard { ring: Mutex::new(VecDeque::new()) }).collect(),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+            worst: Mutex::new(None),
+        }
+    }
+
+    /// Microseconds since this tracer was created.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Convert an externally-captured instant to tracer time.
+    #[inline]
+    pub fn us_of(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn new_trace(&self) -> TraceId {
+        TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn new_span_id(&self) -> SpanId {
+        SpanId(self.next_span.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Spans evicted from full ring shards so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Open a span starting now.
+    pub fn span(self: &Arc<Self>, trace: TraceId, parent: SpanId, stage: &'static str) -> SpanGuard {
+        let start = self.now_us();
+        self.span_at(trace, parent, stage, start)
+    }
+
+    /// Open a span with an externally-measured start time.
+    pub fn span_at(
+        self: &Arc<Self>,
+        trace: TraceId,
+        parent: SpanId,
+        stage: &'static str,
+        start_us: u64,
+    ) -> SpanGuard {
+        SpanGuard {
+            tracer: Arc::clone(self),
+            span: Span {
+                trace,
+                id: self.new_span_id(),
+                parent,
+                stage,
+                start_us,
+                end_us: start_us,
+                partition: -1,
+                node: -1,
+                tags: Vec::new(),
+            },
+        }
+    }
+
+    /// Record a fully-formed span (both endpoints already known).
+    pub fn record(&self, span: Span) {
+        let shard = &self.shards[super::thread_shard() % SHARDS];
+        let mut ring = shard.ring.lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// All retained spans of `trace`, sorted by start time then id.
+    pub fn spans_for(&self, trace: TraceId) -> Vec<Span> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let ring = s.ring.lock().unwrap();
+            out.extend(ring.iter().filter(|sp| sp.trace == trace).cloned());
+        }
+        out.sort_by(|a, b| a.start_us.cmp(&b.start_us).then(a.id.0.cmp(&b.id.0)));
+        out
+    }
+
+    /// Assemble the retained spans of `trace` into a tree. None if the
+    /// trace left no spans (or they were all evicted).
+    pub fn tree(&self, trace: TraceId) -> Option<TraceTree> {
+        let spans = self.spans_for(trace);
+        if spans.is_empty() {
+            None
+        } else {
+            Some(TraceTree { trace, spans })
+        }
+    }
+
+    /// Offer a finished query as the worst-latency candidate. If it beats
+    /// the current champion its spans are copied out of the rings
+    /// immediately, so the post-mortem tree survives any later eviction.
+    pub fn pin_if_worst(&self, trace: TraceId, latency_us: u64) {
+        let mut w = self.worst.lock().unwrap();
+        let beats = w.as_ref().map(|(_, us, _)| latency_us > *us).unwrap_or(true);
+        if beats {
+            let spans = self.spans_for(trace);
+            if !spans.is_empty() {
+                *w = Some((trace, latency_us, spans));
+            }
+        }
+    }
+
+    /// The pinned worst-latency query trace — the run's tail exemplar —
+    /// with its latency in microseconds.
+    pub fn worst(&self) -> Option<(u64, TraceTree)> {
+        let w = self.worst.lock().unwrap();
+        w.as_ref().map(|(trace, us, spans)| {
+            (*us, TraceTree { trace: *trace, spans: spans.clone() })
+        })
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer").field("dropped", &self.dropped()).finish()
+    }
+}
+
+/// An open span. Not recorded until [`SpanGuard::finish`] — dropping a
+/// guard without finishing discards the span (deliberate: error paths
+/// should not leave half-open spans in the rings).
+pub struct SpanGuard {
+    tracer: Arc<Tracer>,
+    span: Span,
+}
+
+impl SpanGuard {
+    pub fn id(&self) -> SpanId {
+        self.span.id
+    }
+
+    pub fn tag(&mut self, key: &'static str, value: f64) {
+        self.span.tags.push((key, value));
+    }
+
+    pub fn partition(&mut self, p: u16) {
+        self.span.partition = p as i64;
+    }
+
+    pub fn node(&mut self, n: u64) {
+        self.span.node = n as i64;
+    }
+
+    /// Close the span now and record it.
+    pub fn finish(self) {
+        let end = self.tracer.now_us();
+        self.finish_at(end);
+    }
+
+    /// Close the span at an externally-computed end time (e.g. publish +
+    /// priced delays) and record it.
+    pub fn finish_at(mut self, end_us: u64) {
+        self.span.end_us = end_us.max(self.span.start_us);
+        self.tracer.record(self.span);
+    }
+}
+
+/// Serializable trace context carried inside broker messages. The id
+/// triple is what would go on the wire ([`CTX_WIRE_BYTES`]); the tracer
+/// handle stands in for the agent the receiving process would report to,
+/// exactly as the reply `Sender` stands in for an open connection.
+#[derive(Clone)]
+pub struct SpanCtx {
+    pub trace: TraceId,
+    /// Parent for spans the receiving side opens (the publish span).
+    pub parent: SpanId,
+    /// Tracer-epoch µs at publish; lets the executor compute its queue
+    /// wait without a clock handshake.
+    pub sent_us: u64,
+    pub tracer: Arc<Tracer>,
+}
+
+impl SpanCtx {
+    /// Open a child span under this context, starting now.
+    pub fn child(&self, stage: &'static str) -> SpanGuard {
+        self.tracer.span(self.trace, self.parent, stage)
+    }
+}
+
+impl std::fmt::Debug for SpanCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SpanCtx(trace={}, parent={})", self.trace.0, self.parent.0)
+    }
+}
+
+/// The assembled spans of one trace, sorted by start time.
+#[derive(Debug, Clone)]
+pub struct TraceTree {
+    pub trace: TraceId,
+    pub spans: Vec<Span>,
+}
+
+impl TraceTree {
+    /// The root span (no parent), earliest first if several.
+    pub fn root(&self) -> Option<&Span> {
+        self.spans.iter().find(|s| s.parent == NO_PARENT)
+    }
+
+    pub fn spans_of(&self, stage: &str) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.stage == stage).collect()
+    }
+
+    pub fn stage_count(&self, stage: &str) -> usize {
+        self.spans.iter().filter(|s| s.stage == stage).count()
+    }
+
+    /// Children of `parent`, in start order.
+    pub fn children(&self, parent: SpanId) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.parent == parent).collect()
+    }
+
+    /// End-to-end duration: root span if present, else the span hull.
+    pub fn duration_us(&self) -> u64 {
+        if let Some(r) = self.root() {
+            return r.duration_us();
+        }
+        let lo = self.spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+        let hi = self.spans.iter().map(|s| s.end_us).max().unwrap_or(0);
+        hi.saturating_sub(lo)
+    }
+
+    /// One JSON object per span, newline-separated (the JSONL artifact).
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&s.to_json().dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` format (`chrome://tracing` / Perfetto):
+    /// complete ("X") events, pid = trace id, tid = node (or partition
+    /// when the span never ran on a node).
+    pub fn to_chrome_trace(&self) -> String {
+        let events: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let tid = if s.node >= 0 {
+                    s.node
+                } else if s.partition >= 0 {
+                    s.partition
+                } else {
+                    0
+                };
+                let mut args: std::collections::BTreeMap<String, Json> = s
+                    .tags
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Json::num(*v)))
+                    .collect();
+                if s.partition >= 0 {
+                    args.insert("partition".into(), Json::num(s.partition as f64));
+                }
+                Json::obj(vec![
+                    ("name", Json::str(s.stage)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(s.start_us as f64)),
+                    ("dur", Json::num(s.duration_us() as f64)),
+                    ("pid", Json::num(s.trace.0 as f64)),
+                    ("tid", Json::num(tid as f64)),
+                    ("args", Json::Obj(args)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("traceEvents", Json::Arr(events))]).dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer() -> Arc<Tracer> {
+        Arc::new(Tracer::new())
+    }
+
+    #[test]
+    fn span_guard_records_on_finish_only() {
+        let t = tracer();
+        let tr = t.new_trace();
+        let g = t.span(tr, NO_PARENT, stage::QUERY);
+        drop(g); // discarded, never recorded
+        assert!(t.tree(tr).is_none());
+        let mut g = t.span(tr, NO_PARENT, stage::QUERY);
+        g.tag("k", 3.0);
+        g.finish();
+        let tree = t.tree(tr).unwrap();
+        assert_eq!(tree.stage_count(stage::QUERY), 1);
+        assert_eq!(tree.root().unwrap().tag("k"), Some(3.0));
+    }
+
+    #[test]
+    fn tree_assembles_parent_child() {
+        let t = tracer();
+        let tr = t.new_trace();
+        let root = t.span(tr, NO_PARENT, stage::QUERY);
+        let root_id = root.id();
+        let mut child = t.span(tr, root_id, stage::ROUTE);
+        child.partition(3);
+        child.finish();
+        root.finish();
+        let tree = t.tree(tr).unwrap();
+        assert_eq!(tree.children(root_id).len(), 1);
+        assert_eq!(tree.spans_of(stage::ROUTE)[0].partition, 3);
+        // Other traces don't leak in.
+        let other = t.new_trace();
+        let g = t.span(other, NO_PARENT, stage::QUERY);
+        g.finish();
+        assert_eq!(t.tree(tr).unwrap().spans.len(), 2);
+    }
+
+    #[test]
+    fn exports_are_valid_json() {
+        let t = tracer();
+        let tr = t.new_trace();
+        let mut g = t.span(tr, NO_PARENT, stage::EXEC);
+        g.node(7);
+        g.tag("wait_us", 12.5);
+        g.finish();
+        let tree = t.tree(tr).unwrap();
+        for line in tree.to_json_lines().lines() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("stage").unwrap().as_str(), Some("exec"));
+        }
+        let chrome = Json::parse(&tree.to_chrome_trace()).unwrap();
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("tid").unwrap().as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn worst_query_is_pinned_across_eviction() {
+        let t = tracer();
+        let worst = t.new_trace();
+        let g = t.span_at(worst, NO_PARENT, stage::QUERY, 0);
+        g.finish_at(10_000);
+        t.pin_if_worst(worst, 10_000);
+        // Flood the rings so the worst trace's spans are evicted.
+        for _ in 0..(RING_CAP * SHARDS + 64) {
+            let tr = t.new_trace();
+            let g = t.span(tr, NO_PARENT, stage::PUBLISH);
+            g.finish();
+            t.pin_if_worst(tr, 1); // never beats 10ms
+        }
+        assert!(t.dropped() > 0);
+        let (us, tree) = t.worst().unwrap();
+        assert_eq!(us, 10_000);
+        assert_eq!(tree.trace, worst);
+        assert_eq!(tree.stage_count(stage::QUERY), 1);
+    }
+
+    #[test]
+    fn ring_eviction_is_bounded() {
+        let t = tracer();
+        for _ in 0..(RING_CAP + 100) {
+            let tr = t.new_trace();
+            t.span(tr, NO_PARENT, stage::MERGE).finish();
+        }
+        let total: usize = t.shards.iter().map(|s| s.ring.lock().unwrap().len()).sum();
+        assert!(total <= RING_CAP * SHARDS);
+    }
+}

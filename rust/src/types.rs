@@ -120,6 +120,11 @@ pub struct QueryResult {
     pub partitions_answered: usize,
     /// Fault-injection observability (all zero without a chaos plan).
     pub metrics: QueryMetrics,
+    /// Telemetry-plane trace id of this query (raw
+    /// [`crate::obs::TraceId`] value), resolvable to a full span tree via
+    /// `SimCluster::trace_tree`. `None` when observability is detached
+    /// (`PYRAMID_OBS=off` / `ObsSpec::Off`).
+    pub trace: Option<u64>,
 }
 
 impl QueryResult {
@@ -223,6 +228,7 @@ mod tests {
             partitions_total: 4,
             partitions_answered: 4,
             metrics: QueryMetrics::default(),
+            trace: None,
         };
         assert_eq!(full.coverage(), 1.0);
         assert!(full.is_complete());
@@ -231,6 +237,7 @@ mod tests {
             partitions_total: 4,
             partitions_answered: 3,
             metrics: QueryMetrics::default(),
+            trace: None,
         };
         assert_eq!(partial.coverage(), 0.75);
         assert!(!partial.is_complete());
@@ -239,6 +246,7 @@ mod tests {
             partitions_total: 0,
             partitions_answered: 0,
             metrics: QueryMetrics::default(),
+            trace: None,
         };
         assert_eq!(empty.coverage(), 1.0);
         assert!(empty.is_complete());

@@ -23,6 +23,9 @@ fn chaos_topo() -> ClusterTopology {
         // fat-tree CI leg (PYRAMID_NET) must not re-price these runs.
         hosts_per_rack: 0,
         net: NetSpec::Ideal,
+        // Auto: tracing is passive (spans record, never reschedule), so
+        // the obs-off CI leg may detach it without perturbing replays.
+        obs: ObsSpec::Auto,
     }
 }
 

@@ -37,6 +37,7 @@ fn topo_with(net: NetSpec, hosts_per_rack: usize) -> ClusterTopology {
         executor_batch: 8,
         hosts_per_rack,
         net,
+        obs: ObsSpec::Auto,
     }
 }
 

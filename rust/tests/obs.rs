@@ -1,0 +1,257 @@
+//! Telemetry-plane integration tests (ISSUE 9): the per-query trace
+//! tree is complete end-to-end, concurrent scrapes are never torn (the
+//! coherent-pair contract), a hedged query's trace carries exactly one
+//! winner per partition plus the loser arm, and `ObsSpec::Off` is
+//! bit-identical to the instrumented cluster. Explicit `ObsSpec::On`
+//! topologies keep these green under the `obs-off` CI leg — the
+//! topology field must win over `PYRAMID_OBS`.
+
+use pyramid::coordinator::{CoordinatorConfig, HedgeConfig};
+use pyramid::obs::trace::stage;
+use pyramid::prelude::*;
+use std::time::Duration;
+
+fn build_index(n: usize, partitions: usize, seed: u64) -> (Dataset, Dataset, PyramidIndex) {
+    let mut spec = SyntheticSpec::deep_like(n, 16, seed);
+    spec.clusters = 32;
+    let data = spec.generate();
+    let queries = spec.queries(40);
+    let cfg = IndexConfig {
+        sample: (n / 4).max(600),
+        meta_size: 32,
+        partitions,
+        ..IndexConfig::default()
+    };
+    let idx = PyramidIndex::build(&data, Metric::L2, &cfg).unwrap();
+    (data, queries, idx)
+}
+
+fn topo(obs: ObsSpec) -> ClusterTopology {
+    ClusterTopology {
+        workers: 4,
+        replicas: 2,
+        coordinators: 2,
+        net_latency_us: 100,
+        rebalance_ms: 100,
+        executor_batch: 8,
+        obs,
+        ..ClusterTopology::default()
+    }
+}
+
+/// Tentpole acceptance: one query through `SimCluster` produces a
+/// complete trace tree — QUERY root, ROUTE/PUBLISH on the coordinator,
+/// EXEC + WALK (with profile tags) on the executor, GATHER/MERGE back on
+/// the coordinator — resolvable by the id the result carries, with the
+/// unified registry scraping coherently next to it.
+#[test]
+fn query_trace_tree_is_complete() {
+    let (_data, queries, idx) = build_index(2_000, 4, 5);
+    let cluster = SimCluster::start(&idx, topo(ObsSpec::On)).unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+
+    let r = cluster.execute_detailed(queries.get(0), &params).unwrap();
+    assert!(r.is_complete(), "degraded answer would truncate the tree");
+    let tid = r.trace.expect("instrumented cluster must stamp the trace id");
+    let tree = cluster.trace_tree(tid).expect("trace id must resolve to a tree");
+
+    let root = tree.root().expect("trace has a root span");
+    assert_eq!(root.stage, stage::QUERY, "root must be the query span");
+    assert_eq!(tree.stage_count(stage::ROUTE), 1, "one meta-HNSW routing span");
+    assert_eq!(
+        tree.stage_count(stage::PUBLISH),
+        4,
+        "one publish span per sub-query: {:?}",
+        tree.spans
+    );
+    assert_eq!(tree.stage_count(stage::GATHER), 1);
+    assert_eq!(tree.stage_count(stage::MERGE), 1);
+    assert!(tree.stage_count(stage::EXEC) >= 4, "every partition executed");
+    assert!(tree.stage_count(stage::WALK) >= 4, "every execution walked the sub-HNSW");
+
+    // Walk spans nest under an exec span and carry the profile tags.
+    for w in tree.spans_of(stage::WALK) {
+        let parent = tree
+            .spans
+            .iter()
+            .find(|s| s.id == w.parent)
+            .expect("walk span's parent was recorded");
+        assert_eq!(parent.stage, stage::EXEC, "walk must nest under exec");
+        assert!(w.tag("dist_f32").unwrap_or(0.0) + w.tag("dist_sq8").unwrap_or(0.0) > 0.0);
+        assert!(w.tag("hops_bottom").is_some(), "walk span missing profile tags");
+    }
+    // Spans the executor finished must fit inside the root envelope.
+    for s in &tree.spans {
+        assert!(s.end_us >= s.start_us, "span with negative duration: {s:?}");
+    }
+
+    // The worst-query pin saw at least this query, and both exports
+    // render it.
+    let (worst_us, worst) = cluster.worst_trace().expect("a completed query must be pinned");
+    assert!(worst_us > 0 && !worst.spans.is_empty());
+    assert!(worst.to_json_lines().contains("\"stage\":"));
+    assert!(worst.to_chrome_trace().contains("traceEvents"));
+
+    // Unified registry: the query landed in the central surfaces.
+    let scrape = cluster.observe();
+    assert!(scrape.get("coordinator_queries_completed").unwrap_or(0.0) >= 1.0);
+    assert!(scrape.get("coordinator_query_latency_us_count").unwrap_or(0.0) >= 1.0);
+    assert!(scrape.get("executor_walk_hops").unwrap_or(0.0) > 0.0);
+    assert!(cluster.scrape_text().contains("# TYPE coordinator_queries_completed gauge"));
+    cluster.shutdown();
+}
+
+/// The coherent-pair contract: however hard the coordinators hammer the
+/// per-partition counters, no scrape may observe the per-partition
+/// series and the global roll-up mid-update (sum over partitions must
+/// equal the global counter in every snapshot).
+#[test]
+fn concurrent_scrape_is_never_torn() {
+    let (_data, queries, idx) = build_index(2_000, 4, 9);
+    let cluster = SimCluster::start(&idx, topo(ObsSpec::On)).unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+
+    std::thread::scope(|s| {
+        for t in 0..2 {
+            let cluster = &cluster;
+            let queries = &queries;
+            s.spawn(move || {
+                for round in 0..12 {
+                    let qi = (t * 7 + round * 3) % queries.len();
+                    cluster.execute(queries.get(qi), &params).unwrap();
+                }
+            });
+        }
+        for _ in 0..60 {
+            let scrape = cluster.observe();
+            let per_partition = scrape.sum_prefix("coordinator_partials_answered{");
+            let global = scrape.get("coordinator_partials_answered_global").unwrap_or(0.0);
+            assert!(
+                (per_partition - global).abs() < 0.5,
+                "torn scrape: per-partition sum {per_partition} != global {global}"
+            );
+        }
+    });
+    cluster.shutdown();
+}
+
+/// A hedged sub-query resolves to exactly one winner per partition; the
+/// duplicate arm that lost the race shows up as a `partial-lose` span
+/// nested in the same trace, never as a second win.
+#[test]
+fn hedged_trace_has_one_winner_per_partition_and_a_loser() {
+    let (_data, queries, idx) = build_index(3_000, 4, 33);
+    let coord_cfg =
+        CoordinatorConfig { hedge: HedgeConfig::default(), ..CoordinatorConfig::default() };
+    let cluster = SimCluster::start_with(&idx, topo(ObsSpec::On), None, coord_cfg).unwrap();
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+
+    // Warm-up arms the hedge timer at a healthy latency quantile.
+    for qi in 0..queries.len() {
+        cluster.execute(queries.get(qi), &params).unwrap();
+    }
+    cluster.set_cpu_share(0, 10);
+
+    // Whole-block batches keep the gather loop alive past each winner,
+    // so the straggling loser arm drains while sibling sub-queries are
+    // still pending — single-query calls would exit before it lands.
+    let block: Vec<&[f32]> = (0..queries.len()).map(|qi| queries.get(qi)).collect();
+    let mut hedged_tree = None;
+    'rounds: for _ in 0..8 {
+        let results = cluster.execute_batch_detailed(&block, &params).unwrap();
+        for r in &results {
+            let Some(tree) = r.trace.and_then(|t| cluster.trace_tree(t)) else { continue };
+            // Universal invariant: no partition ever records two wins.
+            for w in tree.spans_of(stage::PARTIAL_WIN) {
+                let dups = tree
+                    .spans_of(stage::PARTIAL_WIN)
+                    .iter()
+                    .filter(|o| o.partition == w.partition)
+                    .count();
+                assert_eq!(dups, 1, "partition {} won twice: {:?}", w.partition, tree.spans);
+            }
+            if tree.stage_count(stage::HEDGE_FIRE) >= 1
+                && tree.stage_count(stage::PARTIAL_LOSE) >= 1
+                && hedged_tree.is_none()
+            {
+                hedged_tree = Some(tree);
+                break 'rounds;
+            }
+        }
+    }
+
+    let tree = hedged_tree
+        .expect("a 10% straggler never produced a trace with a hedge fire and a drained loser");
+    assert!(tree.stage_count(stage::PARTIAL_LOSE) >= 1);
+    // The winners cover each answered partition exactly once.
+    let wins = tree.spans_of(stage::PARTIAL_WIN);
+    let mut parts: Vec<i64> = wins.iter().map(|s| s.partition).collect();
+    parts.sort_unstable();
+    parts.dedup();
+    assert_eq!(parts.len(), wins.len(), "duplicate winner in hedged trace");
+    // Losers nest inside the same trace as their winning sibling.
+    for l in tree.spans_of(stage::PARTIAL_LOSE) {
+        assert_eq!(l.trace, tree.trace);
+    }
+    let hedges: u64 = cluster
+        .coordinators()
+        .iter()
+        .map(|c| c.metrics.hedges_fired.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert!(hedges >= 1, "trace showed a hedge the metrics never counted");
+    cluster.shutdown();
+}
+
+/// The detachment contract: an `ObsSpec::Off` cluster takes the
+/// pre-existing code paths — answers bit-identical to the instrumented
+/// cluster on the same index and workload, no trace ids, no telemetry
+/// surfaces. (Identity against the *instrumented* run is the stronger
+/// pin: it also proves tracing never perturbs an answer.)
+#[test]
+fn detached_cluster_is_bit_identical() {
+    let (_data, queries, idx) = build_index(2_000, 4, 17);
+    let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+    let coord = CoordinatorConfig {
+        timeout: Duration::from_secs(10),
+        hedge: HedgeConfig::disabled(),
+        ..CoordinatorConfig::default()
+    };
+
+    let run = |obs: ObsSpec| -> Vec<QueryResult> {
+        let mut t = topo(obs);
+        // Bit-identity pin: the fat-tree CI leg must not re-price one
+        // run differently from the other.
+        t.net = NetSpec::Ideal;
+        t.hosts_per_rack = 0;
+        let cluster = SimCluster::start_with(&idx, t, None, coord.clone()).unwrap();
+        let mut out = Vec::new();
+        for qi in 0..queries.len() {
+            out.push(cluster.execute_detailed(queries.get(qi), &params).unwrap());
+        }
+        assert!(out.iter().all(|r| r.is_complete()), "degraded run cannot pin identity");
+        if obs == ObsSpec::Off {
+            assert!(cluster.obs().is_none(), "Off cluster built a telemetry bundle");
+            assert!(cluster.observe().samples.is_empty(), "Off cluster exported metrics");
+            assert!(cluster.worst_trace().is_none(), "Off cluster pinned a trace");
+        }
+        cluster.shutdown();
+        out
+    };
+
+    let on = run(ObsSpec::On);
+    let off = run(ObsSpec::Off);
+    assert_eq!(on.len(), off.len());
+    for (qi, (a, b)) in on.iter().zip(&off).enumerate() {
+        assert!(a.trace.is_some(), "query {qi}: instrumented run lost its trace id");
+        assert!(b.trace.is_none(), "query {qi}: detached run stamped a trace id");
+        assert_eq!(a.neighbors.len(), b.neighbors.len(), "query {qi}: result size differs");
+        for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(x.id, y.id, "query {qi}: neighbor ids diverged");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "query {qi}: scores not bit-identical"
+            );
+        }
+    }
+}
