@@ -11,11 +11,14 @@ the regression direction (this covers the sq8 tier's
 "e2e/sq8-memory-ratio" keys, plus the transport plane's
 "net/hedge-win-ratio"; the "net/*-gather-p99 ms" keys ride the plain
 higher-is-worse rule). Entries whose name contains
-"recall-delta" are absolute recall gaps (f32 minus quantized recall@10,
-already in [0, 1]-ish units): relative thresholds are meaningless near
-zero, so they regress when the gap *widens* by more than
-RECALL_DELTA_THRESHOLD — the same 2% bound the sq8 acceptance tests
-pin. Entries whose name contains "-overhead-pct" (the telemetry plane's
+"recall-delta" are absolute recall gaps (f32 minus quantized recall@10
+for the sq8 tier; rebuild minus migrated recall@10 for the self-healing
+plane's "repart/recall-delta" — already in [0, 1]-ish units): relative
+thresholds are meaningless near zero, so they regress when the gap
+*widens* by more than RECALL_DELTA_THRESHOLD — the same 2% bound the
+sq8 and migration acceptance tests pin. The self-healing plane's
+"repart/migration-pause-p99 ms" is a plain wall-clock key and rides the
+higher-is-worse relative rule. Entries whose name contains "-overhead-pct" (the telemetry plane's
 "obs/trace-overhead-pct" and "obs/walk-hook-overhead-pct") are already
 percentages near zero and follow the same absolute rule: they regress
 when the overhead widens by more than OVERHEAD_PCT_THRESHOLD percentage

@@ -47,6 +47,12 @@
 //!   walk on the same frozen graph. The `-pct` keys regress on an
 //!   absolute +2pp widening (percentage points, like the recall deltas —
 //!   relative thresholds are meaningless near zero).
+//! * `repart/migration-pause-p99 ms`, `repart/recall-delta` — the
+//!   self-healing partition plane, PR 10: query p99 while one live
+//!   migration ladder (copy -> barrier -> cutover -> retire) runs —
+//!   dual-serve must keep the pause invisible — and the
+//!   rebuild-minus-migrated recall@10 gap, watched by the trend step's
+//!   `recall-delta` rule (+2pp absolute).
 
 use pyramid::bench_harness::BenchRecorder;
 use pyramid::broker::{Broker, BrokerConfig};
@@ -891,6 +897,125 @@ fn main() {
         let walk_pct = (prof_ns - plain_ns) / plain_ns.max(1e-9) * 100.0;
         rec.record("obs/walk-hook-overhead-pct", walk_pct);
         println!("  -> walk-hook overhead vs unprofiled walk: {walk_pct:+.2}%");
+    }
+
+    // --- repart: self-healing partition plane (ISSUE 10) ---------------------
+    // One drift-triggered migration on a writable cluster. Two report
+    // numbers for the trend step: the query p99 observed while the
+    // migration ladder runs (live migration must never pause serving —
+    // source and destination dual-serve until the epoch bump), and the
+    // recall gap between the migrated layout and a from-scratch rebuild
+    // over the identical rows.
+    if run("repart") {
+        use pyramid::config::RepartConfig;
+        let n = if smoke { 2_000 } else { 4_000 };
+        let dspec = SyntheticSpec::deep_like(n, 16, 83);
+        let data = dspec.generate();
+        let queries = dspec.queries(48);
+        let cfg =
+            IndexConfig { sample: n / 4, meta_size: 32, partitions: 4, ..IndexConfig::default() };
+        let idx = PyramidIndex::build(&data, Metric::L2, &cfg).expect("build repart bench index");
+        let topo = ClusterTopology {
+            workers: 4,
+            replicas: 1,
+            coordinators: 2,
+            net_latency_us: 0,
+            rebalance_ms: 100,
+            executor_batch: 8,
+            ..ClusterTopology::default()
+        };
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo,
+            IngestConfig::default(),
+            CoordinatorConfig::default(),
+        )
+        .expect("start repart bench cluster");
+        cluster
+            .enable_repartition(RepartConfig { min_moves: 16, ..RepartConfig::default() })
+            .expect("enable repartition");
+        let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+        // Drift: an off-center shelf the frozen layout never saw, landing
+        // unevenly across partitions so the planner has real moves.
+        let extra_n = if smoke { 300 } else { 800 };
+        let extra = SyntheticSpec::deep_like(extra_n, 16, 84).generate();
+        let mut combined: Vec<f32> = Vec::with_capacity((n + extra_n) * 16);
+        combined.extend_from_slice(data.raw());
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        for i in 0..extra_n {
+            let v: Vec<f32> = extra.get(i).iter().map(|x| x + 2.0).collect();
+            ids.push(cluster.insert(&v).expect("repart bench insert"));
+            combined.extend_from_slice(&v);
+        }
+        assert!(
+            cluster.wait_ingest_idle(Duration::from_secs(60)),
+            "repart bench: replicas never drained the update log"
+        );
+        // Warm the read path before the drill.
+        for qi in 0..queries.len() {
+            let _ = cluster.execute(queries.get(qi), &params);
+        }
+        // Queries race the live migration on another thread; the floor of
+        // 16 samples keeps the percentile meaningful when the ladder
+        // finishes before the prober gets going.
+        let mut pause_ms = Vec::new();
+        let mut migrated = false;
+        std::thread::scope(|s| {
+            let h = s.spawn(|| cluster.trigger_repartition());
+            while !h.is_finished() || pause_ms.len() < 16 {
+                let t0 = Instant::now();
+                let _ = cluster.execute(queries.get(pause_ms.len() % queries.len()), &params);
+                pause_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            migrated = h.join().expect("migration thread").expect("trigger repartition");
+        });
+        assert!(migrated, "repart bench: planner produced no moves");
+        assert!(
+            cluster.wait_ingest_idle(Duration::from_secs(60)),
+            "repart bench: retire stream never drained"
+        );
+        rec.record("repart/migration-pause-p99 ms", percentile(&pause_ms, 99.0));
+        println!(
+            "repart drill: {} queries raced the migration, p50 {:.2} ms / p99 {:.2} ms \
+             ({} row(s) moved)",
+            pause_ms.len(),
+            percentile(&pause_ms, 50.0),
+            percentile(&pause_ms, 99.0),
+            cluster.repart_rows_moved()
+        );
+
+        // Recall parity against a from-scratch rebuild over the same
+        // rows, at branch=2 of 4 so routing quality decides the number
+        // (full fanout would hide a bad migrated layout).
+        let all = pyramid::dataset::Dataset::from_vec(combined, 16).expect("combined dataset");
+        let rebuild = PyramidIndex::build(&all, Metric::L2, &cfg).expect("rebuild repart index");
+        let mut hits_cluster = 0usize;
+        let mut hits_rebuild = 0usize;
+        for qi in 0..queries.len() {
+            let q = queries.get(qi);
+            let gt: Vec<u32> = pyramid::bruteforce::search(&all, q, Metric::L2, 10)
+                .iter()
+                .map(|nb| nb.id)
+                .collect();
+            let gt_cluster: Vec<u32> = gt.iter().map(|&row| ids[row as usize]).collect();
+            hits_cluster += cluster
+                .execute(q, &params)
+                .expect("cluster query")
+                .iter()
+                .filter(|nb| gt_cluster.contains(&nb.id))
+                .count();
+            hits_rebuild +=
+                rebuild.search(q, &params).iter().filter(|nb| gt.contains(&nb.id)).count();
+        }
+        let total = (queries.len() * 10) as f64;
+        let (r_cluster, r_rebuild) = (hits_cluster as f64 / total, hits_rebuild as f64 / total);
+        rec.record("repart/recall-delta", r_rebuild - r_cluster);
+        println!(
+            "  -> post-migration recall@10 {r_cluster:.3} vs rebuild {r_rebuild:.3} \
+             (delta {:+.3})",
+            r_rebuild - r_cluster
+        );
+        cluster.shutdown();
     }
 
     if emit_json {

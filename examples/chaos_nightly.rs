@@ -2,7 +2,9 @@
 //!
 //! Runs N seeded schedules (default 500) over one shared harness index
 //! and checks every robustness invariant the runner enforces (see
-//! `pyramid::chaos::runner`). On the first violation it prints the
+//! `pyramid::chaos::runner`). Every fifth schedule runs with
+//! `repart=1`, arming the self-healing partition plane's action arm and
+//! its migration invariants (ISSUE 10). On the first violation it prints the
 //! failing schedule line — committable verbatim to
 //! `rust/tests/chaos_corpus/` — runs the minimization ladder
 //! (`ChaosSpec::minimized`) to find a smaller repro, and exits
@@ -32,6 +34,7 @@ fn main() -> Result<()> {
 
     let mut recovery_ms: Vec<f64> = Vec::new();
     let mut total_violations = 0usize;
+    let mut total_migrations = 0u64;
     let t0 = Instant::now();
     for i in 0..schedules {
         let spec = if smoke {
@@ -40,7 +43,14 @@ fn main() -> Result<()> {
         } else {
             ChaosSpec::for_seed(base_seed + i as u64)
         };
+        // Every fifth schedule arms the self-healing plane (ISSUE 10):
+        // the seeded action stream widens with `repartition` triggers —
+        // one forced mid-run — and the routing-epoch / coverage-floor /
+        // migration-resume invariants switch on. The other four fifths
+        // keep replaying the pre-plane action stream bit-identically.
+        let spec = ChaosSpec { repartition: i % 5 == 4, ..spec };
         let report = run_schedule_on(&idx, &spec)?;
+        total_migrations += report.migrations;
         recovery_ms.push(report.recovery_ms as f64);
         if !report.ok() {
             total_violations += report.violations.len();
@@ -83,7 +93,7 @@ fn main() -> Result<()> {
     }
     println!(
         "all {schedules} schedules clean; {total_violations} violations; \
-         recovery p50 {:.0} ms, p99 {:.0} ms",
+         {total_migrations} live migration(s); recovery p50 {:.0} ms, p99 {:.0} ms",
         percentile(&recovery_ms, 50.0),
         percentile(&recovery_ms, 99.0)
     );

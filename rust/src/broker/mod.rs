@@ -48,7 +48,7 @@
 //!   heartbeating and is evicted exactly like a dead process, then
 //!   rejoins through the normal expiry/rejoin path once healed.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -154,6 +154,12 @@ struct InFlight {
 struct GroupState {
     /// member id -> last heartbeat.
     members: HashMap<u64, Instant>,
+    /// Members announced as retiring ([`Broker::retire_member`]): still
+    /// heartbeating while their handle drains, but excluded from every
+    /// new assignment and from hedge/balanced placement — a
+    /// `scale_partition` tear-down must not receive work it will never
+    /// poll. Cleared on leave, eviction, or rejoin.
+    retiring: HashSet<u64>,
     /// partition index -> member id.
     assignment: Vec<Option<u64>>,
     /// Group paused (rebalance in progress) until this instant.
@@ -372,11 +378,17 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
             Route::Hedge(group) => match t.groups.get(*group) {
                 Some(gs) => {
                     let primary_owner = gs.assignment.get(fallback).copied().flatten();
-                    // Emptiest queue partition owned by a different live member.
+                    // Emptiest queue partition owned by a different live,
+                    // non-retiring member: a replica announced for
+                    // tear-down may still own queues until it leaves, and
+                    // a hedge landing there would never be served.
                     let mut best: Option<(usize, usize)> = None; // (backlog, queue)
                     for (q, owner) in gs.assignment.iter().enumerate() {
                         if let Some(o) = owner {
-                            if Some(*o) != primary_owner && gs.members.contains_key(o) {
+                            if Some(*o) != primary_owner
+                                && gs.members.contains_key(o)
+                                && !gs.retiring.contains(o)
+                            {
                                 let len = t.queues[q].len();
                                 if best.map(|(bl, _)| len < bl).unwrap_or(true) {
                                     best = Some((len, q));
@@ -393,7 +405,7 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
                     let mut best: Option<(usize, usize)> = None; // (backlog, queue)
                     for (q, owner) in gs.assignment.iter().enumerate() {
                         if let Some(o) = owner {
-                            if gs.members.contains_key(o) {
+                            if gs.members.contains_key(o) && !gs.retiring.contains(o) {
                                 let len = t.queues[q].len();
                                 if best.map(|(bl, _)| len < bl).unwrap_or(true) {
                                     best = Some((len, q));
@@ -592,14 +604,45 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
 
     /// The group member that currently owns the queue partition `key`
     /// routes to — i.e. the replica a [`Self::publish`] with this key
-    /// would be served by. None if the topic/group is unknown or the
-    /// queue partition is unassigned.
+    /// would be served by. None if the topic/group is unknown, the queue
+    /// partition is unassigned, or its owner is no longer a live,
+    /// non-retiring member (a retired elastic replica can linger in a
+    /// stale assignment until the next rebalance; reporting it as the
+    /// owner would steer hedges and re-issues into a queue nobody polls).
     pub fn owner_of(&self, topic: &str, group: &str, key: u64) -> Option<u64> {
         let tp = self.topic(topic)?;
         let t = tp.state.lock().unwrap();
         let gs = t.groups.get(group)?;
         let q = (key % self.cfg.partitions_per_topic as u64) as usize;
-        gs.assignment.get(q).copied().flatten()
+        gs.assignment
+            .get(q)
+            .copied()
+            .flatten()
+            .filter(|o| gs.members.contains_key(o) && !gs.retiring.contains(o))
+    }
+
+    /// Announce a member as **retiring**: it stays in the group (its
+    /// handle may still be draining in-flight work) but is excluded from
+    /// new assignments, hedge targeting, balanced placement and
+    /// [`Self::owner_of`] from this instant — closing the window where
+    /// [`crate::cluster::SimCluster::scale_partition`] has decided to
+    /// stop a replica but the executor thread has not yet left the
+    /// group. Idempotent; a no-op for unknown topics/groups/members.
+    /// The mark clears when the member leaves, is evicted, or rejoins.
+    pub fn retire_member(&self, topic: &str, group: &str, member: u64) {
+        let Some(tp) = self.topic(topic) else { return };
+        let now = self.clock.now();
+        let mut t = tp.state.lock().unwrap();
+        if let Some(gs) = t.groups.get_mut(group) {
+            if gs.members.contains_key(&member) && gs.retiring.insert(member) {
+                // Hand the member's queues to the survivors immediately;
+                // anything already queued behind it redelivers through
+                // the lease/eviction machinery as usual.
+                Self::rebalance(gs, self.cfg.rebalance_pause, now);
+            }
+        }
+        drop(t);
+        tp.cv.notify_all();
     }
 
     /// Join a consumer group; returns a pollable consumer handle. The
@@ -628,6 +671,7 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
         let mut t = tp.state.lock().unwrap();
         let gs = t.groups.entry(group.to_string()).or_insert_with(|| GroupState {
             members: HashMap::new(),
+            retiring: HashSet::new(),
             assignment: vec![None; p],
             paused_until: now,
             epoch: 0,
@@ -637,6 +681,9 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
             net_eps: HashMap::new(),
         });
         gs.members.insert(member, now);
+        // A fresh subscribe supersedes any stale retiring mark (a member
+        // id reused after a completed tear-down is a new consumer).
+        gs.retiring.remove(&member);
         Self::rebalance(gs, self.cfg.rebalance_pause, now);
         drop(t);
         tp.cv.notify_all();
@@ -666,10 +713,14 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
         }
     }
 
-    /// Recompute the partition assignment round-robin over live members
-    /// and pause the group briefly (the visible cost of a full rebalance).
+    /// Recompute the partition assignment round-robin over live,
+    /// non-retiring members and pause the group briefly (the visible
+    /// cost of a full rebalance). With every member retiring the
+    /// assignment empties: messages then wait unowned rather than being
+    /// handed to a consumer that is tearing down.
     fn rebalance(gs: &mut GroupState, pause: Duration, now: Instant) {
-        let mut members: Vec<u64> = gs.members.keys().copied().collect();
+        let mut members: Vec<u64> =
+            gs.members.keys().copied().filter(|m| !gs.retiring.contains(m)).collect();
         members.sort_unstable();
         for (i, slot) in gs.assignment.iter_mut().enumerate() {
             *slot = if members.is_empty() { None } else { Some(members[i % members.len()]) };
@@ -693,6 +744,7 @@ impl<M: Send + Clone + WireSize + 'static> Broker<M> {
         if !expired.is_empty() {
             for m in &expired {
                 gs.members.remove(m);
+                gs.retiring.remove(m);
             }
             Self::rebalance(gs, cfg.rebalance_pause, now);
         }
@@ -1016,6 +1068,7 @@ impl<M: Send + Clone + WireSize + 'static> Consumer<M> {
                     } else {
                         // We were evicted (e.g. after a long stall): rejoin.
                         gs.members.insert(self.member, vnow);
+                        gs.retiring.remove(&self.member);
                         Broker::<M>::rebalance(gs, cfg.rebalance_pause, vnow);
                     }
                 }
@@ -1105,6 +1158,7 @@ impl<M: Send + Clone + WireSize + 'static> Consumer<M> {
         let mut g = self.topic_ref.state.lock().unwrap();
         if let Some(gs) = g.groups.get_mut(&self.group) {
             gs.members.remove(&self.member);
+            gs.retiring.remove(&self.member);
             Broker::<M>::rebalance(gs, self.broker.cfg.rebalance_pause, now);
         }
     }
@@ -1336,6 +1390,57 @@ mod tests {
             assert_eq!(d.msg, 7);
             c1.ack(&d);
         }
+    }
+
+    /// Hedge-placement staleness regression (ISSUE 10 satellite): once a
+    /// member is announced as retiring, `owner_of` stops reporting it,
+    /// hedge/balanced placement stop targeting its queues, and fresh
+    /// assignments exclude it — while the retiree's in-group presence
+    /// (still heartbeating during drain) is preserved. A later
+    /// re-subscribe under the same id clears the mark.
+    #[test]
+    fn retiring_member_excluded_from_placement_and_ownership() {
+        let b: Broker<u64> = Broker::new(fast_cfg());
+        b.create_topic("t");
+        let c1 = b.subscribe("t", "g", 1).unwrap();
+        let _c2 = b.subscribe("t", "g", 2).unwrap();
+        b.advance_clock(Duration::from_millis(3)); // rebalance pause
+        assert!((0..4).any(|q| b.owner_of("t", "g", q) == Some(2)), "2 never assigned");
+
+        b.retire_member("t", "g", 2);
+        b.advance_clock(Duration::from_millis(3)); // post-retire rebalance pause
+        for q in 0..4u64 {
+            assert_eq!(b.owner_of("t", "g", q), Some(1), "retiree still owns queue {q}");
+        }
+        // Hedge + balanced publishes all land where member 1 polls.
+        b.publish_hedge("t", "g", 0, 7).unwrap();
+        b.publish_balanced("t", "g", 0, 8).unwrap();
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(1);
+        while seen.len() < 2 && Instant::now() < deadline {
+            if let Some(d) = c1.poll(Duration::from_millis(20)) {
+                seen.push(d.msg);
+                c1.ack(&d);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![7, 8], "publishes routed to the retiring member");
+
+        // Retiring is not eviction: the member is still in the group.
+        {
+            let tp = b.topic("t").unwrap();
+            let t = tp.state.lock().unwrap();
+            let gs = t.groups.get("g").unwrap();
+            assert!(gs.members.contains_key(&2));
+            assert!(gs.retiring.contains(&2));
+        }
+        // A fresh subscribe under the same id supersedes the stale mark.
+        let _c2b = b.subscribe("t", "g", 2).unwrap();
+        b.advance_clock(Duration::from_millis(3));
+        assert!(
+            (0..4).any(|q| b.owner_of("t", "g", q) == Some(2)),
+            "re-subscribed member never reassigned"
+        );
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 use super::schedule::ChaosSpec;
 use super::{host_endpoint, ChaosSnapshot, FaultSpec, EP_BROKER};
 use crate::cluster::SimCluster;
-use crate::config::{ClusterTopology, IndexConfig, QueryParams};
+use crate::config::{ClusterTopology, IndexConfig, QueryParams, RepartConfig};
 use crate::coordinator::CoordinatorConfig;
 use crate::dataset::SyntheticSpec;
 use crate::error::{PyramidError, Result};
@@ -77,6 +77,9 @@ pub struct ChaosReport {
     pub async_submitted: u64,
     pub async_fired: u64,
     pub refreezes: u64,
+    /// Migrations committed by the self-healing plane (0 unless the
+    /// schedule set `repart=1`).
+    pub migrations: u64,
     /// Post-mortem artifact: the run's worst-latency query trace as JSON
     /// lines (first line `{"worst_latency_us":...}`, then one span per
     /// line — see [`crate::obs::TraceTree::to_json_lines`]). The chaos CI
@@ -179,6 +182,11 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
         CoordinatorConfig { timeout: Duration::from_millis(300), ..CoordinatorConfig::default() };
     let cluster = SimCluster::start_ingesting(index, topo, ingest_cfg, coord_cfg)?;
     let plan = cluster.enable_chaos(spec.seed, spec.faults);
+    if spec.repartition {
+        // Low floor: the harness writes are few, and the invariants are
+        // about migration safety, not about when drift is "enough".
+        cluster.enable_repartition(RepartConfig { min_moves: 16, ..RepartConfig::default() })?;
+    }
     let traffic = pregenerate(spec, dim);
     // Action stream: separate derivation from the fault-decision and
     // traffic streams so the three never alias.
@@ -196,9 +204,23 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
     let mut writes_ok = 0u64;
     let mut writes_failed = 0u64;
 
+    // A tolerable failure of a migration attempt (e.g. the catch-up
+    // barrier timing out behind a cut link) leaves the plan journaled;
+    // the post-quiesce resume must finish it.
+    let try_migrate = |step: usize, violations: &mut Vec<String>| match cluster
+        .trigger_repartition()
+    {
+        Ok(_) => {}
+        Err(e) if chaos_tolerable(&e) => {}
+        Err(e) => violations.push(format!("t={step} repartition error class: {e}")),
+    };
+
     for step in 0..spec.steps as usize {
-        // --- one seeded fault action ---
-        match actions.below(8) {
+        // --- one seeded fault action (the 9th arm only exists when the
+        //     schedule armed the plane: `repart=0` corpus lines consume
+        //     the identical `below(8)` stream they always did) ---
+        let arms = if spec.repartition { 9 } else { 8 };
+        match actions.below(arms) {
             0 | 1 => timeline.push(format!("t={step} calm")),
             2 => {
                 let p = actions.below(partitions);
@@ -238,11 +260,23 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
                     timeline.push(format!("t={step} calm"));
                 }
             }
-            _ => {
+            7 => {
                 timeline.push(format!("t={step} restore"));
                 plan.heal_all();
                 cluster.restore();
             }
+            _ => {
+                timeline.push(format!("t={step} repartition"));
+                try_migrate(step, &mut violations);
+            }
+        }
+
+        // --- forced migration: every repart schedule exercises at least
+        //     one drift-to-cutover ladder mid-run, so the kill arms
+        //     around it genuinely land mid-migration ---
+        if spec.repartition && step == spec.steps as usize / 3 {
+            timeline.push(format!("t={step} repartition (forced)"));
+            try_migrate(step, &mut violations);
         }
 
         // --- one async submission (journaled; callback must fire even
@@ -346,6 +380,18 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
             }
         }
 
+        // --- routing-epoch invariant: live coordinators never serve
+        //     routing tables more than one migration apart (the cutover
+        //     loop flips them one after another, never skips one) ---
+        if spec.repartition {
+            let eps = cluster.routing_epochs();
+            if let (Some(&mx), Some(&mn)) = (eps.iter().max(), eps.iter().min()) {
+                if mx - mn > 1 {
+                    violations.push(format!("t={step} routing epochs diverged: {eps:?}"));
+                }
+            }
+        }
+
         std::thread::sleep(Duration::from_millis(spec.step_ms));
     }
 
@@ -354,12 +400,38 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
     plan.heal_all();
     cluster.restore();
 
+    // Any migration interrupted mid-ladder (killed coordinator or
+    // executor, cut broker link) must resume from the `mig` journal and
+    // converge; afterwards every live coordinator agrees on one epoch.
+    if spec.repartition {
+        match cluster.resume_migrations() {
+            Ok(_) => {}
+            Err(e) => violations.push(format!("migration resume failed post-quiesce: {e}")),
+        }
+        if !cluster.repart_idle() {
+            violations.push("migration journal holds an unfinished plan post-quiesce".into());
+        }
+        let eps = cluster.routing_epochs();
+        if eps.windows(2).any(|w| w[0] != w[1]) {
+            violations.push(format!("routing epochs disagree post-quiesce: {eps:?}"));
+        }
+    }
+
     // Recovery: heal → first full-coverage answer.
     let t0 = Instant::now();
     let mut recovered = false;
     while t0.elapsed() < Duration::from_secs(10) {
         if let Ok(r) = cluster.execute_detailed(&traffic.probe, &params) {
             if r.is_complete() {
+                // Coverage floor: a migration must never shrink the
+                // routed universe — full fanout still reaches at least
+                // the pre-migration partition count.
+                if r.partitions_total < partitions {
+                    violations.push(format!(
+                        "coverage floor broken: {} partitions routed, {partitions} before",
+                        r.partitions_total
+                    ));
+                }
                 recovered = true;
                 break;
             }
@@ -375,6 +447,9 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
     }
 
     // Durability: accepted inserts findable, tombstones never resurface.
+    // With `repart=1` these same probes double as the no-write-lost-
+    // across-migration invariant: rows copied to a new home must answer,
+    // rows retired at the old home must not resurrect deletes.
     for (id, v) in inserted.iter().rev().take(10) {
         match cluster.execute_detailed(v, &params) {
             Ok(r) => {
@@ -409,6 +484,7 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
 
     let counters = cluster.chaos_metrics();
     let refreezes = cluster.total_refreezes();
+    let migrations = cluster.repart_migrations();
     let worst_trace_json = cluster
         .worst_trace()
         .map(|(us, tree)| format!("{{\"worst_latency_us\":{us}}}\n{}", tree.to_json_lines()));
@@ -425,6 +501,7 @@ pub fn run_schedule_on(index: &PyramidIndex, spec: &ChaosSpec) -> Result<ChaosRe
         async_submitted,
         async_fired,
         refreezes,
+        migrations,
         worst_trace_json,
     })
 }

@@ -34,6 +34,12 @@ pub struct ChaosSpec {
     pub queries_per_step: u32,
     /// Writes (inserts, with occasional deletes) issued per step.
     pub writes_per_step: u32,
+    /// Arm the self-healing partition plane: adds the `repartition`
+    /// action to the seeded timeline (plus one forced migration at
+    /// steps/3) and the routing-epoch / migration invariants. Off by
+    /// default so the pre-existing corpus replays bit-identically — the
+    /// action stream only widens when this is explicitly on.
+    pub repartition: bool,
     pub faults: FaultSpec,
 }
 
@@ -45,6 +51,7 @@ impl Default for ChaosSpec {
             step_ms: 30,
             queries_per_step: 4,
             writes_per_step: 6,
+            repartition: false,
             faults: FaultSpec {
                 drop_prob: 0.05,
                 dup_prob: 0.05,
@@ -81,6 +88,13 @@ impl ChaosSpec {
                 "step_ms" => spec.step_ms = val.parse().map_err(|_| bad())?,
                 "queries" => spec.queries_per_step = val.parse().map_err(|_| bad())?,
                 "writes" => spec.writes_per_step = val.parse().map_err(|_| bad())?,
+                "repart" => {
+                    spec.repartition = match val {
+                        "0" => false,
+                        "1" => true,
+                        _ => return Err(bad()),
+                    }
+                }
                 "drop" => spec.faults.drop_prob = val.parse().map_err(|_| bad())?,
                 "dup" => spec.faults.dup_prob = val.parse().map_err(|_| bad())?,
                 "reorder" => spec.faults.reorder_prob = val.parse().map_err(|_| bad())?,
@@ -123,6 +137,9 @@ impl ChaosSpec {
         if f.delay_prob > 0.0 {
             out.push(ChaosSpec { faults: FaultSpec { delay_prob: 0.0, ..f }, ..*self });
         }
+        if self.repartition {
+            out.push(ChaosSpec { repartition: false, ..*self });
+        }
         if self.writes_per_step > 0 {
             out.push(ChaosSpec { writes_per_step: 0, ..*self });
         }
@@ -137,13 +154,14 @@ impl std::fmt::Display for ChaosSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "seed={} steps={} step_ms={} queries={} writes={} \
+            "seed={} steps={} step_ms={} queries={} writes={} repart={} \
              drop={} dup={} reorder={} delay={} delay_min_us={} delay_max_us={}",
             self.seed,
             self.steps,
             self.step_ms,
             self.queries_per_step,
             self.writes_per_step,
+            self.repartition as u8,
             self.faults.drop_prob,
             self.faults.dup_prob,
             self.faults.reorder_prob,
@@ -166,6 +184,7 @@ mod tests {
             step_ms: 15,
             queries_per_step: 3,
             writes_per_step: 9,
+            repartition: true,
             faults: FaultSpec {
                 drop_prob: 0.25,
                 dup_prob: 0.125,
@@ -191,6 +210,20 @@ mod tests {
         assert!(ChaosSpec::parse("seed=1 sneed=2").is_err());
         assert!(ChaosSpec::parse("seed").is_err());
         assert!(ChaosSpec::parse("steps=abc").is_err());
+    }
+
+    /// `repart` takes exactly 0/1, defaults off (the pre-plane corpus
+    /// must replay the identical action stream), and survives the
+    /// Display↔parse roundtrip via the main roundtrip test above.
+    #[test]
+    fn repart_key_strict_and_defaults_off() {
+        assert!(!ChaosSpec::parse("seed=5").unwrap().repartition);
+        assert!(ChaosSpec::parse("seed=5 repart=1").unwrap().repartition);
+        assert!(!ChaosSpec::parse("seed=5 repart=0").unwrap().repartition);
+        assert!(ChaosSpec::parse("seed=5 repart=true").is_err());
+        // Minimization tries switching the plane off first-class.
+        let on = ChaosSpec::parse("seed=5 repart=1").unwrap();
+        assert!(on.minimized().iter().any(|c| !c.repartition));
     }
 
     #[test]

@@ -35,7 +35,7 @@
 
 use crate::broker::{Broker, BrokerConfig};
 use crate::chaos::{host_endpoint, ChaosSnapshot, FaultPlan, FaultSpec};
-use crate::config::{ClusterTopology, QueryParams};
+use crate::config::{ClusterTopology, QueryParams, RepartConfig};
 use crate::coordinator::{
     group_for, topic_for, AsyncCallbacks, AsyncJobMsg, CoordinatorConfig, CoordinatorNode,
     QueryRequest,
@@ -48,8 +48,12 @@ use crate::ingest::{update_topic_for, IngestConfig, IngestGateway, LiveIndex};
 use crate::meta::{PyramidIndex, Router};
 use crate::obs::{MetricsRegistry, Obs, Scrape, TraceId, TraceTree};
 use crate::registry::{Master, MasterConfig, Registry, RegistryConfig};
+use crate::repart::{self, DriftDetector, MigMsg, MigrationPlan, PartitionSignal};
 use crate::runtime::BatchScorer;
-use crate::types::{Neighbor, PartitionId, QueryResult, UpdateRequest, UpdateSeq, VectorId};
+use crate::types::{
+    Neighbor, PartitionId, QueryResult, UpdateOp, UpdateRequest, UpdateSeq, VectorId,
+};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
@@ -299,6 +303,24 @@ fn respawn_role(
     g.executors.push(h);
 }
 
+/// Runtime state of the self-healing partition plane
+/// ([`SimCluster::enable_repartition`]). The detector is host-ticked
+/// (same pattern as the load harness's elasticity controller): each
+/// [`SimCluster::repart_tick`] feeds it one [`PartitionSignal`] sweep and
+/// a trigger runs a full drift-to-cutover migration inline.
+struct RepartState {
+    cfg: RepartConfig,
+    detector: DriftDetector,
+    next_plan_id: u64,
+    migrations_done: u64,
+    rows_moved: u64,
+}
+
+/// Coordinator-attribution sentinel on migration-streamed updates:
+/// outside the real coordinator id space, so log forensics can tell a
+/// migration copy/retire from a user write.
+const MIGRATOR: u64 = u64::MAX;
+
 /// The running simulated cluster.
 pub struct SimCluster {
     pub broker: Broker<QueryRequest>,
@@ -320,6 +342,12 @@ pub struct SimCluster {
     jobs_broker: Broker<AsyncJobMsg>,
     /// Parked async callbacks, first-completer-wins across coordinators.
     async_callbacks: Arc<AsyncCallbacks>,
+    /// Migration-plan journal (the retained `mig` topic): every plan is
+    /// journaled *before* any data moves, so a crashed migration resumes
+    /// from here ([`Self::resume_migrations`]).
+    mig_broker: Broker<MigMsg>,
+    /// Self-healing partition plane; None until [`Self::enable_repartition`].
+    repart: Mutex<Option<RepartState>>,
     /// Installed fault plan, if any ([`Self::enable_chaos`]).
     chaos: Mutex<Option<Arc<FaultPlan>>>,
     /// Telemetry plane shared by every coordinator and executor; None
@@ -582,6 +610,13 @@ impl SimCluster {
             node.clone().enable_async_failover(jobs_broker.clone(), async_callbacks.clone())?;
         }
 
+        // Migration journal: same durability seam as the jobs journal —
+        // a retained log the self-healing plane writes plans to before
+        // moving any data, and resumes incomplete migrations from.
+        let mig_broker: Broker<MigMsg> = Broker::new(BrokerConfig::default());
+        mig_broker.set_net(net_model.clone());
+        mig_broker.create_topic(repart::MIG_TOPIC);
+
         // Master + respawn plumbing: the master watches instance locks and
         // requests respawns through a channel the cluster services (it
         // cannot touch cluster state directly from the watch thread).
@@ -686,6 +721,8 @@ impl SimCluster {
             ingest,
             jobs_broker,
             async_callbacks,
+            mig_broker,
+            repart: Mutex::new(None),
             chaos: Mutex::new(None),
             obs,
             rr: AtomicUsize::new(0),
@@ -869,6 +906,329 @@ impl SimCluster {
             .unwrap_or(0)
     }
 
+    // ----------------- self-healing partition plane -----------------
+
+    /// Arm the self-healing partition plane: install per-partition
+    /// centroids on every live replica (inserts start accumulating
+    /// distance-to-centroid drift stats incrementally) and create the
+    /// [`DriftDetector`] state. Calling this *is* the opt-in — a cluster
+    /// that never does runs the exact pre-plane code paths
+    /// ([`RepartConfig`] defaults off, pinned bit-identical). The
+    /// detector is host-ticked via [`Self::repart_tick`] (same cadence
+    /// contract as the load harness's elasticity controller); no
+    /// background thread is spawned.
+    pub fn enable_repartition(&self, cfg: RepartConfig) -> Result<()> {
+        let rt = self.ingest.as_ref().ok_or_else(|| {
+            PyramidError::Cluster("repartition requires an ingesting cluster".into())
+        })?;
+        let mut cfg = cfg;
+        cfg.enabled = true;
+        self.refresh_centroids(rt);
+        *self.repart.lock().unwrap() = Some(RepartState {
+            detector: DriftDetector::new(cfg),
+            cfg,
+            next_plan_id: 1,
+            migrations_done: 0,
+            rows_moved: 0,
+        });
+        Ok(())
+    }
+
+    /// The live replica of `p` with the highest applied update sequence
+    /// (dead executors skipped) — the best snapshot source available.
+    fn freshest_live(&self, rt: &IngestRuntime, p: PartitionId) -> Option<Arc<LiveIndex>> {
+        let live_ids: Vec<u64> = {
+            let g = self.state.lock().unwrap();
+            g.executors.iter().filter(|e| !e.is_finished()).map(|e| e.id).collect()
+        };
+        let lv = rt.lives.lock().unwrap();
+        lv.iter()
+            .filter(|e| e.partition == p && live_ids.contains(&e.exec_id))
+            .max_by_key(|e| e.live.applied_seq())
+            .map(|e| e.live.clone())
+    }
+
+    /// Recompute each partition's centroid from its freshest live
+    /// replica and install it on every replica of the partition,
+    /// resetting the drift accumulators — so inserts measure drift
+    /// against the *current* layout, not the one a migration replaced.
+    fn refresh_centroids(&self, rt: &IngestRuntime) {
+        let partitions = self.subs.len();
+        let mut centroids: Vec<Option<Vec<f32>>> = vec![None; partitions];
+        for (p, slot) in centroids.iter_mut().enumerate() {
+            let Some(live) = self.freshest_live(rt, p as PartitionId) else { continue };
+            let rows = live.export_rows();
+            if rows.is_empty() {
+                continue;
+            }
+            let dim = rows[0].1.len();
+            let mut c = vec![0.0f32; dim];
+            for (_, v) in &rows {
+                for (a, b) in c.iter_mut().zip(v) {
+                    *a += b;
+                }
+            }
+            let n = rows.len() as f32;
+            for a in c.iter_mut() {
+                *a /= n;
+            }
+            *slot = Some(c);
+        }
+        let lv = rt.lives.lock().unwrap();
+        for e in lv.iter() {
+            if let Some(c) = &centroids[e.partition as usize] {
+                e.live.set_centroid(c.clone());
+            }
+        }
+    }
+
+    /// Current drift inputs, one [`PartitionSignal`] per partition,
+    /// sampled from each partition's freshest live replica. Empty on
+    /// read-only clusters.
+    pub fn partition_signals(&self) -> Vec<PartitionSignal> {
+        let Some(rt) = &self.ingest else { return Vec::new() };
+        (0..self.subs.len())
+            .map(|p| {
+                let live = self.freshest_live(rt, p as PartitionId);
+                PartitionSignal {
+                    partition: p as PartitionId,
+                    rows: live.as_ref().map(|l| l.live_rows()).unwrap_or(0),
+                    drift: live.as_ref().and_then(|l| l.drift_stats()),
+                }
+            })
+            .collect()
+    }
+
+    /// One detector tick: sweep the per-partition signals into the
+    /// [`DriftDetector`]; on a hysteresis trigger, plan and run one
+    /// migration inline. Returns the trigger reason when a migration
+    /// actually committed (`None` on calm ticks, when the plane is not
+    /// enabled, or when the planner found too few moves).
+    pub fn repart_tick(&self) -> Result<Option<String>> {
+        let signals = self.partition_signals();
+        let reason = {
+            let mut g = self.repart.lock().unwrap();
+            match g.as_mut() {
+                Some(st) => st.detector.tick(&signals),
+                None => return Ok(None),
+            }
+        };
+        let Some(reason) = reason else { return Ok(None) };
+        if self.trigger_repartition()? {
+            Ok(Some(reason))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Plan and run one migration now, regardless of the detector state
+    /// (the chaos `repartition` action and the drill hook). `Ok(false)`
+    /// when the planner found fewer than `min_moves` rows out of place.
+    pub fn trigger_repartition(&self) -> Result<bool> {
+        let rt = self.ingest.as_ref().ok_or_else(|| {
+            PyramidError::Cluster("repartition requires an ingesting cluster".into())
+        })?;
+        let (cfg, plan_id) = {
+            let mut g = self.repart.lock().unwrap();
+            let st = g
+                .as_mut()
+                .ok_or_else(|| PyramidError::Cluster("repartition plane not enabled".into()))?;
+            let id = st.next_plan_id;
+            st.next_plan_id += 1;
+            (st.cfg, id)
+        };
+        let partitions = self.subs.len();
+        let rows: Vec<Vec<(VectorId, Vec<f32>)>> = (0..partitions)
+            .map(|p| {
+                self.freshest_live(rt, p as PartitionId)
+                    .map(|l| l.export_rows())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let from_epoch = self.routing_epochs().into_iter().max().unwrap_or(0);
+        let metric = self
+            .coordinators
+            .iter()
+            .find(|c| !c.is_dead())
+            .ok_or_else(|| PyramidError::Cluster("no live coordinator".into()))?
+            .router()
+            .metric();
+        // Meta scale for the re-clustering pass: a few centers per
+        // partition gives the min-cut something to balance (the
+        // harness-scale analogue of `IndexConfig::meta_size`).
+        let meta_size = (8 * partitions).max(16);
+        let seed = 0x5EED_0000_u64 ^ plan_id;
+        let plan =
+            repart::plan_migration(plan_id, from_epoch, &rows, metric, meta_size, &cfg, seed)?;
+        let Some(plan) = plan else { return Ok(false) };
+        let plan = Arc::new(plan);
+        // Journal before touching any data: once `Planned` is retained,
+        // a crash anywhere below resumes from [`Self::resume_migrations`].
+        self.mig_broker.publish_log(repart::MIG_TOPIC, MigMsg::Planned(plan.clone()))?;
+        self.run_migration(&plan)?;
+        Ok(true)
+    }
+
+    /// Execute one journaled [`MigrationPlan`] through the live-migration
+    /// protocol: dual-serve overlay → copy (re-stream moved rows through
+    /// the ordinary `upd-*` insert path) → catch-up barrier → cutover
+    /// (one epoch bump per coordinator) → journal `Done` → retire
+    /// sources. Every phase is idempotent, so re-driving a half-finished
+    /// migration after a crash converges: the dup-gid guard absorbs
+    /// re-streamed copies, tombstone-first ordering keeps user deletes
+    /// that raced the copy dead, and the epoch guard keeps a coordinator
+    /// that already cut over from double-bumping.
+    fn run_migration(&self, plan: &Arc<MigrationPlan>) -> Result<()> {
+        let rt = self.ingest.as_ref().ok_or_else(|| {
+            PyramidError::Cluster("repartition requires an ingesting cluster".into())
+        })?;
+        // Recorded on finish only — a failed ladder (barrier timeout)
+        // discards the guard, per the tracer's half-open-span convention.
+        let span = self.obs.as_ref().map(|o| {
+            let tr = o.tracer.new_trace();
+            o.tracer.span(tr, crate::obs::trace::NO_PARENT, crate::obs::trace::stage::MIGRATE)
+        });
+        let router = plan.router();
+        // Phase 1 — dual-serve: install the post-migration table as an
+        // overlay on every live coordinator still at the plan's epoch.
+        // Queries fan to the union of old and new picks (first-partial-
+        // wins dedup absorbs the overlap); inserts route via the overlay
+        // so new rows land at their final home.
+        for c in self.coordinators.iter().filter(|c| !c.is_dead()) {
+            if c.routing_epoch() <= plan.from_epoch {
+                c.install_routing_overlay(router.clone());
+            }
+        }
+        // Phase 2 — copy, from two idempotent sources: the journaled
+        // move set (still available when a crash-resume finds the source
+        // rows already retired) and a live sweep that also realigns rows
+        // inserted while the plan was being computed.
+        let mut moves: Vec<(VectorId, PartitionId, PartitionId)> =
+            plan.moves.iter().map(|m| (m.gid, m.from, m.to)).collect();
+        for mv in &plan.moves {
+            rt.gateway.publish(
+                mv.to,
+                UpdateOp::Insert { id: mv.gid, vector: mv.vector.clone() },
+                MIGRATOR,
+            )?;
+        }
+        let mut copied: HashSet<VectorId> = moves.iter().map(|m| m.0).collect();
+        let assign_ef = 32;
+        for p in 0..self.subs.len() as PartitionId {
+            let Some(live) = self.freshest_live(rt, p) else { continue };
+            for (gid, v) in live.export_rows() {
+                let to = router.route(&v, 1, assign_ef)[0];
+                if to != p && copied.insert(gid) {
+                    rt.gateway.publish(
+                        to,
+                        UpdateOp::Insert { id: gid, vector: Arc::new(v) },
+                        MIGRATOR,
+                    )?;
+                    moves.push((gid, p, to));
+                }
+            }
+        }
+        // Phase 3 — catch-up barrier: destinations must have applied the
+        // copies before the old homes stop serving them. On timeout the
+        // overlay keeps dual-serving and the plan stays Planned-without-
+        // Done in the journal — a later resume retries the whole ladder.
+        let barrier = Duration::from_secs(10);
+        if !self.wait_ingest_idle(barrier) {
+            return Err(PyramidError::Timeout(barrier));
+        }
+        // Phase 4 — cutover: flip the base table. Each live coordinator
+        // bumps its routing epoch exactly once (divergence stays ≤ 1).
+        for c in self.coordinators.iter().filter(|c| !c.is_dead()) {
+            if c.routing_epoch() == plan.from_epoch {
+                c.commit_routing_overlay();
+            }
+        }
+        // Phase 5 — commit record.
+        self.mig_broker.publish_log(repart::MIG_TOPIC, MigMsg::Done { plan_id: plan.id })?;
+        // Phase 6 — retire: tombstone moved rows at their *sources only*
+        // (a broadcast delete would kill the fresh copies too).
+        for (gid, from, _) in &moves {
+            rt.gateway.publish(*from, UpdateOp::Delete { id: *gid }, MIGRATOR)?;
+        }
+        // Re-anchor drift accounting on the new layout and start the
+        // detector's cooldown.
+        self.refresh_centroids(rt);
+        {
+            let mut g = self.repart.lock().unwrap();
+            if let Some(st) = g.as_mut() {
+                st.detector.note_migrated();
+                st.migrations_done += 1;
+                st.rows_moved += moves.len() as u64;
+            }
+        }
+        if let Some(o) = &self.obs {
+            o.registry.counter("repart_migrations_total").inc();
+            o.registry.counter("repart_rows_moved_total").add(moves.len() as u64);
+        }
+        if let Some(mut s) = span {
+            s.tag("rows_moved", moves.len() as f64);
+            s.finish();
+        }
+        Ok(())
+    }
+
+    /// Re-drive every journaled migration that has no `Done` record —
+    /// the crash-recovery entry point (the chaos drills call this after
+    /// restore). Returns how many plans were re-driven.
+    pub fn resume_migrations(&self) -> Result<usize> {
+        let mut tailer = self.mig_broker.log_tailer(repart::MIG_TOPIC, 0);
+        let mut planned: Vec<Arc<MigrationPlan>> = Vec::new();
+        let mut done: HashSet<u64> = HashSet::new();
+        while let Some((_, msg)) = tailer.try_next() {
+            match msg {
+                MigMsg::Planned(p) => planned.push(p),
+                MigMsg::Done { plan_id } => {
+                    done.insert(plan_id);
+                }
+            }
+        }
+        let mut resumed = 0;
+        for p in planned.into_iter().filter(|p| !done.contains(&p.id)) {
+            self.run_migration(&p)?;
+            resumed += 1;
+        }
+        Ok(resumed)
+    }
+
+    /// True when the migration journal holds no plan awaiting its `Done`
+    /// record (trivially true before [`Self::enable_repartition`]).
+    pub fn repart_idle(&self) -> bool {
+        let mut tailer = self.mig_broker.log_tailer(repart::MIG_TOPIC, 0);
+        let mut open: HashSet<u64> = HashSet::new();
+        while let Some((_, msg)) = tailer.try_next() {
+            match msg {
+                MigMsg::Planned(p) => {
+                    open.insert(p.id);
+                }
+                MigMsg::Done { plan_id } => {
+                    open.remove(&plan_id);
+                }
+            }
+        }
+        open.is_empty()
+    }
+
+    /// Routing epochs of the live coordinators — the chaos invariant
+    /// (divergence ≤ 1) reads this every step.
+    pub fn routing_epochs(&self) -> Vec<u64> {
+        self.coordinators.iter().filter(|c| !c.is_dead()).map(|c| c.routing_epoch()).collect()
+    }
+
+    /// Committed migrations since [`Self::enable_repartition`].
+    pub fn repart_migrations(&self) -> u64 {
+        self.repart.lock().unwrap().as_ref().map(|s| s.migrations_done).unwrap_or(0)
+    }
+
+    /// Rows re-streamed to a new home across all committed migrations.
+    pub fn repart_rows_moved(&self) -> u64 {
+        self.repart.lock().unwrap().as_ref().map(|s| s.rows_moved).unwrap_or(0)
+    }
+
     /// One past the last sequence of a partition's update log (0 on
     /// read-only clusters).
     pub fn update_log_end(&self, p: PartitionId) -> u64 {
@@ -901,6 +1261,7 @@ impl SimCluster {
         let plan = FaultPlan::new(seed, spec);
         self.broker.set_chaos(Some(plan.clone()));
         self.jobs_broker.set_chaos(Some(plan.clone()));
+        self.mig_broker.set_chaos(Some(plan.clone()));
         if let Some(rt) = &self.ingest {
             rt.gateway.broker().set_chaos(Some(plan.clone()));
             rt.freeze_broker.set_chaos(Some(plan.clone()));
@@ -1271,6 +1632,12 @@ impl SimCluster {
             doomed.sort_unstable_by(|a, b| b.cmp(a));
             doomed.truncate(live.len() - target);
             for id in doomed {
+                // Mark the member retiring in the broker *before* joining
+                // it, so a hedge or balanced publish racing this scale-down
+                // (and `owner_of` primary picks) stops landing work on a
+                // queue whose consumer is about to leave — the stale-hedge
+                // window that used to park sub-queries on a dead member.
+                self.broker.retire_member(&topic_for(partition), &group_for(partition), id);
                 // Drain the handle under the lock, stop it outside: stop()
                 // joins the executor thread, which never takes this lock.
                 let handle = {
@@ -1772,6 +2139,296 @@ mod tests {
         assert_eq!(cluster.route_weight(0), 100);
         let params = QueryParams::default();
         assert!(cluster.execute(queries.get(0), &params).is_ok());
+        cluster.shutdown();
+    }
+
+    /// Concentrated inserts far off the construction manifold, the
+    /// drift fuel for the repartition tests. Returned as (id, vector)
+    /// pairs so durability can be probed after the migration.
+    fn insert_shifted(cluster: &SimCluster, n: usize, seed: u64) -> Vec<(VectorId, Vec<f32>)> {
+        let extra = SyntheticSpec::deep_like(n, 16, seed).generate();
+        (0..n)
+            .map(|i| {
+                let v: Vec<f32> = extra.get(i).iter().map(|x| x + 3.0).collect();
+                (cluster.insert(&v).unwrap(), v)
+            })
+            .collect()
+    }
+
+    /// ISSUE 10 tentpole acceptance (cluster layer): a forced migration
+    /// re-streams out-of-place rows to their new homes through the
+    /// ordinary update path, bumps every live coordinator's routing
+    /// epoch exactly once, retires the sources, and loses nothing — the
+    /// full drift-to-cutover ladder.
+    #[test]
+    fn repartition_migrates_rows_and_commits_one_epoch() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 1),
+            IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        cluster
+            .enable_repartition(RepartConfig { min_moves: 32, ..RepartConfig::default() })
+            .unwrap();
+        // Skew one region: 600 far-shelf rows all route to one home.
+        let inserted = insert_shifted(&cluster, 600, 1234);
+        // One of them is deleted before the migration — it must stay
+        // dead afterwards (tombstone-first guard on the copy stream).
+        let (dead_id, dead_vec) = inserted[17].clone();
+        cluster.delete(dead_id).unwrap();
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+        assert_eq!(cluster.routing_epochs(), vec![0, 0]);
+
+        assert!(cluster.trigger_repartition().unwrap(), "planner found no moves to make");
+        assert_eq!(cluster.repart_migrations(), 1);
+        assert!(cluster.repart_rows_moved() >= 32, "migration moved almost nothing");
+        assert_eq!(cluster.routing_epochs(), vec![1, 1], "cutover must bump each epoch once");
+        assert!(cluster.repart_idle(), "journal left a plan without its Done record");
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+
+        // No accepted write lost: every surviving insert is findable
+        // with full coverage; the tombstoned one never resurfaces.
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        for (id, v) in inserted.iter().step_by(41) {
+            if *id == dead_id {
+                continue;
+            }
+            let r = cluster.execute_detailed(v, &params).unwrap();
+            assert!(r.is_complete(), "insert {id} probe lost coverage");
+            assert_eq!(r.neighbors[0].id, *id, "insert {id} lost across migration");
+        }
+        let r = cluster.execute_detailed(&dead_vec, &params).unwrap();
+        assert!(
+            !r.neighbors.iter().any(|n| n.id == dead_id),
+            "tombstoned id {dead_id} resurrected by the migration copy stream"
+        );
+        // Construction-time rows still serve.
+        assert!(cluster.execute_detailed(queries.get(0), &params).unwrap().is_complete());
+        cluster.shutdown();
+    }
+
+    /// Crash-safe resume: a plan journaled to the `mig` topic whose
+    /// driver died before moving a single row is picked up by
+    /// [`SimCluster::resume_migrations`] and driven to the same end
+    /// state; a second resume finds nothing to do.
+    #[test]
+    fn migration_resumes_from_journal_after_crash() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 1),
+            IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let cfg = RepartConfig { min_moves: 32, ..RepartConfig::default() };
+        cluster.enable_repartition(cfg).unwrap();
+        let inserted = insert_shifted(&cluster, 600, 4321);
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+
+        // Plan exactly as the trigger would, journal it, then "crash"
+        // before executing anything.
+        let rt = cluster.ingest.as_ref().unwrap();
+        let rows: Vec<Vec<(VectorId, Vec<f32>)>> = (0..4)
+            .map(|p| {
+                cluster.freshest_live(rt, p).map(|l| l.export_rows()).unwrap_or_default()
+            })
+            .collect();
+        let plan = repart::plan_migration(1, 0, &rows, Metric::L2, 32, &cfg, 99)
+            .unwrap()
+            .expect("skewed layout must yield a plan");
+        assert!(plan.moves.len() >= 32);
+        cluster
+            .mig_broker
+            .publish_log(repart::MIG_TOPIC, MigMsg::Planned(Arc::new(plan)))
+            .unwrap();
+        assert!(!cluster.repart_idle(), "journaled plan must read as in-flight");
+
+        // Resume drives it end to end; a second resume is a no-op.
+        assert_eq!(cluster.resume_migrations().unwrap(), 1);
+        assert!(cluster.repart_idle());
+        assert_eq!(cluster.routing_epochs(), vec![1, 1]);
+        assert_eq!(cluster.resume_migrations().unwrap(), 0);
+        assert_eq!(cluster.routing_epochs(), vec![1, 1], "re-resume must not double-bump");
+
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        for (id, v) in inserted.iter().step_by(53) {
+            let r = cluster.execute_detailed(v, &params).unwrap();
+            assert!(r.is_complete());
+            assert_eq!(r.neighbors[0].id, *id, "insert {id} lost across resumed migration");
+        }
+        cluster.shutdown();
+    }
+
+    /// Drift-triggered path: sustained row-count skew trips the
+    /// detector's hysteresis on the configured streak and runs one
+    /// migration; the post-migration cooldown keeps the next ticks calm.
+    #[test]
+    fn repart_tick_triggers_on_sustained_skew_then_cools_down() {
+        let (_, _, idx) = build_index();
+        let cluster = SimCluster::start_ingesting(
+            &idx,
+            topo(4, 1),
+            IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        cluster
+            .enable_repartition(RepartConfig {
+                skew_ratio: 1.2,
+                high_ticks: 3,
+                cooldown_ticks: 100,
+                min_moves: 32,
+                ..RepartConfig::default()
+            })
+            .unwrap();
+        insert_shifted(&cluster, 600, 77);
+        assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+        // Streak of 3 skewed ticks arms the trigger on the third.
+        assert!(cluster.repart_tick().unwrap().is_none());
+        assert!(cluster.repart_tick().unwrap().is_none());
+        let reason = cluster.repart_tick().unwrap().expect("third skewed tick must trigger");
+        assert!(reason.contains("skew"), "unexpected trigger reason: {reason}");
+        assert_eq!(cluster.repart_migrations(), 1);
+        // Cooldown: even if skew persisted, the plane stays quiet.
+        for _ in 0..5 {
+            assert!(cluster.repart_tick().unwrap().is_none(), "cooldown violated");
+        }
+        assert_eq!(cluster.repart_migrations(), 1);
+        cluster.shutdown();
+    }
+
+    /// Satellite acceptance (ISSUE 10): post-migration recall@10 within
+    /// 2% of a from-scratch rebuild over the same rows, on all three
+    /// metrics — the migrated layout is a real Pyramid layout, not a
+    /// patched-up one.
+    #[test]
+    fn post_migration_recall_parity_with_full_rebuild_three_metrics() {
+        for (metric, seed) in [(Metric::L2, 51u64), (Metric::Ip, 53), (Metric::Angular, 59)] {
+            let spec = SyntheticSpec::deep_like(2_400, 16, seed);
+            let norm = metric.normalizes_items();
+            let data = if norm { spec.generate().normalized() } else { spec.generate() };
+            let queries = if norm { spec.queries(30).normalized() } else { spec.queries(30) };
+            let icfg =
+                IndexConfig { sample: 600, meta_size: 32, partitions: 4, ..Default::default() };
+            let idx = PyramidIndex::build(&data, metric, &icfg).unwrap();
+            let cluster = SimCluster::start_ingesting(
+                &idx,
+                topo(4, 1),
+                IngestConfig { refreeze_threshold: usize::MAX, ..IngestConfig::default() },
+                CoordinatorConfig::default(),
+            )
+            .unwrap();
+            cluster
+                .enable_repartition(RepartConfig { min_moves: 16, ..RepartConfig::default() })
+                .unwrap();
+            // A distinct off-manifold region (a distinct direction, for
+            // the normalizing metrics) the construction layout never saw.
+            let extra = SyntheticSpec::deep_like(400, 16, seed ^ 7).generate();
+            let mut combined: Vec<f32> = Vec::new();
+            for i in 0..data.len() {
+                combined.extend_from_slice(data.get(i));
+            }
+            let mut ids: Vec<VectorId> = (0..data.len() as VectorId).collect();
+            for i in 0..extra.len() {
+                let mut v: Vec<f32> = extra.get(i).iter().map(|x| x + 2.0).collect();
+                if norm {
+                    crate::metric::normalize_in_place(&mut v);
+                }
+                ids.push(cluster.insert(&v).unwrap());
+                combined.extend_from_slice(&v);
+            }
+            assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+            assert!(
+                cluster.trigger_repartition().unwrap(),
+                "{metric}: planner found no moves"
+            );
+            assert!(cluster.wait_ingest_idle(Duration::from_secs(30)));
+
+            let all = crate::dataset::Dataset::from_vec(combined, 16).unwrap();
+            let rebuild = PyramidIndex::build(&all, metric, &icfg).unwrap();
+            // branch=2 of 4: routing quality decides recall, so a bad
+            // migrated layout cannot hide behind full fanout.
+            let params = QueryParams { k: 10, branch: 2, ef: 100, meta_ef: 100 };
+            let mut hits_cluster = 0usize;
+            let mut hits_rebuild = 0usize;
+            for qi in 0..queries.len() {
+                let q = queries.get(qi);
+                let gt: HashSet<u32> = crate::bruteforce::search(&all, q, metric, 10)
+                    .iter()
+                    .map(|n| n.id)
+                    .collect();
+                let gt_cluster: HashSet<VectorId> =
+                    gt.iter().map(|&row| ids[row as usize]).collect();
+                hits_cluster += cluster
+                    .execute(q, &params)
+                    .unwrap()
+                    .iter()
+                    .filter(|n| gt_cluster.contains(&n.id))
+                    .count();
+                hits_rebuild +=
+                    rebuild.search(q, &params).iter().filter(|n| gt.contains(&n.id)).count();
+            }
+            let total = (queries.len() * 10) as f64;
+            let r_cluster = hits_cluster as f64 / total;
+            let r_rebuild = hits_rebuild as f64 / total;
+            assert!(
+                r_cluster >= r_rebuild - 0.02,
+                "{metric}: post-migration recall {r_cluster} vs rebuild {r_rebuild} (>2% apart)"
+            );
+            cluster.shutdown();
+        }
+    }
+
+    /// Satellite regression (ISSUE 10): scale-down marks the doomed
+    /// members retiring in the broker *before* joining them, so queries
+    /// racing the churn — including warmed-up hedges and balanced
+    /// placement — never park work on a replica that is about to leave.
+    /// Pre-fix, a stale hedge pick could stall a sub-query until lease
+    /// eviction; post-fix the churn is invisible to the serving path.
+    #[test]
+    fn scale_down_during_gather_never_strands_hedged_queries() {
+        let (_, queries, idx) = build_index();
+        let cluster = SimCluster::start(&idx, topo(4, 2)).unwrap();
+        let params = QueryParams { k: 10, branch: 4, ef: 100, meta_ef: 100 };
+        // Warm the hedge delay estimator past its sample floor.
+        for qi in 0..40 {
+            cluster.execute(queries.get(qi % queries.len()), &params).unwrap();
+        }
+        let stop = AtomicBool::new(false);
+        let errors = std::thread::scope(|s| {
+            let prober = s.spawn(|| {
+                let mut errors = Vec::new();
+                let mut qi = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Err(e) = cluster.execute(queries.get(qi % queries.len()), &params) {
+                        errors.push(format!("query {qi}: {e}"));
+                    }
+                    qi += 1;
+                }
+                errors
+            });
+            // Churn partition 0's replica set while the prober hammers.
+            for _ in 0..4 {
+                cluster.scale_partition(0, 4).unwrap();
+                std::thread::sleep(Duration::from_millis(30));
+                cluster.scale_partition(0, 2).unwrap();
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            stop.store(true, Ordering::Relaxed);
+            prober.join().unwrap()
+        });
+        assert!(errors.is_empty(), "queries failed during scale churn: {errors:?}");
+        // Immediately after the last scale-down, coverage is full — no
+        // eviction window needed to route around the retired members.
+        for qi in 0..10 {
+            let r = cluster.execute_detailed(queries.get(qi), &params).unwrap();
+            assert!(r.is_complete(), "query {qi} lost coverage right after scale-down");
+        }
         cluster.shutdown();
     }
 }

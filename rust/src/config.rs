@@ -236,6 +236,85 @@ impl IndexConfig {
     }
 }
 
+/// Self-healing plane knobs (drift-triggered background re-partition,
+/// `rust/src/repart`). Default **off**: with `enabled: false` no drift
+/// accounting, no detector thread and no `mig` journal exist — the
+/// system is bit-identical to the pre-repartition build.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepartConfig {
+    pub enabled: bool,
+    /// Rows sampled per partition when re-clustering to plan a
+    /// migration (the k-means input is `partitions * sample_per_partition`).
+    pub sample_per_partition: usize,
+    /// Live-row skew (max partition / mean partition) at/above which a
+    /// detector tick counts as drifted.
+    pub skew_ratio: f64,
+    /// Mean insert distance-to-centroid over the construction-time
+    /// baseline at/above which a tick counts as drifted.
+    pub drift_ratio: f64,
+    /// Consecutive drifted ticks required before a migration is planned.
+    pub high_ticks: u32,
+    /// Detector ticks after a migration during which the plane holds
+    /// still (anti-flap, same discipline as the elasticity controller).
+    pub cooldown_ticks: u32,
+    /// Smallest move set worth a migration; thinner plans are dropped.
+    pub min_moves: usize,
+}
+
+impl Default for RepartConfig {
+    fn default() -> Self {
+        RepartConfig {
+            enabled: false,
+            sample_per_partition: 256,
+            skew_ratio: 2.0,
+            drift_ratio: 1.5,
+            high_ticks: 3,
+            cooldown_ticks: 8,
+            min_moves: 64,
+        }
+    }
+}
+
+impl RepartConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("sample_per_partition", Json::num(self.sample_per_partition as f64)),
+            ("skew_ratio", Json::num(self.skew_ratio)),
+            ("drift_ratio", Json::num(self.drift_ratio)),
+            ("high_ticks", Json::num(self.high_ticks as f64)),
+            ("cooldown_ticks", Json::num(self.cooldown_ticks as f64)),
+            ("min_moves", Json::num(self.min_moves as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        let mut c = RepartConfig::default();
+        if let Some(v) = j.get("enabled").and_then(Json::as_bool) {
+            c.enabled = v;
+        }
+        if let Some(v) = j.get("sample_per_partition").and_then(Json::as_usize) {
+            c.sample_per_partition = v;
+        }
+        if let Some(v) = j.get("skew_ratio").and_then(Json::as_f64) {
+            c.skew_ratio = v;
+        }
+        if let Some(v) = j.get("drift_ratio").and_then(Json::as_f64) {
+            c.drift_ratio = v;
+        }
+        if let Some(v) = j.get("high_ticks").and_then(Json::as_f64) {
+            c.high_ticks = v as u32;
+        }
+        if let Some(v) = j.get("cooldown_ticks").and_then(Json::as_f64) {
+            c.cooldown_ticks = v as u32;
+        }
+        if let Some(v) = j.get("min_moves").and_then(Json::as_usize) {
+            c.min_moves = v;
+        }
+        c
+    }
+}
+
 /// Query-time parameters (paper Algorithm 4 / §IV-A `para`).
 #[derive(Debug, Clone, Copy)]
 pub struct QueryParams {
@@ -428,6 +507,7 @@ pub struct PyramidConfig {
     pub index: IndexConfig,
     pub query: QueryParams,
     pub cluster: ClusterTopology,
+    pub repart: RepartConfig,
 }
 
 impl PyramidConfig {
@@ -439,6 +519,7 @@ impl PyramidConfig {
             index: IndexConfig::default(),
             query: QueryParams::default(),
             cluster: ClusterTopology::default(),
+            repart: RepartConfig::default(),
         }
     }
 
@@ -454,7 +535,8 @@ impl PyramidConfig {
         let index = j.get("index").map(IndexConfig::from_json).transpose()?.unwrap_or_default();
         let query = j.get("query").map(QueryParams::from_json).unwrap_or_default();
         let cluster = j.get("cluster").map(ClusterTopology::from_json).unwrap_or_default();
-        Ok(PyramidConfig { dataset, metric, index, query, cluster })
+        let repart = j.get("repart").map(RepartConfig::from_json).unwrap_or_default();
+        Ok(PyramidConfig { dataset, metric, index, query, cluster, repart })
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -468,6 +550,7 @@ impl PyramidConfig {
             ("index", self.index.to_json()),
             ("query", self.query.to_json()),
             ("cluster", self.cluster.to_json()),
+            ("repart", self.repart.to_json()),
         ])
         .pretty()
     }
@@ -500,6 +583,14 @@ impl PyramidConfig {
         }
         if self.cluster.workers == 0 || self.cluster.replicas == 0 {
             return Err(err("cluster.workers/replicas must be >= 1"));
+        }
+        if self.repart.enabled {
+            if self.repart.sample_per_partition == 0 || self.repart.high_ticks == 0 {
+                return Err(err("repart.sample_per_partition/high_ticks must be >= 1"));
+            }
+            if self.repart.skew_ratio <= 1.0 || self.repart.drift_ratio <= 1.0 {
+                return Err(err("repart.skew_ratio/drift_ratio must be > 1.0"));
+            }
         }
         Ok(())
     }
@@ -557,6 +648,35 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.index.refine_k = 0;
         bad.validate().unwrap();
+    }
+
+    #[test]
+    fn repart_fields_roundtrip_and_default_off() {
+        let mut c = PyramidConfig::example();
+        assert_eq!(c.repart, RepartConfig::default());
+        assert!(!c.repart.enabled, "self-healing plane must default off");
+        c.repart.enabled = true;
+        c.repart.sample_per_partition = 128;
+        c.repart.skew_ratio = 3.0;
+        c.repart.drift_ratio = 2.5;
+        c.repart.high_ticks = 5;
+        c.repart.cooldown_ticks = 16;
+        c.repart.min_moves = 32;
+        let back = PyramidConfig::from_json_text(&c.to_json_text()).unwrap();
+        assert_eq!(back.repart, c.repart);
+        back.validate().unwrap();
+        // Degenerate thresholds are rejected only when the plane is on.
+        let mut bad = back.clone();
+        bad.repart.skew_ratio = 1.0;
+        assert!(bad.validate().is_err());
+        bad.repart.enabled = false;
+        bad.validate().unwrap();
+        // Absent key falls back to the all-off default.
+        let text = r#"{
+            "dataset": {"source": "synthetic", "kind": "tiny_like", "n": 1000, "d": 32}
+        }"#;
+        let c = PyramidConfig::from_json_text(text).unwrap();
+        assert_eq!(c.repart, RepartConfig::default());
     }
 
     #[test]

@@ -380,10 +380,27 @@ struct Pending {
     hedged: bool,
 }
 
+/// The coordinator's routing tables. `base` serves everything in steady
+/// state. During a live migration the self-healing plane installs an
+/// `overlay` built from the re-clustered meta-HNSW: queries fan to the
+/// **union** of both tables' partition picks (rows in flight between
+/// source and destination are found either way; the first-partial-wins
+/// dedup absorbs the overlap) and inserts route via the overlay so new
+/// rows land directly at their post-migration home. Commit promotes the
+/// overlay to base in one swap.
+struct RoutingTables {
+    base: Arc<Router>,
+    overlay: Option<Arc<Router>>,
+}
+
 /// The coordinator node.
 pub struct CoordinatorNode {
     pub id: u64,
-    router: Router,
+    routing: Mutex<RoutingTables>,
+    /// Monotone routing-table version, bumped once per committed
+    /// migration overlay. The chaos invariant "epoch divergence ≤ 1"
+    /// compares this across live coordinators.
+    routing_epoch: AtomicU64,
     broker: Broker<QueryRequest>,
     cfg: CoordinatorConfig,
     next_qid: AtomicU64,
@@ -459,7 +476,8 @@ impl CoordinatorNode {
         let evict_rx = broker.eviction_watcher();
         let node = Arc::new(CoordinatorNode {
             id,
-            router,
+            routing: Mutex::new(RoutingTables { base: Arc::new(router), overlay: None }),
+            routing_epoch: AtomicU64::new(0),
             broker,
             cfg,
             next_qid: AtomicU64::new(1),
@@ -509,8 +527,52 @@ impl CoordinatorNode {
         *self.async_handles.lock().unwrap() = handles;
     }
 
-    pub fn router(&self) -> &Router {
-        &self.router
+    pub fn router(&self) -> Router {
+        (*self.routing.lock().unwrap().base).clone()
+    }
+
+    /// Cheap per-block snapshot of the routing tables (Arc clones): the
+    /// whole block routes against one consistent view even if a
+    /// migration commits mid-gather.
+    fn routing_snapshot(&self) -> (Arc<Router>, Option<Arc<Router>>) {
+        let g = self.routing.lock().unwrap();
+        (g.base.clone(), g.overlay.clone())
+    }
+
+    /// Current routing-table version (bumped once per committed
+    /// migration overlay; 0 at construction).
+    pub fn routing_epoch(&self) -> u64 {
+        self.routing_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Begin dual-serve for a live migration: queries now fan to the
+    /// union of the current table's and `overlay`'s partition picks, and
+    /// inserts route via `overlay` (new rows land at their
+    /// post-migration home immediately).
+    pub fn install_routing_overlay(&self, overlay: Router) {
+        self.routing.lock().unwrap().overlay = Some(Arc::new(overlay));
+    }
+
+    /// Commit a migration: promote the overlay to the base table in one
+    /// swap and bump the routing epoch. Returns `false` (and changes
+    /// nothing) when no overlay is installed, so a crash-resumed
+    /// migration re-running its commit phase is idempotent.
+    pub fn commit_routing_overlay(&self) -> bool {
+        let mut g = self.routing.lock().unwrap();
+        match g.overlay.take() {
+            Some(ov) => {
+                g.base = ov;
+                self.routing_epoch.fetch_add(1, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Abort dual-serve without committing (migration abandoned): drops
+    /// the overlay, keeps the base table and epoch untouched.
+    pub fn clear_routing_overlay(&self) {
+        self.routing.lock().unwrap().overlay = None;
     }
 
     /// The qid the next accepted query will be assigned (monotone hint for
@@ -696,7 +758,12 @@ impl CoordinatorNode {
         if vectors.is_empty() {
             return Ok(Vec::new());
         }
-        if let Some(d) = self.router.dim().or_else(|| gateway.dim()) {
+        // During dual-serve the overlay is the post-migration assignment:
+        // routing new rows through it means they land at their final home
+        // and never need to move again.
+        let (base, overlay) = self.routing_snapshot();
+        let router = overlay.as_deref().unwrap_or(&base);
+        if let Some(d) = router.dim().or_else(|| gateway.dim()) {
             for v in vectors {
                 if v.len() != d {
                     return Err(PyramidError::Index(format!(
@@ -707,9 +774,9 @@ impl CoordinatorNode {
             }
         }
         let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
-            vectors.iter().map(|v| self.router.prepare_query(v)).collect();
+            vectors.iter().map(|v| router.prepare_query(v)).collect();
         let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
-        let routed = self.router.route_batch(&views, 1, INSERT_META_EF);
+        let routed = router.route_batch(&views, 1, INSERT_META_EF);
         let mut out = Vec::with_capacity(vectors.len());
         for (i, parts) in routed.iter().enumerate() {
             let p = *parts
@@ -739,8 +806,9 @@ impl CoordinatorNode {
     /// Batched [`Self::delete`].
     pub fn delete_batch(&self, ids: &[VectorId]) -> Result<()> {
         let gateway = self.ingest_gateway()?;
+        let partitions = self.routing_snapshot().0.partitions();
         for &id in ids {
-            for p in 0..self.router.partitions() {
+            for p in 0..partitions {
                 gateway.publish(p as PartitionId, UpdateOp::Delete { id }, self.id)?;
             }
             self.metrics.deletes_published.fetch_add(1, Ordering::Relaxed);
@@ -842,11 +910,27 @@ impl CoordinatorNode {
                 root_guards.push(g);
             }
         }
+        // One routing snapshot per block: a migration committing
+        // mid-gather changes nothing for queries already in flight.
+        let (base_router, overlay_router) = self.routing_snapshot();
         let prepared: Vec<std::borrow::Cow<'_, [f32]>> =
-            queries.iter().map(|q| self.router.prepare_query(q)).collect();
+            queries.iter().map(|q| base_router.prepare_query(q)).collect();
         let views: Vec<&[f32]> = prepared.iter().map(|q| &**q).collect();
         let route_start = obs.as_ref().map(|o| o.tracer.now_us());
-        let parts = self.router.route_batch(&views, params.branch, params.meta_ef);
+        let mut parts = base_router.route_batch(&views, params.branch, params.meta_ef);
+        if let Some(ov) = &overlay_router {
+            // Dual-serve: fan to the union of both tables' picks. A moved
+            // row is found at the source (not yet retired) or at the
+            // destination (copy landed); `merge_topk`'s id dedup and the
+            // first-partial-wins gather absorb the overlap.
+            for (p, extra) in parts.iter_mut().zip(ov.route_batch(&views, params.branch, params.meta_ef)) {
+                for q in extra {
+                    if !p.contains(&q) {
+                        p.push(q);
+                    }
+                }
+            }
+        }
         if let (Some(o), Some(rs)) = (&obs, route_start) {
             // One batched meta-HNSW walk serves the whole block: each
             // query gets a route span over the shared interval, tagged
@@ -1303,7 +1387,8 @@ impl CoordinatorNode {
                 }
             }
             if !ids.is_empty() {
-                let mut top = scorer.rerank(self.router.metric(), query, &vecs, &ids, k)?;
+                let metric = self.routing.lock().unwrap().base.metric();
+                let mut top = scorer.rerank(metric, query, &vecs, &ids, k)?;
                 top.extend(plain);
                 return Ok(merge_topk(top, k));
             }
@@ -1381,7 +1466,7 @@ impl std::fmt::Debug for CoordinatorNode {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("CoordinatorNode")
             .field("id", &self.id)
-            .field("partitions", &self.router.partitions())
+            .field("partitions", &self.routing.lock().unwrap().base.partitions())
             .finish()
     }
 }
@@ -1668,5 +1753,71 @@ mod tests {
         replier.join().unwrap();
         a.shutdown();
         b.shutdown();
+    }
+
+    /// Routing-overlay lifecycle (live-migration dual-serve): installing
+    /// an overlay widens the query fan-out to the union of both tables'
+    /// picks, commit promotes it in one swap and bumps the epoch exactly
+    /// once, and a second commit (the crash-resume re-run) is a no-op.
+    #[test]
+    fn routing_overlay_dual_serves_and_commits_once() {
+        let broker: Broker<QueryRequest> = Broker::new(BrokerConfig {
+            rebalance_pause: Duration::from_millis(1),
+            ..BrokerConfig::default()
+        });
+        broker.create_topic(&topic_for(0));
+        broker.create_topic(&topic_for(1));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let r0 = spawn_replier(
+            broker.clone(),
+            0,
+            7,
+            vec![Neighbor::new(1, 0.9)],
+            1,
+            Duration::ZERO,
+            stop.clone(),
+        );
+        let r1 = spawn_replier(
+            broker.clone(),
+            1,
+            8,
+            vec![Neighbor::new(2, 0.8)],
+            1,
+            Duration::ZERO,
+            stop.clone(),
+        );
+        let cfg =
+            CoordinatorConfig { hedge: HedgeConfig::disabled(), ..CoordinatorConfig::default() };
+        // Base table only knows partition 0.
+        let node = CoordinatorNode::new(0, Router::broadcast(1, Metric::L2), broker, cfg);
+        let q = vec![0.0f32; 8];
+        let params = QueryParams { k: 10, ..QueryParams::default() };
+        assert_eq!(node.routing_epoch(), 0);
+        let res = node.execute_detailed(&q, &params).unwrap();
+        assert_eq!(res.partitions_total, 1);
+        // Dual-serve: the overlay adds partition 1; the fan-out is the
+        // union and both partials merge.
+        node.install_routing_overlay(Router::broadcast(2, Metric::L2));
+        let res = node.execute_detailed(&q, &params).unwrap();
+        assert_eq!(res.partitions_total, 2, "dual-serve must fan to the union");
+        assert_eq!(res.partitions_answered, 2);
+        let ids: Vec<u32> = res.neighbors.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(node.routing_epoch(), 0, "install alone must not bump the epoch");
+        // Abort drops the overlay without touching base or epoch.
+        node.clear_routing_overlay();
+        assert_eq!(node.execute_detailed(&q, &params).unwrap().partitions_total, 1);
+        assert_eq!(node.routing_epoch(), 0);
+        // Commit promotes the overlay and bumps the epoch exactly once.
+        node.install_routing_overlay(Router::broadcast(2, Metric::L2));
+        assert!(node.commit_routing_overlay());
+        assert_eq!(node.routing_epoch(), 1);
+        assert_eq!(node.execute_detailed(&q, &params).unwrap().partitions_total, 2);
+        assert!(!node.commit_routing_overlay(), "re-run commit must be a no-op");
+        assert_eq!(node.routing_epoch(), 1);
+        stop.store(true, Ordering::Relaxed);
+        r0.join().unwrap();
+        r1.join().unwrap();
+        node.shutdown();
     }
 }

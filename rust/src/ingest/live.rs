@@ -75,6 +75,11 @@ pub struct IngestMetrics {
     pub refreezes: AtomicU64,
     /// Updates dropped for shape errors (dimension mismatch).
     pub rejected: AtomicU64,
+    /// Inserts skipped because the global id was already present (or
+    /// tombstoned) — the migration copy stream re-delivering a row after
+    /// a crash resume. Zero outside live migrations: the gateway never
+    /// reuses ids.
+    pub duplicate_inserts_skipped: AtomicU64,
 }
 
 /// One frozen-base generation (immutable; swapped wholesale).
@@ -167,6 +172,14 @@ struct LiveState {
     applied: UpdateSeq,
     /// A re-freeze build is in flight (snapshot taken, swap pending).
     freezing: bool,
+    /// Construction-time k-means centroid of this partition, when the
+    /// self-healing plane is watching it ([`LiveIndex::set_centroid`]).
+    /// `None` (the default) keeps the apply path exactly as before.
+    centroid: Option<Arc<Vec<f32>>>,
+    /// Inserts accumulated against `centroid` since it was (re)set.
+    drift_count: u64,
+    /// Sum of L2 distances from those inserts to `centroid`.
+    drift_sum: f64,
 }
 
 /// Fired after every completed re-freeze swap (cluster-side log
@@ -237,6 +250,9 @@ impl LiveIndex {
                 tombstones: HashMap::new(),
                 applied: covered,
                 freezing: false,
+                centroid: None,
+                drift_count: 0,
+                drift_sum: 0.0,
             }),
             on_refreeze: Mutex::new(None),
             metrics: IngestMetrics::default(),
@@ -299,6 +315,62 @@ impl LiveIndex {
         self.state.lock().unwrap().base.graph.len()
     }
 
+    /// Install (or replace) the partition centroid the drift signal is
+    /// measured against, resetting the accumulators. The self-healing
+    /// plane calls this at wiring time and again after every completed
+    /// migration; until it does, inserts pay nothing.
+    pub fn set_centroid(&self, centroid: Vec<f32>) {
+        let mut st = self.state.lock().unwrap();
+        st.centroid = Some(Arc::new(centroid));
+        st.drift_count = 0;
+        st.drift_sum = 0.0;
+    }
+
+    /// `(inserts observed, mean L2 distance to the installed centroid)`
+    /// since the centroid was last set — `None` until both a centroid is
+    /// installed and at least one insert has been measured against it.
+    pub fn drift_stats(&self) -> Option<(u64, f64)> {
+        let st = self.state.lock().unwrap();
+        if st.centroid.is_none() || st.drift_count == 0 {
+            return None;
+        }
+        Some((st.drift_count, st.drift_sum / st.drift_count as f64))
+    }
+
+    /// Rows currently serving (base + delta, minus live tombstones) —
+    /// the skew signal the drift detector compares across partitions.
+    pub fn live_rows(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        let dead = st
+            .tombstones
+            .keys()
+            .filter(|g| st.base.by_global.contains_key(g) || st.delta.ids.contains(g))
+            .count();
+        st.base.graph.len() + st.delta.ids.len() - dead
+    }
+
+    /// Snapshot every live row (global id + vector), base and delta,
+    /// tombstones filtered — the migration copy stream's source. One
+    /// consistent cut under the lock; rows applied afterwards are the
+    /// delta pass's business.
+    pub fn export_rows(&self) -> Vec<(VectorId, Vec<f32>)> {
+        let st = self.state.lock().unwrap();
+        let mut out = Vec::with_capacity(st.base.ids.len() + st.delta.ids.len());
+        for (local, &gid) in st.base.ids.iter().enumerate() {
+            if !st.tombstones.contains_key(&gid) {
+                out.push((gid, st.base.graph.data().get(local).to_vec()));
+            }
+        }
+        if let Some(g) = &st.delta.graph {
+            for (local, &gid) in st.delta.ids.iter().enumerate() {
+                if !st.tombstones.contains_key(&gid) {
+                    out.push((gid, g.data().get(local).to_vec()));
+                }
+            }
+        }
+        out
+    }
+
     /// Completed re-freeze swaps.
     pub fn refreezes(&self) -> u64 {
         self.metrics.refreezes.load(Ordering::Relaxed)
@@ -320,6 +392,26 @@ impl LiveIndex {
                 if vector.len() != self.dim {
                     self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                     return;
+                }
+                // Id-level idempotency on top of the seq cursor: a live
+                // migration's copy stream appends rows to the destination
+                // log under *fresh* sequences, so a crash-resume re-send
+                // arrives with seq >= applied and must be dropped by gid.
+                // A tombstoned gid stays dead — a user delete that raced
+                // the copy wins over the migration's re-delivery.
+                if st.tombstones.contains_key(id)
+                    || st.base.by_global.contains_key(id)
+                    || st.delta.ids.contains(id)
+                {
+                    self.metrics.duplicate_inserts_skipped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                // Drift signal: distance of incoming rows to the
+                // partition's construction-time centroid (no-op until the
+                // self-healing plane installs one).
+                if let Some(c) = &st.centroid {
+                    st.drift_sum += f64::from(crate::metric::l2_sq(vector, c).sqrt());
+                    st.drift_count += 1;
                 }
                 // Encode on apply: streamed rows join the quantized tier
                 // under the *serving* base's codec (re-trained codecs
@@ -815,6 +907,58 @@ mod tests {
         assert_eq!(live.applied_seq(), applied);
         assert_eq!(live.delta_len(), len);
         assert_eq!(live.search(data.get(555), 1, 60)[0].id, 555);
+    }
+
+    /// Migration idempotency: re-delivering an insert for a gid already
+    /// present (base or delta) under a *fresh* sequence is dropped, and
+    /// a tombstoned gid stays dead even if the copy stream re-sends it.
+    #[test]
+    fn duplicate_gid_inserts_skipped_and_tombstone_wins() {
+        let data = SyntheticSpec::deep_like(400, 8, 41).generate();
+        let live = split_live(&data, Metric::L2, 300); // delta 300..400, seqs 0..100
+        let len = live.delta_len();
+        // Fresh seq, gid already in base.
+        live.apply(100, &insert_req(10, data.get(0)));
+        // Fresh seq, gid already in delta.
+        live.apply(101, &insert_req(350, data.get(1)));
+        assert_eq!(live.delta_len(), len);
+        assert_eq!(live.metrics.duplicate_inserts_skipped.load(Ordering::Relaxed), 2);
+        // Delete then re-deliver: the delete wins.
+        live.apply(102, &delete_req(350));
+        live.apply(103, &insert_req(350, data.get(350)));
+        assert_eq!(live.metrics.duplicate_inserts_skipped.load(Ordering::Relaxed), 3);
+        let ids: Vec<u32> = live.search(data.get(350), 10, 80).iter().map(|n| n.id).collect();
+        assert!(!ids.contains(&350), "tombstoned gid resurrected by re-delivery");
+        // A genuinely new gid still lands.
+        live.apply(104, &insert_req(9_000, data.get(2)));
+        assert_eq!(live.delta_len(), len + 1);
+    }
+
+    /// Drift accounting + migration export: the centroid signal measures
+    /// inserts only once installed, and `export_rows` snapshots exactly
+    /// the live (non-tombstoned) base + delta rows.
+    #[test]
+    fn drift_stats_and_export_rows() {
+        let data = SyntheticSpec::deep_like(300, 8, 43).generate();
+        let live = split_live(&data, Metric::L2, 250); // delta 250..300
+        assert!(live.drift_stats().is_none(), "no centroid installed yet");
+        live.set_centroid(vec![0.0; 8]);
+        assert!(live.drift_stats().is_none(), "no inserts measured yet");
+        live.apply(50, &insert_req(9_000, &[3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+        let (n, mean) = live.drift_stats().unwrap();
+        assert_eq!(n, 1);
+        assert!((mean - 5.0).abs() < 1e-6, "mean dist {mean} != 5.0");
+        live.apply(51, &delete_req(9_000));
+        live.apply(52, &delete_req(10));
+        assert_eq!(live.live_rows(), 300 - 1);
+        let rows = live.export_rows();
+        assert_eq!(rows.len(), 300 - 1);
+        assert!(rows.iter().all(|(g, _)| *g != 10 && *g != 9_000));
+        let r270 = rows.iter().find(|(g, _)| *g == 270).unwrap();
+        assert_eq!(&r270.1[..], data.get(270));
+        // Re-setting the centroid resets the accumulators.
+        live.set_centroid(vec![0.0; 8]);
+        assert!(live.drift_stats().is_none());
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod obs;
 pub mod partition;
 pub mod quant;
 pub mod registry;
+pub mod repart;
 pub mod runtime;
 pub mod stats;
 pub mod types;
@@ -68,7 +69,7 @@ pub mod prelude {
     pub use crate::chaos::schedule::ChaosSpec;
     pub use crate::chaos::{ChaosSnapshot, FaultPlan, FaultSpec};
     pub use crate::cluster::{ClusterConfig, SimCluster};
-    pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams};
+    pub use crate::config::{ClusterTopology, IndexConfig, PyramidConfig, QueryParams, RepartConfig};
     pub use crate::coordinator::{CoordinatorConfig, HedgeConfig};
     pub use crate::dataset::{Dataset, SyntheticKind, SyntheticSpec};
     pub use crate::error::{PyramidError, Result};
@@ -80,5 +81,6 @@ pub mod prelude {
     pub use crate::net::{FatTreeNet, IdealNet, NetModel, NetSpec, SimClock, UniformNet, WireSize};
     pub use crate::obs::{MetricsRegistry, Obs, ObsSpec, Scrape, TraceId, TraceTree, Tracer};
     pub use crate::quant::{QuantPlane, Sq8Codec};
+    pub use crate::repart::{DriftDetector, MigrationPlan, PartitionSignal};
     pub use crate::types::{Neighbor, QueryMetrics, QueryResult, UpdateOp, VectorId};
 }

@@ -76,6 +76,9 @@ pub mod stage {
     pub const LOG_PUMP: &str = "log-pump";
     /// Executor-side freeze-controller tick that performed work.
     pub const FREEZE: &str = "freeze";
+    /// One drift-to-cutover migration of the self-healing partition
+    /// plane (plan journal → copy → barrier → epoch bump → retire).
+    pub const MIGRATE: &str = "migrate";
 }
 
 /// One recorded span. Times are microseconds since the tracer's epoch.

@@ -1,0 +1,484 @@
+//! Self-healing partition plane (ROADMAP: drift-triggered re-partition).
+//!
+//! Pyramid's performance story rests on partitions holding *similar*
+//! items so queries visit few sub-datasets — but sustained ingest drifts
+//! the data away from the construction-time k-means layout, silently
+//! eroding routing quality and load balance. This module is the decision
+//! and planning half of the recovery loop:
+//!
+//! * [`DriftDetector`] watches per-partition signals ([`PartitionSignal`]:
+//!   row-count skew plus the mean insert-distance-to-centroid that
+//!   [`crate::ingest::LiveIndex`] tracks incrementally) behind the same
+//!   hysteresis discipline as the elasticity controller
+//!   ([`crate::load::ElasticityController`]): `high_ticks` consecutive
+//!   drifted observations trigger, a trigger starts a `cooldown_ticks`
+//!   refractory period.
+//! * [`plan_migration`] re-clusters a pooled sample of the live rows
+//!   through the existing [`crate::kmeans`] / meta-HNSW / min-cut
+//!   machinery (Algorithm 3 lines 3-6, re-run online) and emits a
+//!   [`MigrationPlan`]: a fresh routing table plus the row→partition
+//!   move set that realizes it.
+//! * [`MigMsg`] is the plan's journal form. The execution driver
+//!   ([`crate::cluster::SimCluster::enable_repartition`]) journals
+//!   `Planned` to the retained `mig` log **before** touching any data
+//!   (the same durability seam as the async-job journal) and `Done`
+//!   after commit, so a coordinator or executor killed mid-migration
+//!   resumes from the journal: every phase — copy (dup-gid guard),
+//!   commit (overlay swap is a no-op when already promoted), retire
+//!   (deletes are idempotent) — is safe to re-run.
+//!
+//! The driver itself lives in [`crate::cluster`], following the
+//! elasticity precedent: this module stays pure (no threads, no broker
+//! handles), so the detector and planner are unit-testable in isolation
+//! and the off state adds zero work to any hot path.
+
+use crate::config::RepartConfig;
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::hnsw::{Hnsw, HnswParams};
+use crate::kmeans::{self, KmeansParams};
+use crate::meta::Router;
+use crate::metric::Metric;
+use crate::net::WireSize;
+use crate::partition::{self, CsrGraph, PartitionParams};
+use crate::types::{PartitionId, VectorId};
+use std::sync::Arc;
+
+/// Retained broker topic the migration journal lives on. Log semantics
+/// (`publish_log` / `log_tailer`), never truncated mid-migration: the
+/// journal IS the crash-safety story.
+pub const MIG_TOPIC: &str = "mig";
+
+/// One partition's health observation for a detector tick.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionSignal {
+    pub partition: PartitionId,
+    /// Live (non-tombstoned) rows currently stored.
+    pub rows: usize,
+    /// `(inserts observed, mean L2 distance to the construction-time
+    /// centroid)` from [`crate::ingest::LiveIndex::drift_stats`]; `None`
+    /// until the partition has absorbed any inserts.
+    pub drift: Option<(u64, f64)>,
+}
+
+/// Inserts a partition must have absorbed before its centroid-distance
+/// signal is trusted (a handful of rows is noise, not drift).
+const MIN_DRIFT_SAMPLES: u64 = 16;
+
+/// Hysteresis-gated drift detector, in the style of
+/// [`crate::load::ElasticityController`]: a single bad observation never
+/// triggers a migration; `high_ticks` consecutive ones do, and a trigger
+/// starts a cooldown so back-to-back migrations cannot thrash.
+pub struct DriftDetector {
+    cfg: RepartConfig,
+    streak: u32,
+    cooldown: u32,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: RepartConfig) -> Self {
+        DriftDetector { cfg, streak: 0, cooldown: 0 }
+    }
+
+    /// Whether this instant's signals look drifted, and why. Pure — no
+    /// hysteresis state involved.
+    ///
+    /// Two independent tripwires:
+    /// * **skew** — the largest partition holds more than `skew_ratio`
+    ///   times the mean partition size (routing mass is piling up in one
+    ///   place);
+    /// * **drift** — one partition's mean insert-distance-to-centroid
+    ///   exceeds `drift_ratio` times the mean of all partitions'
+    ///   (its arrivals are far from its center *relative to its peers*,
+    ///   i.e. the construction-time assignment is misrouting them).
+    pub fn observe(&self, signals: &[PartitionSignal]) -> Option<String> {
+        if signals.is_empty() {
+            return None;
+        }
+        let total: usize = signals.iter().map(|s| s.rows).sum();
+        if total > 0 {
+            let mean = total as f64 / signals.len() as f64;
+            if let Some(worst) = signals.iter().max_by_key(|s| s.rows) {
+                if worst.rows as f64 > self.cfg.skew_ratio * mean {
+                    return Some(format!(
+                        "skew: partition {} holds {} rows vs mean {mean:.0}",
+                        worst.partition, worst.rows
+                    ));
+                }
+            }
+        }
+        let means: Vec<(PartitionId, f64)> = signals
+            .iter()
+            .filter_map(|s| match s.drift {
+                Some((n, mean)) if n >= MIN_DRIFT_SAMPLES => Some((s.partition, mean)),
+                _ => None,
+            })
+            .collect();
+        if means.len() >= 2 {
+            let global = means.iter().map(|(_, m)| m).sum::<f64>() / means.len() as f64;
+            if global > 0.0 {
+                for &(p, m) in &means {
+                    if m > self.cfg.drift_ratio * global {
+                        return Some(format!(
+                            "drift: partition {p} mean insert distance {m:.3} vs global {global:.3}"
+                        ));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// One detector tick. Returns the trigger reason when `high_ticks`
+    /// consecutive drifted observations have accumulated outside a
+    /// cooldown; triggering resets the streak and starts the cooldown
+    /// immediately (the migration it requests takes time — re-triggering
+    /// under it would thrash).
+    pub fn tick(&mut self, signals: &[PartitionSignal]) -> Option<String> {
+        self.cooldown = self.cooldown.saturating_sub(1);
+        match self.observe(signals) {
+            Some(reason) => {
+                self.streak += 1;
+                if self.streak >= self.cfg.high_ticks && self.cooldown == 0 {
+                    self.streak = 0;
+                    self.cooldown = self.cfg.cooldown_ticks;
+                    Some(reason)
+                } else {
+                    None
+                }
+            }
+            None => {
+                self.streak = 0;
+                None
+            }
+        }
+    }
+
+    /// Record an externally-driven migration (a forced trigger, a chaos
+    /// timeline action): resets the streak and starts the cooldown, so
+    /// the detector backs off exactly as if it had triggered itself.
+    pub fn note_migrated(&mut self) {
+        self.streak = 0;
+        self.cooldown = self.cfg.cooldown_ticks;
+    }
+}
+
+/// One row the migration relocates. Carrying the vector makes the
+/// journaled plan self-contained: a crash-resumed copy phase re-streams
+/// straight from the journal without consulting any (possibly dead)
+/// source replica.
+#[derive(Debug, Clone)]
+pub struct RowMove {
+    pub gid: VectorId,
+    pub from: PartitionId,
+    pub to: PartitionId,
+    pub vector: Arc<Vec<f32>>,
+}
+
+/// A planned re-partition: the re-clustered routing table plus the move
+/// set that realizes it. Journaled to [`MIG_TOPIC`] before execution.
+pub struct MigrationPlan {
+    pub id: u64,
+    /// Routing epoch the plan was computed against (staleness guard: a
+    /// resumed plan against a newer epoch is discarded, keeping the
+    /// chaos invariant "epoch divergence ≤ 1" honest).
+    pub from_epoch: u64,
+    pub metric: Metric,
+    pub partitions: usize,
+    /// Re-clustered meta-HNSW over the new centers.
+    pub meta: Arc<Hnsw>,
+    /// Partition id of each new meta vertex (min-cut output).
+    pub meta_partition: Arc<Vec<u32>>,
+    pub moves: Vec<RowMove>,
+}
+
+impl MigrationPlan {
+    /// The routing table this plan installs (the dual-serve overlay, and
+    /// after commit the base table).
+    pub fn router(&self) -> Router {
+        Router::new(self.meta.clone(), self.meta_partition.clone(), self.partitions)
+    }
+}
+
+impl std::fmt::Debug for MigrationPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MigrationPlan")
+            .field("id", &self.id)
+            .field("from_epoch", &self.from_epoch)
+            .field("partitions", &self.partitions)
+            .field("meta_size", &self.meta.len())
+            .field("moves", &self.moves.len())
+            .finish()
+    }
+}
+
+/// Migration-journal record ([`MIG_TOPIC`]). `Planned` is written before
+/// any data moves; `Done` after commit + retire. Resume scans the log
+/// from its start: a `Planned` without a matching `Done` is re-executed
+/// (every phase is idempotent — see the module docs).
+#[derive(Clone)]
+pub enum MigMsg {
+    Planned(Arc<MigrationPlan>),
+    Done { plan_id: u64 },
+}
+
+impl WireSize for MigMsg {
+    /// The plan's serialized form: header + the new meta graph's vectors
+    /// and partition map + each move's (gid, from, to, vector).
+    fn wire_bytes(&self) -> usize {
+        match self {
+            MigMsg::Planned(p) => {
+                8 + 8
+                    + p.meta.len() * p.meta.dim() * 4
+                    + p.meta_partition.len() * 4
+                    + p.moves.iter().map(|m| 8 + 2 + 2 + m.vector.len() * 4).sum::<usize>()
+            }
+            MigMsg::Done { .. } => 8,
+        }
+    }
+}
+
+/// Re-cluster the live rows and plan the moves (Algorithm 3 lines 3-6,
+/// re-run online over a pooled per-partition sample).
+///
+/// `rows_by_partition` is a consistent snapshot of every partition's
+/// live rows ([`crate::ingest::LiveIndex::export_rows`]); `meta_size`
+/// mirrors the construction-time center count. Returns `Ok(None)` when
+/// fewer than `cfg.min_moves` rows would relocate — the layout is close
+/// enough that a migration's churn isn't worth it.
+///
+/// Deterministic for a fixed `seed` (strided sampling, seeded k-means /
+/// HNSW / min-cut), so a crash-resumed planner would reproduce the same
+/// plan — though resume never re-plans, it replays the journaled one.
+pub fn plan_migration(
+    plan_id: u64,
+    from_epoch: u64,
+    rows_by_partition: &[Vec<(VectorId, Vec<f32>)>],
+    metric: Metric,
+    meta_size: usize,
+    cfg: &RepartConfig,
+    seed: u64,
+) -> Result<Option<MigrationPlan>> {
+    let w = rows_by_partition.len();
+    let dim = rows_by_partition.iter().flatten().map(|(_, v)| v.len()).next();
+    let Some(dim) = dim else { return Ok(None) }; // no live rows anywhere
+    // Pooled sample: up to `sample_per_partition` strided rows from each
+    // partition, so every partition's distribution is represented
+    // regardless of skew.
+    let mut flat: Vec<f32> = Vec::new();
+    let mut sampled = 0usize;
+    for rows in rows_by_partition {
+        if rows.is_empty() {
+            continue;
+        }
+        let step = (rows.len() / cfg.sample_per_partition.max(1)).max(1);
+        for (_, v) in rows.iter().step_by(step).take(cfg.sample_per_partition) {
+            flat.extend_from_slice(v);
+            sampled += 1;
+        }
+    }
+    let sample = Dataset::from_vec(flat, dim)?;
+    let m = meta_size.min(sampled).max(w);
+    // 1. k-means over the pooled sample (spherical for MIPS, matching
+    // the construction-time choice).
+    let km = kmeans::fit(
+        &sample,
+        &KmeansParams {
+            centers: m,
+            max_iters: 15,
+            tol: 1e-3,
+            spherical: metric == Metric::Ip,
+            seed,
+        },
+    )?;
+    let weights = kmeans::center_weights(&km);
+    // 2. Meta-HNSW over the new centers.
+    let meta_params = HnswParams { seed: seed ^ 0x3E7A, ..HnswParams::default() };
+    let meta = Hnsw::build(km.centers.clone(), metric, meta_params)?;
+    // 3. Min-cut partition of the meta bottom layer, weighted by sample
+    // mass so the new sub-datasets balance.
+    let lists: Vec<Vec<u32>> =
+        (0..m as u32).map(|u| meta.bottom_neighbors(u).to_vec()).collect();
+    let graph = CsrGraph::from_directed(&lists, weights)?;
+    let parts = partition::partition(
+        &graph,
+        &PartitionParams { parts: w, epsilon: 0.05, seed, ..Default::default() },
+    )?;
+    // 4. Re-assign every live row; rows whose new partition differs are
+    // the move set.
+    let assign_ef = 32.max(meta_params.m);
+    let mut moves = Vec::new();
+    for (p, rows) in rows_by_partition.iter().enumerate() {
+        for (gid, v) in rows {
+            let hit = meta.search(v, 1, assign_ef);
+            let to = parts.part[hit[0].id as usize] as PartitionId;
+            if to != p as PartitionId {
+                moves.push(RowMove {
+                    gid: *gid,
+                    from: p as PartitionId,
+                    to,
+                    vector: Arc::new(v.clone()),
+                });
+            }
+        }
+    }
+    if moves.len() < cfg.min_moves {
+        return Ok(None);
+    }
+    Ok(Some(MigrationPlan {
+        id: plan_id,
+        from_epoch,
+        metric,
+        partitions: w,
+        meta: Arc::new(meta),
+        meta_partition: Arc::new(parts.part),
+        moves,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    fn cfg() -> RepartConfig {
+        RepartConfig {
+            enabled: true,
+            high_ticks: 3,
+            cooldown_ticks: 5,
+            min_moves: 64,
+            ..RepartConfig::default()
+        }
+    }
+
+    fn calm(parts: usize) -> Vec<PartitionSignal> {
+        (0..parts)
+            .map(|p| PartitionSignal {
+                partition: p as PartitionId,
+                rows: 1_000,
+                drift: Some((100, 1.0)),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn detector_hysteresis_streak_and_cooldown() {
+        let mut det = DriftDetector::new(cfg());
+        let mut skewed = calm(4);
+        skewed[2].rows = 5_000; // 5000 > 2.0 * mean(2000)
+        // Calm ticks never trigger and reset the streak.
+        assert!(det.tick(&calm(4)).is_none());
+        // Two drifted ticks: streak building, below high_ticks.
+        assert!(det.tick(&skewed).is_none());
+        assert!(det.tick(&skewed).is_none());
+        // A calm tick resets the streak — the next two drifted ticks
+        // must NOT trigger.
+        assert!(det.tick(&calm(4)).is_none());
+        assert!(det.tick(&skewed).is_none());
+        assert!(det.tick(&skewed).is_none());
+        // Third consecutive drifted tick triggers, with the skew reason.
+        let reason = det.tick(&skewed).expect("high_ticks reached");
+        assert!(reason.contains("skew"), "{reason}");
+        // Cooldown: sustained drift cannot re-trigger until it expires.
+        for _ in 0..4 {
+            assert!(det.tick(&skewed).is_none(), "cooldown must suppress");
+        }
+        // Cooldown expired (5 ticks elapsed) and the streak is long since
+        // rebuilt: the next drifted tick re-triggers.
+        assert!(det.tick(&skewed).is_some());
+    }
+
+    #[test]
+    fn detector_centroid_drift_tripwire_and_min_samples() {
+        let det = DriftDetector::new(cfg());
+        let mut s = calm(4);
+        // Partition 3's arrivals sit far from its centroid vs peers.
+        s[3].drift = Some((100, 4.0)); // global mean 1.75, 4.0 > 1.5 * 1.75
+        let reason = det.observe(&s).expect("drift tripwire");
+        assert!(reason.contains("drift: partition 3"), "{reason}");
+        // The same mean off a handful of inserts is noise, not drift.
+        s[3].drift = Some((MIN_DRIFT_SAMPLES - 1, 4.0));
+        assert!(det.observe(&s).is_none());
+        // note_migrated starts the refractory period.
+        let mut det = DriftDetector::new(cfg());
+        det.note_migrated();
+        s[3].drift = Some((100, 4.0));
+        for _ in 0..4 {
+            assert!(det.tick(&s).is_none(), "cooldown after note_migrated");
+        }
+    }
+
+    /// Planner end-to-end on a deliberately scrambled layout: clustered
+    /// data dealt round-robin across partitions must yield a large move
+    /// set; the same data laid out by the plan itself must then be close
+    /// enough that re-planning stays under `min_moves`.
+    #[test]
+    fn plan_migration_moves_scrambled_rows_and_is_stable_when_clean() {
+        let data = SyntheticSpec::deep_like(2_000, 16, 91).generate();
+        let w = 4;
+        // Round-robin: every partition holds a uniform mix of all
+        // clusters — maximal drift from any similarity layout.
+        let mut scrambled: Vec<Vec<(VectorId, Vec<f32>)>> = vec![Vec::new(); w];
+        for i in 0..data.len() {
+            scrambled[i % w].push((i as VectorId, data.get(i).to_vec()));
+        }
+        let c = cfg();
+        let plan = plan_migration(1, 0, &scrambled, Metric::L2, 32, &c, 7)
+            .unwrap()
+            .expect("scrambled layout must demand a migration");
+        assert_eq!(plan.partitions, w);
+        assert_eq!(plan.id, 1);
+        // Round-robin vs a 4-way similarity layout: ~3/4 of rows move.
+        assert!(plan.moves.len() > data.len() / 2, "only {} moves", plan.moves.len());
+        for mv in &plan.moves {
+            assert_ne!(mv.from, mv.to);
+            assert!((mv.to as usize) < w);
+            assert_eq!(mv.vector.len(), 16);
+        }
+        // The plan's router must route each moved vector to its `to`
+        // partition (branch=1 insert rule) — spot-check a stride.
+        let router = plan.router();
+        for mv in plan.moves.iter().step_by(97) {
+            let parts = router.route(&mv.vector, 1, 64);
+            assert_eq!(parts, vec![mv.to], "gid {}", mv.gid);
+        }
+        // Apply the moves, re-plan: the healed layout is stable.
+        let mut healed: Vec<Vec<(VectorId, Vec<f32>)>> = vec![Vec::new(); w];
+        let moved: std::collections::HashMap<VectorId, PartitionId> =
+            plan.moves.iter().map(|m| (m.gid, m.to)).collect();
+        for (p, rows) in scrambled.iter().enumerate() {
+            for (gid, v) in rows {
+                let dest = moved.get(gid).copied().unwrap_or(p as PartitionId);
+                healed[dest as usize].push((*gid, v.clone()));
+            }
+        }
+        let replan = plan_migration(2, 1, &healed, Metric::L2, 32, &c, 7).unwrap();
+        if let Some(rp) = &replan {
+            assert!(
+                rp.moves.len() < plan.moves.len() / 4,
+                "healed layout still wants {} of {} moves",
+                rp.moves.len(),
+                plan.moves.len()
+            );
+        }
+        // Journal form prices the self-contained plan.
+        let msg = MigMsg::Planned(Arc::new(plan));
+        assert!(msg.wire_bytes() > 16 * 4 * 500, "plan wire size implausibly small");
+        assert_eq!((MigMsg::Done { plan_id: 1 }).wire_bytes(), 8);
+    }
+
+    #[test]
+    fn plan_migration_empty_and_below_floor() {
+        let c = cfg();
+        // No rows at all: nothing to plan.
+        let empty: Vec<Vec<(VectorId, Vec<f32>)>> = vec![Vec::new(); 4];
+        assert!(plan_migration(1, 0, &empty, Metric::L2, 32, &c, 7).unwrap().is_none());
+        // A handful of rows: any conceivable move set is under min_moves.
+        let data = SyntheticSpec::deep_like(40, 8, 3).generate();
+        let mut few: Vec<Vec<(VectorId, Vec<f32>)>> = vec![Vec::new(); 4];
+        for i in 0..data.len() {
+            few[i % 4].push((i as VectorId, data.get(i).to_vec()));
+        }
+        assert!(plan_migration(1, 0, &few, Metric::L2, 16, &c, 7).unwrap().is_none());
+    }
+}
